@@ -1,0 +1,136 @@
+"""Shared experiment harness for the paper-figure benchmarks (Sec. V).
+
+Builds the FEEL environment (synthetic dataset + Dirichlet(sigma) clients +
+Table-I wireless system), runs one of the six schemes, and returns the round
+history. The six schemes are exactly the paper's comparisons:
+
+  proposed         joint (P1) with generalization statement
+  no_gen           conventional bound (phi = 0 in the optimizer) [31]
+  fixed_pruning    lambda = 0 (no pruning)
+  fixed_selection  a_n = 1 every round
+  fixed_power      p_n = 0.5 W
+  fixed_clock      f_n = f_max
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.core import (
+    AOConfig, BoundConstants, ClientData, FederatedTrainer, phis, solve_p1,
+)
+from repro.data import make_dataset, partition_by_dirichlet
+from repro.models import (
+    lenet_init, lenet_apply, resnet_init, resnet_apply,
+    make_loss_fn, make_eval_fn,
+)
+from repro.wireless import ChannelModel, SystemParams
+
+SCHEMES = ("proposed", "no_gen", "fixed_pruning", "fixed_selection",
+           "fixed_power", "fixed_clock")
+
+
+@dataclasses.dataclass
+class ExpConfig:
+    dataset: str = "synthetic-mnist"     # or synthetic-cifar10
+    n_clients: int = 10
+    sigma: float = 1.0
+    rounds: int = 60
+    eta: float = 0.1
+    batch: int = 32
+    n_train: int = 4000
+    n_test: int = 800
+    # Budgets are calibrated to the *binding* regime for the synthetic
+    # substrate (paper Table-I budgets of 250 J / 150 s are sized for real
+    # MNIST workloads; with them every scheme converges unconstrained and
+    # ties — EXPERIMENTS.md §Paper). Same budget:per-round-cost ratio as the
+    # knee region of the paper's Fig. 7/8.
+    e0: float = 4.0                      # [J]
+    t0: float = 40.0                     # [s]
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Env:
+    cfg: ExpConfig
+    clients: list
+    phi: np.ndarray
+    sp: SystemParams
+    ch: ChannelModel
+    init_fn: Callable
+    apply_fn: Callable
+    eval_fn: Callable
+    loss_fn: Callable
+
+
+def build_env(cfg: ExpConfig) -> Env:
+    ds = make_dataset(cfg.dataset, n_train=cfg.n_train, n_test=cfg.n_test,
+                      seed=cfg.seed)
+    parts = partition_by_dirichlet(ds.y_train, cfg.n_clients, cfg.sigma,
+                                   rng=np.random.default_rng(cfg.seed))
+    clients = [ClientData(ds.x_train[i], ds.y_train[i]) for i in parts]
+    test_hist = np.bincount(ds.y_test, minlength=10).astype(float)
+    phi = phis(np.stack([c.label_histogram(10) for c in clients]),
+               test_hist[None])
+    table = "mnist" if "mnist" in cfg.dataset else "cifar10"
+    sp = SystemParams.table1(cfg.n_clients, dataset=table,
+                             batch_size=cfg.batch)
+    ch = ChannelModel(cfg.n_clients, seed=cfg.seed)
+    if table == "mnist":
+        init_fn = lambda key: lenet_init(key, in_channels=1)
+        apply_fn = lenet_apply
+    else:
+        init_fn = lambda key: resnet_init(key, depth=20, in_channels=3)
+        apply_fn = resnet_apply
+    return Env(cfg=cfg, clients=clients, phi=phi, sp=sp, ch=ch,
+               init_fn=init_fn, apply_fn=apply_fn,
+               eval_fn=make_eval_fn(apply_fn, ds.x_test, ds.y_test),
+               loss_fn=make_loss_fn(apply_fn))
+
+
+def scheme_config(scheme: str) -> AOConfig:
+    # selection_method="paper": the paper's iterative (P5) prefix sweep.
+    # The exact enumerator finds a LOWER theta but degenerates to 1-2
+    # clients/round (the bound's quadratic phi-coupling over-penalizes
+    # participation) and trains worse — see EXPERIMENTS.md §Paper findings.
+    base = dict(outer_iters=3, selection_method="paper",
+                phi_coupling="mean")
+    return {
+        "proposed": AOConfig(**base),
+        "proposed_exact": AOConfig(outer_iters=3, selection_method="exact"),
+        "no_gen": AOConfig(use_phi=False, **base),
+        "fixed_pruning": AOConfig(fix_lambda=0.0, **base),
+        "fixed_selection": AOConfig(fix_selection=True, **base),
+        "fixed_power": AOConfig(fix_power=0.5, **base),
+        "fixed_clock": AOConfig(fix_freq=True, **base),
+    }[scheme]
+
+
+def run_scheme(env: Env, scheme: str, *, e0: float | None = None,
+               t0: float | None = None, eval_every: int = 10):
+    cfg = env.cfg
+    e0 = cfg.e0 if e0 is None else e0
+    t0 = cfg.t0 if t0 is None else t0
+    c = BoundConstants(rounds_S=cfg.rounds - 1, batch_Z=cfg.batch,
+                       eta=cfg.eta)
+    sched = solve_p1(env.phi, e0, t0, env.ch.uplink, env.ch.downlink,
+                     env.sp, c, scheme_config(scheme))
+    trainer = FederatedTrainer(env.loss_fn, env.init_fn(jax.random.key(cfg.seed)),
+                               env.clients, eta=cfg.eta, batch_size=cfg.batch,
+                               seed=cfg.seed)
+    hist = trainer.run(sched, env.sp, env.ch.uplink, env.ch.downlink,
+                       eval_fn=env.eval_fn, eval_every=eval_every,
+                       stop_delay=t0, stop_energy=e0)
+    return sched, hist
+
+
+def final_accuracy(hist) -> float:
+    accs = [m.test_accuracy for m in hist if m.test_accuracy is not None]
+    return accs[-1] if accs else float("nan")
+
+
+def csv_row(name: str, wall_us: float, derived: str) -> str:
+    return f"{name},{wall_us:.1f},{derived}"

@@ -1,0 +1,38 @@
+"""Fig. 7: final accuracy vs system delay budget T0, all six schemes."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import (SCHEMES, ExpConfig, build_env, final_accuracy,
+                               run_scheme)
+
+
+def run(t0s=(15.0, 25.0, 40.0, 60.0), rounds=60, fast=False):
+    cfg = ExpConfig(rounds=rounds)
+    env = build_env(cfg)
+    rows = []
+    for t0 in t0s:
+        row = {"t0": t0}
+        for scheme in SCHEMES:
+            _, hist = run_scheme(env, scheme, t0=t0, eval_every=20)
+            row[scheme] = final_accuracy(hist)
+        rows.append(row)
+    return rows
+
+
+def main(fast: bool = False):
+    # fast trims SWEEP POINTS only: shrinking rounds/dataset leaves the
+    # calibrated binding-budget regime and scrambles the scheme ordering
+    t0 = time.time()
+    rows = run(t0s=(25.0, 40.0) if fast else (15.0, 25.0, 40.0, 60.0),
+               rounds=60, fast=fast)
+    us = (time.time() - t0) * 1e6 / max(len(rows), 1)
+    print("name,us_per_call,derived")
+    for r in rows:
+        vals = ";".join(f"{s}={r[s]:.3f}" for s in SCHEMES)
+        print(f"fig7_T0_{r['t0']},{us:.0f},{vals}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

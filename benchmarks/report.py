@@ -1,0 +1,57 @@
+"""Generate the data-driven sections of EXPERIMENTS.md from artifacts:
+§Dry-run table (experiments/dryrun/*.json) and §Roofline table.
+
+    PYTHONPATH=src python -m benchmarks.report > experiments/report.md
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.roofline import DRYRUN_DIR, full_table, load_dryrun
+from repro.configs.registry import INPUT_SHAPES, list_configs
+
+
+def dryrun_table() -> str:
+    out = ["| arch | shape | mesh | status | compile s | args GB | temp GB | "
+           "HLO flops (body-once) | coll GB (HLO) | coll ops |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for arch in list_configs():
+        for shape in INPUT_SHAPES:
+            for mesh in ("16x16", "2x16x16"):
+                r = load_dryrun(arch, shape, mesh)
+                if r is None:
+                    out.append(f"| {arch} | {shape} | {mesh} | MISSING | | | | | | |")
+                    continue
+                if r["status"] == "skipped":
+                    out.append(f"| {arch} | {shape} | {mesh} | skip (DESIGN §5) "
+                               f"| | | | | | |")
+                    continue
+                mem = r["memory"]
+                counts = r["collectives"]["counts"]
+                cstr = " ".join(f"{k.split('-')[-1] if False else k}:{v}"
+                                for k, v in sorted(counts.items()))
+                out.append(
+                    f"| {arch} | {shape} | {mesh} | ok | {r['compile_s']} "
+                    f"| {mem['argument_size_in_bytes']/1e9:.2f} "
+                    f"| {mem['temp_size_in_bytes']/1e9:.2f} "
+                    f"| {r['cost'].get('flops', 0):.2e} "
+                    f"| {r['collectives']['total_bytes']/1e9:.2f} "
+                    f"| {cstr} |")
+    return "\n".join(out)
+
+
+def roofline_md() -> str:
+    from benchmarks.roofline import markdown_table
+    return markdown_table(full_table("16x16"))
+
+
+def main():
+    print("## §Dry-run — 10 archs x 4 shapes x {16x16, 2x16x16}\n")
+    print(dryrun_table())
+    print("\n\n## §Roofline — single-pod (16x16), analytic terms\n")
+    print(roofline_md())
+
+
+if __name__ == "__main__":
+    main()

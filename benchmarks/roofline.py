@@ -1,0 +1,282 @@
+"""Roofline analysis per (arch x shape x mesh) — EXPERIMENTS.md §Roofline.
+
+Three terms per pair, in seconds per step:
+
+    compute    = FLOPs_per_chip / 197e12       (bf16 peak, TPU v5e)
+    memory     = HBM_bytes_per_chip / 819e9
+    collective = coll_bytes_per_chip / 50e9    (ICI link bw)
+
+IMPORTANT measurement note: XLA's HloCostAnalysis counts while-loop bodies
+ONCE (verified: a 4-step microbatch scan divides reported flops by 4), so
+`compiled.cost_analysis()` under-reports every lax.scan-ed layer stack. The
+terms below are therefore ANALYTIC — derived from the architecture equations
+(matmul + attention + SSD + MoE + CE) and the sharding layout — and the
+HLO-measured numbers ride along as `hlo_*` fields for sanity (they are exact
+for the non-loop portion). tests/test_roofline.py validates the analytic
+per-layer FLOPs against the HLO slope of 1- vs 2-layer unrolled variants.
+
+Collective bytes come from the dry-run HLO parse (per-device shapes) for
+top-level collectives, plus analytic in-loop terms (FSDP gathers, TP
+all-reduces, MoE all-to-all) that live inside the scanned layer body.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.configs.registry import (INPUT_SHAPES, InputShape, get_config,
+                                    list_configs, shape_applicable)
+from repro.launch.mesh import PEAK_FLOPS_BF16, HBM_BW, ICI_BW_PER_LINK
+from repro.launch.steps import train_microbatches
+from repro.models.transformer import active_param_count, param_count
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+BYTES = 2  # bf16
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    flops_chip: float
+    hbm_bytes_chip: float
+    coll_bytes_chip: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float          # 6*N_active*T (dense) — the paper-standard
+    useful_ratio: float         # model_flops / total analytic flops
+    note: str = ""
+    hlo: dict | None = None
+
+    def terms(self):
+        return {"compute": self.compute_s, "memory": self.memory_s,
+                "collective": self.collective_s}
+
+
+def _mesh_sizes(mesh: str):
+    if mesh == "2x16x16":
+        return 512, 32, 16   # chips, batch-shards, model-shards
+    return 256, 16, 16
+
+
+def _attn_layers(cfg: ModelConfig):
+    """[(n_layers, kind)] with kind in full|window|none + cross-attn info."""
+    if cfg.family == "ssm":
+        return [], 0
+    if cfg.family == "vlm":
+        k = cfg.cross_attn_every
+        n_groups = cfg.num_layers // k
+        return [(n_groups * (k - 1), "full")], n_groups  # cross layers extra
+    if cfg.local_global:
+        half = cfg.num_layers // 2
+        return [(half, "window"), (half, "full")], 0
+    kind = "window" if cfg.sliding_window else "full"
+    return [(cfg.num_layers, kind)], 0
+
+
+def analytic_roofline(cfg: ModelConfig, shape: InputShape, mesh: str,
+                      *, swa_only: bool | None = None) -> Roofline:
+    chips, bshards, mshards = _mesh_sizes(mesh)
+    b, s = shape.global_batch, shape.seq_len
+    kind = shape.kind
+    if swa_only is None:
+        swa_only = shape.name == "long_500k" and cfg.local_global
+
+    n_total = param_count(cfg)
+    n_active = active_param_count(cfg)
+    p_bytes = BYTES * n_total
+
+    t_tokens = b * s if kind != "decode" else b
+    # ---- matmul flops (params-driven) ----
+    if kind == "train":
+        mm = 8.0 * n_active * t_tokens     # 2 fwd + 4 bwd + 2 remat re-fwd
+    else:
+        mm = 2.0 * n_active * t_tokens
+
+    # ---- attention flops ----
+    layers, n_cross = _attn_layers(cfg)
+    q_chunk = 512
+    attn = 0.0
+    w = cfg.sliding_window or 4096
+    for (nl, k_) in layers:
+        if kind == "decode":
+            ctx = s if (k_ == "full" and not swa_only) else min(w, s)
+            per = 4.0 * b * cfg.num_heads * cfg.head_dim * ctx
+        else:
+            ctx = s if (k_ == "full" and not swa_only) else min(w + q_chunk, s)
+            per = 4.0 * b * cfg.num_heads * cfg.head_dim * s * ctx
+            if kind == "train":
+                per *= 4.0                 # flash fwd + recompute-heavy bwd
+            elif k_ == "full":
+                per *= 0.5                 # prefill causal triangle skip
+        attn += nl * per
+    if n_cross:  # vlm gated cross layers
+        enc = cfg.vision_tokens
+        qlen = 1 if kind == "decode" else s
+        per = 4.0 * b * cfg.num_heads * cfg.head_dim * qlen * enc
+        attn += n_cross * per * (4.0 if kind == "train" else 1.0)
+    if cfg.family == "audio":
+        enc = cfg.encoder_tokens
+        qlen = 1 if kind == "decode" else s
+        attn += cfg.num_layers * 4.0 * b * cfg.num_heads * cfg.head_dim \
+            * qlen * enc * (4.0 if kind == "train" else 1.0)
+        if kind != "decode":  # encoder self-attn
+            attn += cfg.encoder_layers * 4.0 * b * cfg.num_heads \
+                * cfg.head_dim * enc * enc * (4.0 if kind == "train" else 1.0)
+
+    # ---- SSD flops ----
+    ssd = 0.0
+    if cfg.ssm_state:
+        h_, p_, n_ = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+        q_ = cfg.ssm_chunk
+        if kind == "decode":
+            per_tok = 2.0 * h_ * p_ * n_ * 2
+        else:
+            per_tok = 2.0 * h_ * (q_ * 1.0 + q_ * (p_ + n_) / 2 + n_ * p_)
+        ssd = cfg.num_layers * t_tokens * per_tok \
+            * (3.0 if kind == "train" else 1.0)
+
+    flops = (mm + attn + ssd) / chips
+
+    # ---- HBM bytes per chip ----
+    d = cfg.d_model
+    t_local = t_tokens / bshards
+    if kind == "train":
+        # param shard RW (grads, masks, update) + per-layer gathered weights
+        hbm = 6.0 * p_bytes / chips + 3.0 * p_bytes / mshards
+        hbm += 16.0 * t_local * d * max(cfg.num_layers, 1)   # activations
+    elif kind == "prefill":
+        hbm = p_bytes / mshards + 8.0 * t_local * d * max(cfg.num_layers, 1)
+        hbm += _cache_bytes(cfg, shape, swa_only) / chips    # cache write
+    else:
+        hbm = p_bytes / mshards                              # weights read
+        hbm += _cache_bytes(cfg, shape, swa_only) / chips    # cache read
+        hbm += 8.0 * t_local * d * max(cfg.num_layers, 1)
+
+    # ---- collective bytes per chip ----
+    if kind == "train":
+        coll = 3.0 * p_bytes / mshards               # FSDP AG x2 + RS
+        coll += 2.0 * 2.0 * cfg.num_layers * t_local * d * BYTES  # TP ARs
+    else:
+        coll = 2.0 * 2.0 * cfg.num_layers * t_local * d * BYTES
+        if dataclasses.asdict(cfg).get("num_experts"):
+            pass
+    if cfg.num_experts:
+        k_top = cfg.experts_per_token
+        coll += 4.0 * t_local * d * BYTES * k_top * cfg.num_layers \
+            * (2.0 if kind == "train" else 1.0)      # a2a dispatch+combine
+
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = hbm / HBM_BW
+    collective_s = coll / ICI_BW_PER_LINK
+    model_flops = (6.0 if kind == "train" else 2.0) * n_active * t_tokens
+    total = flops * chips
+    dominant = max({"compute": compute_s, "memory": memory_s,
+                    "collective": collective_s}.items(), key=lambda kv: kv[1])
+    return Roofline(
+        arch=cfg.name, shape=shape.name, mesh=mesh,
+        flops_chip=flops, hbm_bytes_chip=hbm, coll_bytes_chip=coll,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant[0], model_flops=model_flops,
+        useful_ratio=model_flops / max(total, 1e-9),
+    )
+
+
+def _cache_bytes(cfg: ModelConfig, shape: InputShape, swa_only: bool) -> float:
+    b, s = shape.global_batch, shape.seq_len
+    w = cfg.sliding_window or 4096
+    per_tok = BYTES * 2 * cfg.num_kv_heads * cfg.head_dim
+    if cfg.family == "ssm":
+        return cfg.num_layers * b * cfg.ssm_heads * cfg.ssm_head_dim \
+            * cfg.ssm_state * 4.0
+    total = 0.0
+    if cfg.family == "hybrid":
+        total += cfg.num_layers * b * min(w, s) * per_tok
+        total += cfg.num_layers * b * cfg.ssm_heads * cfg.ssm_head_dim \
+            * cfg.ssm_state * 4.0
+        return total
+    layers, n_cross = _attn_layers(cfg)
+    for nl, k_ in layers:
+        ctx = s if (k_ == "full" and not swa_only) else min(w, s)
+        total += nl * b * ctx * per_tok
+    return total
+
+
+def load_dryrun(arch: str, shape: str, mesh: str) -> dict | None:
+    path = os.path.join(DRYRUN_DIR, f"{arch}__{shape}__{mesh}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def full_table(mesh: str = "16x16") -> list[Roofline]:
+    rows = []
+    for arch in list_configs():
+        cfg = get_config(arch)
+        for sname, shape in INPUT_SHAPES.items():
+            ok, why = shape_applicable(cfg, shape)
+            if not ok:
+                rows.append(Roofline(arch, sname, mesh, 0, 0, 0, 0, 0, 0,
+                                     "skipped", 0, 0, note=why))
+                continue
+            r = analytic_roofline(cfg, shape, mesh)
+            rec = load_dryrun(arch, sname, mesh)
+            if rec and rec.get("status") == "ok":
+                r.hlo = {
+                    "flops": rec["cost"].get("flops"),
+                    "bytes": rec["cost"].get("bytes accessed"),
+                    "coll_bytes": rec["collectives"]["total_bytes"],
+                    "temp_gb": rec["memory"]["temp_size_in_bytes"] / 1e9,
+                    "compile_s": rec.get("compile_s"),
+                }
+            rows.append(r)
+    return rows
+
+
+def markdown_table(rows: list[Roofline]) -> str:
+    out = ["| arch | shape | compute s | memory s | collective s | dominant | "
+           "MODEL_FLOPS | useful | mem/dev GB |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.dominant == "skipped":
+            out.append(f"| {r.arch} | {r.shape} | — | — | — | skip | — | — "
+                       f"| — |")
+            continue
+        tg = f"{r.hlo['temp_gb']:.1f}" if r.hlo else "?"
+        out.append(
+            f"| {r.arch} | {r.shape} | {r.compute_s:.2e} | {r.memory_s:.2e} "
+            f"| {r.collective_s:.2e} | **{r.dominant}** "
+            f"| {r.model_flops:.2e} | {r.useful_ratio:.2f} | {tg} |")
+    return "\n".join(out)
+
+
+def main(fast: bool = False):
+    import time
+    t0 = time.time()
+    rows = full_table("16x16")
+    us = (time.time() - t0) * 1e6 / max(len(rows), 1)
+    print("name,us_per_call,derived")
+    for r in rows:
+        if r.dominant == "skipped":
+            print(f"roofline_{r.arch}_{r.shape},0,skipped")
+            continue
+        print(f"roofline_{r.arch}_{r.shape},{us:.0f},"
+              f"compute={r.compute_s:.3e};memory={r.memory_s:.3e};"
+              f"collective={r.collective_s:.3e};dominant={r.dominant};"
+              f"useful={r.useful_ratio:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

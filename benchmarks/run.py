@@ -1,0 +1,59 @@
+"""Benchmark entry point — one harness per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Default is the fast profile (reduced sigmas/budgets/rounds) so the whole
+suite completes on one CPU core; --full reproduces the paper-scale sweeps.
+Output: ``name,us_per_call,derived`` CSV per harness.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig3,fig4,fig5,fig6,fig7,fig8,roofline")
+    args = ap.parse_args()
+    fast = not args.full
+
+    from benchmarks import (fig3_generalization_statement, fig4_accuracy_vs_sigma,
+                            fig5_loss_vs_time, fig6_loss_vs_energy,
+                            fig7_accuracy_vs_delay, fig8_accuracy_vs_energy,
+                            roofline, selection_ablation, theory_validation)
+    suite = {
+        "fig3": fig3_generalization_statement.main,
+        "fig4": fig4_accuracy_vs_sigma.main,
+        "fig5": fig5_loss_vs_time.main,
+        "fig6": fig6_loss_vs_energy.main,
+        "fig7": fig7_accuracy_vs_delay.main,
+        "fig8": fig8_accuracy_vs_energy.main,
+        "theory": theory_validation.main,
+        "selection": selection_ablation.main,
+        "roofline": roofline.main,
+    }
+    only = set(args.only.split(",")) if args.only else set(suite)
+    failures = []
+    for name, fn in suite.items():
+        if name not in only:
+            continue
+        print(f"== {name} ==", flush=True)
+        t0 = time.time()
+        try:
+            fn(fast=fast)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+        print(f"== {name} done in {time.time() - t0:.1f}s ==", flush=True)
+    if failures:
+        print("FAILED:", failures)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

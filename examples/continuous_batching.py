@@ -1,0 +1,73 @@
+"""Continuous-batching serving: many requests with ragged prompt lengths
+stream through a fixed pool of decode slots (repro.serving.ServingEngine).
+
+HONEST CPU caveat: the engine's win on accelerators comes from amortizing
+the (memory-bound) weight reads across the in-flight batch; on one CPU core
+compute scales with batch, so wall-clock does NOT show the speedup — the
+demonstration here is the *scheduling* behavior (slot utilization, requests
+in flight, time-to-first-token under load) plus exactness (tests prove
+engine output == sequential generation).
+
+    PYTHONPATH=src python examples/continuous_batching.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import Runtime, init_params
+from repro.serving import ServingEngine
+
+ARCH = "granite-3-2b"
+N_REQUESTS = 12
+MAX_NEW = 12
+
+cfg = get_config(ARCH).reduced()
+params = init_params(jax.random.key(0), cfg)
+rng = np.random.default_rng(0)
+prompts = [rng.integers(0, cfg.vocab_size,
+                        size=int(rng.integers(8, 30))).astype(np.int32)
+           for _ in range(N_REQUESTS)]
+
+# --- continuous batching: 4 slots shared by 12 requests ---------------------
+eng = ServingEngine(params, cfg, max_batch=4, max_seq=128,
+                    rt=Runtime(attn_impl="naive"), prompt_buckets=(32,))
+eng.submit(prompts[0], max_new_tokens=2)
+eng.run_to_completion()                      # warm compiles
+eng.finished.clear()
+
+t0 = time.time()
+for pr in prompts:
+    eng.submit(pr, max_new_tokens=MAX_NEW)
+active_trace = []
+while eng.active or eng.queue:
+    active_trace.append(eng.step())
+done = eng.finished
+dt_cb = time.time() - t0
+total_tokens = sum(len(st.generated) for st in done)
+steps = len(active_trace)
+print(f"continuous batching: {len(done)} requests, {total_tokens} tokens, "
+      f"{steps} engine steps ({total_tokens / max(steps,1):.2f} tok/step; "
+      f"sequential would need {total_tokens} steps)")
+print(f"mean slots active: {np.mean([a for a in active_trace if a]):.2f}/4")
+
+# --- naive: one request at a time (batch 1, same engine => no recompiles) ---
+one = ServingEngine(params, cfg, max_batch=1, max_seq=128,
+                    rt=Runtime(attn_impl="naive"), prompt_buckets=(32,))
+one.submit(prompts[0], max_new_tokens=MAX_NEW)
+one.run_to_completion()                    # warm the compile caches
+t0 = time.time()
+for pr in prompts:
+    one.submit(pr, max_new_tokens=MAX_NEW)
+    one.run_to_completion()
+dt_naive = time.time() - t0
+print(f"one-by-one (warm, CPU): {total_tokens} tokens in {dt_naive:.1f}s — "
+      f"faster on CPU (compute ~ batch); on TPU the engine's "
+      f"{total_tokens / max(steps,1):.2f} tok/step amortizes the "
+      f"memory-bound weight reads (see §Roofline: decode is memory-bound)")
+
+# per-request latency stats
+waits = [st.t_first_token - st.t_enqueue for st in done]
+print(f"time-to-first-token: mean {np.mean(waits)*1e3:.0f} ms, "
+      f"p99 {np.percentile(waits, 99)*1e3:.0f} ms")

@@ -1,0 +1,69 @@
+"""Batched serving example over the assigned architectures (reduced configs):
+prefill a batch of prompts, decode with per-family KV/SSM caches, report
+tokens/s — exercising ring-buffer SWA caches, SSM state caches, and
+cross-attention caches through the public API.
+
+    PYTHONPATH=src python examples/serve_batched.py [--arch mamba2-130m]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, list_configs
+from repro.models import Runtime, decode_step, init_cache, init_params, prefill
+
+ARCHS_DEMO = ["granite-3-2b", "mamba2-130m", "mixtral-8x22b", "gemma2-9b",
+              "whisper-small"]
+
+
+def serve_one(arch: str, batch=2, prompt_len=48, gen=16):
+    cfg = get_config(arch).reduced()
+    rt = Runtime(attn_impl="naive")
+    rng = np.random.default_rng(0)
+    params = init_params(jax.random.key(0), cfg)
+    extra = None
+    if cfg.family == "audio":
+        extra = {"encoder_input": jnp.asarray(
+            rng.normal(size=(batch, cfg.encoder_tokens, cfg.d_model)),
+            jnp.dtype(cfg.dtype))}
+    if cfg.family == "vlm":
+        extra = {"vision_embeddings": jnp.asarray(
+            rng.normal(size=(batch, cfg.vision_tokens, cfg.d_model)),
+            jnp.dtype(cfg.dtype))}
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                       (batch, prompt_len)), jnp.int32)
+    cache = init_cache(cfg, batch, prompt_len + gen)
+
+    p_jit = jax.jit(lambda p, t, c: prefill(p, t, c, cfg, rt, extra))
+    d_jit = jax.jit(lambda p, t, c, pos: decode_step(p, t, c, pos, cfg, rt))
+
+    logits, cache = p_jit(params, prompts, cache)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    out = [tok]
+    t0 = time.time()
+    for i in range(gen - 1):
+        logits, cache = d_jit(params, tok, cache, prompt_len + i)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(out[-1])
+    dt = time.time() - t0
+    toks = np.asarray(jnp.concatenate(out, axis=1))
+    print(f"{arch:16s} [{cfg.family:6s}] {batch * (gen - 1) / dt:7.1f} tok/s"
+          f"  sample: {toks[0][:8].tolist()}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_configs() + ["demo"],
+                    default="demo")
+    args = ap.parse_args()
+    archs = ARCHS_DEMO if args.arch == "demo" else [args.arch]
+    for arch in archs:
+        serve_one(arch)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Checkpointing: npz-based pytree save/restore with sharding metadata."""
+from repro.checkpoint.io import save_checkpoint, load_checkpoint, CheckpointManager
+
+__all__ = ["save_checkpoint", "load_checkpoint", "CheckpointManager"]

@@ -1,0 +1,126 @@
+"""Pytree checkpointing with path-keyed npz storage + JSON metadata.
+
+Stores each leaf under its tree path; restores into the same structure.
+Sharding metadata (PartitionSpec strings) rides along so a multi-host restore
+can re-shard without guessing. Atomic via write-to-temp + rename.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _path_dict(tree: PyTree) -> dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for kp, leaf in flat:
+        key = jax.tree_util.keystr(kp)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(
+    path: str, params: PyTree, *, step: int = 0,
+    sharding_meta: dict[str, str] | None = None,
+    extra: dict | None = None,
+) -> None:
+    """Atomically save a pytree (+ metadata json) to `path` (.npz appended)."""
+    os.makedirs(os.path.dirname(os.path.abspath(path)) or ".", exist_ok=True)
+    arrays = _path_dict(params)
+    meta = {
+        "step": step,
+        "keys": sorted(arrays),
+        "sharding": sharding_meta or {},
+        "extra": extra or {},
+    }
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)) or ".",
+                               suffix=".npz.tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **{k.replace("/", "⁄"): v for k, v in arrays.items()})
+        os.replace(tmp, path if path.endswith(".npz") else path + ".npz")
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    meta_path = (path[:-4] if path.endswith(".npz") else path) + ".meta.json"
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2)
+
+
+def load_checkpoint(path: str, like: PyTree) -> tuple[PyTree, dict]:
+    """Restore a pytree saved by save_checkpoint into the structure of `like`."""
+    npz_path = path if path.endswith(".npz") else path + ".npz"
+    meta_path = (path[:-4] if path.endswith(".npz") else path) + ".meta.json"
+    with np.load(npz_path) as data:
+        arrays = {k.replace("⁄", "/"): data[k] for k in data.files}
+    meta = {}
+    if os.path.exists(meta_path):
+        with open(meta_path) as f:
+            meta = json.load(f)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for kp, leaf in flat:
+        key = jax.tree_util.keystr(kp)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = arrays[key]
+        if arr.shape != np.shape(leaf):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"ckpt {arr.shape} vs model {np.shape(leaf)}")
+        leaves.append(arr.astype(np.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta
+
+
+class CheckpointManager:
+    """Keeps the latest k checkpoints under a directory."""
+
+    def __init__(self, directory: str, *, keep: int = 3, prefix: str = "ckpt"):
+        self.directory = directory
+        self.keep = keep
+        self.prefix = prefix
+        os.makedirs(directory, exist_ok=True)
+
+    def _name(self, step: int) -> str:
+        return os.path.join(self.directory, f"{self.prefix}_{step:08d}")
+
+    def save(self, step: int, params: PyTree, **kw) -> str:
+        path = self._name(step)
+        save_checkpoint(path, params, step=step, **kw)
+        self._gc()
+        return path + ".npz"
+
+    def latest_step(self) -> int | None:
+        steps = self._steps()
+        return steps[-1] if steps else None
+
+    def restore(self, like: PyTree, step: int | None = None) -> tuple[PyTree, dict]:
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError("no checkpoints found")
+        return load_checkpoint(self._name(step), like)
+
+    def _steps(self) -> list[int]:
+        out = []
+        for fn in os.listdir(self.directory):
+            if fn.startswith(self.prefix) and fn.endswith(".npz"):
+                try:
+                    out.append(int(fn[len(self.prefix) + 1:-4]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def _gc(self) -> None:
+        steps = self._steps()
+        for s in steps[:-self.keep]:
+            for suffix in (".npz", ".meta.json"):
+                p = self._name(s) + suffix
+                if os.path.exists(p):
+                    os.unlink(p)

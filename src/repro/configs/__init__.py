@@ -1,0 +1,10 @@
+"""Architecture configs: one module per assigned architecture.
+
+Use `repro.configs.get_config(name)` / `list_configs()`; every config cites
+its source in `source`.
+"""
+from repro.configs.base import ModelConfig
+from repro.configs.registry import get_config, list_configs, INPUT_SHAPES, InputShape
+
+__all__ = ["ModelConfig", "get_config", "list_configs", "INPUT_SHAPES",
+           "InputShape"]

@@ -1,0 +1,38 @@
+"""Core library: the paper's contribution (generalization-aware, parameter-
+efficient FEEL with joint resource optimization)."""
+from repro.core.generalization import (
+    GeneralizationStatement,
+    generalization_statement,
+    client_statements,
+    phis,
+    generalization_gap_increment_bound,
+    entropy,
+    cross_entropy,
+    kl_divergence,
+    mutual_information_term,
+    PHI_MAX,
+)
+from repro.core.convergence import BoundConstants, theta, theta_decomposition, round_term
+from repro.core.pruning import (
+    PruneSpec,
+    taylor_importance,
+    exact_importance,
+    build_masks,
+    apply_masks,
+    global_threshold,
+    actual_ratio,
+    pruning_distortion,
+)
+from repro.core.optimizer_ao import AOConfig, Schedule, solve_p1
+from repro.core.federated import ClientData, FederatedTrainer, RoundMetrics
+
+__all__ = [
+    "GeneralizationStatement", "generalization_statement", "client_statements",
+    "phis", "generalization_gap_increment_bound", "entropy", "cross_entropy",
+    "kl_divergence", "mutual_information_term", "PHI_MAX",
+    "BoundConstants", "theta", "theta_decomposition", "round_term",
+    "PruneSpec", "taylor_importance", "exact_importance", "build_masks",
+    "apply_masks", "global_threshold", "actual_ratio", "pruning_distortion",
+    "AOConfig", "Schedule", "solve_p1",
+    "ClientData", "FederatedTrainer", "RoundMetrics",
+]

@@ -1,0 +1,167 @@
+"""Parameter-efficient FedSGD engine (paper Sec. II-A, eqs. 2-7).
+
+Per round s:
+  1. server broadcasts the previous global gradient v^(s-1) (downlink, eq. 9);
+  2. each selected client computes first-order importance Q = (v * rho)^2
+     (eq. 4), prunes the lambda_n fraction of lowest-importance weights
+     (eq. 2), yielding the pruned model w~_n;
+  3. the client computes a mini-batch gradient on the pruned model (eq. 5)
+     and uploads it masked (uplink, eq. 8 / delay eq. 11);
+  4. the server averages the selected gradients (eq. 6) and takes the FedSGD
+     step w <- w - eta * G (eq. 7).
+
+The engine is model-agnostic: it needs only `loss_fn(params, x, y) -> scalar`.
+Time/energy bookkeeping uses the wireless substrate with the schedule's
+per-round (a, lambda, p, f).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pruning
+from repro.core.optimizer_ao import Schedule
+from repro.wireless.comm import SystemParams, round_delay, round_energy
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class ClientData:
+    x: np.ndarray
+    y: np.ndarray
+
+    def __len__(self) -> int:
+        return len(self.y)
+
+    def label_histogram(self, num_classes: int) -> np.ndarray:
+        return np.bincount(self.y.astype(int), minlength=num_classes).astype(float)
+
+
+@dataclasses.dataclass
+class RoundMetrics:
+    round: int
+    train_loss: float
+    selected: list[int]
+    mean_lambda: float
+    delay: float
+    energy: float
+    cumulative_delay: float
+    cumulative_energy: float
+    test_loss: float | None = None
+    test_accuracy: float | None = None
+
+
+class FederatedTrainer:
+    """FedSGD with client selection + importance pruning + masked aggregation."""
+
+    def __init__(
+        self,
+        loss_fn: Callable[[PyTree, jnp.ndarray, jnp.ndarray], jnp.ndarray],
+        params: PyTree,
+        clients: Sequence[ClientData],
+        *,
+        eta: float,
+        batch_size: int,
+        seed: int = 0,
+        prune_spec: pruning.PruneSpec = pruning.PruneSpec(),
+    ):
+        self.loss_fn = loss_fn
+        self.params = params
+        self.clients = list(clients)
+        self.eta = float(eta)
+        self.batch_size = int(batch_size)
+        self.rng = np.random.default_rng(seed)
+        self.prune_spec = prune_spec
+        self.global_grad: PyTree = jax.tree.map(jnp.zeros_like, params)
+        self._grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+
+    # -- round primitives ---------------------------------------------------
+
+    def _sample_batch(self, client: ClientData) -> tuple[jnp.ndarray, jnp.ndarray]:
+        idx = self.rng.choice(len(client), size=min(self.batch_size, len(client)),
+                              replace=len(client) < self.batch_size)
+        return jnp.asarray(client.x[idx]), jnp.asarray(client.y[idx])
+
+    def client_update(
+        self, n: int, lam: float
+    ) -> tuple[PyTree, PyTree, float]:
+        """Steps 2-3 for client n: returns (masked gradient, mask, loss)."""
+        if lam > 0.0:
+            imp = pruning.taylor_importance(self.params, self.global_grad)
+            masks = pruning.build_masks(imp, lam, self.prune_spec)
+        else:
+            masks = jax.tree.map(
+                lambda w: jnp.ones_like(w, dtype=jnp.float32), self.params)
+        pruned = pruning.apply_masks(self.params, masks)
+        x, y = self._sample_batch(self.clients[n])
+        loss, grads = self._grad_fn(pruned, x, y)
+        grads = pruning.apply_masks(grads, masks)  # pruned coords not uploaded
+        return grads, masks, float(loss)
+
+    def server_step(self, grads: list[PyTree]) -> None:
+        """Eqs. (6)-(7): average selected gradients, FedSGD update."""
+        if not grads:
+            return
+        inv = 1.0 / len(grads)
+        g = grads[0]
+        for extra in grads[1:]:
+            g = jax.tree.map(lambda acc, e: acc + e, g, extra)
+        g = jax.tree.map(lambda t: t * inv, g)
+        self.global_grad = g
+        self.params = jax.tree.map(
+            lambda w, gg: w - self.eta * gg.astype(w.dtype), self.params, g)
+
+    # -- full run -----------------------------------------------------------
+
+    def run(
+        self,
+        schedule: Schedule,
+        sp: SystemParams,
+        h_up: np.ndarray,
+        h_down: np.ndarray,
+        *,
+        eval_fn: Callable[[PyTree], tuple[float, float]] | None = None,
+        eval_every: int = 10,
+        stop_delay: float | None = None,
+        stop_energy: float | None = None,
+    ) -> list[RoundMetrics]:
+        """Execute the schedule. eval_fn(params) -> (test_loss, test_acc)."""
+        history: list[RoundMetrics] = []
+        cum_t = cum_e = 0.0
+        n_rounds = schedule.a.shape[0]
+        for s in range(n_rounds):
+            a_s, lam_s = schedule.a[s], schedule.lam[s]
+            p_s, f_s = schedule.power[s], schedule.freq[s]
+            selected = [int(i) for i in np.flatnonzero(a_s > 0)]
+            grads, losses = [], []
+            for n in selected:
+                g, _, loss = self.client_update(n, float(lam_s[n]))
+                grads.append(g)
+                losses.append(loss)
+            self.server_step(grads)
+            d = round_delay(a_s, lam_s, p_s, f_s, h_up, h_down, sp)
+            e = round_energy(a_s, lam_s, p_s, f_s, h_up, h_down, sp)
+            cum_t += d
+            cum_e += e
+            m = RoundMetrics(
+                round=s,
+                train_loss=float(np.mean(losses)) if losses else float("nan"),
+                selected=selected,
+                mean_lambda=float(lam_s[a_s > 0].mean()) if selected else 0.0,
+                delay=d, energy=e,
+                cumulative_delay=cum_t, cumulative_energy=cum_e,
+            )
+            if eval_fn is not None and (s % eval_every == 0 or s == n_rounds - 1):
+                m.test_loss, m.test_accuracy = eval_fn(self.params)
+            history.append(m)
+            if stop_delay is not None and cum_t >= stop_delay:
+                break
+            if stop_energy is not None and cum_e >= stop_energy:
+                break
+        return history

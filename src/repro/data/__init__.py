@@ -1,0 +1,9 @@
+"""Data substrate: synthetic datasets, Dirichlet non-IID partitioning, batching."""
+from repro.data.dirichlet import dirichlet_label_proportions, partition_by_dirichlet
+from repro.data.synthetic import SyntheticImageDataset, make_dataset
+from repro.data.loader import batches
+
+__all__ = [
+    "dirichlet_label_proportions", "partition_by_dirichlet",
+    "SyntheticImageDataset", "make_dataset", "batches",
+]

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+  flash_attention.py   — GQA flash attention (causal/SWA/softcap)
+  decode_attention.py  — flash-decoding: one query vs a long KV cache
+  pruning_mask.py      — fused eq.-(4) importance + mask, fused pruned-SGD step
+  ssd_chunk.py         — mamba2 SSD intra-chunk kernel
+
+Each has a pure-jnp oracle in ref.py and a jitted wrapper in ops.py; all are
+validated in interpret mode on CPU (tests/test_kernels.py) and target TPU
+VMEM/MXU tiling (DESIGN.md §3).
+"""

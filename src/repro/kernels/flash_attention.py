@@ -1,0 +1,119 @@
+"""Pallas TPU flash attention (GQA, causal, sliding window, softcap).
+
+TPU-native design (not a CUDA port):
+  * grid = (batch, q_heads, q_blocks, kv_blocks); the kv_blocks axis is
+    `arbitrary` (sequential) so the online-softmax accumulators can live in
+    VMEM scratch across kv steps — the MXU consumes [BQ, D] x [D, BK] tiles.
+  * BlockSpecs tile q/o as [1, 1, BQ, D] and k/v as [1, 1, BK, D] with an
+    index map translating q-head -> kv-head (GQA: h // group).
+  * block shapes default to 128 (MXU native); accumulation is fp32.
+  * causal/window blocks that are fully masked are skipped with pl.when
+    (structural zero-work, not just masking).
+
+Validated in interpret mode on CPU against ref.flash_attention_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0**30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  causal: bool, window: int, cap: float, bq: int, bk: int,
+                  nk: int, scale: float):
+    ki = pl.program_id(3)
+    qi = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * bq
+    k_start = ki * bk
+    # structural skip: block fully outside the causal/window band
+    live = jnp.bool_(True)
+    if causal:
+        live = jnp.logical_and(live, k_start <= q_start + bq - 1)
+    if window:
+        live = jnp.logical_and(live, k_start + bk - 1 > q_start - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # [BQ, D]
+        k = k_ref[0, 0].astype(jnp.float32)          # [BK, D]
+        v = v_ref[0, 0].astype(jnp.float32)          # [BK, D]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        if cap:
+            s = cap * jnp.tanh(s / cap)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot(p, v)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-20)[:, None]
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+    causal: bool = True, window: int = 0, cap: float = 0.0,
+    block_q: int = 128, block_k: int = 128, interpret: bool | None = None,
+) -> jnp.ndarray:
+    """q [B,Hq,Sq,D]; k/v [B,Hkv,Skv,D] -> [B,Hq,Sq,D]."""
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    if hq % hkv:
+        raise ValueError("GQA requires Hq % Hkv == 0")
+    g = hq // hkv
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    if sq % bq or skv % bk:
+        raise ValueError(f"seq ({sq},{skv}) must divide blocks ({bq},{bk})")
+    nq, nk = sq // bq, skv // bk
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, window=window, cap=cap,
+        bq=bq, bk=bk, nk=nk, scale=1.0 / np.sqrt(d))
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, qi, ki: (b_, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, qi, ki: (b_, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, qi, ki: (b_, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b_, h, qi, ki: (b_, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),     # running max m
+            pltpu.VMEM((bq,), jnp.float32),     # running denom l
+            pltpu.VMEM((bq, d), jnp.float32),   # fp32 output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

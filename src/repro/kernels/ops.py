@@ -1,0 +1,129 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+These adapt model-layout tensors to kernel layouts, handle padding to tile
+multiples, and fall back to interpret mode off-TPU automatically.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import pruning_mask as _pm
+from repro.kernels import ssd_chunk as _sc
+
+PyTree = Any
+LANES = _pm.LANES
+
+
+# ---------------------------------------------------------------------------
+# Flash attention: model layout [B, S, H, D] <-> kernel layout [B, H, S, D]
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "cap",
+                                             "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal=True, window=0, cap=0.0,
+                    block_q=128, block_k=128):
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    o = _fa.flash_attention(qt, kt, vt, causal=causal, window=window, cap=cap,
+                            block_q=block_q, block_k=block_k)
+    return jnp.swapaxes(o, 1, 2)
+
+
+# ---------------------------------------------------------------------------
+# Pruning: arbitrary pytree leaves -> padded [R, LANES] tiles
+# ---------------------------------------------------------------------------
+
+def _to_tiles(x: jnp.ndarray) -> tuple[jnp.ndarray, int]:
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % LANES
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, LANES), n
+
+
+def _from_tiles(t: jnp.ndarray, n: int, shape, dtype) -> jnp.ndarray:
+    return t.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+@jax.jit
+def importance_and_mask(w: jnp.ndarray, v: jnp.ndarray, threshold):
+    """Fused eq.-(4) importance + keep-mask for one tensor (any shape)."""
+    wt, n = _to_tiles(w)
+    vt, _ = _to_tiles(v)
+    r = wt.shape[0]
+    br = r
+    for cand in (256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if r % cand == 0:
+            br = cand
+            break
+    q, m = _pm.importance_mask_2d(wt, vt, threshold, block_rows=br)
+    return (_from_tiles(q, n, w.shape, jnp.float32),
+            _from_tiles(m, n, w.shape, jnp.float32))
+
+
+@jax.jit
+def masked_update(w: jnp.ndarray, g: jnp.ndarray, mask: jnp.ndarray, eta):
+    """Fused pruned-SGD step for one tensor."""
+    wt, n = _to_tiles(w)
+    gt, _ = _to_tiles(g)
+    mt, _ = _to_tiles(mask)
+    r = wt.shape[0]
+    br = next(c for c in (256, 128, 64, 32, 16, 8, 4, 2, 1) if r % c == 0)
+    out = _pm.masked_update_2d(wt, gt, mt, eta, block_rows=br)
+    return _from_tiles(out, n, w.shape, w.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SSD: full sequence via kernel-per-chunk + host scan for the recurrence
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_chunked_pallas(x, b, c, dt, a_log, *, chunk=128):
+    """Drop-in for models.ssm.ssd_chunked's core (no D-skip, zero init state).
+
+    x [B,S,H,P], b/c [B,S,N], dt [B,S,H] -> (y [B,S,H,P], final [B,H,P,N])."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, s)
+    if s % q:
+        raise ValueError(f"seq {s} must divide chunk {q}")
+    nc = s // q
+    xr = jnp.moveaxis(x.reshape(bsz, nc, q, h, p), 1, 0)
+    br = jnp.moveaxis(b.reshape(bsz, nc, q, n), 1, 0)
+    cr = jnp.moveaxis(c.reshape(bsz, nc, q, n), 1, 0)
+    dtr = jnp.moveaxis(dt.reshape(bsz, nc, q, h), 1, 0)
+
+    def body(state, xs):
+        xc, bc, cc, dtc = xs
+        y_intra, st_contrib, dec = _sc.ssd_chunk(xc, bc, cc, dtc, a_log)
+        # inter-chunk term: y_inter[s] = C_s . state * exp(acum_s)
+        a = -jnp.exp(a_log.astype(jnp.float32))
+        acum = jnp.cumsum(dtc.astype(jnp.float32) * a, axis=1)  # [B,q,H]
+        y_inter = jnp.einsum("bqn,bhpn,bqh->bqhp",
+                             cc.astype(jnp.float32), state, jnp.exp(acum))
+        state_new = state * dec[..., None, None] \
+            + jnp.swapaxes(st_contrib, -1, -2)       # [B,H,P,N]
+        return state_new, y_intra.astype(jnp.float32) + y_inter
+
+    state0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    final, ys = jax.lax.scan(body, state0, (xr, br, cr, dtr))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, h, p).astype(x.dtype)
+    return y, final
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def decode_attention(q, k, v, pos, *, block_k=512):
+    """Flash-decoding kernel: q [B,1,Hq,D] (model layout), k/v [B,S,Hkv,D],
+    pos = valid cache length. Returns [B,1,Hq,D]."""
+    from repro.kernels import decode_attention as _da
+    qt = jnp.swapaxes(q, 1, 2)            # [B,Hq,1,D]
+    o = _da.decode_attention(qt, k, v, pos, block_k=block_k)
+    return jnp.swapaxes(o, 1, 2)

@@ -1,0 +1,86 @@
+"""Pallas kernels for the paper's pruning hot spot (eq. 4 over O(10^9) weights).
+
+Two fused kernels, both tiled [BLOCK_R, 128] (lane-width aligned for the VPU):
+
+  * importance_mask: Q = (w * v)^2 and keep-mask (Q >= threshold) in one pass
+    — one read of (w, v), two writes; the unfused jnp version materializes Q
+    twice (once for the threshold compare, once for the mask multiply).
+  * masked_update:  w' = (w - eta * g) * mask — the pruned-FedSGD server
+    update (eq. 7) fused with mask application, saving one full parameter
+    read+write per round.
+
+Inputs of arbitrary shape are flattened and padded to tiles by ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+
+
+def _importance_mask_kernel(w_ref, v_ref, thr_ref, q_ref, m_ref):
+    w = w_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    q = jnp.square(w * v)
+    q_ref[...] = q
+    m_ref[...] = (q >= thr_ref[0]).astype(jnp.float32)
+
+
+def importance_mask_2d(w, v, threshold, *, block_rows: int = 256,
+                       interpret: bool | None = None):
+    """w, v: [R, 128*k]; threshold scalar -> (importance fp32, mask fp32)."""
+    r, c = w.shape
+    if c % LANES:
+        raise ValueError(f"last dim must be a multiple of {LANES}")
+    br = min(block_rows, r)
+    if r % br:
+        raise ValueError(f"rows {r} must divide block {br}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    thr = jnp.asarray([threshold], jnp.float32)
+    grid = (r // br,)
+    spec = pl.BlockSpec((br, c), lambda i: (i, 0))
+    return pl.pallas_call(
+        _importance_mask_kernel,
+        grid=grid,
+        in_specs=[spec, spec, pl.BlockSpec(memory_space=pl.MemorySpace.ANY)],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((r, c), jnp.float32),
+                   jax.ShapeDtypeStruct((r, c), jnp.float32)],
+        interpret=interpret,
+    )(w, v, thr)
+
+
+def _masked_update_kernel(w_ref, g_ref, m_ref, eta_ref, o_ref):
+    w = w_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    m = m_ref[...].astype(jnp.float32)
+    o_ref[...] = ((w - eta_ref[0] * g) * m).astype(o_ref.dtype)
+
+
+def masked_update_2d(w, g, mask, eta, *, block_rows: int = 256,
+                     interpret: bool | None = None):
+    """Fused (w - eta g) * mask on [R, 128*k] tiles."""
+    r, c = w.shape
+    if c % LANES:
+        raise ValueError(f"last dim must be a multiple of {LANES}")
+    br = min(block_rows, r)
+    if r % br:
+        raise ValueError(f"rows {r} must divide block {br}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    eta_arr = jnp.asarray([eta], jnp.float32)
+    spec = pl.BlockSpec((br, c), lambda i: (i, 0))
+    return pl.pallas_call(
+        _masked_update_kernel,
+        grid=(r // br,),
+        in_specs=[spec, spec, spec,
+                  pl.BlockSpec(memory_space=pl.MemorySpace.ANY)],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((r, c), w.dtype),
+        interpret=interpret,
+    )(w, g, mask, eta_arr)

@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, cap=0.0):
+    """q [B,Hq,Sq,D], k/v [B,Hkv,Skv,D] -> [B,Hq,Sq,D] (fp32 math)."""
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qr = q.reshape(b, hkv, g, sq, d).astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qr, k.astype(jnp.float32)) / np.sqrt(d)
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, -2.0**30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", w, v.astype(jnp.float32))
+    return o.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def importance_mask_ref(w, v, threshold):
+    """Eq. (4) Taylor importance + binary keep-mask.
+
+    Returns (importance (w*v)^2 as fp32, mask {0,1} of the same shape)."""
+    q = (w.astype(jnp.float32) * v.astype(jnp.float32)) ** 2
+    return q, (q >= threshold).astype(jnp.float32)
+
+
+def masked_update_ref(w, g, mask, eta):
+    """Fused pruned-SGD update: (w - eta g) * mask."""
+    out = (w.astype(jnp.float32) - eta * g.astype(jnp.float32)) \
+        * mask.astype(jnp.float32)
+    return out.astype(w.dtype)
+
+
+def ssd_chunk_ref(x, b, c, dt, a_log):
+    """Intra-chunk SSD for ONE chunk (the Pallas kernel's unit of work).
+
+    x [B,Q,H,P], b/c [B,Q,N], dt [B,Q,H] (post-softplus), a_log [H].
+    Returns (y_intra [B,Q,H,P], state_contrib [B,H,P,N], decay_out [B,H]):
+      y_intra       = (L ∘ C Bᵀ) (dt·x), L[s,r] = exp(acum_s - acum_r) 1[r<=s]
+      state_contrib = sum_r exp(acum_Q - acum_r) dt_r B_r ⊗ x_r
+      decay_out     = exp(acum_Q)  (carried-state multiplier)
+    """
+    bsz, q, h, p = x.shape
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    ld = dt.astype(jnp.float32) * a
+    acum = jnp.cumsum(ld, axis=1)
+    diff = acum[:, :, None, :] - acum[:, None, :, :]
+    tril = jnp.tril(jnp.ones((q, q), bool))
+    lmat = jnp.exp(jnp.where(tril[None, :, :, None], diff, -1e30))
+    cb = jnp.einsum("bsn,brn->bsr", c.astype(jnp.float32), b.astype(jnp.float32))
+    xdt = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+    y = jnp.einsum("bsrh,brhp->bshp", cb[..., None] * lmat, xdt)
+    atot = acum[:, -1]
+    decay_r = jnp.exp(atot[:, None] - acum)
+    state = jnp.einsum("brn,brhp,brh->bhpn", b.astype(jnp.float32), xdt, decay_r)
+    return y.astype(x.dtype), state, jnp.exp(atot)
+
+
+def decode_attention_ref(q, k, v, pos):
+    """One-query decode oracle. q [B,Hq,1,D]; k/v [B,Skv,Hkv,D]; pos scalar.
+    Returns [B,Hq,1,D]."""
+    b, hq, _, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qr = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    kt = jnp.swapaxes(k, 1, 2).astype(jnp.float32)   # [B,Hkv,S,D]
+    vt = jnp.swapaxes(v, 1, 2).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qr, kt) / np.sqrt(d)
+    valid = jnp.arange(skv) < pos
+    s = jnp.where(valid[None, None, None], s, -2.0**30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", w, vt)
+    return o.reshape(b, hq, 1, d).astype(q.dtype)

@@ -1,0 +1,79 @@
+"""Pallas kernel for the SSD intra-chunk hot spot (mamba2 / hymba).
+
+Per grid step (batch, head) the kernel computes, for one chunk of length Q:
+  scores  = (C Bᵀ) ∘ L          (L = causal decay matrix from cumsum(dt·A))
+  y       = scores @ (dt ∘ X)   [Q, P]
+  state   = (decay_out ∘ B)ᵀ @ (dt ∘ X)   [N, P]  (chunk state contribution)
+
+VMEM tiling: Q defaults to 128 (sublane-aligned); P, N are 64/128 for the
+assigned configs — all MXU-friendly. The inter-chunk recurrence (sequential
+by nature) stays a lax.scan on the host side (ops.ssd_chunked_pallas).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _ssd_chunk_kernel(x_ref, b_ref, c_ref, dt_ref, alog_ref,
+                      y_ref, st_ref, dec_ref, *, q: int):
+    # refs: x [1,Q,1,P], b/c [1,Q,N], dt [1,Q,1], alog [1]
+    x = x_ref[0, :, 0, :].astype(jnp.float32)          # [Q, P]
+    bmat = b_ref[0].astype(jnp.float32)                # [Q, N]
+    cmat = c_ref[0].astype(jnp.float32)                # [Q, N]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)           # [Q]
+    a = -jnp.exp(alog_ref[0].astype(jnp.float32))      # scalar
+    ld = dt * a
+    acum = jnp.cumsum(ld)                              # [Q]
+    diff = acum[:, None] - acum[None, :]               # [Q, Q]
+    row = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    lmat = jnp.exp(jnp.where(col <= row, diff, NEG))
+    cb = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())))  # [Q, Q]
+    xdt = x * dt[:, None]                              # [Q, P]
+    y = jax.lax.dot(cb * lmat, xdt)                    # [Q, P]
+    atot = acum[q - 1]
+    decay_r = jnp.exp(atot - acum)                     # [Q]
+    bw = bmat * decay_r[:, None]                       # [Q, N]
+    state = jax.lax.dot_general(bw, xdt, (((0,), (0,)), ((), ())))  # [N, P]
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+    st_ref[0, 0] = state.astype(st_ref.dtype)
+    dec_ref[0, 0] = jnp.exp(atot).astype(dec_ref.dtype)
+
+
+def ssd_chunk(x, b, c, dt, a_log, *, interpret: bool | None = None):
+    """One chunk, all batches/heads. x [B,Q,H,P], b/c [B,Q,N], dt [B,Q,H],
+    a_log [H] -> (y [B,Q,H,P], state [B,H,N,P], decay [B,H])."""
+    bsz, q, h, p = x.shape
+    n = b.shape[-1]
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    kernel = functools.partial(_ssd_chunk_kernel, q=q)
+    y, st, dec = pl.pallas_call(
+        kernel,
+        grid=(bsz, h),
+        in_specs=[
+            pl.BlockSpec((1, q, 1, p), lambda bi, hi: (bi, 0, hi, 0)),
+            pl.BlockSpec((1, q, n), lambda bi, hi: (bi, 0, 0)),
+            pl.BlockSpec((1, q, n), lambda bi, hi: (bi, 0, 0)),
+            pl.BlockSpec((1, q, 1), lambda bi, hi: (bi, 0, hi)),
+            pl.BlockSpec((1,), lambda bi, hi: (hi,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q, 1, p), lambda bi, hi: (bi, 0, hi, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda bi, hi: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1), lambda bi, hi: (bi, hi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, q, h, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz, h, n, p), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, b, c, dt, a_log)
+    return y, st, dec

@@ -1,0 +1,237 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) on the
+production meshes, extract memory/cost/collective analyses.
+
+MUST be run as its own process (the XLA flag above is read at first jax
+init). Usage:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json and feed
+EXPERIMENTS.md §Dry-run / §Roofline.
+"""
+import argparse
+import json
+import re
+import time
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import (
+    get_config, list_configs, INPUT_SHAPES, shape_applicable)
+from repro.launch import mesh as mesh_lib
+from repro.launch.steps import (
+    specialize, input_specs, make_train_step, make_prefill_step,
+    make_serve_step)
+from repro.sharding import rules
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+# ---------------------------------------------------------------------------
+# Collective-bytes extraction from the (SPMD, per-device) HLO text
+# ---------------------------------------------------------------------------
+
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*((?:\([^)]*\))|(?:[a-z0-9_]+\[[^\]]*\]))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+# ring-factor per collective kind (bytes on the wire per byte of result)
+_KIND_FACTOR = {
+    "all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+    "all-to-all": 1.0, "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-device bytes moved per collective kind (ring-model estimate)."""
+    by_kind: dict[str, float] = {}
+    counts: dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_txt, kind = m.group(2), m.group(3)
+        b = _shape_bytes(shape_txt) * _KIND_FACTOR[kind]
+        by_kind[kind] = by_kind.get(kind, 0.0) + b
+        counts[kind] = counts.get(kind, 0) + 1
+    return {"bytes_by_kind": by_kind, "counts": counts,
+            "total_bytes": sum(by_kind.values())}
+
+
+# ---------------------------------------------------------------------------
+# Dry-run of one (arch, shape, mesh)
+# ---------------------------------------------------------------------------
+
+def lower_step(arch: str, shape_name: str, *, multi_pod: bool = False):
+    """Build mesh + shardings, lower the step. Returns (lowered, meta)."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return None, {"skipped": why}
+    cfg, rt = specialize(cfg, shape)
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    mode = "train" if shape.kind == "train" else "serve"
+    pol = rules.make_policy(cfg, mesh, mode)
+    specs = input_specs(cfg, shape, rt)
+
+    pspec = rules.param_specs(cfg, pol, specs["params"])
+    pshard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspec)
+
+    def nshard(spec_tree):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree)
+
+    with jax.sharding.set_mesh(mesh):
+        if shape.kind == "train":
+            step = make_train_step(cfg, rt)
+            bspec = {k: rules.batch_spec(v.shape[0], pol, rank=len(v.shape))
+                     for k, v in specs["batch"].items()}
+            jitted = jax.jit(step,
+                             in_shardings=(pshard, pshard, nshard(bspec)),
+                             out_shardings=(NamedSharding(mesh, P()), pshard),
+                             donate_argnums=(0,))  # new params alias old
+            lowered = jitted.lower(specs["params"], specs["masks"],
+                                   specs["batch"])
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg, rt)
+            bspec = {k: rules.batch_spec(v.shape[0], pol, rank=len(v.shape))
+                     for k, v in specs["batch"].items()}
+            cspec = rules.cache_specs(cfg, pol, specs["cache"],
+                                      shape.global_batch)
+            jitted = jax.jit(
+                step,
+                in_shardings=(pshard, nshard(bspec), nshard(cspec)),
+                out_shardings=(NamedSharding(mesh, P()), nshard(cspec)))
+            lowered = jitted.lower(specs["params"], specs["batch"],
+                                   specs["cache"])
+        else:
+            step = make_serve_step(cfg, rt)
+            cspec = rules.cache_specs(cfg, pol, specs["cache"],
+                                      shape.global_batch)
+            tok_spec = rules.batch_spec(shape.global_batch, pol, rank=2)
+            jitted = jax.jit(
+                step,
+                in_shardings=(pshard, nshard(cspec),
+                              NamedSharding(mesh, tok_spec),
+                              NamedSharding(mesh, P())),
+                out_shardings=(NamedSharding(mesh, P(*tok_spec[:1], None)),
+                               nshard(cspec)))
+            lowered = jitted.lower(specs["params"], specs["cache"],
+                                   specs["token"], specs["pos"])
+    meta = {"arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "mode": shape.kind, "fsdp": pol.fsdp}
+    return lowered, meta
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            out_dir: str = OUT_DIR) -> dict:
+    t0 = time.time()
+    lowered, meta = lower_step(arch, shape_name, multi_pod=multi_pod)
+    if lowered is None:
+        rec = dict(meta, status="skipped")
+        _save(rec, arch, shape_name, multi_pod, out_dir)
+        return rec
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    mem_rec = {k: int(getattr(mem, k, 0)) for k in
+               ("argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+                "alias_size_in_bytes")}
+    cost = compiled.cost_analysis() or {}
+    cost_rec = {k: float(v) for k, v in cost.items()
+                if isinstance(v, (int, float)) and k in
+                ("flops", "bytes accessed", "transcendentals",
+                 "utilization operand 0 {}", "bytes accessed output {}")}
+    coll = collective_stats(compiled.as_text())
+
+    rec = dict(
+        meta, status="ok",
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        memory=mem_rec, cost=cost_rec, collectives=coll,
+    )
+    _save(rec, arch, shape_name, multi_pod, out_dir)
+    return rec
+
+
+def _save(rec: dict, arch: str, shape_name: str, multi_pod: bool,
+          out_dir: str):
+    os.makedirs(out_dir, exist_ok=True)
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_tag}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_configs())
+    ap.add_argument("--shape", choices=sorted(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args()
+
+    pairs = []
+    if args.all:
+        pairs = [(a, s) for a in list_configs() for s in INPUT_SHAPES]
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        pairs = [(args.arch, args.shape)]
+
+    for arch, shape_name in pairs:
+        try:
+            rec = run_one(arch, shape_name, multi_pod=args.multi_pod,
+                          out_dir=args.out)
+        except Exception as e:  # record and continue the sweep
+            rec = {"arch": arch, "shape": shape_name, "status": "error",
+                   "error": f"{type(e).__name__}: {e}"}
+            _save(rec, arch, shape_name, args.multi_pod, args.out)
+            print(f"[FAIL] {arch} x {shape_name}: {rec['error'][:160]}")
+            continue
+        if rec["status"] == "skipped":
+            print(f"[skip] {arch} x {shape_name}: {rec.get('skipped')}")
+            continue
+        mem = rec["memory"]
+        per_dev = (mem["argument_size_in_bytes"] + mem["temp_size_in_bytes"]
+                   + mem["output_size_in_bytes"])
+        print(f"[ok]   {arch} x {shape_name} ({rec['mesh']}): "
+              f"compile {rec['compile_s']}s, "
+              f"mem/dev {per_dev/1e9:.2f} GB, "
+              f"flops/dev {rec['cost'].get('flops', 0):.3e}, "
+              f"coll {rec['collectives']['total_bytes']/1e9:.3f} GB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (not module constants) so importing this module never
+touches jax device state. The dry-run launcher sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips).
+
+    REPRO_FORCE_MESH="d,m" (or "p,d,m") overrides the shape — used only by
+    tests to exercise the full dry-run path with few host devices."""
+    import os
+    forced = os.environ.get("REPRO_FORCE_MESH")
+    if forced:
+        shape = tuple(int(x) for x in forced.split(","))
+        axes = ("pod", "data", "model")[-len(shape):]
+        return jax.make_mesh(shape, axes)
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(*, model: int | None = None):
+    """Whatever fits the local device count (tests / smoke): (n//m, m)."""
+    n = len(jax.devices())
+    m = model or (2 if n % 2 == 0 and n > 1 else 1)
+    return jax.make_mesh((n // m, m), ("data", "model"))
+
+
+# TPU v5e hardware constants (per chip) for the roofline (EXPERIMENTS.md).
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s
+HBM_BW = 819e9                 # bytes/s
+ICI_BW_PER_LINK = 50e9         # bytes/s per link (~)
+HBM_BYTES = 16e9

@@ -1,0 +1,217 @@
+"""Jittable step functions + abstract input specs for every (arch x shape).
+
+`make_train_step` realizes the paper's parameter-efficient FedSGD on the
+production mesh: the per-client pruning masks ride with the parameters
+(identically sharded), gradients are masked before the cross-client
+(data-axis) aggregation — the TPU analogue of the pruned-gradient upload
+(DESIGN.md §3) — and the server SGD update (eq. 7) is fused in.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.configs.registry import InputShape
+from repro.models import transformer as T
+from repro.models.blocks import Runtime
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Per-shape config/runtime specialization
+# ---------------------------------------------------------------------------
+
+def specialize(cfg: ModelConfig, shape: InputShape) -> tuple[ModelConfig, Runtime]:
+    """Adapt config + runtime to an input shape (DESIGN.md §5)."""
+    # flash_vjp: hand-written O(S) attention backward — the autodiff backward
+    # of the chunked forward stores every [BQ,BK] probability block
+    # (EXPERIMENTS.md §Perf, train-memory iteration 1)
+    # prefill uses the causal triangle-skip scan (§Perf prefill iteration:
+    # exact, 1.6x wall-clock on attention-bound prefill)
+    impl = {"train": "flash_vjp", "prefill": "chunked_skip",
+            "decode": "chunked"}[shape.kind]
+    rt = Runtime(attn_impl=impl, q_chunk=512, kv_chunk=512,
+                 loss_chunk=256, remat=(shape.kind == "train"))
+    if shape.name == "long_500k" and cfg.local_global:
+        rt = dataclasses.replace(rt, swa_only=True)
+    if cfg.family == "audio" and shape.seq_len > cfg.max_seq:
+        cfg = dataclasses.replace(cfg, max_seq=shape.seq_len)
+    return cfg, rt
+
+
+# ---------------------------------------------------------------------------
+# Step factories
+# ---------------------------------------------------------------------------
+
+def train_microbatches(cfg: ModelConfig) -> int:
+    """Gradient-accumulation factor: bounds per-device activation memory for
+    the widest archs (d_model >= 6144: mixtral, llama-vision-90b, arctic;
+    arctic additionally needs x8 — 128 experts' dispatch buffers).
+    EXPERIMENTS.md §Perf train-memory iteration 3."""
+    if cfg.num_experts >= 64:
+        return 8
+    return 4 if cfg.d_model >= 6144 else 1
+
+
+def structured_slice(params: PyTree, lam: float) -> tuple[PyTree, "ModelConfig | None"]:
+    """Structured (width) pruning: drop the trailing lam fraction of every
+    FFN hidden dimension by *slicing* the weights — unlike elementwise masks,
+    this removes the FLOPs/bytes/collectives on TPU (the MXU cannot exploit
+    unstructured zeros). Beyond-paper §Perf iteration: the paper's eq.-(2)
+    compression realized structurally.
+
+    Returns (sliced params, None); the config is unchanged because the FFN
+    width is read from the weights."""
+    if lam <= 0:
+        return params, None
+
+    def slc(path, w):
+        pth = jax.tree_util.keystr(path)
+        if any(k in pth for k in ("w_gate", "w_up")) and w.ndim >= 2:
+            f = w.shape[-1]
+            return jax.lax.slice_in_dim(w, 0, max(1, int(f * (1 - lam))), axis=w.ndim - 1)
+        if "w_down" in pth and w.ndim >= 2:
+            f = w.shape[-2]
+            return jax.lax.slice_in_dim(w, 0, max(1, int(f * (1 - lam))), axis=w.ndim - 2)
+        return w
+
+    return jax.tree_util.tree_map_with_path(slc, params), None
+
+
+def make_train_step(cfg: ModelConfig, rt: Runtime, *, eta: float = 1e-2,
+                    microbatches: int | None = None,
+                    structured_lambda: float = 0.0):
+    """(params, masks, batch) -> (loss, new_params): masked-FedSGD step.
+
+    With microbatches > 1 the global batch is processed in accumulation
+    steps (lax.scan), dividing activation memory by the factor; gradients
+    accumulate in fp32 at the parameter sharding. structured_lambda > 0
+    additionally width-prunes the FFNs (structured_slice)."""
+    mb = train_microbatches(cfg) if microbatches is None else microbatches
+    # >=100B params: bf16 gradient accumulation (an f32 accumulator at the
+    # FSDP sharding is 7.5 GB/device for arctic-480b)
+    from repro.models.transformer import param_count
+    acc_dtype = jnp.bfloat16 if param_count(cfg) > 100e9 else jnp.float32
+
+    def masked_loss(p, masks, tokens, labels, extra):
+        pm = jax.tree.map(lambda w, m: w * m.astype(w.dtype), p, masks)
+        if structured_lambda > 0:
+            pm, _ = structured_slice(pm, structured_lambda)
+        return T.loss_fn(pm, tokens, labels, cfg, rt, extra or None)
+
+    def train_step(params, masks, batch):
+        extra_keys = [k for k in batch if k not in ("tokens", "labels")]
+        if mb == 1:
+            loss, grads = jax.value_and_grad(masked_loss)(
+                params, masks, batch["tokens"], batch["labels"],
+                {k: batch[k] for k in extra_keys})
+        else:
+            mb_batch = {k: v.reshape(mb, v.shape[0] // mb, *v.shape[1:])
+                        for k, v in batch.items()}
+
+            def body(acc, mbx):
+                g_acc, l_acc = acc
+                l, g = jax.value_and_grad(masked_loss)(
+                    params, masks, mbx["tokens"], mbx["labels"],
+                    {k: mbx[k] for k in extra_keys})
+                g_acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(a.dtype), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dtype), params)
+            (grads, loss), _ = jax.lax.scan(
+                body, (g0, jnp.zeros((), jnp.float32)), mb_batch, length=mb)
+            grads = jax.tree.map(lambda g: g / mb, grads)
+            loss = loss / mb
+        # pruned coordinates neither upload nor update (eq. 5-7)
+        new_params = jax.tree.map(
+            lambda w, g, m: w - eta * (g * m.astype(g.dtype)).astype(w.dtype),
+            params, grads, masks)
+        return loss, new_params
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, rt: Runtime):
+    def prefill_step(params, batch, cache):
+        extra = {k: v for k, v in batch.items() if k != "tokens"} or None
+        return T.prefill(params, batch["tokens"], cache, cfg, rt, extra)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, rt: Runtime):
+    def serve_step(params, cache, token, pos):
+        return T.decode_step(params, token, cache, pos, cfg, rt)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs (ShapeDtypeStruct; no allocation)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape, *,
+                with_labels: bool) -> dict[str, jax.ShapeDtypeStruct]:
+    b, s = shape.global_batch, shape.seq_len
+    d = {"tokens": _sds((b, s), jnp.int32)}
+    if with_labels:
+        d["labels"] = _sds((b, s), jnp.int32)
+    if cfg.family == "audio":
+        d["encoder_input"] = _sds((b, cfg.encoder_tokens, cfg.d_model),
+                                  jnp.dtype(cfg.dtype))
+    if cfg.family == "vlm":
+        d["vision_embeddings"] = _sds((b, cfg.vision_tokens, cfg.d_model),
+                                      jnp.dtype(cfg.dtype))
+    return d
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, rt: Runtime) -> dict:
+    """All abstract inputs for the shape's step function.
+
+    train:   params, masks, batch{tokens, labels, extra}
+    prefill: params, batch{tokens, extra}, cache
+    decode:  params, cache, token [B,1], pos scalar
+    """
+    pshapes = T.param_shapes(cfg)
+    if shape.kind == "train":
+        # masks: {0,1} per weight, stored uint8 (a bf16 mask tree doubles
+        # parameter memory — 0.96 TB at arctic scale)
+        masks = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, jnp.uint8), pshapes)
+        return {
+            "params": pshapes,
+            "masks": masks,
+            "batch": batch_specs(cfg, shape, with_labels=True),
+        }
+    if shape.kind == "prefill":
+        cache = jax.eval_shape(
+            lambda: T.init_cache(cfg, shape.global_batch, shape.seq_len,
+                                 swa_only=rt.swa_only))
+        return {
+            "params": pshapes,
+            "batch": batch_specs(cfg, shape, with_labels=False),
+            "cache": cache,
+        }
+    # decode: ONE new token against a seq_len-deep cache
+    cache = jax.eval_shape(
+        lambda: T.init_cache(cfg, shape.global_batch, shape.seq_len,
+                             swa_only=rt.swa_only))
+    return {
+        "params": pshapes,
+        "cache": cache,
+        "token": _sds((shape.global_batch, 1), jnp.int32),
+        "pos": _sds((), jnp.int32),
+    }

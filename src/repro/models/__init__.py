@@ -1,0 +1,18 @@
+"""Model zoo: unified scanned-transformer LM (10 assigned archs) + the
+paper's own CNNs (LeNet / ResNet-CIFAR)."""
+from repro.models.blocks import Runtime
+from repro.models.transformer import (
+    init_params, param_shapes, param_count, active_param_count,
+    forward, loss_fn, init_cache, prefill, decode_step,
+)
+from repro.models.cnn import (
+    lenet_init, lenet_apply, resnet_init, resnet_apply,
+    make_loss_fn, make_eval_fn,
+)
+
+__all__ = [
+    "Runtime", "init_params", "param_shapes", "param_count",
+    "active_param_count", "forward", "loss_fn", "init_cache", "prefill",
+    "decode_step", "lenet_init", "lenet_apply", "resnet_init", "resnet_apply",
+    "make_loss_fn", "make_eval_fn",
+]

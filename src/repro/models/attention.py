@@ -1,0 +1,370 @@
+"""Attention: GQA, causal/bidirectional, sliding-window, softcap, KV cache.
+
+Three execution paths (selected by `impl`):
+  * "naive":   materializes [Sq, Skv] scores — smoke tests / tiny shapes only.
+  * "chunked": flash-style online-softmax over KV chunks under lax.scan —
+               O(chunk) live memory; the default for 32k+ contexts. A sliding
+               window uses a *banded* dynamic-slice so FLOPs scale with
+               S * (window + chunk), not S^2.
+  * "pallas":  the Pallas TPU kernel (repro/kernels/flash_attention.py);
+               falls back to interpret mode off-TPU.
+
+All functions take q [B,Sq,Hq,D], k/v [B,Skv,Hkv,D] with Hq a multiple of
+Hkv (GQA); outputs [B,Sq,Hq,D].
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import dense_init, softcap
+
+NEG_INF = -2.0**30  # large-but-finite: avoids NaNs for fully-masked rows
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def attention_params(key, cfg, *, stacked: int = 0, cross: bool = False) -> dict:
+    ks = jax.random.split(key, 4)
+    lead = (stacked,) if stacked else ()
+    dtype = jnp.dtype(cfg.dtype)
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    p = {
+        "wq": dense_init(ks[0], d, (*lead, d, qd), dtype),
+        "wk": dense_init(ks[1], d, (*lead, d, kvd), dtype),
+        "wv": dense_init(ks[2], d, (*lead, d, kvd), dtype),
+        "wo": dense_init(ks[3], qd, (*lead, qd, d), dtype),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((*lead, qd), dtype)
+        p["bk"] = jnp.zeros((*lead, kvd), dtype)
+        p["bv"] = jnp.zeros((*lead, kvd), dtype)
+    return p
+
+
+def project_qkv(x, p, cfg, kv_x=None):
+    """x -> q [B,S,Hq,D], k/v [B,Skv,Hkv,D]."""
+    kv_src = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,de->bse", x, p["wq"])
+    k = jnp.einsum("bsd,de->bse", kv_src, p["wk"])
+    v = jnp.einsum("bsd,de->bse", kv_src, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    b = x.shape[0]
+    q = q.reshape(b, -1, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(b, -1, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(b, -1, cfg.num_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def output_proj(o, p):
+    b, s = o.shape[:2]
+    return jnp.einsum("bse,ed->bsd", o.reshape(b, s, -1), p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Naive reference
+# ---------------------------------------------------------------------------
+
+def naive_attention(
+    q, k, v, *, causal: bool = True, window: int = 0, cap: float = 0.0,
+    q_offset: int | jnp.ndarray = 0, kv_len: jnp.ndarray | None = None,
+):
+    """Materialized-scores attention. q_offset: absolute position of q[0]
+    (decode: cache position). kv_len: number of valid cache entries."""
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qr = q.reshape(b, sq, hkv, g, d)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qr.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(d)
+    scores = softcap(scores, cap)
+    qpos = jnp.arange(sq)[:, None] + q_offset          # [sq, 1]
+    kpos = jnp.arange(skv)[None, :]                    # [1, skv]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    if kv_len is not None:
+        mask &= kpos < kv_len
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", w, v.astype(jnp.float32))
+    return o.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash-style) attention
+# ---------------------------------------------------------------------------
+
+def _online_block(qc, kc, vc, m, l, acc, mask, cap, scale):
+    """One online-softmax update. qc [B,C,Hkv,G,D]; kc/vc [B,Ck,Hkv,D]."""
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qc.astype(jnp.float32),
+                   kc.astype(jnp.float32)) * scale
+    s = softcap(s, cap)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m_new = jnp.maximum(m, s.max(axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + p.sum(axis=-1)
+    acc_new = acc * corr[..., None] + jnp.einsum(
+        "bhgqk,bkhd->bhgqd", p, vc.astype(jnp.float32))
+    return m_new, l_new, acc_new
+
+
+def chunked_attention(
+    q, k, v, *, causal: bool = True, window: int = 0, cap: float = 0.0,
+    q_chunk: int = 512, kv_chunk: int = 512,
+):
+    """Online-softmax attention, O(chunk^2) live scores.
+
+    window > 0 uses a banded gather: each q chunk attends to one contiguous
+    KV slice of length `window + q_chunk` -> total FLOPs O(S*(W+C)).
+    """
+    if window and not causal:
+        raise ValueError("sliding windows are causal by definition")
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = 1.0 / np.sqrt(d)
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    if sq % q_chunk or skv % kv_chunk:
+        raise ValueError(f"seq lens ({sq},{skv}) must divide chunks "
+                         f"({q_chunk},{kv_chunk})")
+    nq = sq // q_chunk
+    qs = jnp.moveaxis(q.reshape(b, nq, q_chunk, hkv, g, d), 1, 0)
+
+    if window:
+        band = window + q_chunk
+        band = min(band, skv)
+
+        def q_body(_, xs):
+            qc, qi = xs
+            q_start = qi * q_chunk
+            start = jnp.clip(q_start + q_chunk - band, 0, skv - band)
+            kc = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+            qpos = q_start + jnp.arange(q_chunk)[:, None]
+            kpos = start + jnp.arange(band)[None, :]
+            mask = (kpos > qpos - window) & ((kpos <= qpos) if causal
+                                             else jnp.ones_like(kpos, bool))
+            m = jnp.full((b, hkv, g, q_chunk), NEG_INF, jnp.float32)
+            l = jnp.zeros((b, hkv, g, q_chunk), jnp.float32)
+            acc = jnp.zeros((b, hkv, g, q_chunk, d), jnp.float32)
+            m, l, acc = _online_block(qc, kc, vc, m, l, acc, mask, cap, scale)
+            o = acc / jnp.maximum(l[..., None], 1e-20)
+            return None, o
+
+        _, os_ = jax.lax.scan(q_body, None, (qs, jnp.arange(nq)))
+    else:
+        nk = skv // kv_chunk
+        ks = jnp.moveaxis(k.reshape(b, nk, kv_chunk, hkv, d), 1, 0)
+        vs = jnp.moveaxis(v.reshape(b, nk, kv_chunk, hkv, d), 1, 0)
+
+        def q_body(_, xs):
+            qc, qi = xs
+            qpos = qi * q_chunk + jnp.arange(q_chunk)[:, None]
+
+            def kv_body(carry, kv_xs):
+                kc, vc, ki = kv_xs
+                m, l, acc = carry
+                kpos = ki * kv_chunk + jnp.arange(kv_chunk)[None, :]
+                mask = (kpos <= qpos) if causal else jnp.ones(
+                    (q_chunk, kv_chunk), bool)
+                return _online_block(qc, kc, vc, m, l, acc, mask, cap, scale), None
+
+            m0 = jnp.full((b, hkv, g, q_chunk), NEG_INF, jnp.float32)
+            l0 = jnp.zeros((b, hkv, g, q_chunk), jnp.float32)
+            a0 = jnp.zeros((b, hkv, g, q_chunk, d), jnp.float32)
+            (m, l, acc), _ = jax.lax.scan(
+                kv_body, (m0, l0, a0), (ks, vs, jnp.arange(nk)))
+            o = acc / jnp.maximum(l[..., None], 1e-20)
+            return None, o
+
+        _, os_ = jax.lax.scan(q_body, None, (qs, jnp.arange(nq)))
+
+    # os_: [nq, B, Hkv, G, C, D] -> [B, S, Hq, D]
+    o = jnp.moveaxis(os_, 0, 1)                       # [B, nq, Hkv, G, C, D]
+    o = jnp.moveaxis(o, 4, 2)                         # [B, nq, C, Hkv, G, D]
+    return o.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+def chunked_attention_causal_skip(
+    q, k, v, *, cap: float = 0.0, q_chunk: int = 512, kv_chunk: int = 512,
+):
+    """Causal chunked attention that SKIPS the upper-triangle blocks.
+
+    The plain nested scan (chunked_attention) visits all nq*nk chunk pairs
+    and masks — paying 2x the causal FLOPs. Here the scan runs over only the
+    nq(nq+1)/2 pairs with ki <= qi, carrying online-softmax state for every
+    q chunk ([nq, ...] accumulators). EXPERIMENTS.md §Perf, prefill compute
+    iteration; ~1.8x wall-clock on attention-dominated prefill.
+    """
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    if sq != skv:
+        raise ValueError("triangle skip assumes self-attention (sq == skv)")
+    g = hq // hkv
+    scale = 1.0 / np.sqrt(d)
+    c = min(q_chunk, kv_chunk, sq)
+    if sq % c:
+        raise ValueError(f"seq {sq} must divide chunk {c}")
+    n = sq // c
+    qs = jnp.moveaxis(q.reshape(b, n, c, hkv, g, d), 1, 0)
+    ks = jnp.moveaxis(k.reshape(b, n, c, hkv, d), 1, 0)
+    vs = jnp.moveaxis(v.reshape(b, n, c, hkv, d), 1, 0)
+
+    pair_q, pair_k = np.tril_indices(n)
+
+    def body(carry, pair):
+        m, l, acc = carry
+        qi, ki = pair
+        qc = qs[qi]
+        kc, vc = ks[ki], vs[ki]
+        qpos = qi * c + jnp.arange(c)[:, None]
+        kpos = ki * c + jnp.arange(c)[None, :]
+        mask = kpos <= qpos
+        mi, li, acci = m[qi], l[qi], acc[qi]
+        mi, li, acci = _online_block(qc, kc, vc, mi, li, acci, mask, cap,
+                                     scale)
+        return (m.at[qi].set(mi), l.at[qi].set(li), acc.at[qi].set(acci)), None
+
+    m0 = jnp.full((n, b, hkv, g, c), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((n, b, hkv, g, c), jnp.float32)
+    a0 = jnp.zeros((n, b, hkv, g, c, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.asarray(pair_q, jnp.int32), jnp.asarray(pair_k, jnp.int32)))
+    o = acc / jnp.maximum(l[..., None], 1e-20)     # [n, B, hkv, g, c, D]
+    o = jnp.moveaxis(o, 0, 1)                      # [B, n, hkv, g, c, D]
+    o = jnp.moveaxis(o, 4, 2)                      # [B, n, c, hkv, g, D]
+    return o.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode (single-token) attention against a KV cache
+# ---------------------------------------------------------------------------
+
+def decode_attention(
+    q, cache_k, cache_v, pos, *, window: int = 0, cap: float = 0.0,
+    k_scale=None, v_scale=None,
+):
+    """q [B,1,Hq,D]; cache [B,Smax,Hkv,D]; pos: scalar count of valid entries
+    (the new token's k/v must already be written at index pos-1).
+
+    With a window, only the last `window` cache entries are read
+    (O(window) per token — enables long_500k for SWA archs)."""
+    if window:
+        smax = cache_k.shape[1]
+        w = min(window, smax)
+        start = jnp.clip(pos - w, 0, smax - w)
+        kc = jax.lax.dynamic_slice_in_dim(cache_k, start, w, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(cache_v, start, w, axis=1)
+        kpos = start + jnp.arange(w)
+        valid = (kpos < pos) & (kpos >= pos - w)
+        return _decode_core(q, kc, vc, valid, cap)
+    kpos = jnp.arange(cache_k.shape[1])
+    return _decode_core(q, cache_k, cache_v, kpos < pos, cap,
+                        k_scale=k_scale, v_scale=v_scale)
+
+
+def ring_slots(pos, window: int, seq: int | None = None):
+    """Absolute positions held by each ring-buffer slot when the write head
+    is at `pos` (the token at `pos` has just been written at pos % window).
+
+    slot i holds absolute position: the largest p <= pos with p % window == i.
+    Slots that would be negative are invalid (cache not yet full).
+    """
+    i = jnp.arange(window)
+    head = pos % window
+    abs_pos = pos - ((head - i) % window)
+    return abs_pos  # [window]; invalid where < 0
+
+
+def decode_attention_ring(q, cache_k, cache_v, pos, *, cap: float = 0.0):
+    """Decode against a ring-buffer sliding-window cache of size `window`.
+
+    cache_k/v: [B, W, Hkv, D] with the token at `pos` already written at
+    slot pos % W. Attends to every valid slot (abs position in
+    [pos-W+1, pos])."""
+    w = cache_k.shape[1]
+    abs_pos = ring_slots(pos, w)
+    valid = abs_pos >= 0
+    return _decode_core(q, cache_k, cache_v, valid, cap)
+
+
+def fill_ring(k: jnp.ndarray, window: int) -> jnp.ndarray:
+    """Arrange the last `window` entries of k [B,S,...] into ring order so
+    that slot p % window holds position p. Left-pads when S < window."""
+    s = k.shape[1]
+    if s >= window:
+        tail = k[:, s - window:]
+    else:
+        pad = jnp.zeros((k.shape[0], window - s, *k.shape[2:]), k.dtype)
+        tail = jnp.concatenate([pad, k], axis=1)
+    return jnp.roll(tail, s % window, axis=1)
+
+
+def _decode_core(q, k, v, valid, cap, *, k_scale=None, v_scale=None):
+    """k/v may be int8 with per-(B,S,H) f32 scales (quantized KV cache);
+    the dequant converts fuse into the dots — no bf16 cache materializes."""
+    b, _, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qr = q.reshape(b, hkv, g, d)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qr.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(d)
+    if k_scale is not None:  # [B, S, Hkv] -> [B, Hkv, 1, S]
+        s = s * jnp.moveaxis(k_scale, 1, 2)[:, :, None, :]
+    s = softcap(s, cap)
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    if v_scale is not None:
+        w = w * jnp.moveaxis(v_scale, 1, 2)[:, :, None, :]
+    o = jnp.einsum("bhgk,bkhd->bhgd", w, v.astype(jnp.float32))
+    return o.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+def quantize_kv(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """[..., H, D] bf16 -> (int8 values, f32 scale over D)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+# ---------------------------------------------------------------------------
+# Dispatch
+# ---------------------------------------------------------------------------
+
+def attend(
+    q, k, v, *, impl: str = "chunked", causal: bool = True, window: int = 0,
+    cap: float = 0.0, q_chunk: int = 512, kv_chunk: int = 512,
+):
+    if impl == "naive" or q.shape[1] <= max(q_chunk, 128) // 4:
+        return naive_attention(q, k, v, causal=causal, window=window, cap=cap)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, causal=causal, window=window,
+                                    cap=cap)
+    if impl == "flash_vjp":
+        from repro.models.flash_vjp import chunked_attention_vjp
+        return chunked_attention_vjp(q, k, v, causal=causal, window=window,
+                                     cap=cap, q_chunk=q_chunk,
+                                     kv_chunk=kv_chunk)
+    if impl == "chunked_skip" and causal and not window \
+            and q.shape[1] == k.shape[1]:
+        return chunked_attention_causal_skip(q, k, v, cap=cap,
+                                             q_chunk=q_chunk,
+                                             kv_chunk=kv_chunk)
+    return chunked_attention(q, k, v, causal=causal, window=window, cap=cap,
+                             q_chunk=q_chunk, kv_chunk=kv_chunk)

@@ -1,0 +1,342 @@
+"""Per-family transformer blocks (param builders + apply fns).
+
+Every block fn has the signature
+
+    y, new_kv = block(x, params, cfg, rt, *, layer_kind, cache=None, pos=None,
+                      cross_kv=None)
+
+where `cache` is this block's KV dict for decode ({"k","v"} of shape
+[B, Smax, Hkv, Dh]) and `pos` the number of valid cache entries. In prefill
+mode (cache provided, S > 1) the block writes its fresh K/V into the cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (
+    gated_mlp, gated_mlp_params, mlp, mlp_params, rms_norm, layer_norm,
+)
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Runtime:
+    """Execution knobs (not architecture): attention impl, chunking, remat."""
+
+    attn_impl: str = "chunked"       # naive | chunked | flash_vjp | pallas
+    q_chunk: int = 512
+    kv_chunk: int = 512
+    loss_chunk: int = 512            # vocab CE sequence chunking
+    remat: bool = False              # activation checkpointing over layers
+    swa_only: bool = False           # long-context variant (gemma2, DESIGN §5)
+
+
+# ---------------------------------------------------------------------------
+# Attention sub-block (shared by all families with attention)
+# ---------------------------------------------------------------------------
+
+def attn_apply(x, p, cfg, rt: Runtime, *, window: int, cache=None, pos=None,
+               kv_x=None, causal=True, positions=None, impl=None):
+    """Returns (attn_out [B,S,D], updated_cache)."""
+    b, s, _ = x.shape
+    q, k, v = attn.project_qkv(x, p, cfg, kv_x=kv_x)
+    decode = cache is not None and s == 1
+    if positions is None:
+        if decode:
+            positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+        else:
+            positions = jnp.broadcast_to(jnp.arange(q.shape[1]), (b, q.shape[1]))
+    if cfg.rope_theta and kv_x is None:  # no RoPE on cross-attention
+        from repro.models.layers import apply_rope
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(
+            k, positions if not decode else jnp.full((b, 1), pos, jnp.int32),
+            cfg.rope_theta)
+    new_cache = cache
+    # Sliding-window layers use ring-buffer caches sized min(window, max_seq)
+    # (attention.ring_slots); full-attention layers use positional caches,
+    # optionally int8-quantized ("k_scale" present — §Perf decode iteration).
+    quant = cache is not None and "k_scale" in cache
+    if decode:
+        if window:
+            w = cache["k"].shape[1]
+            slot = pos % w
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+            o = attn.decode_attention_ring(q, ck, cv, pos,
+                                           cap=cfg.attn_softcap)
+            new_cache = {"k": ck, "v": cv}
+        elif quant:
+            k8, ks_ = attn.quantize_kv(k)
+            v8, vs_ = attn.quantize_kv(v)
+            ck = jax.lax.dynamic_update_slice(cache["k"], k8, (0, pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v8, (0, pos, 0, 0))
+            cks = jax.lax.dynamic_update_slice(cache["k_scale"], ks_,
+                                               (0, pos, 0))
+            cvs = jax.lax.dynamic_update_slice(cache["v_scale"], vs_,
+                                               (0, pos, 0))
+            o = attn.decode_attention(q, ck, cv, pos + 1, window=0,
+                                      cap=cfg.attn_softcap,
+                                      k_scale=cks, v_scale=cvs)
+            new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+            o = attn.decode_attention(q, ck, cv, pos + 1, window=0,
+                                      cap=cfg.attn_softcap)
+            new_cache = {"k": ck, "v": cv}
+    else:
+        if cache is not None:  # prefill: persist K/V
+            if window:
+                w = cache["k"].shape[1]
+                ck = attn.fill_ring(k.astype(cache["k"].dtype), w)
+                cv = attn.fill_ring(v.astype(cache["v"].dtype), w)
+                new_cache = {"k": ck, "v": cv}
+            elif quant:
+                k8, ks_ = attn.quantize_kv(k)
+                v8, vs_ = attn.quantize_kv(v)
+                upd = lambda c, x: jax.lax.dynamic_update_slice(
+                    c, x, (0,) * c.ndim)
+                new_cache = {"k": upd(cache["k"], k8),
+                             "v": upd(cache["v"], v8),
+                             "k_scale": upd(cache["k_scale"], ks_),
+                             "v_scale": upd(cache["v_scale"], vs_)}
+            else:
+                ck = jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+                cv = jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+                new_cache = {"k": ck, "v": cv}
+        o = attn.attend(q, k, v, impl=impl or rt.attn_impl, causal=causal,
+                        window=window, cap=cfg.attn_softcap,
+                        q_chunk=rt.q_chunk, kv_chunk=rt.kv_chunk)
+    return attn.output_proj(o, p), new_cache
+
+
+def layer_window(cfg, rt: Runtime, kind: int) -> int:
+    """Effective sliding window for a layer. kind: 0 = local/SW, 1 = global."""
+    if cfg.local_global:
+        if kind == 0:
+            return cfg.sliding_window or 4096
+        return (cfg.sliding_window or 4096) if rt.swa_only else 0
+    return cfg.sliding_window
+
+
+# ---------------------------------------------------------------------------
+# Dense block (llama/yi/qwen/granite/gemma2 layer)
+# ---------------------------------------------------------------------------
+
+def dense_block_params(key, cfg, *, stacked: int = 0) -> dict:
+    ks = jax.random.split(key, 2)
+    lead = (stacked,) if stacked else ()
+    p = {
+        "attn": attn.attention_params(ks[0], cfg, stacked=stacked),
+        "mlp": gated_mlp_params(ks[1], cfg.d_model, cfg.d_ff,
+                                jnp.dtype(cfg.dtype), stacked=stacked),
+        "norm_attn": jnp.zeros((*lead, cfg.d_model), jnp.float32),
+        "norm_mlp": jnp.zeros((*lead, cfg.d_model), jnp.float32),
+    }
+    if cfg.attn_softcap or cfg.local_global:  # gemma2 style post-norms
+        p["postnorm_attn"] = jnp.zeros((*lead, cfg.d_model), jnp.float32)
+        p["postnorm_mlp"] = jnp.zeros((*lead, cfg.d_model), jnp.float32)
+    return p
+
+
+def dense_block(x, p, cfg, rt, *, kind=0, cache=None, pos=None):
+    h, new_cache = attn_apply(rms_norm(x, p["norm_attn"], cfg.norm_eps),
+                              p["attn"], cfg, rt,
+                              window=layer_window(cfg, rt, kind),
+                              cache=cache, pos=pos)
+    if "postnorm_attn" in p:
+        h = rms_norm(h, p["postnorm_attn"], cfg.norm_eps)
+    x = x + h
+    h = gated_mlp(rms_norm(x, p["norm_mlp"], cfg.norm_eps), p["mlp"])
+    if "postnorm_mlp" in p:
+        h = rms_norm(h, p["postnorm_mlp"], cfg.norm_eps)
+    return x + h, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MoE block (mixtral / arctic)
+# ---------------------------------------------------------------------------
+
+def moe_block_params(key, cfg, *, stacked: int = 0) -> dict:
+    ks = jax.random.split(key, 3)
+    lead = (stacked,) if stacked else ()
+    p = {
+        "attn": attn.attention_params(ks[0], cfg, stacked=stacked),
+        "moe": moe_lib.moe_params(ks[1], cfg, stacked=stacked),
+        "norm_attn": jnp.zeros((*lead, cfg.d_model), jnp.float32),
+        "norm_ffn": jnp.zeros((*lead, cfg.d_model), jnp.float32),
+    }
+    if cfg.dense_residual_ff:  # arctic parallel dense MLP
+        import dataclasses as _dc
+        dense_cfg_ff = cfg.dense_residual_ff
+        p["dense_mlp"] = gated_mlp_params(ks[2], cfg.d_model, dense_cfg_ff,
+                                          jnp.dtype(cfg.dtype), stacked=stacked)
+    return p
+
+
+def moe_block(x, p, cfg, rt, *, kind=0, cache=None, pos=None):
+    h, new_cache = attn_apply(rms_norm(x, p["norm_attn"], cfg.norm_eps),
+                              p["attn"], cfg, rt,
+                              window=cfg.sliding_window, cache=cache, pos=pos)
+    x = x + h
+    hin = rms_norm(x, p["norm_ffn"], cfg.norm_eps)
+    y, aux = moe_lib.moe_apply(hin, p["moe"], cfg)
+    if "dense_mlp" in p:
+        y = y + gated_mlp(hin, p["dense_mlp"])
+    return x + y, (new_cache, aux)
+
+
+# ---------------------------------------------------------------------------
+# SSM block (mamba2): mixer only, no MLP
+# ---------------------------------------------------------------------------
+
+def ssm_block_params(key, cfg, *, stacked: int = 0) -> dict:
+    lead = (stacked,) if stacked else ()
+    return {
+        "mixer": ssm_lib.ssm_params(key, cfg, stacked=stacked),
+        "norm": jnp.zeros((*lead, cfg.d_model), jnp.float32),
+    }
+
+
+def ssm_block(x, p, cfg, rt, *, kind=0, cache=None, pos=None):
+    y, new_cache = ssm_lib.ssm_block(rms_norm(x, p["norm"], cfg.norm_eps),
+                                     p["mixer"], cfg, cache=cache)
+    return x + y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Hybrid block (hymba): parallel attention + SSM heads, fused by mean
+# ---------------------------------------------------------------------------
+
+def hybrid_block_params(key, cfg, *, stacked: int = 0) -> dict:
+    ks = jax.random.split(key, 3)
+    lead = (stacked,) if stacked else ()
+    return {
+        "attn": attn.attention_params(ks[0], cfg, stacked=stacked),
+        "mixer": ssm_lib.ssm_params(ks[1], cfg, stacked=stacked),
+        "mlp": gated_mlp_params(ks[2], cfg.d_model, cfg.d_ff,
+                                jnp.dtype(cfg.dtype), stacked=stacked),
+        "norm_in": jnp.zeros((*lead, cfg.d_model), jnp.float32),
+        "norm_mlp": jnp.zeros((*lead, cfg.d_model), jnp.float32),
+    }
+
+
+def hybrid_block(x, p, cfg, rt, *, kind=0, cache=None, pos=None):
+    h = rms_norm(x, p["norm_in"], cfg.norm_eps)
+    attn_cache = None if cache is None else cache["attn"]
+    ssm_cache = None if cache is None else cache["ssm"]
+    ya, attn_cache = attn_apply(h, p["attn"], cfg, rt,
+                                window=cfg.sliding_window,
+                                cache=attn_cache, pos=pos)
+    ys, ssm_cache = ssm_lib.ssm_block(h, p["mixer"], cfg, cache=ssm_cache)
+    x = x + 0.5 * (ya + ys)
+    x = x + gated_mlp(rms_norm(x, p["norm_mlp"], cfg.norm_eps), p["mlp"])
+    new_cache = None if cache is None else {"attn": attn_cache, "ssm": ssm_cache}
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Encoder block (whisper encoder: bidirectional, LayerNorm, GELU MLP)
+# ---------------------------------------------------------------------------
+
+def encoder_block_params(key, cfg, *, stacked: int = 0) -> dict:
+    ks = jax.random.split(key, 2)
+    lead = (stacked,) if stacked else ()
+    d = cfg.d_model
+    return {
+        "attn": attn.attention_params(ks[0], cfg, stacked=stacked),
+        "mlp": mlp_params(ks[1], d, cfg.d_ff, jnp.dtype(cfg.dtype),
+                          stacked=stacked),
+        "ln1_s": jnp.ones((*lead, d), jnp.float32),
+        "ln1_b": jnp.zeros((*lead, d), jnp.float32),
+        "ln2_s": jnp.ones((*lead, d), jnp.float32),
+        "ln2_b": jnp.zeros((*lead, d), jnp.float32),
+    }
+
+
+def encoder_block(x, p, cfg, rt):
+    # encoder frames (1500) are not chunk-aligned; bidirectional + short
+    h, _ = attn_apply(layer_norm(x, p["ln1_s"], p["ln1_b"], cfg.norm_eps),
+                      p["attn"], cfg, rt, window=0, causal=False,
+                      impl="naive")
+    x = x + h
+    x = x + mlp(layer_norm(x, p["ln2_s"], p["ln2_b"], cfg.norm_eps), p["mlp"])
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention decoder block (whisper decoder / llama-vision cross layer)
+# ---------------------------------------------------------------------------
+
+def cross_block_params(key, cfg, *, stacked: int = 0, self_attn: bool = True,
+                       use_layernorm: bool = True) -> dict:
+    ks = jax.random.split(key, 4)
+    lead = (stacked,) if stacked else ()
+    d = cfg.d_model
+    p = {
+        "cross": attn.attention_params(ks[1], cfg, stacked=stacked, cross=True),
+        "mlp": (mlp_params if use_layernorm else gated_mlp_params)(
+            ks[2], d, cfg.d_ff, jnp.dtype(cfg.dtype), stacked=stacked),
+        "gate": jnp.zeros((*lead,), jnp.float32),  # llama-vision tanh gate
+    }
+    if self_attn:
+        p["self"] = attn.attention_params(ks[0], cfg, stacked=stacked)
+    names = ("ln_self", "ln_cross", "ln_mlp")
+    for nm in names:
+        if use_layernorm:
+            p[nm + "_s"] = jnp.ones((*lead, d), jnp.float32)
+            p[nm + "_b"] = jnp.zeros((*lead, d), jnp.float32)
+        else:
+            p[nm] = jnp.zeros((*lead, d), jnp.float32)
+    return p
+
+
+def _norm(x, p, name, cfg):
+    if name + "_s" in p:
+        return layer_norm(x, p[name + "_s"], p[name + "_b"], cfg.norm_eps)
+    return rms_norm(x, p[name], cfg.norm_eps)
+
+
+def cross_block(x, p, cfg, rt, *, enc, cache=None, pos=None,
+                gated=False, use_gelu_mlp=True):
+    """Decoder block with (optional) self-attn + cross-attn to `enc`.
+
+    For decode, `cache` = {"k","v", optional "ck","cv"}: self-attn cache plus
+    precomputed cross K/V. If "ck" missing, cross K/V are recomputed from enc.
+    """
+    new_cache = dict(cache) if cache is not None else None
+    if "self" in p:
+        self_cache = None
+        if cache is not None:
+            self_cache = {"k": cache["k"], "v": cache["v"]}
+        h, self_cache = attn_apply(_norm(x, p, "ln_self", cfg), p["self"], cfg,
+                                   rt, window=cfg.sliding_window,
+                                   cache=self_cache, pos=pos)
+        x = x + h
+        if new_cache is not None:
+            new_cache.update(self_cache)
+    # cross-attention KV (vision patches / encoder frames) is short and not
+    # chunk-aligned: the materialized-scores path is the right impl here
+    h, _ = attn_apply(_norm(x, p, "ln_cross", cfg), p["cross"], cfg, rt,
+                      window=0, kv_x=enc, causal=False, impl="naive")
+    if gated:
+        h = h * jnp.tanh(p["gate"].astype(h.dtype))
+    x = x + h
+    hin = _norm(x, p, "ln_mlp", cfg)
+    x = x + (mlp(hin, p["mlp"]) if "w_in" in p["mlp"] else gated_mlp(hin, p["mlp"]))
+    return x, new_cache

@@ -1,0 +1,114 @@
+"""Shared neural-net layers: norms, rotary embeddings, MLPs, init helpers.
+
+Everything is functional: params are plain dicts of jnp arrays, layer
+functions are pure. Stacked-over-layers weights carry a leading [L] axis and
+are consumed through lax.scan (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+# -- init -------------------------------------------------------------------
+
+def dense_init(key, fan_in: int, shape, dtype) -> jnp.ndarray:
+    scale = 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# -- norms ------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dtype)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32) \
+        + bias.astype(jnp.float32)
+    return out.astype(dtype)
+
+
+# -- rotary embeddings --------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    """[head_dim/2] inverse frequencies."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotate pairs. x: [..., S, H, D]; positions: [..., S] (broadcastable)."""
+    d = x.shape[-1]
+    inv = rope_frequencies(d, theta)                     # [D/2]
+    ang = positions[..., :, None, None].astype(jnp.float32) * inv  # [..,S,1,D/2]
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# -- soft capping (gemma2) ----------------------------------------------------
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if not cap:
+        return x
+    return (cap * jnp.tanh(x / cap)).astype(x.dtype)
+
+
+# -- MLPs ---------------------------------------------------------------------
+
+def gated_mlp_params(key, d_model: int, d_ff: int, dtype, *, stacked: int = 0):
+    """SwiGLU weights: w_gate, w_up [D, F], w_down [F, D]."""
+    ks = jax.random.split(key, 3)
+    lead = (stacked,) if stacked else ()
+    return {
+        "w_gate": dense_init(ks[0], d_model, (*lead, d_model, d_ff), dtype),
+        "w_up": dense_init(ks[1], d_model, (*lead, d_model, d_ff), dtype),
+        "w_down": dense_init(ks[2], d_ff, (*lead, d_ff, d_model), dtype),
+    }
+
+
+def gated_mlp(x: jnp.ndarray, p: dict) -> jnp.ndarray:
+    g = jnp.einsum("...d,df->...f", x, p["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, p["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, p["w_down"])
+
+
+def mlp_params(key, d_model: int, d_ff: int, dtype, *, stacked: int = 0):
+    """Plain 2-layer GELU MLP (whisper)."""
+    ks = jax.random.split(key, 2)
+    lead = (stacked,) if stacked else ()
+    return {
+        "w_in": dense_init(ks[0], d_model, (*lead, d_model, d_ff), dtype),
+        "b_in": jnp.zeros((*lead, d_ff), dtype),
+        "w_out": dense_init(ks[1], d_ff, (*lead, d_ff, d_model), dtype),
+        "b_out": jnp.zeros((*lead, d_model), dtype),
+    }
+
+
+def mlp(x: jnp.ndarray, p: dict) -> jnp.ndarray:
+    h = jnp.einsum("...d,df->...f", x, p["w_in"]) + p["b_in"]
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, p["w_out"]) + p["b_out"]

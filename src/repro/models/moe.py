@@ -1,0 +1,125 @@
+"""Mixture-of-Experts: top-k router + capacity-bucketed expert compute.
+
+Dispatch is *grouped*: tokens are split into G groups aligned with the batch
+sharding, and each group routes into its own [E, C_g] capacity buckets. All
+gathers/scatters are then batched over the (sharded) group axis, so under
+SPMD they stay device-local — mirroring per-device expert capacity in
+production EP systems. (The ungrouped variant all-gathers an [E*C_global, D]
+f32 tensor — 16 GB/device measured on mixtral train_4k; EXPERIMENTS.md
+§Perf.) Overflowing tokens are dropped per group (standard capacity-factor
+semantics); the router adds the usual load-balance auxiliary loss.
+
+Expert weights [E, D, F] shard E over "model" when E divides it (arctic:
+expert parallel), else F over "model" with D over the batch axes (mixtral);
+see repro/sharding/rules.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import dense_init
+from repro.sharding.rules import constrain
+
+
+def moe_params(key, cfg, *, stacked: int = 0) -> dict:
+    ks = jax.random.split(key, 4)
+    dtype = jnp.dtype(cfg.dtype)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    lead = (stacked,) if stacked else ()
+    return {
+        "router": dense_init(ks[0], d, (*lead, d, e), jnp.float32),
+        "w_gate": dense_init(ks[1], d, (*lead, e, d, f), dtype),
+        "w_up": dense_init(ks[2], d, (*lead, e, d, f), dtype),
+        "w_down": dense_init(ks[3], f, (*lead, e, f, d), dtype),
+    }
+
+
+def route_topk(logits: jnp.ndarray, top_k: int):
+    """logits [T, E] -> (weights [T,k], experts [T,k], aux load-balance loss)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    w, idx = jax.lax.top_k(probs, top_k)
+    w = w / jnp.maximum(w.sum(axis=-1, keepdims=True), 1e-9)
+    e = logits.shape[-1]
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((e,), jnp.float32).at[idx.reshape(-1)].add(
+        jnp.ones_like(idx.reshape(-1), jnp.float32)) / (idx.size)
+    aux = e * jnp.sum(me * ce)
+    return w, idx, aux
+
+
+def pick_groups(t: int, *, target: int = 64) -> int:
+    """Largest group count <= target dividing t (group axis ~ device grid)."""
+    g = min(target, t)
+    while g > 1 and t % g:
+        g -= 1
+    return g
+
+
+def _group_dispatch(idx_g, w_g, cap, e):
+    """Per-group bucket construction (vmapped over groups).
+
+    idx_g/w_g: [Tg, k]. Returns bucket_tok [E, C] (token id, Tg = padding),
+    combine_idx [Tg*k] (into flattened [E*C]), combine_w [Tg*k]."""
+    tg, k = idx_g.shape
+    flat_e = idx_g.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(tg), k)
+    flat_w = w_g.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    counts = jnp.zeros((e,), jnp.int32).at[se].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts)[:-1]])
+    slot = jnp.arange(tg * k, dtype=jnp.int32) - starts[se]
+    keep = slot < cap
+    bucket_tok = jnp.full((e, cap), tg, jnp.int32)
+    bucket_tok = bucket_tok.at[se, jnp.clip(slot, 0, cap - 1)].set(
+        jnp.where(keep, st, tg), mode="drop")
+    inv = jnp.argsort(order)
+    comb_idx = se[inv] * cap + jnp.clip(slot[inv], 0, cap - 1)
+    comb_w = flat_w * (slot[inv] < cap).astype(jnp.float32)
+    return bucket_tok, comb_idx, comb_w
+
+
+def moe_apply(x: jnp.ndarray, p: dict, cfg,
+              groups: int | None = None) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x [B, S, D] -> (y [B, S, D], aux loss scalar)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    t = b * s
+    xt = x.reshape(t, d)
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    w, idx, aux = route_topk(logits, k)
+
+    g = pick_groups(t) if groups is None else groups
+    tg = t // g
+    cap = max(int(np.ceil(tg * k / e * cfg.moe_capacity_factor)), k)
+
+    xg = constrain(xt.reshape(g, tg, d), "batch", None, None)
+    idx_g = idx.reshape(g, tg, k)
+    w_g = w.reshape(g, tg, k)
+    bucket_tok, comb_idx, comb_w = jax.vmap(
+        lambda i, ww: _group_dispatch(i, ww, cap, e))(idx_g, w_g)
+    bucket_tok = constrain(bucket_tok, "batch", "model", None)
+
+    # gather (zeros row at index tg pads) — batched over the group axis
+    xpad = jnp.concatenate([xg, jnp.zeros((g, 1, d), xg.dtype)], axis=1)
+    xe = jax.vmap(lambda xp, bt: xp[bt])(xpad, bucket_tok)   # [G, E, C, D]
+    xe = constrain(xe, "batch", "model", None, None)
+    gg = jnp.einsum("gecd,edf->gecf", xe, p["w_gate"])
+    uu = jnp.einsum("gecd,edf->gecf", xe, p["w_up"])
+    gg = constrain(gg, "batch", "model", None, "model")
+    uu = constrain(uu, "batch", "model", None, "model")
+    h = jax.nn.silu(gg.astype(jnp.float32)).astype(x.dtype) * uu
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"])        # [G, E, C, D]
+    ye = constrain(ye, "batch", "model", None, None)
+
+    # combine by gather (inverse permutation) — batched over groups
+    contrib = jax.vmap(lambda y_, ci: y_.reshape(e * cap, d)[ci])(
+        ye, comb_idx)                                        # [G, Tg*k, D]
+    contrib = constrain(contrib, "batch", None, None)
+    contrib = contrib * comb_w[..., None].astype(ye.dtype)
+    y = contrib.reshape(g, tg, k, d).sum(axis=2)
+    y = constrain(y, "batch", None, None)
+    return y.reshape(b, s, d), aux

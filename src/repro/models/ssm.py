@@ -1,0 +1,192 @@
+"""Mamba-2 SSD (state-space duality) layer — arXiv:2405.21060.
+
+Scalar-identity A per head. The chunked SSD algorithm:
+  * intra-chunk (quadratic in chunk): Y_intra = (L ∘ (C Bᵀ)) X with
+    L[s,r] = exp(a_s - a_r) 1[r<=s], a = cumsum(A·dt);
+  * inter-chunk: a lax.scan carries the [H, P, N] state across chunks.
+
+Decode is the O(1) recurrence h' = exp(A dt) h + dt·B⊗x, y = C·h' + D x.
+
+A depthwise causal conv (width 4) precedes the SSM on (x, B, C) as in the
+reference implementation; its rolling state is part of the decode cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import dense_init, rms_norm
+
+
+def ssm_dims(cfg):
+    d_inner = cfg.d_inner
+    heads = cfg.ssm_heads
+    conv_dim = d_inner + 2 * cfg.ssm_state
+    return d_inner, heads, conv_dim
+
+
+def ssm_params(key, cfg, *, stacked: int = 0) -> dict:
+    ks = jax.random.split(key, 5)
+    dtype = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    d_inner, heads, conv_dim = ssm_dims(cfg)
+    n = cfg.ssm_state
+    lead = (stacked,) if stacked else ()
+    in_dim = 2 * d_inner + 2 * n + heads  # x, z, B, C, dt
+    # A in (-inf, 0): A = -exp(a_log); init a_log ~ log U[1, 16]
+    a_init = jnp.log(jnp.linspace(1.0, 16.0, heads, dtype=jnp.float32))
+    return {
+        "in_proj": dense_init(ks[0], d, (*lead, d, in_dim), dtype),
+        "conv_w": dense_init(ks[1], cfg.ssm_conv_width,
+                             (*lead, cfg.ssm_conv_width, conv_dim), dtype),
+        "conv_b": jnp.zeros((*lead, conv_dim), dtype),
+        "a_log": jnp.broadcast_to(a_init, (*lead, heads)).copy(),
+        "d_skip": jnp.ones((*lead, heads), jnp.float32),
+        "dt_bias": jnp.zeros((*lead, heads), jnp.float32),
+        "norm_scale": jnp.zeros((*lead, d_inner), jnp.float32),
+        "out_proj": dense_init(ks[4], d_inner, (*lead, d_inner, d), dtype),
+    }
+
+
+def _split_proj(zxbcdt, cfg):
+    d_inner, heads, _ = ssm_dims(cfg)
+    n = cfg.ssm_state
+    z, x, b, c, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n],
+        axis=-1)
+    return z, x, b, c, dt
+
+
+def _causal_conv(u: jnp.ndarray, w: jnp.ndarray, bias: jnp.ndarray,
+                 state: jnp.ndarray | None = None):
+    """Depthwise causal conv. u [B,S,Cd], w [W,Cd]. Returns (out, new_state)
+    where state is the last W-1 inputs (for decode)."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], width - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    up = jnp.concatenate([pad, u], axis=1)
+    out = sum(up[:, i:i + u.shape[1]] * w[i] for i in range(width)) + bias
+    new_state = up[:, -(width - 1):] if width > 1 else pad
+    return jax.nn.silu(out.astype(jnp.float32)).astype(u.dtype), new_state
+
+
+def ssd_chunked(x, b, c, dt, a_log, d_skip, cfg, *, initial_state=None):
+    """Chunked SSD scan.
+
+    x  [B,S,H,P]  (P = ssm_head_dim), b/c [B,S,N], dt [B,S,H] (post-softplus),
+    a_log [H]. Returns (y [B,S,H,P], final_state [B,H,P,N]).
+    """
+    bsz, s_orig, h, p = x.shape
+    n = b.shape[-1]
+    q = min(cfg.ssm_chunk, s_orig)
+    if s_orig % q:  # pad with dt=0 steps (identity state transition)
+        pad = q - s_orig % q
+        zpad = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        x, b, c, dt = zpad(x), zpad(b), zpad(c), zpad(dt)
+    s = x.shape[1]
+    nc = s // q
+    a = -jnp.exp(a_log.astype(jnp.float32))            # [H], negative
+    # per-step log decay
+    ldec = dt.astype(jnp.float32) * a                  # [B,S,H]
+    xr = jnp.moveaxis(x.reshape(bsz, nc, q, h, p), 1, 0)
+    br = jnp.moveaxis(b.reshape(bsz, nc, q, n), 1, 0)
+    cr = jnp.moveaxis(c.reshape(bsz, nc, q, n), 1, 0)
+    dtr = jnp.moveaxis(dt.reshape(bsz, nc, q, h), 1, 0).astype(jnp.float32)
+    ldr = jnp.moveaxis(ldec.reshape(bsz, nc, q, h), 1, 0)
+
+    if initial_state is None:
+        h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    else:
+        h0 = initial_state.astype(jnp.float32)
+
+    def chunk_body(state, xs):
+        xc, bc, cc, dtc, ldc = xs                       # [B,q,...]
+        acum = jnp.cumsum(ldc, axis=1)                  # [B,q,H]
+        # intra-chunk: L[s,r] = exp(acum_s - acum_r), r <= s.
+        # Mask BEFORE the exp: exp of the (positive) upper-triangle entries
+        # overflows and poisons the backward pass via inf * 0.
+        diff = acum[:, :, None, :] - acum[:, None, :, :]   # [B,q,q,H]
+        tril = jnp.tril(jnp.ones((q, q), bool))
+        diff = jnp.where(tril[None, :, :, None], diff, -1e30)
+        l_mat = jnp.exp(diff)
+        cb = jnp.einsum("bsn,brn->bsr", cc.astype(jnp.float32),
+                        bc.astype(jnp.float32))         # [B,q,q]
+        scores = cb[..., None] * l_mat                  # [B,q,q,H]
+        xdt = xc.astype(jnp.float32) * dtc[..., None]   # [B,q,H,P]
+        y_intra = jnp.einsum("bsrh,brhp->bshp", scores, xdt)
+        # inter-chunk: contribution of the carried state
+        y_inter = jnp.einsum("bsn,bhpn,bsh->bshp",
+                             cc.astype(jnp.float32), state, jnp.exp(acum))
+        # chunk's addition to the state
+        atot = acum[:, -1]                              # [B,H]
+        decay_r = jnp.exp(atot[:, None] - acum)         # [B,q,H]
+        dstate = jnp.einsum("brn,brhp,brh->bhpn",
+                            bc.astype(jnp.float32), xdt, decay_r)
+        state_new = state * jnp.exp(atot)[:, :, None, None] + dstate
+        return state_new, y_intra + y_inter
+
+    final, ys = jax.lax.scan(chunk_body, h0, (xr, br, cr, dtr, ldr))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, h, p)
+    y = y + x.astype(jnp.float32) * d_skip[None, None, :, None]
+    return y[:, :s_orig].astype(x.dtype), final
+
+
+def ssd_step(x, b, c, dt, a_log, d_skip, state):
+    """Single decode step. x [B,H,P], b/c [B,N], dt [B,H], state [B,H,P,N]."""
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    decay = jnp.exp(dt.astype(jnp.float32) * a)                 # [B,H]
+    upd = jnp.einsum("bn,bhp->bhpn", b.astype(jnp.float32),
+                     x.astype(jnp.float32) * dt[..., None])
+    state_new = state * decay[..., None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", c.astype(jnp.float32), state_new)
+    y = y + x.astype(jnp.float32) * d_skip[None, :, None]
+    return y.astype(x.dtype), state_new
+
+
+def ssm_block(x, p, cfg, *, cache=None):
+    """Full mamba2 mixer. x [B,S,D]. cache: dict(ssm [B,H,P,N], conv [B,W-1,Cd])
+    for decode (S must be 1); returns (y [B,S,D], new_cache)."""
+    bsz, s, _ = x.shape
+    d_inner, heads, conv_dim = ssm_dims(cfg)
+    n = cfg.ssm_state
+    ph = cfg.ssm_head_dim
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xi, b, c, dt = _split_proj(proj, cfg)
+    conv_in = jnp.concatenate([xi, b, c], axis=-1)
+    decode = cache is not None and s == 1
+    conv_state = cache["conv"] if decode else None
+    conv_out, conv_state_new = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
+                                            conv_state)
+    xi, b, c = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    xh = xi.reshape(bsz, s, heads, ph)
+    if not decode:
+        init_state = None if cache is None else cache["ssm"]
+        y, final = ssd_chunked(xh, b, c, dt, p["a_log"], p["d_skip"], cfg,
+                               initial_state=init_state)
+        new_cache = {"ssm": final,
+                     "conv": conv_state_new.astype(
+                         cache["conv"].dtype) if cache is not None
+                     else conv_state_new}
+    else:
+        y1, state = ssd_step(xh[:, 0], b[:, 0], c[:, 0], dt[:, 0],
+                             p["a_log"], p["d_skip"], cache["ssm"])
+        y = y1[:, None]
+        new_cache = {"ssm": state, "conv": conv_state_new}
+    y = y.reshape(bsz, s, d_inner)
+    # gated RMS norm (mamba2): norm(y * silu(z))
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = rms_norm(y, p["norm_scale"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"]), new_cache
+
+
+def init_ssm_cache(cfg, batch: int, dtype) -> dict:
+    d_inner, heads, conv_dim = ssm_dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, heads, cfg.ssm_head_dim, cfg.ssm_state),
+                         jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), dtype),
+    }

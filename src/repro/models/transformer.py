@@ -1,0 +1,454 @@
+"""The unified language model: embed -> scanned blocks -> norm -> LM head.
+
+One code path per architecture family, all using lax.scan over stacked layer
+weights (compile-time O(1) in depth — essential for 512-device dry-runs).
+
+Public API:
+    init_params(key, cfg)                  -> params pytree
+    forward(params, tokens, cfg, rt, ...)  -> logits [B,S,V]
+    loss_fn(params, tokens, labels, ...)   -> scalar CE (chunked over vocab)
+    init_cache(cfg, batch, max_seq)        -> decode cache pytree
+    prefill(params, tokens, cache, ...)    -> (last-token logits, cache)
+    decode_step(params, token, cache, pos) -> (logits [B,V], cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks as B
+from repro.models import ssm as ssm_lib
+from repro.models.blocks import Runtime
+from repro.models.layers import embed_init, rms_norm, layer_norm, softcap
+from repro.sharding.rules import constrain_batch_model
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> PyTree:
+    ks = jax.random.split(key, 8)
+    dtype = jnp.dtype(cfg.dtype)
+    p: dict[str, Any] = {
+        "embed": embed_init(ks[0], (cfg.vocab_size, cfg.d_model), dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = embed_init(ks[1], (cfg.d_model, cfg.vocab_size), dtype)
+
+    fam = cfg.family
+    if fam == "dense" and cfg.local_global:
+        half = cfg.num_layers // 2
+        p["blocks"] = {
+            "local": B.dense_block_params(ks[2], cfg, stacked=half),
+            "global": B.dense_block_params(ks[3], cfg, stacked=half),
+        }
+    elif fam == "dense":
+        p["blocks"] = B.dense_block_params(ks[2], cfg, stacked=cfg.num_layers)
+    elif fam == "moe":
+        p["blocks"] = B.moe_block_params(ks[2], cfg, stacked=cfg.num_layers)
+    elif fam == "ssm":
+        p["blocks"] = B.ssm_block_params(ks[2], cfg, stacked=cfg.num_layers)
+    elif fam == "hybrid":
+        p["blocks"] = B.hybrid_block_params(ks[2], cfg, stacked=cfg.num_layers)
+    elif fam == "audio":
+        p["pos_embed"] = embed_init(ks[4], (cfg.max_seq, cfg.d_model), dtype)
+        p["enc_pos_embed"] = embed_init(ks[5], (cfg.encoder_tokens, cfg.d_model),
+                                        dtype)
+        p["enc_blocks"] = B.encoder_block_params(ks[2], cfg,
+                                                 stacked=cfg.encoder_layers)
+        p["enc_final_s"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["enc_final_b"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        p["blocks"] = B.cross_block_params(ks[3], cfg, stacked=cfg.num_layers,
+                                           self_attn=True, use_layernorm=True)
+        p["final_b"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    elif fam == "vlm":
+        k_every = cfg.cross_attn_every
+        n_groups = cfg.num_layers // k_every
+        n_self = n_groups * (k_every - 1)
+        self_p = B.dense_block_params(ks[2], cfg, stacked=n_self)
+        self_p = jax.tree.map(
+            lambda a: a.reshape(n_groups, k_every - 1, *a.shape[1:]), self_p)
+        p["blocks"] = {
+            "self": self_p,
+            "cross": B.cross_block_params(ks[3], cfg, stacked=n_groups,
+                                          self_attn=False, use_layernorm=False),
+        }
+        p["vision_proj"] = embed_init(ks[6], (cfg.d_model, cfg.d_model), dtype)
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return p
+
+
+def param_shapes(cfg: ModelConfig) -> PyTree:
+    """Abstract (ShapeDtypeStruct) params — no allocation; for dry-runs."""
+    return jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
+
+
+def param_count(cfg: ModelConfig) -> int:
+    shapes = param_shapes(cfg)
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """MoE: params touched per token (top-k experts instead of all)."""
+    total = param_count(cfg)
+    if not cfg.num_experts:
+        return total
+    shapes = param_shapes(cfg)
+    expert = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        ks = jax.tree_util.keystr(path)
+        if any(s in ks for s in ("w_gate", "w_up", "w_down")) and "moe" in ks:
+            expert += int(np.prod(leaf.shape))
+    inactive = expert * (1 - cfg.experts_per_token / cfg.num_experts)
+    return int(total - inactive)
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+def _kv_cache(cfg, batch, max_seq, dtype, lead=(), quant=False):
+    if quant:
+        # int8 values + per-(B, S, H) f32 scales (~0.53x bf16 bytes)
+        return {
+            "k": jnp.zeros((*lead, batch, max_seq, cfg.num_kv_heads,
+                            cfg.head_dim), jnp.int8),
+            "v": jnp.zeros((*lead, batch, max_seq, cfg.num_kv_heads,
+                            cfg.head_dim), jnp.int8),
+            "k_scale": jnp.zeros((*lead, batch, max_seq, cfg.num_kv_heads),
+                                 jnp.float32),
+            "v_scale": jnp.zeros((*lead, batch, max_seq, cfg.num_kv_heads),
+                                 jnp.float32),
+        }
+    return {
+        "k": jnp.zeros((*lead, batch, max_seq, cfg.num_kv_heads, cfg.head_dim),
+                       dtype),
+        "v": jnp.zeros((*lead, batch, max_seq, cfg.num_kv_heads, cfg.head_dim),
+                       dtype),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               *, swa_only: bool = False, kv_quant: bool = False) -> PyTree:
+    """Decode cache. Sliding-window layers keep ring buffers of `window`
+    slots (attention.ring_slots semantics); full layers keep max_seq slots
+    (optionally int8-quantized with kv_quant — full-attention layers only;
+    ring caches are already window-bounded). `swa_only` must match
+    Runtime.swa_only (gemma2 long-context variant)."""
+    dtype = jnp.dtype(cfg.dtype)
+    fam = cfg.family
+    eff = lambda w: min(max_seq, w) if w else max_seq
+
+    if fam == "dense" and cfg.local_global:
+        half = cfg.num_layers // 2
+        w = cfg.sliding_window or 4096
+        glob = eff(w) if swa_only else max_seq
+        return {
+            "local": _kv_cache(cfg, batch, eff(w), dtype, (half,)),
+            "global": _kv_cache(cfg, batch, glob, dtype, (half,),
+                                quant=kv_quant and not swa_only),
+        }
+    if fam == "dense":
+        return _kv_cache(cfg, batch, eff(cfg.sliding_window), dtype,
+                         (cfg.num_layers,),
+                         quant=kv_quant and not cfg.sliding_window)
+    if fam == "moe":
+        return _kv_cache(cfg, batch, eff(cfg.sliding_window), dtype,
+                         (cfg.num_layers,),
+                         quant=kv_quant and not cfg.sliding_window)
+    if fam == "ssm":
+        per = ssm_lib.init_ssm_cache(cfg, batch, dtype)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.num_layers, *a.shape)).copy(), per)
+    if fam == "hybrid":
+        per_ssm = ssm_lib.init_ssm_cache(cfg, batch, dtype)
+        return {
+            "attn": _kv_cache(cfg, batch, eff(cfg.sliding_window), dtype,
+                              (cfg.num_layers,)),
+            "ssm": jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a, (cfg.num_layers, *a.shape)).copy(), per_ssm),
+        }
+    if fam == "audio":
+        c = _kv_cache(cfg, batch, max_seq, dtype, (cfg.num_layers,))
+        c["enc_out"] = jnp.zeros((batch, cfg.encoder_tokens, cfg.d_model), dtype)
+        return c
+    if fam == "vlm":
+        k_every = cfg.cross_attn_every
+        n_groups = cfg.num_layers // k_every
+        c = _kv_cache(cfg, batch, max_seq, dtype, (n_groups, k_every - 1))
+        c["vision"] = jnp.zeros((batch, cfg.vision_tokens, cfg.d_model), dtype)
+        return c
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# Forward core: scanned layer stacks (shared by train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(fn, rt):
+    return jax.checkpoint(fn) if rt.remat else fn
+
+
+def _run_stack(x, params, cfg, rt, *, cache=None, pos=None, enc=None):
+    """Run the whole layer stack. Returns (hidden, new_cache, aux_loss)."""
+    fam = cfg.family
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if fam == "dense" and cfg.local_global:
+        def pair_body(carry, xs):
+            h = constrain_batch_model(carry)
+            (pl, pg), (cl, cgl) = xs
+            h, cl2 = B.dense_block(h, pl, cfg, rt, kind=0, cache=cl, pos=pos)
+            h, cg2 = B.dense_block(h, pg, cfg, rt, kind=1, cache=cgl, pos=pos)
+            return h, (cl2, cg2)
+
+        caches = (None, None) if cache is None else (cache["local"],
+                                                     cache["global"])
+        xs = ((params["blocks"]["local"], params["blocks"]["global"]), caches)
+        x, newc = jax.lax.scan(_maybe_remat(pair_body, rt), x, xs)
+        new_cache = None if cache is None else {"local": newc[0],
+                                                "global": newc[1]}
+        return x, new_cache, aux_total
+
+    if fam in ("dense", "ssm", "hybrid"):
+        block_fn = {"dense": B.dense_block, "ssm": B.ssm_block,
+                    "hybrid": B.hybrid_block}[fam]
+
+        if cache is None:
+            x, _ = jax.lax.scan(
+                _maybe_remat(
+                    lambda h, bp: block_fn(constrain_batch_model(h), bp, cfg,
+                                           rt), rt),
+                x, params["blocks"])
+            return x, None, aux_total
+
+        def body(carry, xs):
+            h = constrain_batch_model(carry)
+            bp, c = xs
+            h, c2 = block_fn(h, bp, cfg, rt, cache=c, pos=pos)
+            return h, c2
+
+        x, newc = jax.lax.scan(_maybe_remat(body, rt), x,
+                               (params["blocks"], cache))
+        return x, newc, aux_total
+
+    if fam == "moe":
+        def body_nc(h, bp):
+            h, (_, aux) = B.moe_block(constrain_batch_model(h), bp, cfg, rt)
+            return h, aux
+
+        def body(carry, xs):
+            h, auxc = carry
+            h = constrain_batch_model(h)
+            bp, c = xs
+            h, (c2, aux) = B.moe_block(h, bp, cfg, rt, cache=c, pos=pos)
+            return (h, auxc + aux), c2
+
+        if cache is None:
+            x, auxs = jax.lax.scan(_maybe_remat(body_nc, rt), x,
+                                   params["blocks"])
+            return x, None, auxs.sum()
+        (x, aux_total), newc = jax.lax.scan(
+            _maybe_remat(body, rt), (x, aux_total), (params["blocks"], cache))
+        return x, newc, aux_total
+
+    if fam == "audio":
+        def body(carry, xs):
+            h = constrain_batch_model(carry)
+            bp, c = xs
+            sc = None if c is None else c
+            h, c2 = B.cross_block(h, bp, cfg, rt, enc=enc, cache=sc, pos=pos,
+                                  use_gelu_mlp=True)
+            return h, c2
+
+        if cache is None:
+            x, _ = jax.lax.scan(
+                _maybe_remat(
+                    lambda h, bp: B.cross_block(h, bp, cfg, rt, enc=enc), rt),
+                x, params["blocks"])
+            return x, None, aux_total
+        layer_cache = {"k": cache["k"], "v": cache["v"]}
+        x, newc = jax.lax.scan(_maybe_remat(body, rt), x,
+                               (params["blocks"], layer_cache))
+        new_cache = dict(cache)
+        new_cache.update(newc)
+        return x, new_cache, aux_total
+
+    if fam == "vlm":
+        k_every = cfg.cross_attn_every
+
+        def group_body(carry, xs):
+            h = constrain_batch_model(carry)
+            (sp, cp), sc = xs
+
+            def self_body(hh, inner):
+                bp, c = inner
+                hh, c2 = B.dense_block(hh, bp, cfg, rt, cache=c, pos=pos)
+                return hh, c2
+
+            if sc is None:
+                h, _ = jax.lax.scan(
+                    lambda hh, bp: B.dense_block(hh, bp, cfg, rt), h, sp)
+                newsc = None
+            else:
+                h, newsc = jax.lax.scan(self_body, h, (sp, sc))
+            h, _ = B.cross_block(h, cp, cfg, rt, enc=enc, gated=True,
+                                 use_gelu_mlp=False)
+            return h, newsc
+
+        blocks = params["blocks"]
+        if cache is None:
+            x, _ = jax.lax.scan(
+                _maybe_remat(lambda h, xs: group_body(h, (xs, None)), rt),
+                x, (blocks["self"], blocks["cross"]))
+            return x, None, aux_total
+        sc = {"k": cache["k"], "v": cache["v"]}
+        x, newsc = jax.lax.scan(
+            _maybe_remat(group_body, rt), x,
+            ((blocks["self"], blocks["cross"]), sc))
+        new_cache = dict(cache)
+        new_cache.update(newsc)
+        return x, new_cache, aux_total
+
+    raise ValueError(fam)
+
+
+def _encode(params, enc_input, cfg, rt):
+    """Whisper encoder over stub frame embeddings [B, T, D]."""
+    x = constrain_batch_model(
+        enc_input + params["enc_pos_embed"][None, : enc_input.shape[1]])
+    x, _ = jax.lax.scan(
+        _maybe_remat(lambda h, bp: (B.encoder_block(h, bp, cfg, rt), None), rt),
+        x, params["enc_blocks"])
+    return layer_norm(x, params["enc_final_s"], params["enc_final_b"],
+                      cfg.norm_eps)
+
+
+def _embed_tokens(params, tokens, cfg, *, pos0=0):
+    x = params["embed"][tokens]
+    if cfg.embed_scale:
+        # scale in the residual dtype: a f32 scalar would upcast the entire
+        # residual stream (gemma2: +10 GB/device of f32 carries)
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    if cfg.family == "audio":
+        s = tokens.shape[1]
+        x = x + jax.lax.dynamic_slice_in_dim(params["pos_embed"], pos0, s,
+                                             axis=0)[None]
+    return x
+
+
+def _final_hidden(x, params, cfg):
+    if cfg.family == "audio":
+        return layer_norm(x, 1.0 + params["final_norm"], params["final_b"],
+                          cfg.norm_eps)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def _head(params, cfg):
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def _extra_enc(params, cfg, rt, extra, cache=None):
+    """Resolve the cross-attention memory (encoder out / vision tokens)."""
+    if cfg.family == "audio":
+        if cache is not None and extra is None:
+            return cache["enc_out"]
+        return _encode(params, extra["encoder_input"], cfg, rt)
+    if cfg.family == "vlm":
+        if cache is not None and extra is None:
+            return cache["vision"]
+        v = extra["vision_embeddings"]
+        return jnp.einsum("bnd,de->bne", v, params["vision_proj"])
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def forward(params, tokens, cfg: ModelConfig, rt: Runtime = Runtime(),
+            extra: dict | None = None) -> jnp.ndarray:
+    """Full-sequence logits [B, S, V] (small vocabs / smoke only)."""
+    enc = _extra_enc(params, cfg, rt, extra)
+    x = _embed_tokens(params, tokens, cfg)
+    x, _, _ = _run_stack(x, params, cfg, rt, enc=enc)
+    h = _final_hidden(x, params, cfg)
+    logits = jnp.einsum("bsd,dv->bsv", h, _head(params, cfg))
+    return softcap(logits.astype(jnp.float32), cfg.final_softcap)
+
+
+def loss_fn(params, tokens, labels, cfg: ModelConfig, rt: Runtime = Runtime(),
+            extra: dict | None = None, *, aux_weight: float = 0.01):
+    """Mean next-token CE, computed in sequence chunks so the [B,S,V] logits
+    tensor is never materialized (vocab up to 256k; DESIGN.md §6)."""
+    enc = _extra_enc(params, cfg, rt, extra)
+    x = constrain_batch_model(_embed_tokens(params, tokens, cfg))
+    x, _, aux = _run_stack(x, params, cfg, rt, enc=enc)
+    h = constrain_batch_model(_final_hidden(x, params, cfg))
+    head = _head(params, cfg)
+
+    bsz, s, d = h.shape
+    c = min(rt.loss_chunk, s)
+    if s % c:
+        c = s  # fallback: no chunking on ragged seqs (smoke sizes)
+    nch = s // c
+    hc = jnp.moveaxis(h.reshape(bsz, nch, c, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(bsz, nch, c), 1, 0)
+
+    @jax.checkpoint  # recompute chunk logits in backward: never hold [B,c,V]
+    def chunk_ce(carry, xs):
+        hh, ll = xs
+        hh = constrain_batch_model(hh)
+        logits = jnp.einsum("bcd,dv->bcv", hh, head).astype(jnp.float32)
+        logits = constrain_batch_model(logits, d_threshold=1)
+        logits = softcap(logits, cfg.final_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ll[..., None], axis=-1)[..., 0]
+        return carry + (lse - gold).sum(), None
+
+    total, _ = jax.lax.scan(chunk_ce, jnp.zeros((), jnp.float32), (hc, lc))
+    loss = total / (bsz * s)
+    return loss + aux_weight * aux
+
+
+def prefill(params, tokens, cache, cfg: ModelConfig, rt: Runtime = Runtime(),
+            extra: dict | None = None):
+    """Process the prompt, fill the KV cache, return last-token logits."""
+    enc = _extra_enc(params, cfg, rt, extra)
+    new_cache = cache
+    if cfg.family == "audio" and extra is not None:
+        new_cache = dict(cache)
+        new_cache["enc_out"] = enc.astype(cache["enc_out"].dtype)
+        cache = new_cache
+    if cfg.family == "vlm" and extra is not None:
+        new_cache = dict(cache)
+        new_cache["vision"] = enc.astype(cache["vision"].dtype)
+        cache = new_cache
+    x = _embed_tokens(params, tokens, cfg)
+    x, new_cache, _ = _run_stack(x, params, cfg, rt, cache=cache, enc=enc)
+    h = _final_hidden(x[:, -1:], params, cfg)
+    logits = jnp.einsum("bsd,dv->bsv", h, _head(params, cfg))[:, 0]
+    return softcap(logits.astype(jnp.float32), cfg.final_softcap), new_cache
+
+
+def decode_step(params, token, cache, pos, cfg: ModelConfig,
+                rt: Runtime = Runtime()):
+    """One serving step: token [B,1] at position `pos` -> (logits [B,V], cache)."""
+    enc = _extra_enc(params, cfg, rt, None, cache=cache)
+    x = _embed_tokens(params, token, cfg, pos0=pos)
+    x, new_cache, _ = _run_stack(x, params, cfg, rt, cache=cache, pos=pos,
+                                 enc=enc)
+    h = _final_hidden(x, params, cfg)
+    logits = jnp.einsum("bsd,dv->bsv", h, _head(params, cfg))[:, 0]
+    return softcap(logits.astype(jnp.float32), cfg.final_softcap), new_cache

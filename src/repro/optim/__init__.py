@@ -1,0 +1,16 @@
+"""Optimizers (no optax in this environment): SGD, momentum-SGD, Adam.
+
+Each optimizer is a pair (init_fn, update_fn) over parameter pytrees, in the
+functional style:
+
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+"""
+from repro.optim.optimizers import (
+    Optimizer, sgd, momentum, adam, apply_updates, clip_by_global_norm,
+    global_norm,
+)
+
+__all__ = ["Optimizer", "sgd", "momentum", "adam", "apply_updates",
+           "clip_by_global_norm", "global_norm"]

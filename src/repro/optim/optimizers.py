@@ -1,0 +1,89 @@
+"""Functional optimizers over pytrees (optax-style, self-contained)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves)) if leaves else jnp.zeros(())
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float) -> PyTree:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), tree)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def sgd(lr: float) -> Optimizer:
+    """Plain SGD: the paper's FedSGD server update (eq. 7)."""
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        return jax.tree.map(lambda g: -lr * g, grads), state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, state, params=None):
+        new_v = jax.tree.map(lambda v, g: beta * v + g, state, grads)
+        if nesterov:
+            upd = jax.tree.map(lambda v, g: -lr * (beta * v + g), new_v, grads)
+        else:
+            upd = jax.tree.map(lambda v: -lr * v, new_v)
+        return upd, new_v
+
+    return Optimizer(init, update)
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {
+            "mu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "nu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params=None):
+        t = state["t"] + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state["mu"], grads)
+        nu = jax.tree.map(lambda n, g: b2 * n + (1 - b2) * jnp.square(
+            g.astype(jnp.float32)), state["nu"], grads)
+        bc1 = 1 - b1**t.astype(jnp.float32)
+        bc2 = 1 - b2**t.astype(jnp.float32)
+
+        def upd(m, n, p):
+            step = -lr * (m / bc1) / (jnp.sqrt(n / bc2) + eps)
+            if weight_decay:
+                step = step - lr * weight_decay * p.astype(jnp.float32)
+            return step
+
+        if params is None:
+            params = jax.tree.map(jnp.zeros_like, mu)
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, {"mu": mu, "nu": nu, "t": t}
+
+    return Optimizer(init, update)

@@ -1,0 +1,4 @@
+"""Serving runtime: continuous-batching engine over the decode-step API."""
+from repro.serving.engine import Request, RequestState, ServingEngine
+
+__all__ = ["Request", "RequestState", "ServingEngine"]

@@ -1,0 +1,342 @@
+"""Partition rules: parameter/activation/cache PartitionSpecs per arch.
+
+Logical axes:
+  * "batch"  -> ("pod", "data") on the multi-pod mesh, ("data",) single-pod.
+  * "model"  -> tensor-parallel axis.
+
+Modes:
+  * train: FSDP + TP — every big weight shards its non-TP dim over the batch
+    axes (ZeRO-3 style; XLA all-gathers per scanned layer). MoE experts shard
+    E over "model" when divisible, else (F->"model", D->"data").
+  * serve: TP-first; weights additionally shard over "data" only when a
+    single TP shard exceeds the per-device HBM budget (llama-vision-90b,
+    arctic, mixtral — DESIGN.md §6). KV caches shard batch over "batch" and
+    cache-sequence over "model" when divisible.
+
+Rules are *divisibility-guarded*: a dim that does not divide its mesh axis is
+left unsharded (e.g. hymba's 25 heads, granite's 49155 vocab).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    batch: tuple[str, ...]   # ("pod","data") or ("data",)
+    model: str               # "model"
+
+    @staticmethod
+    def from_mesh(mesh: Mesh) -> "MeshAxes":
+        names = mesh.axis_names
+        batch = tuple(n for n in names if n in ("pod", "data"))
+        return MeshAxes(batch=batch, model="model")
+
+    def size(self, mesh: Mesh, axis) -> int:
+        if axis is None:
+            return 1
+        if isinstance(axis, tuple):
+            return int(np.prod([mesh.shape[a] for a in axis]))
+        return mesh.shape[axis]
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    """Resolved per-(arch, mode) policy."""
+
+    mode: str                 # "train" | "serve"
+    fsdp: bool                # shard weight non-TP dims over batch axes
+    axes: MeshAxes
+    mesh: Mesh
+
+    def batch_axis(self):
+        return self.axes.batch if self.axes.batch else None
+
+    def batch_size_divisor(self) -> int:
+        return self.axes.size(self.mesh, self.axes.batch)
+
+    def model_size(self) -> int:
+        return self.axes.size(self.mesh, self.axes.model)
+
+
+# Per-device HBM budget used to decide serve-time FSDP (bf16 bytes).
+HBM_BUDGET_BYTES = 16e9
+SERVE_PARAM_BUDGET = 0.5 * HBM_BUDGET_BYTES
+
+
+def make_policy(cfg: ModelConfig, mesh: Mesh, mode: str) -> ShardingPolicy:
+    axes = MeshAxes.from_mesh(mesh)
+    if mode == "train":
+        fsdp = True
+    else:
+        from repro.models.transformer import param_count
+        tp_bytes = 2 * param_count(cfg) / max(mesh.shape["model"], 1)
+        fsdp = tp_bytes > SERVE_PARAM_BUDGET
+    return ShardingPolicy(mode=mode, fsdp=fsdp, axes=axes, mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def _spec_for(path: str, shape: tuple[int, ...], cfg: ModelConfig,
+              pol: ShardingPolicy) -> P:
+    """PartitionSpec for one parameter leaf (path is the keystr)."""
+    m = pol.axes.model
+    msize = pol.model_size()
+    baxis = pol.batch_axis()
+    bsize = pol.batch_size_divisor()
+    pth = path.lower()
+
+    def fsdp_axis(dim: int):
+        return baxis if (pol.fsdp and baxis and _div(shape[dim], bsize)) else None
+
+    ndim = len(shape)
+
+    # ---- embeddings / heads ------------------------------------------------
+    if "embed" in pth and "pos" not in pth or pth.endswith("['lm_head']"):
+        vdim, ddim = (0, 1) if "lm_head" not in pth else (1, 0)
+        # embed: [V, D]; lm_head: [D, V]
+        if "lm_head" in pth:
+            vdim, ddim = 1, 0
+        spec = [None] * ndim
+        if _div(shape[vdim], msize):
+            spec[vdim] = m
+        elif _div(shape[ddim], msize):
+            spec[ddim] = m
+        if pol.fsdp and spec[ddim] is None and baxis and _div(shape[ddim], bsize):
+            spec[ddim] = baxis
+        return P(*spec)
+    if "pos_embed" in pth or "vision_proj" in pth:
+        return P()
+
+    # ---- MoE expert weights [L, E, D, F] / [L, E, F, D] --------------------
+    if "moe" in pth and any(w in pth for w in ("w_gate", "w_up", "w_down")):
+        l_, e_, a_, b_ = 0, 1, 2, 3
+        spec = [None] * 4
+        if pol.mode == "train" and _div(shape[e_], msize):
+            spec[e_] = m                      # expert parallel
+            spec[a_] = fsdp_axis(a_)
+        else:
+            # (F -> model, D -> batch-axes): works for E < model shards and
+            # bounds serve memory (DESIGN.md §6)
+            f_dim = b_ if "w_down" not in pth else a_
+            d_dim = a_ if "w_down" not in pth else b_
+            if _div(shape[f_dim], msize):
+                spec[f_dim] = m
+            if baxis and (pol.fsdp or pol.mode == "serve") and \
+                    _div(shape[d_dim], bsize):
+                spec[d_dim] = baxis
+            if spec == [None] * 4 and _div(shape[e_], msize):
+                spec[e_] = m
+        return P(*spec)
+    if "router" in pth:
+        return P()
+
+    # ---- attention projections ---------------------------------------------
+    if any(k in pth for k in ("['wq']", "['wk']", "['wv']")):
+        spec = [None] * ndim
+        if _div(shape[-1], msize):
+            spec[-1] = m                      # heads (flattened) -> TP
+        spec[-2] = fsdp_axis(ndim - 2)
+        return P(*spec)
+    if "['wo']" in pth:
+        spec = [None] * ndim
+        if _div(shape[-2], msize):
+            spec[-2] = m
+        spec[-1] = fsdp_axis(ndim - 1)
+        return P(*spec)
+    if any(k in pth for k in ("['bq']", "['bk']", "['bv']")):
+        spec = [None] * ndim
+        if _div(shape[-1], msize):
+            spec[-1] = m
+        return P(*spec)
+
+    # ---- MLPs ---------------------------------------------------------------
+    if any(k in pth for k in ("w_gate", "w_up", "w_in")):
+        spec = [None] * ndim
+        if _div(shape[-1], msize):
+            spec[-1] = m
+        spec[-2] = fsdp_axis(ndim - 2)
+        return P(*spec)
+    if any(k in pth for k in ("w_down", "w_out")):
+        spec = [None] * ndim
+        if _div(shape[-2], msize):
+            spec[-2] = m
+        spec[-1] = fsdp_axis(ndim - 1)
+        return P(*spec)
+    if "b_in" in pth:
+        spec = [None] * ndim
+        if _div(shape[-1], msize):
+            spec[-1] = m
+        return P(*spec)
+
+    # ---- SSM ----------------------------------------------------------------
+    if "in_proj" in pth:
+        spec = [None] * ndim
+        if _div(shape[-1], msize):
+            spec[-1] = m
+        spec[-2] = fsdp_axis(ndim - 2)
+        return P(*spec)
+    if "out_proj" in pth:
+        spec = [None] * ndim
+        if _div(shape[-2], msize):
+            spec[-2] = m
+        spec[-1] = fsdp_axis(ndim - 1)
+        return P(*spec)
+
+    # norms, scalars, conv, gates, biases: replicated
+    return P()
+
+
+def param_specs(cfg: ModelConfig, pol: ShardingPolicy,
+                shapes: PyTree | None = None) -> PyTree:
+    """PartitionSpec pytree congruent with the parameter pytree."""
+    from repro.models.transformer import param_shapes
+    shapes = shapes if shapes is not None else param_shapes(cfg)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    specs = [
+        _spec_for(jax.tree_util.keystr(kp), tuple(leaf.shape), cfg, pol)
+        for kp, leaf in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_shardings(cfg: ModelConfig, pol: ShardingPolicy,
+                    shapes: PyTree | None = None) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(pol.mesh, s),
+                        param_specs(cfg, pol, shapes))
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_spec(global_batch: int, pol: ShardingPolicy, rank: int = 2) -> P:
+    """Tokens/labels [B, S]: shard B over batch axes when divisible."""
+    bax = pol.batch_axis()
+    if bax and _div(global_batch, pol.batch_size_divisor()):
+        return P(bax, *([None] * (rank - 1)))
+    return P(*([None] * rank))
+
+
+def cache_specs(cfg: ModelConfig, pol: ShardingPolicy, cache: PyTree,
+                global_batch: int) -> PyTree:
+    """KV/SSM cache specs: batch -> batch axes, cache-seq -> model axis."""
+    bax = pol.batch_axis()
+    bdiv = pol.batch_size_divisor()
+    msize = pol.model_size()
+    m = pol.axes.model
+
+    def spec(kp, leaf):
+        pth = jax.tree_util.keystr(kp).lower()
+        shp = leaf.shape
+        nd = len(shp)
+        s = [None] * nd
+        if "scale" in pth:
+            # int8-KV scales: [*, B, S, Hkv]
+            b_dim, s_dim = nd - 3, nd - 2
+            if bax and _div(shp[b_dim], bdiv):
+                s[b_dim] = bax
+            if _div(shp[s_dim], msize):
+                s[s_dim] = m
+        elif "'k'" in pth or "'v'" in pth:
+            # [*, B, S, Hkv, Dh] (lead dims: layer stacking)
+            b_dim, s_dim = nd - 4, nd - 3
+            if bax and _div(shp[b_dim], bdiv):
+                s[b_dim] = bax
+            if _div(shp[s_dim], msize):
+                s[s_dim] = m
+        elif "ssm" in pth:
+            # [L, B, H, P, N]
+            b_dim = nd - 4
+            if bax and _div(shp[b_dim], bdiv):
+                s[b_dim] = bax
+        elif "conv" in pth:
+            b_dim = nd - 3
+            if bax and _div(shp[b_dim], bdiv):
+                s[b_dim] = bax
+        elif "enc_out" in pth or "vision" in pth:
+            if bax and _div(shp[0], bdiv):
+                s[0] = bax
+            if _div(shp[-1], msize):
+                s[-1] = m
+        return P(*s)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec(kp, leaf) for kp, leaf in flat])
+
+
+# ---------------------------------------------------------------------------
+# Activation constraint helper (used inside model code when a mesh is active)
+# ---------------------------------------------------------------------------
+
+def constrain(x, *axes):
+    """with_sharding_constraint by logical axis names.
+
+    axes: one entry per dim — "batch" (-> ("pod","data")), "model", or None.
+    Dims that don't divide their mesh axes are left unsharded; no-op outside
+    a mesh context."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.shape:
+        return x
+    names = mesh.axis_names
+    batch = tuple(n for n in names if n in ("pod", "data"))
+    bsz = int(np.prod([mesh.shape[a] for a in batch])) if batch else 1
+    spec = []
+    used_model = used_batch = False
+    for dim, ax in enumerate(axes):
+        if ax == "batch" and batch and not used_batch \
+                and x.shape[dim] % bsz == 0:
+            spec.append(batch)
+            used_batch = True
+        elif ax == "model" and "model" in names and not used_model and \
+                x.shape[dim] % mesh.shape["model"] == 0:
+            spec.append("model")
+            used_model = True
+        else:
+            spec.append(None)
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x
+
+
+def constrain_batch_model(x, *, d_threshold: int = 2048):
+    """Constrain [B, S, D] activations to P(batch, None, model-if-big).
+
+    The residual stream is always batch-sharded; its feature dim is
+    additionally model-sharded for d_model >= d_threshold, bounding per-layer
+    activation memory for the 9B-90B archs (DESIGN.md §6). No-op outside a
+    mesh context (smoke tests, single-device runs)."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.shape:
+        return x
+    names = mesh.axis_names
+    batch = tuple(n for n in names if n in ("pod", "data"))
+    bsz = int(np.prod([mesh.shape[a] for a in batch])) if batch else 1
+    m = "model" if "model" in names else None
+    spec = [None] * x.ndim
+    if batch and x.shape[0] % bsz == 0:
+        spec[0] = batch
+    if m and x.shape[-1] >= d_threshold and \
+            x.shape[-1] % mesh.shape["model"] == 0:
+        spec[-1] = m
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x

@@ -1,0 +1,22 @@
+"""Wireless edge substrate: channels, rates, delay and energy models (Sec. II-B/C)."""
+from repro.wireless.channel import ChannelModel, rayleigh_gains
+from repro.wireless.comm import (
+    SystemParams,
+    uplink_rate,
+    downlink_rate,
+    computation_delay,
+    communication_delay,
+    round_delay,
+    total_delay,
+    computation_energy,
+    upload_energy,
+    round_energy,
+    total_energy,
+)
+
+__all__ = [
+    "ChannelModel", "rayleigh_gains", "SystemParams",
+    "uplink_rate", "downlink_rate",
+    "computation_delay", "communication_delay", "round_delay", "total_delay",
+    "computation_energy", "upload_energy", "round_energy", "total_energy",
+]

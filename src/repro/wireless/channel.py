@@ -1,0 +1,38 @@
+"""Channel model: IID Rayleigh fading with average path loss (Sec. V setup).
+
+The paper: "Channel coefficients are modeled as IID Rayleigh fading with an
+average path loss of 1e-5, and remain constant during all rounds."
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def rayleigh_gains(
+    n: int, *, path_loss: float = 1e-5, rng: np.random.Generator | None = None
+) -> np.ndarray:
+    """Draw n channel power gains h = path_loss * |CN(0,1)|^2.
+
+    |CN(0,1)|^2 is exponential(1), so E[h] = path_loss.
+    """
+    rng = rng or np.random.default_rng(0)
+    return path_loss * rng.exponential(scale=1.0, size=n)
+
+
+@dataclasses.dataclass
+class ChannelModel:
+    """Holds uplink/downlink gains for N clients, constant across rounds."""
+
+    n_clients: int
+    path_loss: float = 1e-5
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        self.uplink = rayleigh_gains(self.n_clients, path_loss=self.path_loss, rng=rng)
+        self.downlink = rayleigh_gains(self.n_clients, path_loss=self.path_loss, rng=rng)
+
+    def gains(self) -> tuple[np.ndarray, np.ndarray]:
+        return self.uplink, self.downlink

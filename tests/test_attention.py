@@ -1,0 +1,113 @@
+"""Attention implementations agree: naive / chunked / flash_vjp / ring decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import (
+    naive_attention, chunked_attention, decode_attention,
+    decode_attention_ring, fill_ring, ring_slots)
+from repro.models.flash_vjp import chunked_attention_vjp
+
+KEY = jax.random.key(7)
+
+
+def _qkv(b=2, s=128, hq=4, hkv=2, d=32, seed=0):
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(ks[0], (b, s, hq, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, hkv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, hkv, d), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 48)])
+@pytest.mark.parametrize("cap", [0.0, 15.0])
+def test_chunked_matches_naive(causal, window, cap):
+    q, k, v = _qkv()
+    ref = naive_attention(q, k, v, causal=causal, window=window, cap=cap)
+    out = chunked_attention(q, k, v, causal=causal, window=window, cap=cap,
+                            q_chunk=32, kv_chunk=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("kw", [dict(causal=True), dict(causal=False),
+                                dict(causal=True, window=48),
+                                dict(causal=True, cap=15.0)])
+def test_flash_vjp_forward_and_gradients(kw):
+    q, k, v = _qkv()
+
+    def f_ref(q, k, v):
+        return (chunked_attention(q, k, v, q_chunk=32, kv_chunk=32, **kw)**2).sum()
+
+    def f_new(q, k, v):
+        return (chunked_attention_vjp(q, k, v, q_chunk=32, kv_chunk=32,
+                                      **kw)**2).sum()
+
+    g_ref = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    g_new = jax.grad(f_new, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g_ref, g_new):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_decode_matches_last_row_of_full():
+    q, k, v = _qkv(s=96)
+    pos = 77
+    ref = naive_attention(q[:, :pos + 1], k[:, :pos + 1], v[:, :pos + 1],
+                          causal=True)[:, pos:pos + 1]
+    out = decode_attention(q[:, pos:pos + 1], k, v, pos + 1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("pos", [10, 63, 64, 100])
+def test_ring_decode_matches_windowed(pos):
+    w = 64
+    q, k, v = _qkv(s=128)
+    ref = naive_attention(q[:, :pos + 1], k[:, :pos + 1], v[:, :pos + 1],
+                          causal=True, window=w)[:, pos:pos + 1]
+    rk = fill_ring(k[:, :pos + 1], w)
+    rv = fill_ring(v[:, :pos + 1], w)
+    out = decode_attention_ring(q[:, pos:pos + 1], rk, rv, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ring_slots_invariants():
+    w = 16
+    for pos in (0, 5, 15, 16, 33):
+        slots = np.asarray(ring_slots(pos, w))
+        valid = slots[slots >= 0]
+        # every valid slot holds a position in (pos-w, pos]
+        assert (valid <= pos).all() and (valid > pos - w).all()
+        # slot i holds a position congruent to i
+        for i, p in enumerate(slots):
+            if p >= 0:
+                assert p % w == i
+
+
+def test_ring_incremental_write_consistency():
+    """fill_ring(prefill) + one decode write == fill_ring(prefill+1)."""
+    w = 32
+    _, k, _ = _qkv(s=80)
+    pos = 50
+    ring = fill_ring(k[:, :pos], w)          # tokens 0..pos-1
+    slot = pos % w
+    ring = jax.lax.dynamic_update_slice(ring, k[:, pos:pos + 1], (0, slot, 0, 0))
+    expect = fill_ring(k[:, :pos + 1], w)
+    np.testing.assert_allclose(np.asarray(ring), np.asarray(expect))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 4), st.sampled_from([32, 64, 128]),
+       st.sampled_from([(4, 1), (4, 2), (4, 4), (6, 3)]),
+       st.sampled_from([16, 32, 64]), st.integers(0, 10_000))
+def test_chunked_naive_property(b, s, heads, d, seed):
+    hq, hkv = heads
+    q, k, v = _qkv(b=b, s=s, hq=hq, hkv=hkv, d=d, seed=seed)
+    ref = naive_attention(q, k, v, causal=True)
+    out = chunked_attention(q, k, v, causal=True, q_chunk=16, kv_chunk=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)

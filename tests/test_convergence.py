@@ -1,0 +1,86 @@
+"""Theorem 1: the theta bound and its structural properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.convergence import BoundConstants, theta, theta_decomposition, round_term
+
+
+def _c(**kw):
+    return BoundConstants(rounds_S=4, batch_Z=16, **kw)
+
+
+def test_constants_match_paper_formulas():
+    c = BoundConstants(lipschitz_L=3.0, grad_bound_A2=7.0, model_bound_B2=2.0,
+                       loss_gap=5.0, eta=0.05, batch_Z=8, rounds_S=9)
+    sp1 = 10
+    assert c.alpha == pytest.approx(2 * 5.0 / (0.05 * sp1))
+    assert c.beta == pytest.approx(0.05**3 * 7.0 * 4.0 / (8 * sp1))
+    assert c.gamma1 == pytest.approx(0.05 * 7.0 / (8 * sp1))
+    assert c.gamma2 == pytest.approx(9.0 * 2.0 / sp1)
+
+
+def test_theta_decomposition_sums_to_total():
+    c = _c()
+    rng = np.random.default_rng(0)
+    n, s = 6, c.rounds_S + 1
+    a = (rng.random((s, n)) > 0.3).astype(float)
+    a[:, 0] = 1  # ensure nonempty rounds
+    lam = rng.uniform(0, 0.5, (s, n))
+    phi = rng.uniform(0, 3, n)
+    d = theta_decomposition(a, lam, phi, c)
+    assert d["total"] == pytest.approx(theta(a, lam, phi, c), rel=1e-9)
+
+
+def test_theta_monotone_in_pruning():
+    """More pruning => larger bound (gamma2 term), all else equal."""
+    c = _c()
+    n, s = 4, c.rounds_S + 1
+    a = np.ones((s, n))
+    phi = np.ones(n)
+    t_low = theta(a, 0.1 * np.ones((s, n)), phi, c)
+    t_high = theta(a, 0.5 * np.ones((s, n)), phi, c)
+    assert t_high > t_low
+
+
+def test_theta_prefers_low_phi_clients():
+    c = _c()
+    n, s = 2, c.rounds_S + 1
+    lam = np.zeros((s, n))
+    phi = np.array([0.1, 10.0])
+    a_good = np.zeros((s, n)); a_good[:, 0] = 1
+    a_bad = np.zeros((s, n)); a_bad[:, 1] = 1
+    assert theta(a_good, lam, phi, c) < theta(a_bad, lam, phi, c)
+
+
+def test_empty_round_is_infinite():
+    c = _c()
+    assert round_term(np.zeros(3), np.zeros(3), np.ones(3), c) == np.inf
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 8), st.integers(0, 6), st.integers(0, 99999))
+def test_theta_finite_and_above_alpha(n, s_rounds, seed):
+    c = BoundConstants(rounds_S=s_rounds, batch_Z=4)
+    rng = np.random.default_rng(seed)
+    s = s_rounds + 1
+    a = np.ones((s, n))
+    lam = rng.uniform(0, 0.7, (s, n))
+    phi = rng.uniform(0, 5, n)
+    t = theta(a, lam, phi, c)
+    assert np.isfinite(t)
+    assert t >= c.alpha  # every added term is nonnegative
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 8), st.integers(0, 99999))
+def test_more_clients_tighten_participation_term(n, seed):
+    """With phi=0 and lam=0, theta strictly improves with more clients."""
+    c = _c()
+    s = c.rounds_S + 1
+    lam = np.zeros((s, n))
+    phi = np.zeros(n)
+    a1 = np.zeros((s, n)); a1[:, 0] = 1
+    t1 = theta(a1, lam, phi, c)
+    t_all = theta(np.ones((s, n)), lam, phi, c)
+    assert t_all < t1 or n == 1

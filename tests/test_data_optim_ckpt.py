@@ -1,0 +1,142 @@
+"""Data pipeline, optimizers, checkpointing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.data import (batches, dirichlet_label_proportions, make_dataset,
+                        partition_by_dirichlet)
+from repro.optim import adam, apply_updates, momentum, sgd, global_norm
+
+
+# ------------------------------ data ------------------------------
+
+def test_dirichlet_proportions_row_stochastic():
+    p = dirichlet_label_proportions(8, 10, 0.5, np.random.default_rng(0))
+    assert p.shape == (8, 10)
+    np.testing.assert_allclose(p.sum(axis=1), 1.0, rtol=1e-9)
+
+
+def test_partition_covers_everything_once():
+    labels = np.random.default_rng(0).integers(0, 10, 3000)
+    parts = partition_by_dirichlet(labels, 5, sigma=0.5,
+                                   rng=np.random.default_rng(1))
+    allidx = np.concatenate(parts)
+    assert len(allidx) == len(labels)
+    assert len(np.unique(allidx)) == len(labels)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.05, 50.0), st.integers(2, 8), st.integers(0, 9999))
+def test_partition_property(sigma, n_clients, seed):
+    labels = np.random.default_rng(seed).integers(0, 10, 1000)
+    parts = partition_by_dirichlet(labels, n_clients, sigma=sigma,
+                                   rng=np.random.default_rng(seed))
+    assert sum(len(p) for p in parts) == 1000
+    assert min(len(p) for p in parts) >= 1
+
+
+def test_low_sigma_more_skew():
+    """Smaller Dirichlet concentration => more heterogeneous label splits
+    (paper Fig. 3)."""
+    labels = np.random.default_rng(0).integers(0, 10, 20000)
+
+    def mean_kl(sigma):
+        parts = partition_by_dirichlet(labels, 8, sigma=sigma,
+                                       rng=np.random.default_rng(2))
+        glob = np.bincount(labels, minlength=10) / len(labels)
+        kls = []
+        for p in parts:
+            h = np.bincount(labels[p], minlength=10) + 1e-9
+            h = h / h.sum()
+            kls.append(np.sum(h * np.log(h / glob)))
+        return np.mean(kls)
+
+    assert mean_kl(0.1) > mean_kl(10.0)
+
+
+def test_synthetic_dataset_learnable_shapes():
+    ds = make_dataset("synthetic-mnist", n_train=128, n_test=32, seed=0)
+    assert ds.x_train.shape == (128, 28, 28, 1)
+    assert ds.x_test.shape == (32, 28, 28, 1)
+    assert set(np.unique(ds.y_train)).issubset(set(range(10)))
+    ds2 = make_dataset("synthetic-cifar10", n_train=16, n_test=8)
+    assert ds2.x_train.shape == (16, 32, 32, 3)
+
+
+def test_batches_drop_remainder_and_cover():
+    x = np.arange(103)[:, None].astype(np.float32)
+    y = np.arange(103)
+    seen = []
+    for xb, yb in batches(x, y, 10, rng=np.random.default_rng(0)):
+        assert xb.shape == (10, 1)
+        seen.extend(yb.tolist())
+    assert len(seen) == 100
+    assert len(set(seen)) == 100
+
+
+# ------------------------------ optim ------------------------------
+
+def _quad_problem():
+    target = jnp.asarray(np.random.default_rng(0).normal(size=(8,)),
+                         jnp.float32)
+    params = {"w": jnp.zeros(8)}
+
+    def loss(p):
+        return jnp.sum((p["w"] - target)**2)
+
+    return params, loss, target
+
+
+@pytest.mark.parametrize("opt", [sgd(0.1), momentum(0.05), adam(0.2)])
+def test_optimizers_converge_on_quadratic(opt):
+    params, loss, target = _quad_problem()
+    state = opt.init(params)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+    assert float(loss(params)) < 1e-3
+
+
+def test_global_norm():
+    t = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    assert float(global_norm(t)) == pytest.approx(5.0)
+
+
+# ------------------------------ checkpoint ------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"layer": {"w": jnp.asarray(np.random.default_rng(0).normal(
+        size=(4, 4)), jnp.float32), "b": jnp.zeros(4)},
+        "scale": jnp.ones(())}
+    path = str(tmp_path / "ck")
+    save_checkpoint(path, tree, step=7, sharding_meta={"layer/w": "P('model')"})
+    restored, meta = load_checkpoint(path, tree)
+    assert meta["step"] == 7
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    tree = {"w": jnp.zeros((4,))}
+    path = str(tmp_path / "ck")
+    save_checkpoint(path, tree)
+    with pytest.raises(ValueError):
+        load_checkpoint(path, {"w": jnp.zeros((5,))})
+
+
+def test_manager_keeps_latest_k(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"w": jnp.zeros((2,))}
+    for s in (1, 2, 3, 4):
+        mgr.save(s, jax.tree.map(lambda x: x + s, tree))
+    assert mgr.latest_step() == 4
+    restored, meta = mgr.restore(tree)
+    np.testing.assert_allclose(np.asarray(restored["w"]), 4.0)
+    files = [f for f in os.listdir(tmp_path) if f.endswith(".npz")]
+    assert len(files) == 2

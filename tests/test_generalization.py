@@ -1,0 +1,84 @@
+"""Lemma 1 / Proposition 1: the generalization statement."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import generalization as G
+
+
+def test_entropy_uniform_is_log_k():
+    for k in (2, 10, 100):
+        assert np.isclose(G.entropy(np.ones(k)), np.log(k))
+
+
+def test_entropy_pointmass_is_zero():
+    assert G.entropy([1.0, 0.0, 0.0]) == pytest.approx(0.0, abs=1e-9)
+
+
+def test_kl_identity_zero_and_decomposition():
+    p = np.array([0.5, 0.3, 0.2])
+    q = np.array([0.25, 0.5, 0.25])
+    assert G.kl_divergence(p, p) == pytest.approx(0.0, abs=1e-9)
+    # eq. (38): KL(p||q) = H(q-part) - I(p,q) with I = H(p)+H(q)-CE(p,q)
+    kl = G.kl_divergence(p, q)
+    decomp = G.entropy(q) - G.mutual_information_term(p, q)
+    assert kl == pytest.approx(decomp, rel=1e-9)
+
+
+def test_phi_zero_when_aligned():
+    """Identical train/test label distributions => KL=0 => phi=0."""
+    h = np.array([100, 100, 100, 100.0])
+    s = G.generalization_statement(h, h)
+    assert s.kl == pytest.approx(0.0, abs=1e-12)
+    assert s.phi == pytest.approx(0.0, abs=1e-9)
+
+
+def test_phi_increases_with_skew():
+    test_h = np.ones(10) * 100
+    mild = np.ones(10) * 100
+    mild[0] = 300
+    severe = np.ones(10)
+    severe[0] = 991
+    phi_mild = G.generalization_statement(mild, test_h).phi
+    phi_severe = G.generalization_statement(severe, test_h).phi
+    assert 0 < phi_mild < phi_severe
+
+
+def test_phi_caps_on_disjoint_support():
+    tr = np.array([100.0, 0, 0])
+    te = np.array([0.0, 50, 50])
+    s = G.generalization_statement(tr, te)
+    assert s.phi == G.PHI_MAX
+
+
+def test_client_statements_broadcast_test_hist():
+    tr = np.abs(np.random.default_rng(0).normal(size=(5, 10))) + 1
+    te = np.ones((1, 10))
+    phis = G.phis(tr, te)
+    assert phis.shape == (5,)
+    assert np.all(phis >= 0)
+
+
+def test_prop1_increment_bound_monotone_in_phi():
+    lo = G.generalization_gap_increment_bound(np.array([1.0]), 0.01, 10.0)
+    hi = G.generalization_gap_increment_bound(np.array([5.0]), 0.01, 10.0)
+    assert hi > lo > 0
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.floats(0.01, 1e4), min_size=2, max_size=20),
+       st.lists(st.floats(0.01, 1e4), min_size=2, max_size=20))
+def test_phi_nonnegative_finite_inputs(tr, te):
+    n = min(len(tr), len(te))
+    s = G.generalization_statement(np.array(tr[:n]), np.array(te[:n]))
+    assert s.phi >= 0
+    assert np.isfinite(s.phi)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(2, 12), st.floats(0.05, 50.0), st.integers(0, 10_000))
+def test_kl_nonnegative_property(k, sigma, seed):
+    rng = np.random.default_rng(seed)
+    p = rng.dirichlet(sigma * np.ones(k)) + 1e-9
+    q = rng.dirichlet(sigma * np.ones(k)) + 1e-9
+    assert G.kl_divergence(p, q) >= -1e-9

@@ -1,0 +1,172 @@
+"""Pallas kernels vs ref.py oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+def _qkv(b, s, hq, hkv, d, dtype, seed=0):
+    ks = jax.random.split(jax.random.key(seed), 3)
+    mk = lambda k, h: jax.random.normal(k, (b, s, h, d), jnp.float32).astype(dtype)
+    return mk(ks[0], hq), mk(ks[1], hkv), mk(ks[2], hkv)
+
+
+# ------------------------- flash attention -------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(1, 128, 4, 4, 64), (2, 256, 8, 2, 64),
+                                   (1, 256, 4, 1, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(dtype, shape, causal):
+    b, s, hq, hkv, d = shape
+    q, k, v = _qkv(b, s, hq, hkv, d, dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, block_q=64, block_k=64)
+    r = ref.flash_attention_ref(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                                jnp.swapaxes(v, 1, 2), causal=causal)
+    r = jnp.swapaxes(r, 1, 2)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(r, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("window", [64, 100])
+def test_flash_attention_window(window):
+    q, k, v = _qkv(1, 256, 4, 2, 64, jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, window=window,
+                              block_q=64, block_k=64)
+    r = ref.flash_attention_ref(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                                jnp.swapaxes(v, 1, 2), causal=True,
+                                window=window)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(jnp.swapaxes(r, 1, 2)),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_softcap():
+    q, k, v = _qkv(1, 128, 4, 4, 64, jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, cap=20.0,
+                              block_q=64, block_k=64)
+    r = ref.flash_attention_ref(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                                jnp.swapaxes(v, 1, 2), causal=True, cap=20.0)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(jnp.swapaxes(r, 1, 2)),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ------------------------- pruning kernels -------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(64,), (37, 53), (8, 16, 24), (1000,)])
+def test_importance_mask_sweep(dtype, shape):
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=shape), dtype)
+    v = jnp.asarray(rng.normal(size=shape), dtype)
+    thr = 0.25
+    q, m = ops.importance_and_mask(w, v, thr)
+    qr, mr = ref.importance_mask_ref(w, v, thr)
+    np.testing.assert_allclose(np.asarray(q), np.asarray(qr), **TOL[dtype])
+    np.testing.assert_array_equal(np.asarray(m), np.asarray(mr))
+
+
+@pytest.mark.parametrize("shape", [(129,), (64, 64), (7, 13)])
+def test_masked_update_sweep(shape):
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    g = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    m = jnp.asarray(rng.integers(0, 2, size=shape), jnp.float32)
+    out = ops.masked_update(w, g, m, 0.05)
+    expect = ref.masked_update_ref(w, g, m, 0.05)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 500), st.floats(0.0, 2.0), st.integers(0, 9999))
+def test_importance_mask_property(n, thr, seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    q, m = ops.importance_and_mask(w, v, thr)
+    qr, mr = ref.importance_mask_ref(w, v, thr)
+    np.testing.assert_allclose(np.asarray(q), np.asarray(qr), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(m), np.asarray(mr))
+
+
+# ------------------------- SSD chunk kernel -------------------------
+
+@pytest.mark.parametrize("dims", [(1, 64, 2, 32, 16), (2, 128, 4, 64, 32)])
+def test_ssd_chunk_kernel_vs_ref(dims):
+    b, q, h, p, n = dims
+    ks = jax.random.split(jax.random.key(0), 4)
+    x = jax.random.normal(ks[0], (b, q, h, p)) * 0.3
+    bb = jax.random.normal(ks[1], (b, q, n)) * 0.3
+    cc = jax.random.normal(ks[2], (b, q, n)) * 0.3
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (b, q, h)))
+    a_log = jnp.log(jnp.linspace(1.0, 4.0, h))
+    from repro.kernels.ssd_chunk import ssd_chunk
+    y, st_, dec = ssd_chunk(x, bb, cc, dt, a_log)
+    yr, str_, decr = ref.ssd_chunk_ref(x, bb, cc, dt, a_log)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(st_),
+                               np.asarray(jnp.swapaxes(str_, -1, -2)),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(decr),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_ssd_full_sequence_pallas_vs_model_impl():
+    import dataclasses
+    from repro.configs import get_config
+    from repro.models.ssm import ssd_chunked
+    b, s, h, p, n = 2, 256, 4, 64, 32
+    ks = jax.random.split(jax.random.key(1), 4)
+    x = jax.random.normal(ks[0], (b, s, h, p)) * 0.3
+    bb = jax.random.normal(ks[1], (b, s, n)) * 0.3
+    cc = jax.random.normal(ks[2], (b, s, n)) * 0.3
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (b, s, h)))
+    a_log = jnp.log(jnp.linspace(1.0, 4.0, h))
+    y_pl, f_pl = ops.ssd_chunked_pallas(x, bb, cc, dt, a_log, chunk=64)
+    cfg = dataclasses.replace(get_config("mamba2-130m"), ssm_chunk=64,
+                              ssm_head_dim=p)
+    y_j, f_j = ssd_chunked(x, bb, cc, dt, a_log, jnp.zeros(h), cfg)
+    np.testing.assert_allclose(np.asarray(y_pl), np.asarray(y_j),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(f_pl), np.asarray(f_j),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ------------------------- decode attention kernel -------------------------
+
+@pytest.mark.parametrize("dims", [(2, 512, 4, 2, 64), (1, 1024, 8, 8, 128)])
+@pytest.mark.parametrize("pos_frac", [0.3, 1.0])
+def test_decode_attention_kernel(dims, pos_frac):
+    b, skv, hq, hkv, d = dims
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (b, 1, hq, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, skv, hkv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, skv, hkv, d), jnp.float32)
+    pos = max(1, int(skv * pos_frac))
+    out = ops.decode_attention(q, k, v, pos, block_k=256)
+    r = ref.decode_attention_ref(jnp.swapaxes(q, 1, 2), k, v, pos)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(jnp.swapaxes(r, 1, 2)),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_matches_model_path():
+    from repro.models.attention import decode_attention as model_decode
+    b, skv, hq, hkv, d = 2, 256, 4, 2, 32
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (b, 1, hq, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, skv, hkv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, skv, hkv, d), jnp.float32)
+    out_kernel = ops.decode_attention(q, k, v, 200, block_k=64)
+    out_model = model_decode(q, k, v, 200)
+    np.testing.assert_allclose(np.asarray(out_kernel), np.asarray(out_model),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,77 @@
+"""LM packing pipeline: packing invariants, determinism, host disjointness."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.lm_pipeline import (PackedLMIterator, ShardSpec,
+                                    SyntheticDocumentSource, pack_documents)
+
+VOCAB = 1000
+
+
+def _iter(host=0, hosts=2, step=0, batch=4, seq=256, seed=0):
+    it = PackedLMIterator(SyntheticDocumentSource(VOCAB, seed=seed),
+                          ShardSpec(host, hosts), batch=batch, seq=seq)
+    it.seek(step)
+    return it
+
+
+def test_pack_shapes_and_label_shift():
+    src = SyntheticDocumentSource(VOCAB, mean_len=40, seed=0)
+    pb = pack_documents((src.doc(i) for i in range(50)), 4, 128)
+    assert pb.tokens.shape == pb.labels.shape == (4, 128)
+    # labels are next-token within each row
+    joint = np.zeros((4, 129), np.int32)
+    joint[:, :128] = pb.tokens
+    joint[:, 128] = 0  # unknown tail; check the prefix shift only
+    np.testing.assert_array_equal(pb.labels[:, :-1], pb.tokens[:, 1:])
+
+
+def test_segments_are_contiguous_and_positions_reset():
+    src = SyntheticDocumentSource(VOCAB, mean_len=30, seed=1)
+    pb = pack_documents((src.doc(i) for i in range(80)), 2, 256)
+    for b in range(2):
+        seg = pb.segment_ids[b]
+        pos = pb.positions[b]
+        # positions restart at each segment change
+        for t in range(1, 256):
+            if seg[t] != seg[t - 1]:
+                assert pos[t] == 0 or seg[t] == 0
+            elif seg[t] != 0:
+                assert pos[t] == pos[t - 1] + 1
+        # segments appear in increasing order, no interleaving
+        nz = seg[seg > 0]
+        assert (np.diff(nz) >= 0).all()
+
+
+def test_iterator_deterministic_and_seekable():
+    a = next(_iter(step=3))
+    b = next(_iter(step=3))
+    np.testing.assert_array_equal(a.tokens, b.tokens)
+    it = _iter(step=0)
+    for _ in range(3):
+        next(it)
+    c = next(it)
+    np.testing.assert_array_equal(a.tokens, c.tokens)  # seek == advance
+
+
+def test_hosts_disjoint_documents():
+    src = SyntheticDocumentSource(VOCAB, seed=0)
+    i0 = PackedLMIterator(src, ShardSpec(0, 2), batch=2, seq=128)
+    i1 = PackedLMIterator(src, ShardSpec(1, 2), batch=2, seq=128)
+    b0, b1 = next(i0), next(i1)
+    assert not np.array_equal(b0.tokens, b1.tokens)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 4), st.sampled_from([64, 128, 256]), st.integers(0, 50))
+def test_packing_property(batch, seq, step):
+    it = _iter(batch=batch, seq=seq, step=step, hosts=3, host=step % 3)
+    pb = next(it)
+    assert pb.tokens.shape == (batch, seq)
+    # padding (segment 0) only at row tails
+    for b in range(batch):
+        seg = pb.segment_ids[b]
+        if (seg == 0).any():
+            first0 = int(np.argmax(seg == 0))
+            assert (seg[first0:] == 0).all()

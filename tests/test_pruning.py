@@ -1,0 +1,101 @@
+"""Pruning: eq. (3)/(4) importance, masks, Assumption 4."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from scipy import stats
+
+from repro.core import pruning
+
+
+def _tree(seed=0, shapes=((8, 8), (16,), (4, 4, 4))):
+    rng = np.random.default_rng(seed)
+    return {f"w{i}": jnp.asarray(rng.normal(size=s), jnp.float32)
+            for i, s in enumerate(shapes)}
+
+
+def test_taylor_importance_formula():
+    p = _tree(0)
+    g = _tree(1)
+    q = pruning.taylor_importance(p, g)
+    for k in p:
+        np.testing.assert_allclose(np.asarray(q[k]),
+                                   (np.asarray(p[k]) * np.asarray(g[k]))**2)
+
+
+def test_exact_importance_agrees_with_taylor_on_quadratic():
+    """For a linear-gradient (quadratic) loss, first-order Taylor importance
+    ranks parameters like the exact leave-one-out score."""
+    rng = np.random.default_rng(3)
+    a = jnp.asarray(rng.normal(size=(6,)), jnp.float32)
+    params = {"w": jnp.asarray(rng.normal(size=(6,)), jnp.float32)}
+
+    def loss_fn(p):
+        return jnp.sum(a * p["w"]) + 0.001 * jnp.sum(p["w"]**2)
+
+    g = jax.grad(loss_fn)(params)
+    q_taylor = np.asarray(pruning.taylor_importance(params, g)["w"]).ravel()
+    q_exact = np.asarray(pruning.exact_importance(loss_fn, params)["w"]).ravel()
+    rho = stats.spearmanr(q_taylor, q_exact).statistic
+    assert rho > 0.99
+
+
+@pytest.mark.parametrize("lam", [0.0, 0.1, 0.25, 0.5, 0.9])
+def test_mask_realizes_requested_ratio(lam):
+    rng = np.random.default_rng(0)
+    imp = {"a": jnp.asarray(rng.random((32, 32)), jnp.float32),
+           "b": jnp.asarray(rng.random((128,)), jnp.float32)}
+    masks = pruning.build_masks(imp, lam)
+    realized = pruning.actual_ratio(masks)
+    total = 32 * 32 + 128
+    assert abs(realized - lam) <= 1.0 / total + 1e-9
+
+
+def test_protected_tensors_never_pruned():
+    imp = {"embed_table": jnp.zeros((8, 8)),     # zero importance but protected
+           "attn_wq": jnp.ones((8, 8))}
+    masks = pruning.build_masks(imp, 0.5)
+    assert float(jnp.min(masks["embed_table"])) == 1.0
+    assert float(jnp.sum(masks["attn_wq"] == 0)) > 0
+
+
+def test_prunes_lowest_importance_first():
+    imp = {"w": jnp.asarray(np.arange(100, dtype=np.float32))}
+    masks = pruning.build_masks(imp, 0.3)
+    m = np.asarray(masks["w"])
+    assert (m[:30] == 0).all() and (m[30:] == 1).all()
+
+
+def test_apply_masks_zeroes_and_preserves_dtype():
+    p = _tree(0)
+    masks = pruning.build_masks(pruning.taylor_importance(p, p), 0.4)
+    pruned = pruning.apply_masks(p, masks)
+    for k in p:
+        assert pruned[k].dtype == p[k].dtype
+        np.testing.assert_allclose(np.asarray(pruned[k]),
+                                   np.asarray(p[k]) * np.asarray(masks[k]))
+
+
+def test_assumption4_magnitude_pruning():
+    """Pruning the smallest |w*g| with g ~ w direction: ||w - w~||^2 <=
+    lam ||w||^2 (Assumption 4) holds when importance correlates with
+    magnitude; verify statistically with g = w (importance = |w|^4)."""
+    rng = np.random.default_rng(0)
+    p = {"w": jnp.asarray(rng.normal(size=(4096,)), jnp.float32)}
+    imp = pruning.taylor_importance(p, p)  # (w*w)^2 ranks by |w|
+    for lam in (0.1, 0.3, 0.5):
+        masks = pruning.build_masks(imp, lam)
+        d2, n2 = pruning.pruning_distortion(p, masks)
+        assert d2 <= lam * n2 + 1e-6
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.floats(0.0, 0.9), st.integers(0, 10_000))
+def test_mask_binary_and_ratio_property(lam, seed):
+    rng = np.random.default_rng(seed)
+    imp = {"x": jnp.asarray(rng.random((64, 16)), jnp.float32)}
+    masks = pruning.build_masks(imp, lam)
+    m = np.asarray(masks["x"])
+    assert set(np.unique(m)).issubset({0.0, 1.0})
+    assert abs(pruning.actual_ratio(masks) - lam) <= 1.0 / m.size + 1e-9

@@ -1,0 +1,79 @@
+"""Continuous-batching serving engine: exactness vs sequential generation,
+slot reuse, ragged positions, SSM family support."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import Runtime, decode_step, init_cache, init_params, prefill
+from repro.serving import ServingEngine
+
+RT = Runtime(attn_impl="naive")
+
+
+def _gen_ref(params, cfg, prompt, new=8, max_seq=256):
+    p = len(prompt)
+    cache = init_cache(cfg, 1, max_seq)
+    _, cache = prefill(params, jnp.asarray(prompt[:-1])[None], cache, cfg,
+                       RT, None)
+    tok, pos, out = int(prompt[-1]), p - 1, []
+    for _ in range(new):
+        lg, cache = decode_step(params, jnp.asarray([[tok]], jnp.int32),
+                                cache, pos, cfg, RT)
+        tok = int(lg[0].argmax())
+        out.append(tok)
+        pos += 1
+    return out
+
+
+@pytest.mark.parametrize("arch", ["granite-3-2b", "mamba2-130m"])
+def test_engine_matches_sequential(arch):
+    cfg = get_config(arch).reduced()
+    params = init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (12, 20, 7, 30, 16)]
+    refs = [_gen_ref(params, cfg, pr) for pr in prompts]
+
+    eng = ServingEngine(params, cfg, max_batch=3, max_seq=256, rt=RT,
+                        prompt_buckets=(32,))
+    for pr in prompts:
+        eng.submit(pr, max_new_tokens=8)
+    done = eng.run_to_completion()
+    assert len(done) == len(prompts)
+    by_uid = {st.request.uid: st.generated for st in done}
+    for i, ref in enumerate(refs):
+        assert by_uid[i] == ref, f"request {i}: {by_uid[i]} != {ref}"
+
+
+def test_slots_reused_and_ragged_positions():
+    cfg = get_config("granite-3-2b").reduced()
+    params = init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(1)
+    eng = ServingEngine(params, cfg, max_batch=2, max_seq=128, rt=RT,
+                        prompt_buckets=(16,))
+    # 6 requests through 2 slots, different lengths => ragged positions
+    for n in (5, 9, 13, 6, 11, 8):
+        eng.submit(rng.integers(0, cfg.vocab_size, size=n).astype(np.int32),
+                   max_new_tokens=4)
+    done = eng.run_to_completion()
+    assert len(done) == 6
+    assert all(len(st.generated) == 4 for st in done)
+    slots_used = {st.slot for st in done}
+    assert slots_used == {0, 1}
+
+
+def test_eos_stops_early():
+    cfg = get_config("granite-3-2b").reduced()
+    params = init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(0, cfg.vocab_size, size=10).astype(np.int32)
+    ref = _gen_ref(params, cfg, prompt, new=1)
+    eos = ref[0]  # first generated token == eos => stop after 1 token
+    eng = ServingEngine(params, cfg, max_batch=1, max_seq=128, rt=RT,
+                        prompt_buckets=(16,))
+    eng.submit(prompt, max_new_tokens=16, eos_id=eos)
+    done = eng.run_to_completion()
+    assert len(done) == 1
+    assert done[0].generated == [eos]

@@ -1,0 +1,162 @@
+"""(P2)-(P5) solvers + Algorithm 1 (AO)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.convergence import BoundConstants, theta
+from repro.core.optimizer_ao import AOConfig, solve_p1
+from repro.core.ratio import solve_pruning_ratios
+from repro.core.resource import (
+    allocate_client, solve_round_resources, solve_schedule_resources,
+    sca_round_resources, min_client_delay)
+from repro.core.selection import solve_selection, round_objective
+from repro.wireless import ChannelModel, SystemParams
+from repro.wireless.comm import total_delay, total_energy
+
+N = 6
+
+
+@pytest.fixture
+def env():
+    sp = SystemParams.table1(N, dataset="mnist")
+    ch = ChannelModel(N, seed=0)
+    c = BoundConstants(rounds_S=3, batch_Z=32)
+    rng = np.random.default_rng(0)
+    phi = rng.uniform(0.2, 3.0, N)
+    return sp, ch, c, phi
+
+
+# ---------------- resource allocation (P2) ----------------
+
+def test_allocate_client_respects_budget_and_boxes(env):
+    sp, ch, _, _ = env
+    t_min = min_client_delay(0, 0.3, ch.uplink, ch.downlink, sp)
+    al = allocate_client(0, 0.3, 2.0 * t_min, ch.uplink, ch.downlink, sp)
+    assert al.feasible
+    assert al.delay <= 2.0 * t_min * (1 + 1e-6)
+    assert 0 <= al.power <= sp.p_max[0] + 1e-12
+    assert 0 <= al.freq <= sp.f_max[0] + 1e3
+
+
+def test_allocate_client_infeasible_when_budget_below_min(env):
+    sp, ch, _, _ = env
+    t_min = min_client_delay(0, 0.0, ch.uplink, ch.downlink, sp)
+    al = allocate_client(0, 0.0, 0.5 * t_min, ch.uplink, ch.downlink, sp)
+    assert not al.feasible
+
+
+def test_more_time_less_energy(env):
+    """The energy-vs-delay tradeoff is monotone (convexity sanity)."""
+    sp, ch, _, _ = env
+    t_min = min_client_delay(0, 0.0, ch.uplink, ch.downlink, sp)
+    e = [allocate_client(0, 0.0, k * t_min, ch.uplink, ch.downlink, sp).energy
+         for k in (1.2, 2.0, 4.0)]
+    assert e[0] >= e[1] >= e[2]
+
+
+def test_analytic_matches_sca(env):
+    """The production decomposition and the paper-faithful SCA (eq. 28)
+    land on comparable round energies (within 10%)."""
+    sp, ch, _, _ = env
+    a = np.ones(N)
+    lam = 0.2 * np.ones(N)
+    t_round = 2.5 * max(min_client_delay(i, 0.2, ch.uplink, ch.downlink, sp)
+                        for i in range(N))
+    ana = solve_round_resources(a, lam, t_round, ch.uplink, ch.downlink, sp)
+    sca = sca_round_resources(a, lam, 1e9, t_round, ch.uplink, ch.downlink, sp)
+    assert ana.feasible
+    assert ana.energy <= sca.energy * 1.10  # decomposition is exact per client
+
+
+# ---------------- pruning-ratio LP (P3) ----------------
+
+def test_lp_zero_when_unconstrained(env):
+    sp, ch, c, _ = env
+    s = c.rounds_S + 1
+    a = np.ones((s, N))
+    p = 0.3 * np.ones((s, N))
+    f = 300e6 * np.ones((s, N))
+    lam, info = solve_pruning_ratios(a, p, f, 1e9, 1e9, ch.uplink,
+                                     ch.downlink, sp, c)
+    assert info["status"] == "optimal"
+    np.testing.assert_allclose(lam, 0.0, atol=1e-8)
+
+
+def test_lp_prunes_exactly_to_feasibility(env):
+    sp, ch, c, _ = env
+    s = c.rounds_S + 1
+    a = np.ones((s, N))
+    p = 0.3 * np.ones((s, N))
+    f = 300e6 * np.ones((s, N))
+    e_free = total_energy(a, np.zeros((s, N)), p, f, ch.uplink, ch.downlink, sp)
+    e0 = 0.8 * e_free
+    lam, info = solve_pruning_ratios(a, p, f, e0, 1e9, ch.uplink,
+                                     ch.downlink, sp, c)
+    assert info["status"] == "optimal"
+    assert (lam <= sp.lambda_max + 1e-9).all() and (lam >= -1e-9).all()
+    e_after = total_energy(a, lam, p, f, ch.uplink, ch.downlink, sp)
+    assert e_after <= e0 * (1 + 1e-6)
+    assert lam.sum() > 0  # had to prune something
+
+
+# ---------------- client selection (P5) ----------------
+
+def test_exact_selection_beats_or_matches_paper_heuristic(env):
+    sp, ch, c, phi = env
+    s = c.rounds_S + 1
+    lam = 0.2 * np.ones((s, N))
+    t0 = s * 3.0 * max(min_client_delay(i, 0.2, ch.uplink, ch.downlink, sp)
+                       for i in range(N))
+    a_ex, info_ex = solve_selection(lam, phi, c, 1e9, t0, ch.uplink,
+                                    ch.downlink, sp, method="exact")
+    a_pp, info_pp = solve_selection(lam, phi, c, 1e9, t0, ch.uplink,
+                                    ch.downlink, sp, method="paper")
+    assert info_ex["objective"] <= info_pp["objective"] + 1e-9
+    assert a_ex.shape == (s, N)
+    assert set(np.unique(a_ex)).issubset({0.0, 1.0})
+
+
+def test_selection_prefers_low_phi(env):
+    sp, ch, c, _ = env
+    s = c.rounds_S + 1
+    phi = np.array([0.1, 0.1, 8.0, 9.0, 10.0, 11.0])
+    lam = np.zeros((s, N))
+    t0 = s * 3.0 * max(min_client_delay(i, 0.0, ch.uplink, ch.downlink, sp)
+                       for i in range(N))
+    a, _ = solve_selection(lam, phi, c, 1e9, t0, ch.uplink, ch.downlink, sp)
+    # low-phi clients selected at least as often as high-phi ones
+    counts = a.sum(axis=0)
+    assert counts[0] >= counts[-1]
+    assert a.sum() >= s  # at least one client every round
+
+
+# ---------------- Algorithm 1 ----------------
+
+def test_ao_produces_feasible_nonincreasing_schedule(env):
+    sp, ch, c, phi = env
+    t0 = (c.rounds_S + 1) * 3.0 * max(
+        min_client_delay(i, 0.0, ch.uplink, ch.downlink, sp) for i in range(N))
+    sched = solve_p1(phi, 50.0, t0, ch.uplink, ch.downlink, sp, c,
+                     AOConfig(outer_iters=3))
+    assert sched.feasible
+    assert sched.energy <= 50.0 * (1 + 1e-4)
+    assert sched.delay <= t0 * (1 + 1e-4)
+    # theta consistency
+    assert sched.theta == pytest.approx(theta(sched.a, sched.lam, phi, c))
+    # incumbent is the best feasible iterate
+    feas = [h["theta"] for h in sched.history if h["feasible"]]
+    assert sched.theta == pytest.approx(min(feas))
+
+
+def test_ao_tight_energy_forces_pruning_or_fewer_clients(env):
+    sp, ch, c, phi = env
+    t0 = (c.rounds_S + 1) * 3.0 * max(
+        min_client_delay(i, 0.0, ch.uplink, ch.downlink, sp) for i in range(N))
+    loose = solve_p1(phi, 1e9, t0, ch.uplink, ch.downlink, sp, c,
+                     AOConfig(outer_iters=2))
+    tight = solve_p1(phi, 0.3, t0, ch.uplink, ch.downlink, sp, c,
+                     AOConfig(outer_iters=2))
+    assert tight.energy <= 0.3 * (1 + 1e-4)
+    # under the tight budget the system uses more pruning or fewer clients
+    assert (tight.lam.sum() >= loose.lam.sum() - 1e-9) or \
+        (tight.a.sum() <= loose.a.sum())

@@ -1,0 +1,104 @@
+"""Wireless substrate: rates/delay/energy (eqs. 8-15)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.wireless import (
+    SystemParams, ChannelModel, uplink_rate, downlink_rate,
+    computation_delay, communication_delay, round_delay, total_delay,
+    computation_energy, upload_energy, round_energy, total_energy,
+)
+
+N = 5
+
+
+@pytest.fixture
+def sp():
+    return SystemParams.table1(N, dataset="mnist")
+
+
+@pytest.fixture
+def ch():
+    return ChannelModel(N, seed=1)
+
+
+def test_shannon_rate_formula(sp, ch):
+    p = 0.1 * np.ones(N)
+    r = uplink_rate(p, ch.uplink, sp)
+    manual = sp.bandwidth * np.log2(1 + p * ch.uplink / (sp.bandwidth * sp.noise_psd))
+    np.testing.assert_allclose(r, manual)
+    assert (r > 0).all()
+
+
+def test_rate_monotone_in_power(sp, ch):
+    r1 = uplink_rate(0.05 * np.ones(N), ch.uplink, sp)
+    r2 = uplink_rate(0.5 * np.ones(N), ch.uplink, sp)
+    assert (r2 > r1).all()
+
+
+def test_pruning_reduces_delay_and_energy(sp, ch):
+    p = 0.2 * np.ones(N)
+    f = 200e6 * np.ones(N)
+    lam0, lam5 = np.zeros(N), 0.5 * np.ones(N)
+    assert (computation_delay(lam5, f, sp) < computation_delay(lam0, f, sp)).all()
+    assert (computation_energy(lam5, f, sp) < computation_energy(lam0, f, sp)).all()
+    d0 = communication_delay(lam0, p, ch.uplink, ch.downlink, sp)
+    d5 = communication_delay(lam5, p, ch.uplink, ch.downlink, sp)
+    assert (d5 < d0).all()
+    assert (upload_energy(lam5, p, ch.uplink, sp)
+            < upload_energy(lam0, p, ch.uplink, sp)).all()
+
+
+def test_round_delay_is_straggler_max(sp, ch):
+    a = np.array([1, 1, 0, 0, 0.0])
+    lam = np.zeros(N)
+    p = 0.2 * np.ones(N)
+    f = 100e6 * np.ones(N)
+    per = computation_delay(lam, f, sp) + communication_delay(
+        lam, p, ch.uplink, ch.downlink, sp)
+    assert round_delay(a, lam, p, f, ch.uplink, ch.downlink, sp) == \
+        pytest.approx(max(per[0], per[1]))
+
+
+def test_totals_accumulate_over_rounds(sp, ch):
+    s = 4
+    a = np.ones((s, N))
+    lam = np.zeros((s, N))
+    p = 0.2 * np.ones((s, N))
+    f = 100e6 * np.ones((s, N))
+    t1 = total_delay(a[:1], lam[:1], p[:1], f[:1], ch.uplink, ch.downlink, sp)
+    ts = total_delay(a, lam, p, f, ch.uplink, ch.downlink, sp)
+    assert ts == pytest.approx(s * t1, rel=1e-9)
+    e1 = total_energy(a[:1], lam[:1], p[:1], f[:1], ch.uplink, ch.downlink, sp)
+    es = total_energy(a, lam, p, f, ch.uplink, ch.downlink, sp)
+    assert es == pytest.approx(s * e1, rel=1e-9)
+
+
+def test_unselected_clients_cost_nothing_but_broadcast(sp, ch):
+    a = np.zeros(N)
+    lam = np.zeros(N)
+    p = 0.2 * np.ones(N)
+    f = 100e6 * np.ones(N)
+    e = round_energy(a, lam, p, f, ch.uplink, ch.downlink, sp)
+    from repro.wireless.comm import broadcast_energy
+    assert e == pytest.approx(broadcast_energy(ch.downlink, sp))
+
+
+def test_rayleigh_gain_mean_close_to_path_loss():
+    from repro.wireless.channel import rayleigh_gains
+    g = rayleigh_gains(200_000, path_loss=1e-5,
+                       rng=np.random.default_rng(0))
+    assert np.mean(g) == pytest.approx(1e-5, rel=0.02)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(0.01, 0.5), st.floats(0.0, 0.7), st.floats(1e7, 5e8))
+def test_energy_delay_positive_property(power, lam, freq):
+    sp = SystemParams.table1(3, dataset="mnist")
+    ch = ChannelModel(3, seed=0)
+    p = power * np.ones(3)
+    la = lam * np.ones(3)
+    f = freq * np.ones(3)
+    a = np.ones(3)
+    assert round_delay(a, la, p, f, ch.uplink, ch.downlink, sp) > 0
+    assert round_energy(a, la, p, f, ch.uplink, ch.downlink, sp) > 0
