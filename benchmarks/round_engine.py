@@ -1,0 +1,247 @@
+"""Round-engine benchmark: reference per-client loop vs packed device engine.
+
+Times one full FedSGD round (selection -> importance -> threshold -> masks ->
+client gradients -> aggregate -> update) for both `FederatedTrainer` backends
+across client counts and model sizes, and checks that the two backends
+produce numerically equivalent trajectories (the packed engine is bit-exact
+on fp32 models, so the test-loss gap at round 10 must be ~0).
+
+    PYTHONPATH=src python -m benchmarks.round_engine [--smoke | --full]
+                                                     [--out BENCH_round_engine.json]
+
+Output: ``name,us_per_call,derived`` CSV rows per config plus a JSON report
+(default: BENCH_round_engine.json in the repo root) with per-round timings,
+speedups, and the trajectory-equivalence check.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core import ClientData, FederatedTrainer
+from repro.core.optimizer_ao import Schedule
+from repro.data import make_dataset, partition_by_dirichlet
+from repro.models import (lenet_init, lenet_apply, resnet_init, resnet_apply,
+                          make_loss_fn, make_eval_fn)
+from repro.wireless import ChannelModel, SystemParams
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _lenet_apply_seed(params, x):
+    """The seed repo's LeNet forward (generic lax.conv + reduce_window),
+    kept verbatim as the pre-PR baseline: the packed engine's end-to-end
+    win is measured against this (host thresholds + this model), while the
+    `speedup` column compares same-model reference vs packed."""
+    import jax.lax as lax
+
+    def conv(x, w):
+        return lax.conv_general_dilated(
+            x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+    def pool(x):
+        return lax.reduce_window(x, -jnp.inf, lax.max, (1, 2, 2, 1),
+                                 (1, 2, 2, 1), "VALID")
+
+    x = jax.nn.relu(conv(x, params["conv1"]))
+    x = pool(x)
+    x = jax.nn.relu(conv(x, params["conv2"]))
+    x = pool(x)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"] + params["b1"])
+    x = jax.nn.relu(x @ params["fc2"] + params["b2"])
+    return x @ params["fc3"] + params["b3"]
+
+
+MODELS = {
+    "lenet": ("synthetic-mnist",
+              lambda key: lenet_init(key, in_channels=1), lenet_apply),
+    "lenet-seed": ("synthetic-mnist",
+                   lambda key: lenet_init(key, in_channels=1),
+                   _lenet_apply_seed),
+    "resnet20": ("synthetic-cifar10",
+                 lambda key: resnet_init(key, depth=20, in_channels=3),
+                 resnet_apply),
+}
+
+
+def _all_on_schedule(n_rounds: int, n_clients: int, lam: float) -> Schedule:
+    a = np.ones((n_rounds, n_clients))
+    return Schedule(a=a, lam=lam * a, power=0.3 * a, freq=3e8 * a,
+                    theta=0.0, energy=0.0, delay=0.0, feasible=True)
+
+
+def _build(model: str, n_clients: int, *, n_train: int, batch: int,
+           seed: int = 0):
+    dataset, init_fn, apply_fn = MODELS[model]
+    ds = make_dataset(dataset, n_train=n_train, n_test=max(200, n_train // 4),
+                      seed=seed)
+    parts = partition_by_dirichlet(ds.y_train, n_clients, sigma=1.0,
+                                   rng=np.random.default_rng(seed))
+    clients = [ClientData(ds.x_train[i], ds.y_train[i]) for i in parts]
+    loss_fn = make_loss_fn(apply_fn)
+    eval_fn = make_eval_fn(apply_fn, ds.x_test, ds.y_test)
+    params = init_fn(jax.random.key(seed))
+    return params, loss_fn, eval_fn, clients
+
+
+def _make_trainer(backend, model, n_clients, *, batch, n_train, seed=0):
+    params, loss_fn, _, clients = _build(model, n_clients, n_train=n_train,
+                                         batch=batch, seed=seed)
+    return FederatedTrainer(loss_fn, params, clients, eta=0.1,
+                            batch_size=batch, seed=seed, backend=backend)
+
+
+def _timed_round(tr, lam, n_clients):
+    lam_s = np.full(n_clients, lam)
+    t0 = time.perf_counter()
+    tr._round(list(range(n_clients)), lam_s)
+    jax.block_until_ready(tr._w if tr.backend == "packed"
+                          else jax.tree_util.tree_leaves(tr.params))
+    return time.perf_counter() - t0
+
+
+def time_backends(model: str, n_clients: int, *, rounds: int, warmup: int,
+                  lam: float, batch: int, n_train: int, seed: int = 0,
+                  backends=("reference", "packed"), ref_model=None) -> dict:
+    """Median wall seconds per round for each backend.
+
+    Rounds are timed individually and *interleaved* across backends so
+    machine load spikes hit both paths equally; the median discards the
+    remaining outliers. `ref_model` overrides the model for the reference
+    backend (used for the seed-baseline comparison)."""
+    trainers = {}
+    for b in backends:
+        m = ref_model if (b == "reference" and ref_model) else model
+        trainers[b] = _make_trainer(b, m, n_clients, batch=batch,
+                                    n_train=n_train, seed=seed)
+    times = {b: [] for b in backends}
+    for _ in range(warmup):
+        for b in backends:
+            _timed_round(trainers[b], lam, n_clients)
+    for _ in range(rounds):
+        for b in backends:
+            times[b].append(_timed_round(trainers[b], lam, n_clients))
+    return {b: float(np.median(ts)) for b, ts in times.items()}
+
+
+def check_equivalence(model: str, n_clients: int, *, rounds: int, lam: float,
+                      batch: int, n_train: int, seed: int = 0) -> dict:
+    """Same-seed trajectories for both backends; test loss at final round."""
+    out = {}
+    for backend in ("reference", "packed"):
+        params, loss_fn, eval_fn, clients = _build(
+            model, n_clients, n_train=n_train, batch=batch, seed=seed)
+        tr = FederatedTrainer(loss_fn, params, clients, eta=0.1,
+                              batch_size=batch, seed=seed, backend=backend)
+        sp = SystemParams.table1(n_clients)
+        ch = ChannelModel(n_clients, seed=seed)
+        hist = tr.run(_all_on_schedule(rounds, n_clients, lam), sp, ch.uplink,
+                      ch.downlink, eval_fn=eval_fn, eval_every=rounds - 1)
+        out[backend] = [m.test_loss for m in hist if m.test_loss is not None][-1]
+    out["abs_diff"] = abs(out["reference"] - out["packed"])
+    out["rounds"] = rounds
+    return out
+
+
+def run_benchmark(*, configs, equiv_cfg, rounds: int, warmup: int,
+                  lam: float = 0.3, n_train: int = 2000,
+                  out_path: str | None = None) -> dict:
+    results = []
+    for model, n_clients, batch in configs:
+        per = time_backends(model, n_clients, rounds=rounds, warmup=warmup,
+                            lam=lam, batch=batch, n_train=n_train)
+        speedup = per["reference"] / per["packed"]
+        results.append({
+            "model": model, "n_clients": n_clients, "rounds": rounds,
+            "lam": lam, "batch": batch,
+            "reference_s_per_round": per["reference"],
+            "packed_s_per_round": per["packed"],
+            "speedup": speedup,
+        })
+        print(csv_row(f"round_engine/{model}/c{n_clients}/b{batch}/packed",
+                      per["packed"] * 1e6, f"speedup={speedup:.2f}x"))
+
+    model, n_clients, batch, eq_rounds = equiv_cfg
+    equivalence = check_equivalence(model, n_clients, rounds=eq_rounds,
+                                    lam=lam, batch=batch, n_train=n_train)
+    print(csv_row(f"round_engine/equivalence/{model}/c{n_clients}", 0.0,
+                  f"test_loss_abs_diff={equivalence['abs_diff']:.2e}"))
+
+    # End-to-end win of this PR at the acceptance config: the pre-PR
+    # baseline (seed LeNet forward + host-threshold reference loop) vs the
+    # packed engine on the optimized model.
+    seed_comparison = None
+    if any(r["model"] == "lenet" for r in results):
+        per = time_backends("lenet", n_clients, rounds=rounds, warmup=warmup,
+                            lam=lam, batch=batch, n_train=n_train,
+                            ref_model="lenet-seed")
+        seed_comparison = {
+            "n_clients": n_clients, "batch": batch,
+            "seed_reference_s_per_round": per["reference"],
+            "packed_s_per_round": per["packed"],
+            "speedup": per["reference"] / per["packed"],
+        }
+        print(csv_row(f"round_engine/vs_seed/lenet/c{n_clients}",
+                      per["reference"] * 1e6,
+                      f"speedup={seed_comparison['speedup']:.2f}x"))
+
+    report = {"backend": jax.default_backend(), "results": results,
+              "equivalence": equivalence,
+              "seed_comparison": seed_comparison}
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {out_path}")
+    return report
+
+
+def main(fast: bool = True, smoke: bool | None = None,
+         out_path: str | None = None) -> dict:
+    """`fast` is the benchmarks/run.py suite profile; --smoke is stricter
+    still (single tiny config, <60 s on one CPU core)."""
+    if smoke is None:
+        smoke = False
+    if out_path is None:
+        # smoke gets its own file so a CI smoke run never clobbers the
+        # committed full-profile report
+        name = "BENCH_round_engine_smoke.json" if smoke \
+            else "BENCH_round_engine.json"
+        out_path = os.path.join(_ROOT, name)
+    if smoke:
+        return run_benchmark(configs=[("lenet", 4, 32)],
+                             equiv_cfg=("lenet", 4, 32, 6),
+                             rounds=5, warmup=2, n_train=800,
+                             out_path=out_path)
+    if fast:
+        return run_benchmark(configs=[("lenet", 2, 32), ("lenet", 5, 32),
+                                      ("lenet", 10, 32), ("lenet", 10, 8),
+                                      ("lenet", 20, 8)],
+                             equiv_cfg=("lenet", 10, 32, 10),
+                             rounds=10, warmup=2, n_train=2000,
+                             out_path=out_path)
+    return run_benchmark(configs=[("lenet", 2, 32), ("lenet", 5, 32),
+                                  ("lenet", 10, 32), ("lenet", 10, 8),
+                                  ("lenet", 20, 8), ("lenet", 50, 8),
+                                  ("resnet20", 5, 32), ("resnet20", 10, 32)],
+                         equiv_cfg=("lenet", 10, 32, 10),
+                         rounds=15, warmup=3, n_train=4000,
+                         out_path=out_path)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny single-config run (<60 s on CPU)")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sweep incl. resnet20")
+    ap.add_argument("--out", default=None, help="JSON report path")
+    args = ap.parse_args()
+    main(fast=not args.full, smoke=args.smoke, out_path=args.out)

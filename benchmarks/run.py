@@ -18,14 +18,16 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma list: fig3,fig4,fig5,fig6,fig7,fig8,roofline")
+                    help="comma list: fig3,...,fig8,theory,selection,"
+                         "roofline,round_engine")
     args = ap.parse_args()
     fast = not args.full
 
     from benchmarks import (fig3_generalization_statement, fig4_accuracy_vs_sigma,
                             fig5_loss_vs_time, fig6_loss_vs_energy,
                             fig7_accuracy_vs_delay, fig8_accuracy_vs_energy,
-                            roofline, selection_ablation, theory_validation)
+                            roofline, round_engine, selection_ablation,
+                            theory_validation)
     suite = {
         "fig3": fig3_generalization_statement.main,
         "fig4": fig4_accuracy_vs_sigma.main,
@@ -36,6 +38,7 @@ def main() -> None:
         "theory": theory_validation.main,
         "selection": selection_ablation.main,
         "roofline": roofline.main,
+        "round_engine": round_engine.main,
     }
     only = set(args.only.split(",")) if args.only else set(suite)
     failures = []

@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Test/CI entrypoint: install declared deps (best effort — offline containers
+# fall back to tests/_hypothesis_stub.py via tests/conftest.py), then run the
+# tier-1 suite.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! python -c "import hypothesis" >/dev/null 2>&1; then
+    python -m pip install -q -r requirements.txt 2>/dev/null \
+        || echo "pip install unavailable (offline?); using vendored hypothesis shim"
+fi
+
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"

@@ -24,6 +24,8 @@ from repro.core.pruning import (
     pruning_distortion,
 )
 from repro.core.optimizer_ao import AOConfig, Schedule, solve_p1
+from repro.core.packing import ParamPack
+from repro.core.round_engine import RoundEngine, kth_smallest_threshold
 from repro.core.federated import ClientData, FederatedTrainer, RoundMetrics
 
 __all__ = [
@@ -34,5 +36,6 @@ __all__ = [
     "PruneSpec", "taylor_importance", "exact_importance", "build_masks",
     "apply_masks", "global_threshold", "actual_ratio", "pruning_distortion",
     "AOConfig", "Schedule", "solve_p1",
+    "ParamPack", "RoundEngine", "kth_smallest_threshold",
     "ClientData", "FederatedTrainer", "RoundMetrics",
 ]

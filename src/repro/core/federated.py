@@ -13,6 +13,22 @@ Per round s:
 The engine is model-agnostic: it needs only `loss_fn(params, x, y) -> scalar`.
 Time/energy bookkeeping uses the wireless substrate with the schedule's
 per-round (a, lambda, p, f).
+
+Two execution backends (DESIGN.md §5):
+
+  * ``backend="packed"`` (default) — the device-resident round engine
+    (core/round_engine.py): parameters and the global gradient live in one
+    packed [R, 128] buffer across rounds; threshold, masks, per-client
+    gradients, aggregation, and the FedSGD step run in a single jitted
+    dispatch per round with fused Pallas kernels. No host-side threshold
+    computation (`np.partition`/`np.concatenate` over parameters) and no
+    device->host parameter transfers inside the round loop.
+  * ``backend="reference"`` — the original per-client Python loop (kept as
+    the numerical oracle). With the XLA kernel path — what
+    ``kernel_impl="auto"`` resolves to everywhere except TPU — the packed
+    path reproduces it bit-for-bit on fp32 models (tests/test_packing.py);
+    the TPU Pallas path may differ by 1 ulp per update (FMA contraction in
+    the fused aggregate kernel, see kernels/ops.packed_fedsgd_update).
 """
 from __future__ import annotations
 
@@ -26,6 +42,8 @@ import numpy as np
 
 from repro.core import pruning
 from repro.core.optimizer_ao import Schedule
+from repro.core.packing import ParamPack
+from repro.core.round_engine import RoundEngine
 from repro.wireless.comm import SystemParams, round_delay, round_energy
 
 PyTree = Any
@@ -70,16 +88,72 @@ class FederatedTrainer:
         batch_size: int,
         seed: int = 0,
         prune_spec: pruning.PruneSpec = pruning.PruneSpec(),
+        backend: str = "packed",
+        client_axis: str = "auto",
+        kernel_impl: str = "auto",
     ):
+        if backend not in ("packed", "reference"):
+            raise ValueError(f"unknown backend {backend!r}")
         self.loss_fn = loss_fn
-        self.params = params
         self.clients = list(clients)
         self.eta = float(eta)
         self.batch_size = int(batch_size)
         self.rng = np.random.default_rng(seed)
         self.prune_spec = prune_spec
-        self.global_grad: PyTree = jax.tree.map(jnp.zeros_like, params)
+        self.backend = backend
         self._grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+        if backend == "packed":
+            self.pack = ParamPack.build(params, prune_spec)
+            # the trainer owns the packed buffers and reassigns them every
+            # round, so donation is safe here
+            self.engine = RoundEngine(loss_fn, self.pack, eta=self.eta,
+                                      client_axis=client_axis,
+                                      kernel_impl=kernel_impl, donate=True)
+            self._w, self._v = self.engine.init_buffers(params)
+            # pytree views of the packed buffers, memoized on buffer
+            # identity so repeated property reads (eval_fn, the ragged
+            # fallback's client_update loop) don't rebuild the unpack graph
+            self._w_view = self._v_view = None
+        else:
+            self.pack = self.engine = None
+            self._params = params
+            self._global_grad: PyTree = jax.tree.map(jnp.zeros_like, params)
+
+    # Params / global gradient are stored packed on the packed backend; the
+    # properties give both backends (and external callers) the same pytree
+    # view. Writes pack straight back into the device-resident buffers.
+
+    @property
+    def params(self) -> PyTree:
+        if self.backend == "packed":
+            if self._w_view is None or self._w_view[0] is not self._w:
+                self._w_view = (self._w, self.pack.unpack(self._w))
+            return self._w_view[1]
+        return self._params
+
+    @params.setter
+    def params(self, tree: PyTree) -> None:
+        if self.backend == "packed":
+            self._w = self.pack.pack(tree)
+            self._w_view = None
+        else:
+            self._params = tree
+
+    @property
+    def global_grad(self) -> PyTree:
+        if self.backend == "packed":
+            if self._v_view is None or self._v_view[0] is not self._v:
+                self._v_view = (self._v, self.pack.unpack(self._v))
+            return self._v_view[1]
+        return self._global_grad
+
+    @global_grad.setter
+    def global_grad(self, tree: PyTree) -> None:
+        if self.backend == "packed":
+            self._v = self.pack.pack(tree)
+            self._v_view = None
+        else:
+            self._global_grad = tree
 
     # -- round primitives ---------------------------------------------------
 
@@ -89,7 +163,8 @@ class FederatedTrainer:
         return jnp.asarray(client.x[idx]), jnp.asarray(client.y[idx])
 
     def client_update(
-        self, n: int, lam: float
+        self, n: int, lam: float,
+        batch: tuple[jnp.ndarray, jnp.ndarray] | None = None,
     ) -> tuple[PyTree, PyTree, float]:
         """Steps 2-3 for client n: returns (masked gradient, mask, loss)."""
         if lam > 0.0:
@@ -99,13 +174,18 @@ class FederatedTrainer:
             masks = jax.tree.map(
                 lambda w: jnp.ones_like(w, dtype=jnp.float32), self.params)
         pruned = pruning.apply_masks(self.params, masks)
-        x, y = self._sample_batch(self.clients[n])
+        x, y = batch if batch is not None else self._sample_batch(self.clients[n])
         loss, grads = self._grad_fn(pruned, x, y)
         grads = pruning.apply_masks(grads, masks)  # pruned coords not uploaded
         return grads, masks, float(loss)
 
     def server_step(self, grads: list[PyTree]) -> None:
-        """Eqs. (6)-(7): average selected gradients, FedSGD update."""
+        """Eqs. (6)-(7): average selected gradients, FedSGD update.
+
+        Deliberately eager: each op runs as its own dispatch, so eta*g is
+        rounded to fp32 before the subtraction. The packed engine blocks
+        FMA contraction of the same pair inside its fused graph, which is
+        what makes the two backends bit-identical (see round_engine)."""
         if not grads:
             return
         inv = 1.0 / len(grads)
@@ -116,6 +196,33 @@ class FederatedTrainer:
         self.global_grad = g
         self.params = jax.tree.map(
             lambda w, gg: w - self.eta * gg.astype(w.dtype), self.params, g)
+
+    def _reference_round(self, selected: list[int], lam_s: np.ndarray,
+                         batches: list) -> list[float]:
+        """Original per-client loop: steps 2-4 with host-side thresholds."""
+        grads, losses = [], []
+        for n, batch in zip(selected, batches):
+            g, _, loss = self.client_update(n, float(lam_s[n]), batch=batch)
+            grads.append(g)
+            losses.append(loss)
+        self.server_step(grads)
+        return losses
+
+    def _round(self, selected: list[int], lam_s: np.ndarray) -> list[float]:
+        """Steps 2-4 for one round; batches are drawn once, in selected
+        order, so both backends consume the identical RNG sequence."""
+        batches = [self._sample_batch(self.clients[n]) for n in selected]
+        stackable = len({b[0].shape for b in batches}) <= 1
+        if self.backend != "packed" or not stackable:
+            # Ragged batches (a client smaller than the batch size) cannot be
+            # stacked for the engine; fall back to the per-client loop.
+            return self._reference_round(selected, lam_s, batches)
+        lam_sel = np.asarray([lam_s[n] for n in selected], np.float64)
+        xs = jnp.stack([b[0] for b in batches])
+        ys = jnp.stack([b[1] for b in batches])
+        self._w, self._v, losses, _, _ = self.engine.round_step(
+            self._w, self._v, xs, ys, lam_sel)
+        return [float(l) for l in np.asarray(losses)]
 
     # -- full run -----------------------------------------------------------
 
@@ -139,12 +246,7 @@ class FederatedTrainer:
             a_s, lam_s = schedule.a[s], schedule.lam[s]
             p_s, f_s = schedule.power[s], schedule.freq[s]
             selected = [int(i) for i in np.flatnonzero(a_s > 0)]
-            grads, losses = [], []
-            for n in selected:
-                g, _, loss = self.client_update(n, float(lam_s[n]))
-                grads.append(g)
-                losses.append(loss)
-            self.server_step(grads)
+            losses = self._round(selected, lam_s) if selected else []
             d = round_delay(a_s, lam_s, p_s, f_s, h_up, h_down, sp)
             e = round_energy(a_s, lam_s, p_s, f_s, h_up, h_down, sp)
             cum_t += d

@@ -1,0 +1,120 @@
+"""Packed parameter buffers for the device-resident round engine.
+
+`ParamPack` flattens a model pytree once into a single padded ``[R, 128]``
+fp32 buffer (lane-width aligned for the Pallas VPU kernels — DESIGN.md §5),
+recording per-leaf offsets/shapes/dtypes so the pytree can be reconstructed
+exactly. Importance, thresholding, masking, gradient aggregation, and the
+FedSGD update then operate on one contiguous buffer with a handful of fused
+kernel launches instead of one Python-level loop iteration per leaf.
+
+Packing is a pure layout transform:
+
+  * ``pack`` casts every leaf to fp32 and concatenates raveled leaves in
+    tree-flatten order; the tail is zero padded up to a multiple of
+    ``LANES * ROW_BLOCK`` so the buffer tiles cleanly.
+  * ``unpack`` slices each leaf back out and casts to its original dtype.
+    fp32/bf16/fp16 (and int32 below 2**24) round-trip exactly; the engine
+    computes in fp32 regardless of the storage dtype.
+  * ``prunable_mask`` is a {0,1} fp32 buffer marking coordinates that belong
+    to prunable leaves (per `PruneSpec`); padding coordinates are 0.
+
+Both ``pack`` and ``unpack`` are jittable and differentiable, so gradients
+can be taken directly with respect to the packed buffer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pruning import PruneSpec
+
+PyTree = Any
+
+LANES = 128
+# Rows are padded to a multiple of this so packed kernels run with a fixed,
+# reasonably large block (grid = rows / ROW_BLOCK) instead of degenerate
+# blocks on awkward row counts.
+ROW_BLOCK = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamPack:
+    """Static layout of a pytree inside a padded ``[rows, LANES]`` buffer."""
+
+    treedef: Any
+    paths: tuple[str, ...]
+    shapes: tuple[tuple[int, ...], ...]
+    dtypes: tuple[Any, ...]
+    offsets: tuple[int, ...]
+    sizes: tuple[int, ...]
+    n_total: int          # real (unpadded) coordinate count
+    rows: int             # padded row count; buffer is [rows, LANES]
+    prunable_leaf: tuple[bool, ...]
+    n_prunable: int       # prunable coordinate count (threshold denominator)
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def build(cls, params: PyTree, spec: PruneSpec = PruneSpec(),
+              *, row_block: int = ROW_BLOCK) -> "ParamPack":
+        flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+        paths = tuple(jax.tree_util.keystr(kp) for kp, _ in flat)
+        leaves = [leaf for _, leaf in flat]
+        shapes = tuple(tuple(l.shape) for l in leaves)
+        dtypes = tuple(jnp.asarray(l).dtype for l in leaves)
+        sizes = tuple(int(np.prod(s)) if s else 1 for s in shapes)
+        offsets = tuple(int(o) for o in np.cumsum((0,) + sizes)[:-1])
+        n_total = int(sum(sizes))
+        rows = max(1, -(-n_total // LANES))           # ceil div
+        rows = -(-rows // row_block) * row_block      # round up to block
+        prunable_leaf = tuple(bool(spec.prunable(p)) for p in paths)
+        n_prunable = int(sum(s for s, pr in zip(sizes, prunable_leaf) if pr))
+        return cls(treedef=treedef, paths=paths, shapes=shapes, dtypes=dtypes,
+                   offsets=offsets, sizes=sizes, n_total=n_total, rows=rows,
+                   prunable_leaf=prunable_leaf, n_prunable=n_prunable)
+
+    # -- derived constants --------------------------------------------------
+
+    @property
+    def n_padded(self) -> int:
+        return self.rows * LANES
+
+    def prunable_mask(self) -> np.ndarray:
+        """{0,1} fp32 [rows, LANES]: 1 on real coordinates of prunable leaves."""
+        m = np.zeros(self.n_padded, np.float32)
+        for off, size, pr in zip(self.offsets, self.sizes, self.prunable_leaf):
+            if pr:
+                m[off:off + size] = 1.0
+        return m.reshape(self.rows, LANES)
+
+    def valid_mask(self) -> np.ndarray:
+        """{0,1} fp32 [rows, LANES]: 1 on real (non-padding) coordinates."""
+        m = np.zeros(self.n_padded, np.float32)
+        m[:self.n_total] = 1.0
+        return m.reshape(self.rows, LANES)
+
+    # -- layout transforms (jittable, differentiable) -----------------------
+
+    def pack(self, tree: PyTree) -> jnp.ndarray:
+        leaves = jax.tree_util.tree_leaves(tree)
+        if len(leaves) != len(self.sizes):
+            raise ValueError(
+                f"tree has {len(leaves)} leaves, pack expects {len(self.sizes)}")
+        flat = jnp.concatenate(
+            [jnp.ravel(l).astype(jnp.float32) for l in leaves])
+        flat = jnp.pad(flat, (0, self.n_padded - self.n_total))
+        return flat.reshape(self.rows, LANES)
+
+    def unpack(self, buf: jnp.ndarray) -> PyTree:
+        flat = buf.reshape(-1)
+        leaves = [
+            jax.lax.dynamic_slice_in_dim(flat, off, size)
+            .reshape(shape).astype(dtype)
+            for off, size, shape, dtype in zip(
+                self.offsets, self.sizes, self.shapes, self.dtypes)
+        ]
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)

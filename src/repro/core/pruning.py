@@ -108,7 +108,6 @@ def build_masks(
 ) -> PyTree:
     """Binary {0,1} masks: 0 = pruned. Non-prunable leaves get all-ones."""
     thr = global_threshold(importance, lam, spec)
-    paths = {id(v): pth for pth, v in _flatten_with_paths(importance)}
 
     def leaf_mask(pth: str, q: jnp.ndarray) -> jnp.ndarray:
         if not spec.prunable(pth) or thr == -np.inf:

@@ -2,10 +2,14 @@
 
   flash_attention.py   — GQA flash attention (causal/SWA/softcap)
   decode_attention.py  — flash-decoding: one query vs a long KV cache
-  pruning_mask.py      — fused eq.-(4) importance + mask, fused pruned-SGD step
+  pruning_mask.py      — fused eq.-(4) importance + mask (per-tensor and
+                         batched per-client), fused pruned-SGD step, fused
+                         eq.-(6)/(7) gradient aggregate + FedSGD update
   ssd_chunk.py         — mamba2 SSD intra-chunk kernel
 
 Each has a pure-jnp oracle in ref.py and a jitted wrapper in ops.py; all are
-validated in interpret mode on CPU (tests/test_kernels.py) and target TPU
-VMEM/MXU tiling (DESIGN.md §3).
+validated in interpret mode on CPU (tests/test_kernels.py,
+tests/test_round_engine.py) and target TPU VMEM/MXU tiling. The pruning /
+aggregate kernels also have packed-buffer entry points consumed by the
+device-resident round engine (DESIGN.md §5).
 """

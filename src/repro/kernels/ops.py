@@ -58,13 +58,8 @@ def importance_and_mask(w: jnp.ndarray, v: jnp.ndarray, threshold):
     """Fused eq.-(4) importance + keep-mask for one tensor (any shape)."""
     wt, n = _to_tiles(w)
     vt, _ = _to_tiles(v)
-    r = wt.shape[0]
-    br = r
-    for cand in (256, 128, 64, 32, 16, 8, 4, 2, 1):
-        if r % cand == 0:
-            br = cand
-            break
-    q, m = _pm.importance_mask_2d(wt, vt, threshold, block_rows=br)
+    q, m = _pm.importance_mask_2d(wt, vt, threshold,
+                                  block_rows=_packed_block_rows(wt.shape[0]))
     return (_from_tiles(q, n, w.shape, jnp.float32),
             _from_tiles(m, n, w.shape, jnp.float32))
 
@@ -75,10 +70,119 @@ def masked_update(w: jnp.ndarray, g: jnp.ndarray, mask: jnp.ndarray, eta):
     wt, n = _to_tiles(w)
     gt, _ = _to_tiles(g)
     mt, _ = _to_tiles(mask)
-    r = wt.shape[0]
-    br = next(c for c in (256, 128, 64, 32, 16, 8, 4, 2, 1) if r % c == 0)
-    out = _pm.masked_update_2d(wt, gt, mt, eta, block_rows=br)
+    out = _pm.masked_update_2d(wt, gt, mt, eta,
+                               block_rows=_packed_block_rows(wt.shape[0]))
     return _from_tiles(out, n, w.shape, w.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Packed-buffer entry points (core/packing.py layout: [R, 128], R % block == 0)
+#
+# The packed round engine hands whole-model buffers straight to the kernels —
+# no per-leaf flatten/pad, one launch per model per operation. Each entry
+# point takes `impl`:
+#
+#   * "pallas" — the fused Pallas kernels (interpret mode off-TPU);
+#   * "xla"    — an op-for-op jnp mirror with the same reduction order
+#                (bit-identical results); faster on CPU, where interpret-mode
+#                Pallas adds per-launch emulation overhead;
+#   * "auto"   — pallas on TPU, xla elsewhere.
+# ---------------------------------------------------------------------------
+
+def _packed_block_rows(rows: int) -> int:
+    return next(c for c in (256, 128, 64, 32, 16, 8, 4, 2, 1) if rows % c == 0)
+
+
+def _resolve_impl(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl not in ("pallas", "xla"):
+        raise ValueError(f"unknown impl {impl!r}")
+    return impl
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def packed_importance_mask(w, v, prunable, threshold, *, impl="auto"):
+    """Shared-threshold path: one fused importance+mask pass for the whole
+    packed model (the single-tensor kernel, previously orphaned, applied to
+    the [R, 128] packed buffer). Protected/padding coordinates (prunable == 0)
+    are always kept. Returns (importance fp32, mask fp32), both [R, 128]."""
+    if _resolve_impl(impl) == "pallas":
+        q, keep = _pm.importance_mask_2d(
+            w, v, threshold, block_rows=_packed_block_rows(w.shape[0]))
+    else:
+        q = jnp.square(w.astype(jnp.float32) * v.astype(jnp.float32))
+        keep = (q >= threshold).astype(jnp.float32)
+    return q, jnp.where(prunable > 0, keep, 1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def packed_importance_masks(w, v, prunable, thresholds, *, impl="auto"):
+    """Per-client-threshold path: (importance [R,128], masks [C,R,128])."""
+    if _resolve_impl(impl) == "pallas":
+        return _pm.importance_mask_batched(
+            w, v, prunable, thresholds,
+            block_rows=_packed_block_rows(w.shape[0]))
+    q = jnp.square(w.astype(jnp.float32) * v.astype(jnp.float32))
+    keep = (q[None] >= thresholds[:, None, None]).astype(jnp.float32)
+    return q, jnp.where(prunable[None] > 0, keep, 1.0)
+
+
+def _rounded_product(eta, g):
+    """eta * g rounded to fp32 *before* any consumer sees it.
+
+    A plain `w - eta * g` inside a jitted graph is contracted by XLA:CPU
+    into an FMA, skipping the product's intermediate rounding and breaking
+    bit-parity with the eager reference update (two separate dispatches).
+    Neither `optimization_barrier` nor multi-use outputs survive fusion
+    duplication, but a while loop whose trip count the compiler cannot
+    prove to be 1 does: the product is materialized in the loop carry, so
+    the subtraction can only consume the rounded value. The bound is
+    derived from runtime data (1, or 2 on a NaN input — the body is
+    idempotent) precisely so it is not constant-foldable."""
+    n = jnp.int32(1) + jnp.isnan(g[0, 0]).astype(jnp.int32)
+
+    def body(carry):
+        i, _ = carry
+        return i + 1, eta * g
+
+    _, step = jax.lax.while_loop(lambda c: c[0] < n, body,
+                                 (jnp.int32(0), jnp.zeros_like(g)))
+    return step
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def packed_fedsgd_update(w, grads, eta, *, impl="auto"):
+    """Fused eqs. (6)-(7): average stacked masked gradients [C,R,128] and
+    apply the FedSGD step, returning (w', mean_grad, step).
+
+    The "xla" path reproduces the eager reference loop bit-for-bit (same
+    summation order, FMA-fenced update — see `_rounded_product`). The
+    "pallas" kernel keeps the update fully fused in one pass; on real TPU
+    hardware the contraction there may differ from the reference by 1 ulp."""
+    if _resolve_impl(impl) == "pallas":
+        return _pm.fedsgd_aggregate(
+            w, grads, eta, block_rows=_packed_block_rows(w.shape[0]))
+    g = grads[0].astype(jnp.float32)
+    for c in range(1, grads.shape[0]):       # same summation order as the
+        g = g + grads[c].astype(jnp.float32)  # kernel / reference trainer
+    g = g * (1.0 / grads.shape[0])
+    step = _rounded_product(eta, g)
+    return (w.astype(jnp.float32) - step).astype(w.dtype), g, step
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def packed_masked_update(w, g, mask, eta, *, impl="auto"):
+    """Fused (w - eta*g)*mask on a packed buffer (masked_update_2d, one
+    launch for the whole model). Not used by the round engine — the
+    FedSGD server update never masks w (see packed_fedsgd_update); this is
+    the packed form of the per-leaf `masked_update` for pruned-checkpoint
+    workflows (launch/train.py style)."""
+    if _resolve_impl(impl) == "pallas":
+        return _pm.masked_update_2d(
+            w, g, mask, eta, block_rows=_packed_block_rows(w.shape[0]))
+    return ((w.astype(jnp.float32) - eta * g.astype(jnp.float32))
+            * mask).astype(w.dtype)
 
 
 # ---------------------------------------------------------------------------

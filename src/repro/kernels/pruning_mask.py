@@ -1,6 +1,6 @@
 """Pallas kernels for the paper's pruning hot spot (eq. 4 over O(10^9) weights).
 
-Two fused kernels, both tiled [BLOCK_R, 128] (lane-width aligned for the VPU):
+Fused kernels, all tiled [BLOCK_R, 128] (lane-width aligned for the VPU):
 
   * importance_mask: Q = (w * v)^2 and keep-mask (Q >= threshold) in one pass
     — one read of (w, v), two writes; the unfused jnp version materializes Q
@@ -9,7 +9,17 @@ Two fused kernels, both tiled [BLOCK_R, 128] (lane-width aligned for the VPU):
     update (eq. 7) fused with mask application, saving one full parameter
     read+write per round.
 
-Inputs of arbitrary shape are flattened and padded to tiles by ops.py.
+  * importance_mask_batched: the packed-engine generalization of
+    importance_mask — one threshold per client plus a prunable-coordinate
+    mask, emitting every per-client keep-mask from a single read of (w, v).
+  * fedsgd_aggregate: eqs. (6)-(7) fused — sum the stacked per-client
+    gradients, average, and take the FedSGD step in one launch, replacing
+    the O(clients) `jax.tree.map` accumulation.
+
+Per-leaf inputs of arbitrary shape are flattened and padded to tiles by
+ops.py; the packed round engine (core/packing.py + core/round_engine.py)
+hands whole-model [R, 128] buffers to the batched/aggregate kernels directly
+— one launch per model instead of one per leaf (DESIGN.md §5).
 """
 from __future__ import annotations
 
@@ -53,6 +63,98 @@ def importance_mask_2d(w, v, threshold, *, block_rows: int = 256,
                    jax.ShapeDtypeStruct((r, c), jnp.float32)],
         interpret=interpret,
     )(w, v, thr)
+
+
+def _importance_mask_batched_kernel(w_ref, v_ref, pr_ref, thr_ref,
+                                    q_ref, m_ref):
+    w = w_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    pr = pr_ref[...] > 0
+    q = jnp.square(w * v)
+    q_ref[...] = q
+    for c in range(m_ref.shape[0]):          # static unroll over clients
+        keep = (q >= thr_ref[c]).astype(jnp.float32)
+        m_ref[c] = jnp.where(pr, keep, 1.0)
+
+
+def importance_mask_batched(w, v, prunable, thresholds, *,
+                            block_rows: int = 256,
+                            interpret: bool | None = None):
+    """Per-client masks from one read of the packed buffers.
+
+    w, v, prunable: [R, 128*k]; thresholds: [C] fp32 (one per client).
+    Returns (importance fp32 [R, 128*k], masks fp32 [C, R, 128*k]); mask is 1
+    wherever `prunable` is 0 (protected / padding coordinates are kept)."""
+    r, c = w.shape
+    n_clients = thresholds.shape[0]
+    if c % LANES:
+        raise ValueError(f"last dim must be a multiple of {LANES}")
+    br = min(block_rows, r)
+    if r % br:
+        raise ValueError(f"rows {r} must divide block {br}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    thr = thresholds.astype(jnp.float32)
+    spec = pl.BlockSpec((br, c), lambda i: (i, 0))
+    mspec = pl.BlockSpec((n_clients, br, c), lambda i: (0, i, 0))
+    return pl.pallas_call(
+        _importance_mask_batched_kernel,
+        grid=(r // br,),
+        in_specs=[spec, spec, spec,
+                  pl.BlockSpec(memory_space=pl.MemorySpace.ANY)],
+        out_specs=[spec, mspec],
+        out_shape=[jax.ShapeDtypeStruct((r, c), jnp.float32),
+                   jax.ShapeDtypeStruct((n_clients, r, c), jnp.float32)],
+        interpret=interpret,
+    )(w, v, prunable, thr)
+
+
+def _fedsgd_aggregate_kernel(w_ref, g_ref, eta_ref, o_ref, gm_ref, st_ref):
+    acc = g_ref[0].astype(jnp.float32)
+    for c in range(1, g_ref.shape[0]):       # static unroll: same summation
+        acc = acc + g_ref[c].astype(jnp.float32)   # order as the reference
+    g = acc * (1.0 / g_ref.shape[0])
+    gm_ref[...] = g
+    # The step eta*g is written to its own output: giving the multiply a
+    # second consumer stops the compiler from contracting it with the
+    # subtraction into an FMA, so the update rounds exactly like the eager
+    # reference loop (bit-for-bit reproducibility contract).
+    step = eta_ref[0] * g
+    st_ref[...] = step
+    o_ref[...] = (w_ref[...].astype(jnp.float32) - step).astype(o_ref.dtype)
+
+
+def fedsgd_aggregate(w, grads, eta, *, block_rows: int = 256,
+                     interpret: bool | None = None):
+    """Eqs. (6)-(7) fused on packed buffers.
+
+    w: [R, 128*k]; grads: [C, R, 128*k] stacked per-client (already masked)
+    gradients. Returns (updated w, mean gradient fp32, applied step
+    eta*mean fp32), all [R, 128*k], in one launch — the mean doubles as the
+    next round's broadcast v."""
+    r, c = w.shape
+    n_clients = grads.shape[0]
+    if c % LANES:
+        raise ValueError(f"last dim must be a multiple of {LANES}")
+    br = min(block_rows, r)
+    if r % br:
+        raise ValueError(f"rows {r} must divide block {br}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    eta_arr = jnp.asarray([eta], jnp.float32)
+    spec = pl.BlockSpec((br, c), lambda i: (i, 0))
+    gspec = pl.BlockSpec((n_clients, br, c), lambda i: (0, i, 0))
+    return pl.pallas_call(
+        _fedsgd_aggregate_kernel,
+        grid=(r // br,),
+        in_specs=[spec, gspec,
+                  pl.BlockSpec(memory_space=pl.MemorySpace.ANY)],
+        out_specs=[spec, spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((r, c), w.dtype),
+                   jax.ShapeDtypeStruct((r, c), jnp.float32),
+                   jax.ShapeDtypeStruct((r, c), jnp.float32)],
+        interpret=interpret,
+    )(w, grads, eta_arr)
 
 
 def _masked_update_kernel(w_ref, g_ref, m_ref, eta_ref, o_ref):

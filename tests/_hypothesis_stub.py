@@ -1,0 +1,147 @@
+"""Offline stand-in for the small `hypothesis` surface this suite uses.
+
+The real `hypothesis` package is preferred (see requirements.txt and
+scripts/test.sh); this shim exists so `python -m pytest` still collects and
+runs in containers without network access. It implements exactly what the
+tests import — `given`, `settings`, and `strategies.{integers, floats,
+sampled_from, lists}` — with deterministic draws:
+
+  * example 0 exercises every strategy's lower bound,
+  * example 1 exercises every upper bound,
+  * remaining examples are drawn from a per-test seeded RNG, so failures
+    reproduce across runs.
+
+No shrinking, health checks, or stateful testing.
+"""
+from __future__ import annotations
+
+import functools
+import sys
+import types
+import zlib
+
+import numpy as np
+
+__version__ = "0.0-stub"
+
+
+class HealthCheck:
+    """Placeholder attributes so `suppress_health_check=` doesn't explode."""
+
+    too_slow = data_too_large = filter_too_much = function_scoped_fixture = None
+    all = classmethod(lambda cls: [])
+
+
+class _Strategy:
+    def __init__(self, draw, edges=()):
+        self._draw = draw
+        self.edges = tuple(edges)
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+
+def _as_strategy_module():
+    mod = types.ModuleType("hypothesis.strategies")
+
+    def integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)),
+            (int(min_value), int(max_value)))
+
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        lo, hi = float(min_value), float(max_value)
+        return _Strategy(lambda rng: float(rng.uniform(lo, hi)), (lo, hi))
+
+    def sampled_from(elements):
+        elems = list(elements)
+        return _Strategy(
+            lambda rng: elems[int(rng.integers(len(elems)))],
+            (elems[0], elems[-1]))
+
+    def lists(elem, min_size=0, max_size=None):
+        hi = max_size if max_size is not None else min_size + 8
+        edges = ()
+        if elem.edges:
+            edges = ([elem.edges[0]] * max(min_size, 1),
+                     [elem.edges[-1]] * hi)
+
+        def draw(rng):
+            size = int(rng.integers(min_size, hi + 1))
+            return [elem.draw(rng) for _ in range(size)]
+
+        return _Strategy(draw, edges)
+
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(2)), (False, True))
+
+    def just(value):
+        return _Strategy(lambda rng: value, (value, value))
+
+    mod.integers = integers
+    mod.floats = floats
+    mod.sampled_from = sampled_from
+    mod.lists = lists
+    mod.booleans = booleans
+    mod.just = just
+    return mod
+
+
+strategies = _as_strategy_module()
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+def settings(max_examples=None, deadline=None, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples or _DEFAULT_MAX_EXAMPLES
+        return fn
+    return deco
+
+
+def given(*strats, **kw_strats):
+    if kw_strats:
+        raise NotImplementedError("stub `given` supports positional strategies")
+
+    def deco(fn):
+        # NOTE: no functools.wraps — it would expose `__wrapped__`, and pytest
+        # would then introspect the original signature and try to inject the
+        # strategy parameters as fixtures.
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = np.random.default_rng(
+                zlib.crc32(fn.__qualname__.encode()) & 0xFFFFFFFF)
+            for i in range(max(n, 1)):
+                if i == 0 and all(s.edges for s in strats):
+                    vals = [s.edges[0] for s in strats]
+                elif i == 1 and all(len(s.edges) > 1 for s in strats):
+                    vals = [s.edges[-1] for s in strats]
+                else:
+                    vals = [s.draw(rng) for s in strats]
+                try:
+                    fn(*args, *vals, **kwargs)
+                except Exception as exc:
+                    raise AssertionError(
+                        f"falsifying example (stub hypothesis): "
+                        f"{fn.__name__}({', '.join(map(repr, vals))})"
+                    ) from exc
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.__dict__.update(getattr(fn, "__dict__", {}))  # pytest marks
+        return wrapper
+    return deco
+
+
+def assume(condition):
+    """Best effort: the stub cannot retry a draw, so a failed assumption
+    simply skips the remaining assertions by raising nothing when true."""
+    return bool(condition)
+
+
+def install() -> None:
+    """Register this module as `hypothesis` in sys.modules."""
+    me = sys.modules[__name__]
+    sys.modules.setdefault("hypothesis", me)
+    sys.modules.setdefault("hypothesis.strategies", strategies)

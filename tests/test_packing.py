@@ -1,0 +1,199 @@
+"""ParamPack: exact round-trips, prunable layout, and packed-vs-reference
+bit-for-bit parity of the round engine on a small LeNet."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ClientData, FederatedTrainer, ParamPack, pruning
+from repro.core.optimizer_ao import Schedule
+from repro.core.round_engine import kth_smallest_threshold
+from repro.data import make_dataset, partition_by_dirichlet
+from repro.models import lenet_init, lenet_apply, make_loss_fn
+from repro.wireless import ChannelModel, SystemParams
+
+
+def _mixed_tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "embed_table": jnp.asarray(rng.normal(size=(7, 5)), jnp.float32),
+        "w_attn": jnp.asarray(rng.normal(size=(3, 5, 7)), jnp.bfloat16),
+        "bias": jnp.asarray(rng.normal(size=(11,)), jnp.float16),
+        "counts": jnp.asarray(rng.integers(-50, 50, size=(4,)), jnp.int32),
+        "scalar_scale": jnp.asarray(1.5, jnp.float32),
+        "blocks": [
+            {"w": jnp.asarray(rng.normal(size=(13,)), jnp.float32)},
+            {"w": jnp.asarray(rng.normal(size=(1, 1)), jnp.float32)},
+        ],
+    }
+
+
+def test_pack_unpack_round_trip_exact_mixed_dtypes():
+    tree = _mixed_tree()
+    pack = ParamPack.build(tree)
+    buf = pack.pack(tree)
+    assert buf.shape == (pack.rows, 128)
+    assert buf.dtype == jnp.float32
+    assert pack.rows % 256 == 0           # padded to the kernel row block
+    out = pack.unpack(buf)
+    flat_in, td_in = jax.tree_util.tree_flatten(tree)
+    flat_out, td_out = jax.tree_util.tree_flatten(out)
+    assert td_in == td_out
+    for a, b in zip(flat_in, flat_out):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        assert bool(jnp.all(a == b))
+
+
+def test_pack_pads_with_zeros_and_tracks_sizes():
+    tree = {"w": jnp.ones((3, 3), jnp.float32)}
+    pack = ParamPack.build(tree)
+    assert pack.n_total == 9
+    buf = np.asarray(pack.pack(tree))
+    assert buf.ravel()[:9].tolist() == [1.0] * 9
+    assert float(np.abs(buf.ravel()[9:]).sum()) == 0.0
+
+
+def test_prunable_mask_matches_prune_spec():
+    tree = _mixed_tree()
+    pack = ParamPack.build(tree)           # default PruneSpec
+    pm = np.asarray(pack.prunable_mask()).ravel()
+    for path, off, size, prunable in zip(pack.paths, pack.offsets,
+                                         pack.sizes, pack.prunable_leaf):
+        expect = pruning.default_prunable(path)
+        assert prunable == expect, path
+        assert (pm[off:off + size] == (1.0 if expect else 0.0)).all(), path
+    # padding coordinates are never prunable
+    assert (pm[pack.n_total:] == 0.0).all()
+    assert pack.n_prunable == int(pm.sum())
+    # embed/bias/scale protected; attention weights and plain 'w' prunable
+    by_path = dict(zip(pack.paths, pack.prunable_leaf))
+    assert not by_path["['embed_table']"]
+    assert not by_path["['bias']"]
+    assert by_path["['w_attn']"]
+
+
+def test_pack_is_differentiable():
+    tree = {"a": jnp.arange(4.0), "b": jnp.ones((2, 2))}
+    pack = ParamPack.build(tree)
+
+    def f(t):
+        return jnp.sum(pack.pack(t) ** 2)
+
+    g = jax.grad(f)(tree)
+    np.testing.assert_allclose(np.asarray(g["a"]), 2 * np.arange(4.0))
+    np.testing.assert_allclose(np.asarray(g["b"]), 2 * np.ones((2, 2)))
+
+
+@pytest.mark.parametrize("scale", [1.0, 10.0, 1e6])
+@pytest.mark.parametrize("lam", [0.0, 0.1, 0.37, 0.9])
+def test_device_threshold_matches_host_global_threshold(lam, scale):
+    """`scale` > 2 guards the bit-pattern binary search against int32
+    midpoint overflow (bit patterns >= 2^30 for values >= 2.0)."""
+    rng = np.random.default_rng(3)
+    imp = {"w1": jnp.asarray(scale * rng.random((33, 7)), jnp.float32),
+           "norm_scale": jnp.asarray(rng.random((16,)), jnp.float32),
+           "w2": jnp.asarray(scale * rng.random((257,)), jnp.float32)}
+    thr_host = pruning.global_threshold(imp, lam)
+    pack = ParamPack.build(imp)
+    q = pack.pack(imp)
+    k = int(np.floor(lam * pack.n_prunable))
+    thr_dev = kth_smallest_threshold(
+        q, jnp.asarray(pack.prunable_mask()), jnp.asarray(k, jnp.int32))
+    if thr_host == -np.inf:
+        assert float(thr_dev) == -np.inf
+    else:
+        assert np.float32(thr_host) == np.float32(thr_dev)
+
+
+# -- packed engine vs reference trainer, bit for bit ------------------------
+
+N = 3
+
+
+@pytest.fixture(scope="module")
+def small_env():
+    ds = make_dataset("synthetic-mnist", n_train=360, n_test=120, seed=0)
+    parts = partition_by_dirichlet(ds.y_train, N, sigma=1.0,
+                                   rng=np.random.default_rng(0))
+    clients = [ClientData(ds.x_train[i], ds.y_train[i]) for i in parts]
+    return clients, lenet_init(jax.random.key(0)), make_loss_fn(lenet_apply)
+
+
+def _sched(n_rounds, lam):
+    a = np.ones((n_rounds, N))
+    return Schedule(a=a, lam=np.asarray(lam) * a, power=0.3 * a, freq=3e8 * a,
+                    theta=0.0, energy=0.0, delay=0.0, feasible=True)
+
+
+def _run_pair(clients, params, loss_fn, sched, **packed_kw):
+    out = {}
+    for backend in ("reference", "packed"):
+        tr = FederatedTrainer(loss_fn, params, clients, eta=0.1,
+                              batch_size=16, seed=0, backend=backend,
+                              **(packed_kw if backend == "packed" else {}))
+        sp = SystemParams.table1(N)
+        ch = ChannelModel(N)
+        hist = tr.run(sched, sp, ch.uplink, ch.downlink)
+        out[backend] = (tr, hist)
+    return out
+
+
+def _assert_bitwise(tr_ref, tr_pk):
+    for a, b in zip(jax.tree_util.tree_leaves(tr_ref.params),
+                    jax.tree_util.tree_leaves(tr_pk.params)):
+        assert bool(jnp.all(a == b))
+    for a, b in zip(jax.tree_util.tree_leaves(tr_ref.global_grad),
+                    jax.tree_util.tree_leaves(tr_pk.global_grad)):
+        assert bool(jnp.all(a == b))
+
+
+@pytest.mark.parametrize("lam", [0.0, 0.4])
+def test_packed_round_matches_reference_bitwise(small_env, lam):
+    clients, params, loss_fn = small_env
+    out = _run_pair(clients, params, loss_fn, _sched(4, lam))
+    (tr_ref, h_ref), (tr_pk, h_pk) = out["reference"], out["packed"]
+    for mr, mp in zip(h_ref, h_pk):
+        assert mr.train_loss == mp.train_loss          # exact, per round
+    _assert_bitwise(tr_ref, tr_pk)
+
+
+def test_packed_per_client_lambda_matches_reference_bitwise(small_env):
+    clients, params, loss_fn = small_env
+    lam_row = np.asarray([0.0, 0.25, 0.6])
+    sched = _sched(3, 1.0)
+    sched.lam[:] = lam_row[None, :]
+    out = _run_pair(clients, params, loss_fn, sched)
+    _assert_bitwise(out["reference"][0], out["packed"][0])
+
+
+def test_packed_same_threshold_and_selected_coordinates(small_env):
+    """One warm round, then compare the device threshold and keep-mask
+    against pruning.global_threshold / build_masks exactly."""
+    clients, params, loss_fn = small_env
+    tr = FederatedTrainer(loss_fn, params, clients, eta=0.1, batch_size=16,
+                          seed=0, backend="packed")
+    sp = SystemParams.table1(N)
+    ch = ChannelModel(N)
+    tr.run(_sched(1, 0.0), sp, ch.uplink, ch.downlink)   # make v nonzero
+    lam = 0.5
+    imp = pruning.taylor_importance(tr.params, tr.global_grad)
+    thr_host = pruning.global_threshold(imp, lam, tr.prune_spec)
+    masks_host = pruning.build_masks(imp, lam, tr.prune_spec)
+
+    from repro.kernels import ops
+    k = int(np.floor(lam * tr.pack.n_prunable))
+    thr_dev = kth_smallest_threshold(
+        (tr._w * tr._v) ** 2, tr.engine.prunable, jnp.asarray(k, jnp.int32))
+    assert np.float32(thr_host) == np.float32(thr_dev)
+    _, mask_dev = ops.packed_importance_mask(
+        tr._w, tr._v, tr.engine.prunable, thr_dev)
+    valid = jnp.asarray(tr.pack.valid_mask())
+    mask_host_packed = tr.pack.pack(masks_host)
+    assert bool(jnp.all(mask_dev * valid == mask_host_packed * valid))
+
+
+def test_unroll_axis_also_bitwise(small_env):
+    clients, params, loss_fn = small_env
+    out = _run_pair(clients, params, loss_fn, _sched(3, 0.3),
+                    client_axis="unroll")
+    _assert_bitwise(out["reference"][0], out["packed"][0])

@@ -1,0 +1,155 @@
+"""Device-resident round engine: API, kernel impl parity, client-axis
+strategies, and the perf harness itself."""
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ClientData, FederatedTrainer, ParamPack, RoundEngine
+from repro.data import make_dataset, partition_by_dirichlet
+from repro.kernels import ops
+from repro.models import lenet_init, lenet_apply, make_loss_fn
+
+
+@pytest.fixture(scope="module")
+def env():
+    ds = make_dataset("synthetic-mnist", n_train=300, n_test=100, seed=1)
+    parts = partition_by_dirichlet(ds.y_train, 3, sigma=1.0,
+                                   rng=np.random.default_rng(1))
+    clients = [ClientData(ds.x_train[i], ds.y_train[i]) for i in parts]
+    params = lenet_init(jax.random.key(1))
+    loss_fn = make_loss_fn(lenet_apply)
+    return clients, params, loss_fn
+
+
+def _batches(clients, batch, seed=0):
+    rng = np.random.default_rng(seed)
+    xs, ys = [], []
+    for c in clients:
+        idx = rng.choice(len(c), size=batch, replace=len(c) < batch)
+        xs.append(c.x[idx])
+        ys.append(c.y[idx])
+    return jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ys))
+
+
+def test_round_step_shapes_and_state(env):
+    clients, params, loss_fn = env
+    pack = ParamPack.build(params)
+    eng = RoundEngine(loss_fn, pack, eta=0.1)
+    w, v = eng.init_buffers(params)
+    xs, ys = _batches(clients, 8)
+    w2, v2, losses, thr, step = eng.round_step(w, v, xs, ys, np.full(3, 0.2))
+    assert w2.shape == w.shape and v2.shape == w.shape
+    assert losses.shape == (3,)
+    assert np.isfinite(np.asarray(losses)).all()
+    assert bool(jnp.any(w2 != w))          # the step moved the params
+    # v starts at zero -> importance all zero -> update = plain FedSGD mean
+    assert float(jnp.max(jnp.abs(v2))) > 0.0
+
+
+def test_round_step_rejects_bad_lambda(env):
+    clients, params, loss_fn = env
+    pack = ParamPack.build(params)
+    eng = RoundEngine(loss_fn, pack, eta=0.1)
+    w, v = eng.init_buffers(params)
+    xs, ys = _batches(clients, 4)
+    with pytest.raises(ValueError):
+        eng.round_step(w, v, xs, ys, np.full(3, 1.0))
+    with pytest.raises(ValueError):
+        eng.round_step(w, v, xs, ys, np.full(3, -0.1))
+
+
+def test_kernel_impls_bitwise_equal(env):
+    """interpret-mode Pallas kernels and the XLA mirror agree exactly."""
+    _, params, loss_fn = env
+    pack = ParamPack.build(params)
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(pack.rows, 128)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(pack.rows, 128)), jnp.float32)
+    pr = jnp.asarray(pack.prunable_mask())
+    thr = jnp.float32(0.2)
+    q_p, m_p = ops.packed_importance_mask(w, v, pr, thr, impl="pallas")
+    q_x, m_x = ops.packed_importance_mask(w, v, pr, thr, impl="xla")
+    assert bool(jnp.all(q_p == q_x)) and bool(jnp.all(m_p == m_x))
+
+    thrs = jnp.asarray([0.0, 0.2, 1.5], jnp.float32)
+    qb_p, mb_p = ops.packed_importance_masks(w, v, pr, thrs, impl="pallas")
+    qb_x, mb_x = ops.packed_importance_masks(w, v, pr, thrs, impl="xla")
+    assert bool(jnp.all(qb_p == qb_x)) and bool(jnp.all(mb_p == mb_x))
+    # batched kernel row c == single-threshold kernel at thresholds[c]
+    for c, t in enumerate(np.asarray(thrs)):
+        _, m_one = ops.packed_importance_mask(w, v, pr, jnp.float32(t),
+                                              impl="pallas")
+        assert bool(jnp.all(mb_p[c] == m_one))
+
+    grads = jnp.asarray(rng.normal(size=(4, pack.rows, 128)), jnp.float32)
+    w2_p, g_p, s_p = ops.packed_fedsgd_update(w, grads, 0.05, impl="pallas")
+    w2_x, g_x, s_x = ops.packed_fedsgd_update(w, grads, 0.05, impl="xla")
+    assert bool(jnp.all(g_p == g_x))
+    assert bool(jnp.all(s_p == s_x))
+    # the fused kernel may FMA-contract the final w - eta*g (skipping the
+    # product rounding the fenced xla path performs): 1-ulp tolerance
+    np.testing.assert_allclose(np.asarray(w2_p), np.asarray(w2_x),
+                               rtol=1e-6, atol=1e-8)
+
+    mask = (jnp.asarray(rng.random((pack.rows, 128))) > 0.5).astype(jnp.float32)
+    u_p = ops.packed_masked_update(w, g_p, mask, 0.05, impl="pallas")
+    u_x = ops.packed_masked_update(w, g_p, mask, 0.05, impl="xla")
+    assert bool(jnp.all(u_p == u_x))
+
+
+@pytest.mark.parametrize("axis", ["unroll", "scan", "vmap"])
+def test_client_axis_strategies_agree(env, axis):
+    clients, params, loss_fn = env
+    pack = ParamPack.build(params)
+    ref_eng = RoundEngine(loss_fn, pack, eta=0.1, client_axis="unroll")
+    eng = RoundEngine(loss_fn, pack, eta=0.1, client_axis=axis)
+    w, v = ref_eng.init_buffers(params)
+    xs, ys = _batches(clients, 8)
+    # warm v so pruning is active
+    w1, v1, _, _, _ = ref_eng.round_step(w, v, xs, ys, np.full(3, 0.0))
+    ref = ref_eng.round_step(w1, v1, xs, ys, np.full(3, 0.3))
+    got = eng.round_step(w1, v1, xs, ys, np.full(3, 0.3))
+    if axis == "vmap":
+        # vmap batches the backward pass; ulp-level reassociation allowed
+        np.testing.assert_allclose(np.asarray(got[0]), np.asarray(ref[0]),
+                                   rtol=0, atol=1e-6)
+    else:
+        assert bool(jnp.all(got[0] == ref[0]))
+        assert bool(jnp.all(got[1] == ref[1]))
+
+
+def test_trainer_packed_state_roundtrip(env):
+    """params / global_grad setters write through to the packed buffers."""
+    clients, params, loss_fn = env
+    tr = FederatedTrainer(loss_fn, params, clients, eta=0.1, batch_size=8,
+                          seed=0, backend="packed")
+    p0 = tr.params
+    doubled = jax.tree.map(lambda x: 2.0 * x, p0)
+    tr.params = doubled
+    for a, b in zip(jax.tree_util.tree_leaves(tr.params),
+                    jax.tree_util.tree_leaves(doubled)):
+        assert bool(jnp.all(a == b))
+
+
+# -- the perf harness itself -------------------------------------------------
+
+def test_benchmark_harness_smoke(tmp_path):
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks import round_engine as bench
+
+    out = tmp_path / "BENCH_round_engine.json"
+    report = bench.run_benchmark(configs=[("lenet", 2, 8)],
+                                 equiv_cfg=("lenet", 2, 8, 3),
+                                 rounds=2, warmup=1, n_train=240,
+                                 out_path=str(out))
+    assert out.exists()
+    (r,) = report["results"]
+    assert r["reference_s_per_round"] > 0
+    assert r["packed_s_per_round"] > 0
+    assert r["speedup"] > 0
+    assert report["equivalence"]["abs_diff"] <= 1e-5
