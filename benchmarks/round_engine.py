@@ -8,6 +8,22 @@ on fp32 models, so the test-loss gap at round 10 must be ~0).
 
     PYTHONPATH=src python -m benchmarks.round_engine [--smoke | --full]
                                                      [--out BENCH_round_engine.json]
+                                                     [--compare PREV.json]
+
+Regression awareness: every report records its environment (`meta`:
+n_devices, client_axis, bucket sizes, git rev), and ``--compare PREV.json``
+prints per-config deltas against a previous report. A config is flagged
+REGRESSED when its packed-vs-reference *speedup* dropped by more than 10%
+— speedup is measured interleaved within one run, so shared-box throttling
+cancels out of it; absolute per-round time deltas are printed for
+information only. The bench trajectory thus accumulates across PRs instead
+of being overwritten blind.
+
+Sharded scaling: the full/fast profiles also measure the mesh-parallel
+round (client axis shard_mapped over forced host devices) by re-running a
+probe of this module under ``XLA_FLAGS=--xla_force_host_platform_device_
+count=N`` subprocesses and comparing per-round time and the round-10 test
+loss across device counts.
 
 Output: ``name,us_per_call,derived`` CSV rows per config plus a JSON report
 (default: BENCH_round_engine.json in the repo root) with per-round timings,
@@ -18,6 +34,8 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -33,6 +51,19 @@ from repro.models import (lenet_init, lenet_apply, resnet_init, resnet_apply,
 from repro.wireless import ChannelModel, SystemParams
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _git_rev() -> str:
+    try:
+        rev = subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=_ROOT,
+            text=True, stderr=subprocess.DEVNULL).strip()
+        dirty = subprocess.run(
+            ["git", "diff", "--quiet", "HEAD"], cwd=_ROOT,
+            stderr=subprocess.DEVNULL).returncode != 0
+        return rev + ("-dirty" if dirty else "")
+    except Exception:
+        return "unknown"
 
 
 def _lenet_apply_seed(params, x):
@@ -129,7 +160,13 @@ def time_backends(model: str, n_clients: int, *, rounds: int, warmup: int,
     for _ in range(rounds):
         for b in backends:
             times[b].append(_timed_round(trainers[b], lam, n_clients))
-    return {b: float(np.median(ts)) for b, ts in times.items()}
+    per = {b: float(np.median(ts)) for b, ts in times.items()}
+    if "packed" in trainers and trainers["packed"].engine is not None:
+        eng = trainers["packed"].engine
+        per["_packed_info"] = {"bucket_sizes": sorted(eng.buckets_used),
+                               "n_traces": eng.n_traces,
+                               "shards": eng.shards}
+    return per
 
 
 def check_equivalence(model: str, n_clients: int, *, rounds: int, lam: float,
@@ -165,6 +202,7 @@ def run_benchmark(*, configs, equiv_cfg, rounds: int, warmup: int,
             "reference_s_per_round": per["reference"],
             "packed_s_per_round": per["packed"],
             "speedup": speedup,
+            **per.get("_packed_info", {}),
         })
         print(csv_row(f"round_engine/{model}/c{n_clients}/b{batch}/packed",
                       per["packed"] * 1e6, f"speedup={speedup:.2f}x"))
@@ -193,7 +231,14 @@ def run_benchmark(*, configs, equiv_cfg, rounds: int, warmup: int,
                       per["reference"] * 1e6,
                       f"speedup={seed_comparison['speedup']:.2f}x"))
 
-    report = {"backend": jax.default_backend(), "results": results,
+    report = {"backend": jax.default_backend(),
+              "meta": {"n_devices": len(jax.devices()),
+                       "client_axis": "auto",
+                       "git_rev": _git_rev(),
+                       "bucket_sizes": sorted({b for r in results
+                                               for b in r.get("bucket_sizes",
+                                                              [])})},
+              "results": results,
               "equivalence": equivalence,
               "seed_comparison": seed_comparison}
     if out_path:
@@ -203,12 +248,193 @@ def run_benchmark(*, configs, equiv_cfg, rounds: int, warmup: int,
     return report
 
 
+# -- cross-PR regression tracking --------------------------------------------
+
+
+def compare_reports(prev: dict, cur: dict, *, threshold: float = 0.10) -> list[dict]:
+    """Per-config deltas vs a previous BENCH_round_engine.json report.
+
+    A config regresses when its packed-vs-reference *speedup* dropped by
+    more than `threshold` (fraction). Speedup is the load-invariant metric:
+    both backends are timed interleaved in the same run, so shared-box /
+    cgroup throttling cancels out of the ratio, whereas absolute per-round
+    times (reported as `time_delta_pct` for information) swing with
+    whatever else the host is doing. Configs present in only one report are
+    skipped; the bench trajectory accumulates across PRs instead of
+    resetting."""
+    prev_by = {(r["model"], r["n_clients"], r["batch"]): r
+               for r in prev.get("results", [])}
+    rows = []
+    for r in cur.get("results", []):
+        p = prev_by.get((r["model"], r["n_clients"], r["batch"]))
+        if p is None:
+            continue
+        t_delta = r["packed_s_per_round"] / p["packed_s_per_round"] - 1.0
+        s_delta = r["speedup"] / p["speedup"] - 1.0
+        rows.append({
+            "config": f"{r['model']}/c{r['n_clients']}/b{r['batch']}",
+            "prev_packed_s_per_round": p["packed_s_per_round"],
+            "packed_s_per_round": r["packed_s_per_round"],
+            "time_delta_pct": 100.0 * t_delta,
+            "prev_speedup": p["speedup"],
+            "speedup": r["speedup"],
+            "speedup_delta_pct": 100.0 * s_delta,
+            "regressed": bool(s_delta < -threshold),
+        })
+    return rows
+
+
+def print_compare(rows: list[dict], prev_meta: dict | None = None) -> None:
+    rev = (prev_meta or {}).get("git_rev", "?")
+    for r in rows:
+        tag = "REGRESSED" if r["regressed"] else "ok"
+        print(csv_row(f"round_engine/compare/{r['config']}",
+                      r["packed_s_per_round"] * 1e6,
+                      f"speedup {r['prev_speedup']:.2f}x->{r['speedup']:.2f}x "
+                      f"({r['speedup_delta_pct']:+.1f}%) "
+                      f"dt={r['time_delta_pct']:+.1f}% vs {rev} {tag}"))
+
+
+# -- sharded scaling: forced host-device counts via subprocess probes --------
+#
+# The host platform device count is fixed at jax init, so each point of the
+# scaling curve runs in its own subprocess with XLA_FLAGS set; the child
+# prints one sentinel-prefixed JSON line that the parent collects.
+
+_PROBE_SENTINEL = "ROUND_ENGINE_PROBE_RESULT "
+
+
+def probe_main(cfg: dict) -> None:
+    """Child-process body: run a short trajectory, then time packed rounds,
+    on whatever device count XLA_FLAGS forced. One build + one engine: the
+    trajectory doubles as compile warmup (per-round cost is
+    state-independent), so the subprocess pays dataset synthesis and XLA
+    compilation once."""
+    model, n_clients, batch = cfg["model"], cfg["n_clients"], cfg["batch"]
+    lam, n_train = cfg["lam"], cfg["n_train"]
+    params, loss_fn, eval_fn, clients = _build(
+        model, n_clients, n_train=n_train, batch=batch)
+    tr = FederatedTrainer(loss_fn, params, clients, eta=0.1,
+                          batch_size=batch, seed=0, backend="packed")
+
+    traj_rounds = cfg["traj_rounds"]
+    test_loss = None
+    if traj_rounds:
+        sp = SystemParams.table1(n_clients)
+        ch = ChannelModel(n_clients, seed=0)
+        hist = tr.run(_all_on_schedule(traj_rounds, n_clients, lam), sp,
+                      ch.uplink, ch.downlink, eval_fn=eval_fn,
+                      eval_every=max(1, traj_rounds - 1))
+        test_loss = float(
+            [m.test_loss for m in hist if m.test_loss is not None][-1])
+
+    for _ in range(cfg["warmup"]):
+        _timed_round(tr, lam, n_clients)
+    ts = [_timed_round(tr, lam, n_clients) for _ in range(cfg["rounds"])]
+    print(_PROBE_SENTINEL + json.dumps({
+        "n_devices": len(jax.devices()),
+        "shards": tr.engine.shards,
+        "bucket_sizes": sorted(tr.engine.buckets_used),
+        "s_per_round": float(np.median(ts)),
+        "test_loss_final": test_loss,
+        "traj_rounds": traj_rounds,
+    }))
+
+
+def _run_probe(cfg: dict, n_devices: int, py_path: str) -> dict:
+    env = dict(os.environ)
+    # the probe measures *host-platform* scaling: pin JAX to CPU so an
+    # accelerator host doesn't silently run every device count on the same
+    # GPU/TPU and publish a flat curve as a scaling result, and drop any
+    # inherited shard-count override for the same reason
+    env["JAX_PLATFORMS"] = "cpu"
+    env.pop("REPRO_ROUND_SHARDS", None)
+    # appended AFTER any inherited flags: XLA takes the last occurrence of a
+    # duplicated flag, so a force-count already in the caller's environment
+    # must not override the probe's
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count="
+                        f"{n_devices}").strip()
+    env["PYTHONPATH"] = py_path
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.round_engine",
+         "--probe", json.dumps(cfg)],
+        capture_output=True, text=True, env=env, cwd=_ROOT, timeout=1800)
+    lines = [l for l in out.stdout.splitlines()
+             if l.startswith(_PROBE_SENTINEL)]
+    if out.returncode != 0 or not lines:
+        raise RuntimeError(f"sharded probe at {n_devices} devices failed:\n"
+                           f"{out.stdout}\n{out.stderr}")
+    res = json.loads(lines[-1][len(_PROBE_SENTINEL):])
+    if res["n_devices"] != n_devices or res["shards"] != n_devices:
+        raise RuntimeError(
+            f"probe asked for {n_devices} host devices but ran with "
+            f"{res['n_devices']} devices / {res['shards']} shards — "
+            "force-count or shard override not honored")
+    return res
+
+
+def sharded_scaling(*, model: str = "lenet", n_clients: int = 20,
+                    batch: int = 8, lam: float = 0.3, n_train: int = 2000,
+                    rounds: int = 8, warmup: int = 2, traj_rounds: int = 10,
+                    device_counts=(1, 2, 4), repeats: int = 3) -> dict:
+    """Per-round time vs forced host-device count, via one subprocess per
+    (device count, repeat). Repeats are *interleaved* across device counts
+    (d1, d2, d4, d1, d2, ...) so load spikes on a shared box hit every
+    count equally, and the per-count median discards the rest; the
+    trajectory check runs once per count."""
+    cfg = {"model": model, "n_clients": n_clients, "batch": batch,
+           "lam": lam, "n_train": n_train, "rounds": rounds,
+           "warmup": warmup, "traj_rounds": traj_rounds}
+    py_path = os.pathsep.join(
+        p for p in (os.path.join(_ROOT, "src"), _ROOT,
+                    os.environ.get("PYTHONPATH")) if p)
+    per: dict[str, dict] = {}
+    times: dict[str, list[float]] = {str(d): [] for d in device_counts}
+    for rep in range(repeats):
+        for d in device_counts:
+            probe_cfg = dict(cfg, traj_rounds=traj_rounds if rep == 0 else 0)
+            res = _run_probe(probe_cfg, d, py_path)
+            times[str(d)].append(res["s_per_round"])
+            if rep == 0:
+                per[str(d)] = res
+    for d in device_counts:
+        per[str(d)]["s_per_round"] = float(np.median(times[str(d)]))
+        per[str(d)]["s_per_round_samples"] = times[str(d)]
+        print(csv_row(f"round_engine/sharded/{model}/c{n_clients}/b{batch}"
+                      f"/d{d}", per[str(d)]["s_per_round"] * 1e6,
+                      f"shards={per[str(d)]['shards']}"))
+    base = per[str(device_counts[0])]
+    peak = per[str(max(device_counts))]
+    traj_diff = (abs(base["test_loss_final"] - peak["test_loss_final"])
+                 if traj_rounds else None)
+    result = {
+        "config": cfg,
+        "per_device_count": per,
+        "speedup_at_max_devices": base["s_per_round"] / peak["s_per_round"],
+        "traj_test_loss_abs_diff": traj_diff,
+    }
+    traj_note = (f"traj_dloss={traj_diff:.2e}" if traj_diff is not None
+                 else "traj_skipped")
+    print(csv_row(f"round_engine/sharded/{model}/c{n_clients}/b{batch}"
+                  f"/scaling", peak["s_per_round"] * 1e6,
+                  f"speedup_d{max(device_counts)}_vs_d{device_counts[0]}="
+                  f"{result['speedup_at_max_devices']:.2f}x {traj_note}"))
+    return result
+
+
 def main(fast: bool = True, smoke: bool | None = None,
-         out_path: str | None = None) -> dict:
+         out_path: str | None = None, compare: str | None = None,
+         sharded: bool | None = None) -> dict:
     """`fast` is the benchmarks/run.py suite profile; --smoke is stricter
-    still (single tiny config, <60 s on one CPU core)."""
+    still (single tiny config, <60 s on one CPU core). `compare` points at
+    a previous report for the cross-PR delta table; `sharded` adds the
+    forced-host-device scaling probe (default: on for fast/full profiles,
+    off for smoke)."""
     if smoke is None:
         smoke = False
+    if sharded is None:
+        sharded = not smoke
     if out_path is None:
         # smoke gets its own file so a CI smoke run never clobbers the
         # committed full-profile report
@@ -216,24 +442,54 @@ def main(fast: bool = True, smoke: bool | None = None,
             else "BENCH_round_engine.json"
         out_path = os.path.join(_ROOT, name)
     if smoke:
-        return run_benchmark(configs=[("lenet", 4, 32)],
-                             equiv_cfg=("lenet", 4, 32, 6),
-                             rounds=5, warmup=2, n_train=800,
-                             out_path=out_path)
-    if fast:
-        return run_benchmark(configs=[("lenet", 2, 32), ("lenet", 5, 32),
-                                      ("lenet", 10, 32), ("lenet", 10, 8),
-                                      ("lenet", 20, 8)],
-                             equiv_cfg=("lenet", 10, 32, 10),
-                             rounds=10, warmup=2, n_train=2000,
-                             out_path=out_path)
-    return run_benchmark(configs=[("lenet", 2, 32), ("lenet", 5, 32),
-                                  ("lenet", 10, 32), ("lenet", 10, 8),
-                                  ("lenet", 20, 8), ("lenet", 50, 8),
-                                  ("resnet20", 5, 32), ("resnet20", 10, 32)],
-                         equiv_cfg=("lenet", 10, 32, 10),
-                         rounds=15, warmup=3, n_train=4000,
-                         out_path=out_path)
+        # smoke times a config the committed fast-profile report also
+        # contains — same n_train too, so the client partition (and hence
+        # the ragged-vs-full batch path) matches the baseline and the
+        # --compare speedup delta compares like with like (time deltas are
+        # cross-profile and informational only)
+        report = run_benchmark(configs=[("lenet", 5, 32)],
+                               equiv_cfg=("lenet", 5, 32, 6),
+                               rounds=5, warmup=2, n_train=2000,
+                               out_path=out_path)
+    elif fast:
+        report = run_benchmark(configs=[("lenet", 2, 32), ("lenet", 5, 32),
+                                        ("lenet", 10, 32), ("lenet", 10, 8),
+                                        ("lenet", 20, 8)],
+                               equiv_cfg=("lenet", 10, 32, 10),
+                               rounds=10, warmup=2, n_train=2000,
+                               out_path=out_path)
+    else:
+        report = run_benchmark(configs=[("lenet", 2, 32), ("lenet", 5, 32),
+                                        ("lenet", 10, 32), ("lenet", 10, 8),
+                                        ("lenet", 20, 8), ("lenet", 50, 8),
+                                        ("resnet20", 5, 32),
+                                        ("resnet20", 10, 32)],
+                               equiv_cfg=("lenet", 10, 32, 10),
+                               rounds=15, warmup=3, n_train=4000,
+                               out_path=out_path)
+    if sharded:
+        report["sharded"] = sharded_scaling()
+    if compare:
+        if not os.path.exists(compare):
+            print(f"WARNING: --compare baseline {compare!r} not found; "
+                  "no regression check ran")
+        else:
+            with open(compare) as f:
+                prev = json.load(f)
+            rows = compare_reports(prev, report)
+            if not rows:
+                print(f"WARNING: no overlapping configs with {compare!r}; "
+                      "no regression check ran")
+            print_compare(rows, prev.get("meta"))
+            report["compare"] = {
+                "against": compare,
+                "prev_git_rev": prev.get("meta", {}).get("git_rev"),
+                "rows": rows}
+    if out_path and (sharded or compare):
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {out_path}")
+    return report
 
 
 if __name__ == "__main__":
@@ -243,5 +499,16 @@ if __name__ == "__main__":
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sweep incl. resnet20")
     ap.add_argument("--out", default=None, help="JSON report path")
+    ap.add_argument("--compare", default=None,
+                    help="previous BENCH_round_engine.json to diff against")
+    ap.add_argument("--sharded", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="run the sharded scaling probe (default: on unless "
+                         "--smoke; --no-sharded skips the ~12 subprocesses)")
+    ap.add_argument("--probe", default=None, help=argparse.SUPPRESS)
     args = ap.parse_args()
-    main(fast=not args.full, smoke=args.smoke, out_path=args.out)
+    if args.probe:
+        probe_main(json.loads(args.probe))
+    else:
+        main(fast=not args.full, smoke=args.smoke, out_path=args.out,
+             compare=args.compare, sharded=args.sharded)

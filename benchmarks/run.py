@@ -1,14 +1,18 @@
 """Benchmark entry point — one harness per paper table/figure + roofline.
 
-    PYTHONPATH=src python -m benchmarks.run [--full]
+    PYTHONPATH=src python -m benchmarks.run [--full | --smoke]
 
 Default is the fast profile (reduced sigmas/budgets/rounds) so the whole
 suite completes on one CPU core; --full reproduces the paper-scale sweeps.
-Output: ``name,us_per_call,derived`` CSV per harness.
+--smoke is the CI profile: only the round-engine harness, tiny config, with
+its report diffed against the committed BENCH_round_engine.json (the
+cross-PR compare mode) so perf regressions surface without running the
+whole suite. Output: ``name,us_per_call,derived`` CSV per harness.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 import traceback
@@ -17,11 +21,33 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: round_engine only, compared against the "
+                         "committed BENCH_round_engine.json")
     ap.add_argument("--only", default=None,
                     help="comma list: fig3,...,fig8,theory,selection,"
                          "roofline,round_engine")
     args = ap.parse_args()
     fast = not args.full
+
+    if args.smoke:
+        from benchmarks import round_engine
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        report = round_engine.main(
+            fast=True, smoke=True,
+            compare=os.path.join(root, "BENCH_round_engine.json"))
+        rows = report.get("compare", {}).get("rows", [])
+        if not rows:
+            # a gate that silently checked nothing must not stay green
+            print("FAILED: smoke compare produced no rows (baseline "
+                  "missing or no overlapping configs)")
+            sys.exit(1)
+        regressed = [r["config"] for r in rows if r["regressed"]]
+        if regressed:
+            print("FAILED: speedup regression vs committed report:",
+                  regressed)
+            sys.exit(1)
+        return
 
     from benchmarks import (fig3_generalization_statement, fig4_accuracy_vs_sigma,
                             fig5_loss_vs_time, fig6_loss_vs_energy,

@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Test/CI entrypoint: install declared deps (best effort — offline containers
 # fall back to tests/_hypothesis_stub.py via tests/conftest.py), then run the
-# tier-1 suite.
+# tier-1 suite, then the sharded smoke leg (round-engine tests on a forced
+# 4-device host mesh, exercising the shard_map client axis on CPU).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -10,4 +11,19 @@ if ! python -c "import hypothesis" >/dev/null 2>&1; then
         || echo "pip install unavailable (offline?); using vendored hypothesis shim"
 fi
 
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"
+# run both legs even if the first fails (the seed ships with known-failing
+# arch/serving suites); exit non-zero if either leg failed
+status=0
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@" \
+    || status=$?
+
+echo "== sharded smoke leg: round-engine tier-1 under 4 forced host devices =="
+# forced flag goes LAST: XLA takes the final occurrence of a duplicated
+# flag, so an inherited force-count must not override the leg's; an
+# inherited shard-count override would likewise silently unshard the leg
+XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=4" \
+    REPRO_ROUND_SHARDS= \
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m pytest -x -q tests/test_round_engine.py || status=$?
+
+exit $status

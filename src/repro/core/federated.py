@@ -29,6 +29,19 @@ Two execution backends (DESIGN.md §5):
     path reproduces it bit-for-bit on fp32 models (tests/test_packing.py);
     the TPU Pallas path may differ by 1 ulp per update (FMA contraction in
     the fused aggregate kernel, see kernels/ops.packed_fedsgd_update).
+
+Ragged clients (fewer samples than the batch size): when the loss provides
+a weighted form (`models.make_loss_fn` attaches one as ``loss.weighted``),
+*both* backends evaluate that client via the weighted mean
+``sum(sw*ce)/sum(sw)`` on a batch padded with zero-weight repeats — the
+plain mean over the real samples in exact arithmetic, but evaluated at the
+padded shape. This deliberately redefines the ragged-client oracle (the
+pre-PR-2 reference took a plain mean over the short ``[B']`` batch, which
+rounds differently because XLA reassociates reductions per shape): it is
+the unique form the eager loop and the fused engine can agree on
+bit-for-bit, so stragglers stay on the packed path (DESIGN.md §6). Without
+a weighted loss, ragged rounds keep the pre-PR-2 short-batch behavior via
+the reference fallback (`n_fallback_rounds` counts them).
 """
 from __future__ import annotations
 
@@ -91,6 +104,8 @@ class FederatedTrainer:
         backend: str = "packed",
         client_axis: str = "auto",
         kernel_impl: str = "auto",
+        weighted_loss_fn: Callable | None = None,
+        shards: int | None = None,
     ):
         if backend not in ("packed", "reference"):
             raise ValueError(f"unknown backend {backend!r}")
@@ -102,13 +117,27 @@ class FederatedTrainer:
         self.prune_spec = prune_spec
         self.backend = backend
         self._grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+        # Per-sample-weighted loss: lets ragged client batches (fewer
+        # samples than the batch size) be padded with zero-weight samples
+        # so they stay on the packed path. models.make_loss_fn attaches one
+        # as loss_fn.weighted; custom losses can pass weighted_loss_fn
+        # explicitly, otherwise ragged rounds fall back to the per-client
+        # reference loop exactly as before (n_fallback_rounds counts them).
+        self._weighted_loss = (weighted_loss_fn
+                               or getattr(loss_fn, "weighted", None))
+        self._wgrad_fn = (jax.jit(jax.value_and_grad(self._weighted_loss))
+                          if self._weighted_loss is not None else None)
+        self.n_fallback_rounds = 0
         if backend == "packed":
             self.pack = ParamPack.build(params, prune_spec)
             # the trainer owns the packed buffers and reassigns them every
             # round, so donation is safe here
             self.engine = RoundEngine(loss_fn, self.pack, eta=self.eta,
                                       client_axis=client_axis,
-                                      kernel_impl=kernel_impl, donate=True)
+                                      kernel_impl=kernel_impl, donate=True,
+                                      weighted_loss_fn=self._weighted_loss,
+                                      shards=shards,
+                                      max_clients=len(self.clients))
             self._w, self._v = self.engine.init_buffers(params)
             # pytree views of the packed buffers, memoized on buffer
             # identity so repeated property reads (eval_fn, the ragged
@@ -157,14 +186,33 @@ class FederatedTrainer:
 
     # -- round primitives ---------------------------------------------------
 
-    def _sample_batch(self, client: ClientData) -> tuple[jnp.ndarray, jnp.ndarray]:
+    def _sample_batch(
+        self, client: ClientData,
+    ) -> tuple[jnp.ndarray, jnp.ndarray, np.ndarray]:
+        """Draw one mini-batch: (x, y, sample_weights).
+
+        A client smaller than the batch size yields a short batch; when a
+        weighted loss is available the batch is padded back to batch_size
+        with repeated samples carrying weight 0, so every client's batch is
+        stackable and the round stays on the packed path. The RNG stream is
+        identical to the unpadded draw (one `choice` call either way)."""
         idx = self.rng.choice(len(client), size=min(self.batch_size, len(client)),
                               replace=len(client) < self.batch_size)
-        return jnp.asarray(client.x[idx]), jnp.asarray(client.y[idx])
+        x, y = client.x[idx], client.y[idx]
+        n = len(idx)
+        if n < self.batch_size and self._weighted_loss is not None:
+            pad = self.batch_size - n
+            x = np.concatenate([x, np.repeat(x[-1:], pad, axis=0)])
+            y = np.concatenate([y, np.repeat(y[-1:], pad, axis=0)])
+            sw = np.zeros(self.batch_size, np.float32)
+            sw[:n] = 1.0
+        else:
+            sw = np.ones(n, np.float32)
+        return jnp.asarray(x), jnp.asarray(y), sw
 
     def client_update(
         self, n: int, lam: float,
-        batch: tuple[jnp.ndarray, jnp.ndarray] | None = None,
+        batch: tuple | None = None,
     ) -> tuple[PyTree, PyTree, float]:
         """Steps 2-3 for client n: returns (masked gradient, mask, loss)."""
         if lam > 0.0:
@@ -174,8 +222,16 @@ class FederatedTrainer:
             masks = jax.tree.map(
                 lambda w: jnp.ones_like(w, dtype=jnp.float32), self.params)
         pruned = pruning.apply_masks(self.params, masks)
-        x, y = batch if batch is not None else self._sample_batch(self.clients[n])
-        loss, grads = self._grad_fn(pruned, x, y)
+        if batch is None:
+            batch = self._sample_batch(self.clients[n])
+        x, y, sw = batch if len(batch) == 3 else (*batch, None)
+        if sw is None or sw.all():
+            # full batch: the plain mean loss, byte-identical to the seed
+            loss, grads = self._grad_fn(pruned, x, y)
+        else:
+            # ragged client: the same weighted mean the packed engine
+            # computes, so the two backends stay bit-for-bit comparable
+            loss, grads = self._wgrad_fn(pruned, x, y, jnp.asarray(sw))
         grads = pruning.apply_masks(grads, masks)  # pruned coords not uploaded
         return grads, masks, float(loss)
 
@@ -208,21 +264,33 @@ class FederatedTrainer:
         self.server_step(grads)
         return losses
 
-    def _round(self, selected: list[int], lam_s: np.ndarray) -> list[float]:
+    def _round(self, selected: list[int], lam_s: np.ndarray):
         """Steps 2-4 for one round; batches are drawn once, in selected
-        order, so both backends consume the identical RNG sequence."""
+        order, so both backends consume the identical RNG sequence.
+
+        Returns the per-client losses *without* synchronizing: a device
+        array on the packed path (materialized lazily by `run`, so rounds
+        pipeline on accelerators), a list of floats on the reference path.
+        With a weighted loss every batch is padded to batch_size, so ragged
+        clients and round-to-round varying selection sizes all stay on the
+        packed path (the engine buckets the client axis); the reference
+        fallback only fires for custom losses without a weighted form."""
         batches = [self._sample_batch(self.clients[n]) for n in selected]
         stackable = len({b[0].shape for b in batches}) <= 1
         if self.backend != "packed" or not stackable:
-            # Ragged batches (a client smaller than the batch size) cannot be
-            # stacked for the engine; fall back to the per-client loop.
+            if self.backend == "packed":
+                self.n_fallback_rounds += 1
             return self._reference_round(selected, lam_s, batches)
         lam_sel = np.asarray([lam_s[n] for n in selected], np.float64)
         xs = jnp.stack([b[0] for b in batches])
         ys = jnp.stack([b[1] for b in batches])
+        sws = np.stack([b[2] for b in batches])
         self._w, self._v, losses, _, _ = self.engine.round_step(
-            self._w, self._v, xs, ys, lam_sel)
-        return [float(l) for l in np.asarray(losses)]
+            self._w, self._v, xs, ys, lam_sel,
+            # all-ones weights carry no information: skip the transfer and
+            # let the engine materialize them on device
+            sample_weights=None if sws.all() else sws)
+        return losses
 
     # -- full run -----------------------------------------------------------
 
@@ -238,32 +306,53 @@ class FederatedTrainer:
         stop_delay: float | None = None,
         stop_energy: float | None = None,
     ) -> list[RoundMetrics]:
-        """Execute the schedule. eval_fn(params) -> (test_loss, test_acc)."""
+        """Execute the schedule. eval_fn(params) -> (test_loss, test_acc).
+
+        Per-round train losses are kept as device arrays and materialized
+        lazily (at eval points and at the end of the run): the packed round
+        then never blocks on a device->host sync, so consecutive rounds
+        pipeline on accelerators instead of serializing on `float(loss)`.
+        """
         history: list[RoundMetrics] = []
+        # rounds whose train_loss is still an unmaterialized device array
+        pending: list[tuple[RoundMetrics, Any]] = []
+
+        def materialize():
+            for m, losses in pending:
+                if losses is not None:
+                    # float64 mean over the synced fp32 values — identical
+                    # to the old eager np.mean over a list of floats
+                    arr = np.asarray(losses, np.float64)
+                    m.train_loss = float(arr.mean()) if arr.size else float("nan")
+            pending.clear()
+
         cum_t = cum_e = 0.0
         n_rounds = schedule.a.shape[0]
         for s in range(n_rounds):
             a_s, lam_s = schedule.a[s], schedule.lam[s]
             p_s, f_s = schedule.power[s], schedule.freq[s]
             selected = [int(i) for i in np.flatnonzero(a_s > 0)]
-            losses = self._round(selected, lam_s) if selected else []
+            losses = self._round(selected, lam_s) if selected else None
             d = round_delay(a_s, lam_s, p_s, f_s, h_up, h_down, sp)
             e = round_energy(a_s, lam_s, p_s, f_s, h_up, h_down, sp)
             cum_t += d
             cum_e += e
             m = RoundMetrics(
                 round=s,
-                train_loss=float(np.mean(losses)) if losses else float("nan"),
+                train_loss=float("nan"),
                 selected=selected,
                 mean_lambda=float(lam_s[a_s > 0].mean()) if selected else 0.0,
                 delay=d, energy=e,
                 cumulative_delay=cum_t, cumulative_energy=cum_e,
             )
+            pending.append((m, losses))
             if eval_fn is not None and (s % eval_every == 0 or s == n_rounds - 1):
+                materialize()   # eval syncs anyway; drain the loss backlog
                 m.test_loss, m.test_accuracy = eval_fn(self.params)
             history.append(m)
             if stop_delay is not None and cum_t >= stop_delay:
                 break
             if stop_energy is not None and cum_e >= stop_energy:
                 break
+        materialize()
         return history

@@ -5,9 +5,9 @@ packed ``[R, 128]`` parameter buffer (core/packing.py):
 
   1. importance Q = (w * v)^2 (eq. 4) over the packed buffer;
   2. the global pruning threshold — the k-th smallest prunable importance,
-     k = floor(lambda * M_prunable) — via an on-device binary search over
-     fp32 bit patterns (`kth_smallest_threshold`; no sort, no host
-     `np.partition`, no device->host parameter transfer);
+     k = floor(lambda * M_prunable) — via an on-device exponent-histogram +
+     binary search over fp32 bit patterns (`kth_smallest_threshold`; no
+     sort, no host `np.partition`, no device->host parameter transfer);
   3. fused importance+keep-mask Pallas launch (kernels/pruning_mask.py) —
      one kernel for the whole model instead of one per leaf; when every
      selected client shares lambda the threshold and mask are computed once
@@ -17,29 +17,54 @@ packed ``[R, 128]`` parameter buffer (core/packing.py):
      stacked client batches — gradients are taken directly with respect to
      the packed buffer (unpacking is differentiable) and masked on device
      (pruned coordinates are never "uploaded");
-  5. fused aggregate+update Pallas launch: average the stacked gradients
-     (eq. 6) and take the FedSGD step (eq. 7) in one pass; the mean gradient
-     doubles as the next round's broadcast v.
+  5. fused weighted aggregate+update launch: combine the stacked gradients
+     with per-client 0/1 weights (eq. 6) and take the FedSGD step (eq. 7)
+     in one pass; the mean gradient doubles as the next round's broadcast v.
 
-The client axis (step 4) supports three strategies:
+Shape stability (no retrace storms)
+-----------------------------------
+Schedules from `solve_p1` select a different client count C every round,
+and a naive jit retraces `round_step` per distinct C. The engine instead
+pads the client axis to a *bucket* size — ``shards * next_pow2(ceil(C /
+shards))`` — and threads a per-client validity weight ``cw[C_pad]`` (1 for
+real clients, 0 for padding) through the weighted aggregate, so a whole
+training run compiles at most ``log2(C_max)+1`` traces per lambda family
+(`n_traces` counts them; tests assert the bound). Padding clients replicate
+the last real client's batch and are skipped in the aggregate via
+``where(cw > 0, acc + cw*g, acc)`` — they can never perturb the update,
+not even by a NaN.
 
-  * ``"scan"`` (the ``"auto"`` default) — `lax.scan` over the stacked
-    batches: O(1) program size in the client count and the fastest path in
-    practice; the loop boundary materializes each client's masked gradient,
-    which keeps the per-client backward identical to the reference loop's.
-  * ``"unroll"`` — a statically unrolled loop inside the jit; same results,
-    compile time grows with the client count.
-  * ``"vmap"`` — batched clients; best on accelerators with spare
-    parallelism, but the batched backward may differ from the reference at
-    the ulp level (reassociated reductions).
+Ragged clients (fewer samples than the batch size) are handled one level
+down with the same trick: the trainer pads the *sample* axis and passes
+per-sample 0/1 weights consumed by a weighted loss (`sample_weights`), so
+stragglers stay on the packed path (see core/federated.py — the weighted
+mean with 0/1 weights is the plain mean over the real samples).
 
-With scan/unroll (and ``kernel_impl="xla"``) the packed engine reproduces
-the reference trainer **bit-for-bit** on fp32 models (tests/
-test_packing.py); the one genuine hazard — XLA contracting the update's
-`w - eta*g` into an FMA and skipping the product's rounding — is fenced in
-`kernels/ops._rounded_product`. Only the integer k = floor(lambda *
-M_prunable) is computed on host (O(1) scalar arithmetic on the schedule's
-lambda); parameters never leave the device.
+Multi-device sharding
+---------------------
+With more than one local device (or ``REPRO_ROUND_SHARDS``), the client
+axis of steps 4-5 is sharded over the ``data`` axis of a host mesh
+(`launch/mesh.make_host_mesh`, model=1) via `shard_map`: parameters, the
+global gradient, and the mask are replicated; each shard scans its local
+clients and reduces a weighted *partial sum* of masked gradients; a single
+in-graph `psum` per round combines the partials, feeding the fused FedSGD
+update computed redundantly (replicated) on every device. Parameters stay
+device-resident and replicated round over round — one collective per
+round, nothing syncs to host. CPU tests force a multi-device host with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (scripts/test.sh
+sharded leg).
+
+Numerics
+--------
+The single-device bucketed path reproduces the reference trainer
+**bit-for-bit** on fp32 models (tests/test_packing.py): with 0/1 weights
+the weighted aggregate accumulates the real clients in reference order
+(`acc + 1.0*g` is exact) and the update's `eta*g` product is fenced from
+FMA contraction (`kernels/ops.rounded_step`). The sharded path reassociates
+only the cross-shard reduction (per-shard partials + psum), so it is
+trajectory-equivalent within ~1 ulp per round, not bit-identical. Only the
+integers k = floor(lambda * M_prunable) and the scalar 1/C are computed on
+host (O(1) arithmetic on the schedule); parameters never leave the device.
 
 With ``donate=True`` (used by `FederatedTrainer`, which owns the buffers)
 the parameter / global-gradient buffers are donated to the step on
@@ -48,11 +73,14 @@ keeps ``round_step`` purely functional.
 """
 from __future__ import annotations
 
+import os
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core.packing import ParamPack
 from repro.kernels import ops
@@ -61,7 +89,8 @@ PyTree = Any
 
 
 def kth_smallest_threshold(q: jnp.ndarray, prunable: jnp.ndarray,
-                           k: jnp.ndarray) -> jnp.ndarray:
+                           k: jnp.ndarray, *,
+                           coarse: str | None = None) -> jnp.ndarray:
     """Threshold such that exactly k prunable entries are strictly below it.
 
     Matches `pruning.global_threshold` bit-for-bit: the k-th smallest
@@ -71,10 +100,25 @@ def kth_smallest_threshold(q: jnp.ndarray, prunable: jnp.ndarray,
 
     Exact selection without a sort: importance scores are non-negative, and
     for non-negative IEEE-754 floats the value order equals the integer
-    order of the bit patterns, so the k-th smallest element is found by a
-    31-step binary search over bit patterns with one masked count per step
-    (~10x faster than `jnp.sort` on CPU, O(n) instead of O(n log n)).
+    order of the bit patterns, so the k-th smallest is found by bisection
+    over bit patterns with one masked count per step (O(n) per pass, no
+    O(n log n) sort).
+
+    `coarse="histogram"` prepends a 256-bin histogram over the *exponent
+    byte* (``bits >> 23``; the sign bit is 0): one scan whose cumulative
+    counts pin bits 30..23 of the answer, leaving a 23-step mantissa
+    bisection — 24 data passes instead of 31. `"bisect"` is the plain
+    31-step search. The default (None = auto) picks per backend: the
+    histogram's scatter-add lowers to a fast on-chip accumulation on TPU
+    but to a serial ~130 ns/element scatter on XLA:CPU — 3-7x slower than
+    the seven count passes it saves (measured, see ROADMAP) — so CPU keeps
+    the pure bisection. Both modes are exact and tested against the host
+    oracle.
     """
+    if coarse is None:
+        coarse = "histogram" if jax.default_backend() == "tpu" else "bisect"
+    if coarse not in ("histogram", "bisect"):
+        raise ValueError(f"unknown coarse mode {coarse!r}")
     bits = jax.lax.bitcast_convert_type(q.reshape(-1), jnp.int32)
     valid = prunable.reshape(-1) > 0
     k = jnp.asarray(k, jnp.int32)
@@ -86,12 +130,41 @@ def kth_smallest_threshold(q: jnp.ndarray, prunable: jnp.ndarray,
         ge = below.sum(axis=-1) >= k
         return jnp.where(ge, lo, mid + 1), jnp.where(ge, mid, hi)
 
-    lo0 = jnp.zeros(k.shape, jnp.int32)
-    hi0 = jnp.full(k.shape, jnp.int32(2**31 - 1))
-    lo, _ = jax.lax.fori_loop(0, 31, body, (lo0, hi0))
+    if coarse == "histogram":
+        # pass 1/24: exponent-byte histogram; cum[b] = #valid, top byte <= b.
+        # The k-th smallest lives in the first bin whose cumulative count
+        # reaches k, which pins bits 30..23 of the answer in one data scan.
+        hist = jnp.zeros((256,), jnp.int32).at[bits >> 23].add(
+            valid.astype(jnp.int32))
+        cum = jnp.cumsum(hist)
+        # clamp: k beyond the valid count would return 256 and overflow the
+        # shift; bin 255 then degrades to the same max-element answer the
+        # pure bisection gives
+        top = jnp.minimum(jnp.searchsorted(cum, k, side="left"),
+                          255).astype(jnp.int32)
+        lo0 = top << 23
+        hi0 = lo0 | jnp.int32((1 << 23) - 1)
+        steps = 23
+    else:
+        lo0 = jnp.zeros(k.shape, jnp.int32)
+        hi0 = jnp.full(k.shape, jnp.int32(2**31 - 1))
+        steps = 31
+    lo, _ = jax.lax.fori_loop(0, steps, body, (lo0, hi0))
     kth = jax.lax.bitcast_convert_type(lo, jnp.float32)
     return jnp.where(k > 0, jnp.nextafter(kth, jnp.inf),
                      -jnp.asarray(jnp.inf, jnp.float32))
+
+
+def _resolve_shards(shards: int | None) -> int:
+    """Data-shard count for the client axis: explicit arg, then the
+    REPRO_ROUND_SHARDS env override (CPU tests under
+    --xla_force_host_platform_device_count), then every local device."""
+    if shards is not None:
+        return max(1, int(shards))         # explicit: let mesh build fail loud
+    env = os.environ.get("REPRO_ROUND_SHARDS")
+    if env:
+        return min(max(1, int(env)), len(jax.devices()))
+    return len(jax.devices())
 
 
 class RoundEngine:
@@ -103,21 +176,61 @@ class RoundEngine:
         it through `pack.unpack`, so gradients live on the packed buffer.
     pack : ParamPack describing the model layout.
     eta : FedSGD learning rate (compile-time constant).
+    weighted_loss_fn : optional loss(params, x, y, sample_weights) -> scalar
+        consuming per-sample 0/1 weights — required for ragged client
+        batches to stay on the packed path (models.make_loss_fn attaches
+        one as ``loss.weighted``). Without it sample weights are ignored.
+    shards : client-axis shard count (None = REPRO_ROUND_SHARDS env, else
+        all local devices; 1 disables sharding).
+    bucket : pad the client axis to power-of-two per-shard buckets so
+        varying selection sizes reuse compiles (True; False pads only to a
+        multiple of the shard count).
+    max_clients : total client population, if known (FederatedTrainer
+        passes len(clients)). Caps the bucket ladder so full participation
+        never pads past the population (e.g. C=20 of 20 buckets to 20, not
+        32 — padding clients cost real gradient FLOPs).
     """
 
     def __init__(self, loss_fn: Callable, pack: ParamPack, *, eta: float,
                  client_axis: str = "auto", kernel_impl: str = "auto",
-                 donate: bool = False):
+                 donate: bool = False, weighted_loss_fn: Callable | None = None,
+                 shards: int | None = None, bucket: bool = True,
+                 max_clients: int | None = None):
         if client_axis not in ("auto", "unroll", "scan", "vmap"):
             raise ValueError(f"unknown client_axis {client_axis!r}")
         self.pack = pack
         self.eta = float(eta)
         self.client_axis = client_axis
         self.kernel_impl = kernel_impl
+        self.bucket = bool(bucket)
+        self.max_clients = int(max_clients) if max_clients else None
+        self.shards = _resolve_shards(shards)
         self.prunable = jnp.asarray(pack.prunable_mask())
+        # compile accounting: one increment per (re)trace of a step impl —
+        # bucketing bounds this by the number of distinct bucket sizes per
+        # lambda family regardless of how C varies round to round
+        self.n_traces = 0
+        self.buckets_used: set[int] = set()
+        # device-array caches for the per-round auxiliary inputs (all-ones
+        # sample weights by [C_b, B]; 0/1 client weights by (C_b, C)):
+        # reusing them avoids two host->device transfers per round
+        self._sw_cache: dict[tuple[int, int], jnp.ndarray] = {}
+        self._cw_cache: dict[tuple[int, int], jnp.ndarray] = {}
 
-        def packed_loss(wp, x, y):
-            return loss_fn(pack.unpack(wp), x, y)
+        if self.shards > 1:
+            # client axis sharded over the data axis of a host mesh; layered
+            # under launch/ so importing core never touches device state
+            from repro.launch.mesh import make_host_mesh
+            self.mesh = make_host_mesh(model=1, data=self.shards)
+        else:
+            self.mesh = None
+
+        if weighted_loss_fn is not None:
+            def packed_loss(wp, x, y, sw):
+                return weighted_loss_fn(pack.unpack(wp), x, y, sw)
+        else:
+            def packed_loss(wp, x, y, sw):
+                return loss_fn(pack.unpack(wp), x, y)
 
         self._value_and_grad = jax.value_and_grad(packed_loss)
         # donate=True lets XLA update the parameter / global-gradient
@@ -129,10 +242,16 @@ class RoundEngine:
         # there to avoid per-compile warnings.
         donate_args = ((0, 1) if donate
                        and jax.default_backend() in ("tpu", "gpu") else ())
-        self._step_shared = jax.jit(self._shared_impl,
-                                    donate_argnums=donate_args)
-        self._step_multi = jax.jit(self._multi_impl,
-                                   donate_argnums=donate_args)
+        if self.mesh is None:
+            self._step_shared = jax.jit(self._shared_impl,
+                                        donate_argnums=donate_args)
+            self._step_multi = jax.jit(self._multi_impl,
+                                       donate_argnums=donate_args)
+        else:
+            self._step_shared = jax.jit(self._shared_sharded_impl,
+                                        donate_argnums=donate_args)
+            self._step_multi = jax.jit(self._multi_sharded_impl,
+                                       donate_argnums=donate_args)
 
     # -- jitted bodies ------------------------------------------------------
 
@@ -143,95 +262,208 @@ class RoundEngine:
         # into one program, with the same bit-for-bit results.
         return "scan" if self.client_axis == "auto" else self.client_axis
 
-    def _grads_shared(self, pruned, mask, xs, ys):
+    def _grads_shared(self, pruned, mask, xs, ys, sw):
         """Shared-lambda client axis: every client sees the same pruned
-        buffer / mask [R, L] (never materialized per client). Returns
-        (losses [C], masked grads [C, R, L])."""
+        buffer / mask [R, L] (never materialized per client). sw [C, B] are
+        per-sample weights for the weighted loss. Returns (losses [C],
+        masked grads [C, R, L])."""
         n_clients = xs.shape[0]
         ax = self._axis
         if ax == "unroll":
-            out = [self._value_and_grad(pruned, xs[c], ys[c])
+            out = [self._value_and_grad(pruned, xs[c], ys[c], sw[c])
                    for c in range(n_clients)]
             return (jnp.stack([l for l, _ in out]),
                     jnp.stack([g * mask for _, g in out]))
         if ax == "vmap":
             losses, grads = jax.vmap(
-                lambda x, y: self._value_and_grad(pruned, x, y))(xs, ys)
+                lambda x, y, s: self._value_and_grad(pruned, x, y, s))(
+                    xs, ys, sw)
             return losses, grads * mask
 
         def body(carry, inp):
-            x, y = inp
-            loss, g = self._value_and_grad(pruned, x, y)
+            x, y, s = inp
+            loss, g = self._value_and_grad(pruned, x, y, s)
             return carry, (loss, g * mask)
 
-        _, (losses, grads) = jax.lax.scan(body, 0.0, (xs, ys))
+        _, (losses, grads) = jax.lax.scan(body, 0.0, (xs, ys, sw))
         return losses, grads
 
-    def _grads_multi(self, w, masks, xs, ys):
+    def _grads_multi(self, w, masks, xs, ys, sw):
         """Per-client-lambda client axis: masks are [C, R, L]. Each client's
         pruned buffer w * masks[c] is formed inside its own step so the
         [C, R, L] stack of pruned models is never materialized."""
         n_clients = xs.shape[0]
         ax = self._axis
         if ax == "unroll":
-            out = [self._value_and_grad(w * masks[c], xs[c], ys[c])
+            out = [self._value_and_grad(w * masks[c], xs[c], ys[c], sw[c])
                    for c in range(n_clients)]
             return (jnp.stack([l for l, _ in out]),
                     jnp.stack([g * masks[c] for c, (_, g) in enumerate(out)]))
         if ax == "vmap":
             losses, grads = jax.vmap(
-                lambda m, x, y: self._value_and_grad(w * m, x, y))(
-                    masks, xs, ys)
+                lambda m, x, y, s: self._value_and_grad(w * m, x, y, s))(
+                    masks, xs, ys, sw)
             return losses, grads * masks
 
         def body(carry, inp):
-            m, x, y = inp
-            loss, g = self._value_and_grad(w * m, x, y)
+            m, x, y, s = inp
+            loss, g = self._value_and_grad(w * m, x, y, s)
             return carry, (loss, g * m)
 
-        _, (losses, grads) = jax.lax.scan(body, 0.0, (masks, xs, ys))
+        _, (losses, grads) = jax.lax.scan(body, 0.0, (masks, xs, ys, sw))
         return losses, grads
 
-    def _shared_impl(self, w, v, xs, ys, k):
+    def _shared_impl(self, w, v, xs, ys, sw, cw, inv, k):
+        self.n_traces += 1
         q = (w * v) ** 2
         thr = kth_smallest_threshold(q, self.prunable, k)
         _, mask = ops.packed_importance_mask(w, v, self.prunable, thr,
                                              impl=self.kernel_impl)
         pruned = w * mask
-        losses, grads = self._grads_shared(pruned, mask, xs, ys)
-        # step stays an output of the jitted graph: see packed_fedsgd_update
-        w2, g, step = ops.packed_fedsgd_update(w, grads, self.eta,
-                                               impl=self.kernel_impl)
+        losses, grads = self._grads_shared(pruned, mask, xs, ys, sw)
+        # step stays an output of the jitted graph: see the weighted update
+        w2, g, step = ops.packed_fedsgd_update_weighted(
+            w, grads, cw, inv, self.eta, impl=self.kernel_impl)
         return w2, g, losses, thr, step
 
-    def _multi_impl(self, w, v, xs, ys, ks):
+    def _multi_impl(self, w, v, xs, ys, sw, cw, inv, ks):
+        self.n_traces += 1
         q = (w * v) ** 2
         thr = kth_smallest_threshold(q, self.prunable, ks)      # [C]
         _, masks = ops.packed_importance_masks(w, v, self.prunable, thr,
                                                impl=self.kernel_impl)
-        losses, grads = self._grads_multi(w, masks, xs, ys)
-        w2, g, step = ops.packed_fedsgd_update(w, grads, self.eta,
-                                               impl=self.kernel_impl)
+        losses, grads = self._grads_multi(w, masks, xs, ys, sw)
+        w2, g, step = ops.packed_fedsgd_update_weighted(
+            w, grads, cw, inv, self.eta, impl=self.kernel_impl)
+        return w2, g, losses, thr, step
+
+    # -- sharded bodies: client axis over the mesh data axis ----------------
+    #
+    # Threshold and mask are computed replicated (cheap, deterministic —
+    # every device derives the identical mask from the replicated (w, v)),
+    # the per-client gradient scan runs on each shard's local clients, and
+    # the shards meet in exactly ONE collective: a psum of the weighted
+    # per-shard gradient sums. The FedSGD update then runs replicated so
+    # (w, v) never need resharding between rounds.
+
+    def _shared_sharded_impl(self, w, v, xs, ys, sw, cw, inv, k):
+        self.n_traces += 1
+        q = (w * v) ** 2
+        thr = kth_smallest_threshold(q, self.prunable, k)
+        _, mask = ops.packed_importance_mask(w, v, self.prunable, thr,
+                                             impl=self.kernel_impl)
+        pruned = w * mask
+
+        def body(pruned, mask, xs, ys, sw, cw):
+            losses, grads = self._grads_shared(pruned, mask, xs, ys, sw)
+            gsum = ops.packed_weighted_grad_sum(grads, cw)
+            return losses, jax.lax.psum(gsum, "data")
+
+        losses, gsum = shard_map(
+            body, mesh=self.mesh,
+            in_specs=(P(), P(), P("data"), P("data"), P("data"), P("data")),
+            out_specs=(P("data"), P()))(pruned, mask, xs, ys, sw, cw)
+        w2, g, step = ops.packed_apply_mean_update(w, gsum, inv, self.eta)
+        return w2, g, losses, thr, step
+
+    def _multi_sharded_impl(self, w, v, xs, ys, sw, cw, inv, ks):
+        self.n_traces += 1
+        q = (w * v) ** 2
+        thr = kth_smallest_threshold(q, self.prunable, ks)      # [C]
+
+        def body(w_, v_, pr, thr_, xs_, ys_, sw_, cw_):
+            # per-shard masks from the local thresholds: the batched kernel
+            # reads the replicated (w, v) once and emits only local masks
+            _, masks = ops.packed_importance_masks(w_, v_, pr, thr_,
+                                                   impl=self.kernel_impl)
+            losses, grads = self._grads_multi(w_, masks, xs_, ys_, sw_)
+            gsum = ops.packed_weighted_grad_sum(grads, cw_)
+            return losses, jax.lax.psum(gsum, "data")
+
+        losses, gsum = shard_map(
+            body, mesh=self.mesh,
+            in_specs=(P(), P(), P(), P("data"), P("data"), P("data"),
+                      P("data"), P("data")),
+            out_specs=(P("data"), P()))(
+                w, v, self.prunable, thr, xs, ys, sw, cw)
+        w2, g, step = ops.packed_apply_mean_update(w, gsum, inv, self.eta)
         return w2, g, losses, thr, step
 
     # -- public API ---------------------------------------------------------
+
+    def bucket_size(self, n_clients: int) -> int:
+        """Padded client-axis size for a round selecting `n_clients`:
+        shards * next_pow2(ceil(n_clients / shards)), capped at the client
+        population when known (padding clients cost real gradient FLOPs, so
+        full participation must not pad past the roster). A training run
+        compiles at most log2(C_max)+1 step traces per lambda family."""
+        per = -(-int(n_clients) // self.shards)
+        if self.bucket:
+            p2 = 1 << (per - 1).bit_length()
+            if self.max_clients is not None:
+                p2 = min(p2, max(per, -(-self.max_clients // self.shards)))
+            per = p2
+        return per * self.shards
 
     def init_buffers(self, params: PyTree) -> tuple[jnp.ndarray, jnp.ndarray]:
         w = self.pack.pack(params)
         return w, jnp.zeros_like(w)
 
-    def round_step(self, w, v, xs, ys, lams):
+    def round_step(self, w, v, xs, ys, lams, sample_weights=None):
         """One full round. xs: [C, B, ...], ys: [C, B], lams: [C] host-side
-        pruning ratios for the selected clients. Returns (w', v', losses [C],
-        threshold, step) — all device arrays; nothing is synced to host.
-        `step` is the applied update eta*v' (kept as an output so the
-        update's multiply can never be FMA-contracted — the bit-for-bit
-        contract with the reference trainer depends on it)."""
+        pruning ratios for the selected clients; sample_weights: optional
+        [C, B] 0/1 per-sample weights (ragged clients padded to B). Returns
+        (w', v', losses [C], threshold, step) — all device arrays; nothing
+        is synced to host. `step` is the applied update eta*v' (kept as an
+        output so the update's multiply can never be FMA-contracted — the
+        bit-for-bit contract with the reference trainer depends on it)."""
         lams = np.atleast_1d(np.asarray(lams, np.float64))
         if np.any((lams < 0.0) | (lams >= 1.0)):
             raise ValueError(f"lambda must be in [0,1), got {lams}")
+        n_clients = int(xs.shape[0])
+        if lams.shape[0] != n_clients:
+            raise ValueError(
+                f"{lams.shape[0]} lambdas for {n_clients} client batches")
         ks = np.floor(lams * self.pack.n_prunable).astype(np.int32)
+
+        # pad the client axis to the bucket; padding clients replicate the
+        # last real batch and carry weight 0, so they never touch the update
+        c_b = self.bucket_size(n_clients)
+        self.buckets_used.add(c_b)
+        pad = c_b - n_clients
+        if sample_weights is None:
+            key = (c_b, int(xs.shape[1]))
+            sw = self._sw_cache.get(key)
+            if sw is None:
+                sw = self._sw_cache[key] = jnp.ones(key, jnp.float32)
+        else:
+            sw = jnp.asarray(sample_weights, jnp.float32)
+        if pad:
+            def tile(a):
+                return jnp.concatenate(
+                    [a, jnp.broadcast_to(a[-1:], (pad,) + a.shape[1:])])
+            xs, ys = tile(xs), tile(ys)
+            if sample_weights is not None:
+                sw = tile(sw)
+        cw = self._cw_cache.get((c_b, n_clients))
+        if cw is None:
+            cw_host = np.zeros(c_b, np.float32)
+            cw_host[:n_clients] = 1.0
+            cw = self._cw_cache[(c_b, n_clients)] = jnp.asarray(cw_host)
+        # 1/C on host, exactly like the reference server_step's 1/len(grads)
+        inv = np.float32(1.0 / n_clients)
+
         if np.all(ks == ks[0]):
-            return self._step_shared(w, v, xs, ys,
-                                     jnp.asarray(ks[0], jnp.int32))
-        return self._step_multi(w, v, xs, ys, jnp.asarray(ks))
+            out = self._step_shared(w, v, xs, ys, sw, cw, inv,
+                                    jnp.asarray(ks[0], jnp.int32))
+        else:
+            ks_b = np.concatenate(
+                [ks, np.full(pad, ks[-1], np.int32)]) if pad else ks
+            out = self._step_multi(w, v, xs, ys, sw, cw, inv,
+                                   jnp.asarray(ks_b))
+        w2, g, losses, thr, step = out
+        if pad:
+            losses = losses[:n_clients]
+            if thr.ndim:                      # per-client thresholds
+                thr = thr[:n_clients]
+        return w2, g, losses, thr, step

@@ -151,6 +151,40 @@ def _rounded_product(eta, g):
     return step
 
 
+# public name: callers outside the fused aggregate (e.g. tests) sometimes
+# need the bare fence
+rounded_step = _rounded_product
+
+
+def packed_apply_mean_update(w, gsum, inv, eta):
+    """g = gsum * inv, then the FMA-fenced FedSGD step: (w', g, step).
+
+    The single tail shared by the weighted aggregate's XLA mirror and the
+    sharded round engine (which applies it after the cross-shard psum) —
+    one copy of the fence-sensitive sequence, not three."""
+    g = gsum * inv
+    step = _rounded_product(eta, g)
+    return (w.astype(jnp.float32) - step).astype(w.dtype), g, step
+
+
+def packed_weighted_grad_sum(grads, cweights):
+    """sum_c cweights[c] * grads[c] in client-stack order, [C,R,128]->[R,128].
+
+    Zero-weight (padding) clients are *skipped* via `where` rather than
+    multiplied in, so garbage gradients from replicated padding batches can
+    never reach the update (not even as NaN), and weight-1 clients
+    accumulate as `acc + 1.0*g` — bit-identical to the unweighted
+    reference sum. Used per shard by the sharded round engine (the psum
+    over shards is the round's single collective) and by the XLA mirror of
+    the weighted aggregate."""
+    acc = jnp.zeros(grads.shape[1:], jnp.float32)
+    cw = cweights.astype(jnp.float32)
+    for c in range(grads.shape[0]):          # static unroll: same summation
+        acc = jnp.where(cw[c] > 0.0,          # order as the reference
+                        acc + cw[c] * grads[c].astype(jnp.float32), acc)
+    return acc
+
+
 @functools.partial(jax.jit, static_argnames=("impl",))
 def packed_fedsgd_update(w, grads, eta, *, impl="auto"):
     """Fused eqs. (6)-(7): average stacked masked gradients [C,R,128] and
@@ -169,6 +203,25 @@ def packed_fedsgd_update(w, grads, eta, *, impl="auto"):
     g = g * (1.0 / grads.shape[0])
     step = _rounded_product(eta, g)
     return (w.astype(jnp.float32) - step).astype(w.dtype), g, step
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def packed_fedsgd_update_weighted(w, grads, cweights, inv, eta, *,
+                                  impl="auto"):
+    """Weighted eqs. (6)-(7): g = (sum_c cw[c]*grads[c]) * inv, w' = w -
+    eta*g, returning (w', g, step). The bucketed round engine's aggregate:
+    cweights marks real clients (1) vs client-axis padding (0) and inv =
+    1/#real is host-computed, so one compiled graph serves every selected
+    count in a bucket. With 0/1 weights this reproduces
+    `packed_fedsgd_update` — and hence the eager reference loop — bit for
+    bit on the real-client prefix (same summation order, `1.0*g` exact,
+    same FMA-fenced update; see `packed_weighted_grad_sum`)."""
+    if _resolve_impl(impl) == "pallas":
+        return _pm.fedsgd_aggregate_weighted(
+            w, grads, cweights, inv, eta,
+            block_rows=_packed_block_rows(w.shape[0]))
+    return packed_apply_mean_update(
+        w, packed_weighted_grad_sum(grads, cweights), inv, eta)
 
 
 @functools.partial(jax.jit, static_argnames=("impl",))

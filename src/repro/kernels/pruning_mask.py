@@ -15,6 +15,12 @@ Fused kernels, all tiled [BLOCK_R, 128] (lane-width aligned for the VPU):
   * fedsgd_aggregate: eqs. (6)-(7) fused — sum the stacked per-client
     gradients, average, and take the FedSGD step in one launch, replacing
     the O(clients) `jax.tree.map` accumulation.
+  * fedsgd_aggregate_weighted: the bucketed/sharded generalization — each
+    stacked gradient carries a per-client validity weight (0 for padding
+    clients on the bucketed client axis, 1 for real ones; fractional
+    weights supported for weighted FedAvg), and the mean divisor 1/C is an
+    operand instead of a shape-derived constant, so one compiled launch
+    serves every selected-client count in the bucket.
 
 Per-leaf inputs of arbitrary shape are flattened and padded to tiles by
 ops.py; the packed round engine (core/packing.py + core/round_engine.py)
@@ -155,6 +161,67 @@ def fedsgd_aggregate(w, grads, eta, *, block_rows: int = 256,
                    jax.ShapeDtypeStruct((r, c), jnp.float32)],
         interpret=interpret,
     )(w, grads, eta_arr)
+
+
+def _fedsgd_aggregate_weighted_kernel(w_ref, g_ref, cw_ref, sc_ref,
+                                      o_ref, gm_ref, st_ref):
+    acc = jnp.zeros(w_ref.shape, jnp.float32)
+    for c in range(g_ref.shape[0]):          # static unroll: same summation
+        wc = cw_ref[c]                       # order as the reference; the
+        # `where` (not acc + 0*g) skips zero-weight clients entirely, so a
+        # padding client's gradient can never leak in — not even as a NaN —
+        # and `acc + 1.0*g` keeps the 0/1 case bit-identical to the
+        # unweighted kernel on the real-client prefix.
+        acc = jnp.where(wc > 0.0,
+                        acc + wc * g_ref[c].astype(jnp.float32), acc)
+    g = acc * sc_ref[0]
+    gm_ref[...] = g
+    # The step eta*g is written to its own output: giving the multiply a
+    # second consumer stops the compiler from contracting it with the
+    # subtraction into an FMA, so the update rounds exactly like the eager
+    # reference loop (bit-for-bit reproducibility contract).
+    step = sc_ref[1] * g
+    st_ref[...] = step
+    o_ref[...] = (w_ref[...].astype(jnp.float32) - step).astype(o_ref.dtype)
+
+
+def fedsgd_aggregate_weighted(w, grads, cweights, inv, eta, *,
+                              block_rows: int = 256,
+                              interpret: bool | None = None):
+    """Weighted eqs. (6)-(7) fused on packed buffers.
+
+    w: [R, 128*k]; grads: [C, R, 128*k] stacked per-client (already masked)
+    gradients; cweights: [C] per-client weights (0 = padding client);
+    inv: scalar 1/sum(cweights) (host-computed so the mean matches the
+    reference's 1/len(grads) exactly). Returns (updated w, weighted mean
+    gradient fp32, applied step eta*mean fp32) in one launch — the mean
+    doubles as the next round's broadcast v."""
+    r, c = w.shape
+    n_clients = grads.shape[0]
+    if c % LANES:
+        raise ValueError(f"last dim must be a multiple of {LANES}")
+    br = min(block_rows, r)
+    if r % br:
+        raise ValueError(f"rows {r} must divide block {br}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    cw = jnp.asarray(cweights, jnp.float32)
+    scal = jnp.stack([jnp.asarray(inv, jnp.float32),
+                      jnp.asarray(eta, jnp.float32)])
+    spec = pl.BlockSpec((br, c), lambda i: (i, 0))
+    gspec = pl.BlockSpec((n_clients, br, c), lambda i: (0, i, 0))
+    return pl.pallas_call(
+        _fedsgd_aggregate_weighted_kernel,
+        grid=(r // br,),
+        in_specs=[spec, gspec,
+                  pl.BlockSpec(memory_space=pl.MemorySpace.ANY),
+                  pl.BlockSpec(memory_space=pl.MemorySpace.ANY)],
+        out_specs=[spec, spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((r, c), w.dtype),
+                   jax.ShapeDtypeStruct((r, c), jnp.float32),
+                   jax.ShapeDtypeStruct((r, c), jnp.float32)],
+        interpret=interpret,
+    )(w, grads, cw, scal)
 
 
 def _masked_update_kernel(w_ref, g_ref, m_ref, eta_ref, o_ref):

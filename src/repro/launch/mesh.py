@@ -25,11 +25,24 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh(*, model: int | None = None):
-    """Whatever fits the local device count (tests / smoke): (n//m, m)."""
+def make_host_mesh(*, model: int | None = None, data: int | None = None):
+    """Whatever fits the local device count (tests / smoke): (n//m, m).
+
+    `data` caps the data axis to the first ``data * m`` local devices — the
+    round engine uses this to shard the client axis over a subset of the
+    host devices (REPRO_ROUND_SHARDS override, see core/round_engine.py)."""
+    import numpy as np
+    from jax.sharding import Mesh
+
     n = len(jax.devices())
     m = model or (2 if n % 2 == 0 and n > 1 else 1)
-    return jax.make_mesh((n // m, m), ("data", "model"))
+    if data is None:
+        return jax.make_mesh((n // m, m), ("data", "model"))
+    if data * m > n:
+        raise ValueError(
+            f"data={data} x model={m} exceeds {n} local devices")
+    devs = np.asarray(jax.devices()[:data * m]).reshape(data, m)
+    return Mesh(devs, ("data", "model"))
 
 
 # TPU v5e hardware constants (per chip) for the roofline (EXPERIMENTS.md).

@@ -7,12 +7,12 @@ from repro.models.transformer import (
 )
 from repro.models.cnn import (
     lenet_init, lenet_apply, resnet_init, resnet_apply,
-    make_loss_fn, make_eval_fn,
+    make_loss_fn, make_weighted_loss_fn, make_eval_fn,
 )
 
 __all__ = [
     "Runtime", "init_params", "param_shapes", "param_count",
     "active_param_count", "forward", "loss_fn", "init_cache", "prefill",
     "decode_step", "lenet_init", "lenet_apply", "resnet_init", "resnet_apply",
-    "make_loss_fn", "make_eval_fn",
+    "make_loss_fn", "make_weighted_loss_fn", "make_eval_fn",
 ]

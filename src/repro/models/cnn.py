@@ -147,6 +147,31 @@ def make_loss_fn(apply_fn):
         lse = jax.nn.logsumexp(logits, axis=-1)
         gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
         return (lse - gold).mean()
+    # per-sample-weighted companion: FederatedTrainer picks this up so
+    # ragged client batches (fewer samples than the batch size) can be
+    # padded and stay on the packed round path (core/federated.py)
+    loss.weighted = make_weighted_loss_fn(apply_fn)
+    return loss
+
+
+def make_weighted_loss_fn(apply_fn):
+    """Mean CE with per-sample weights: sum(sw * ce) / sum(sw).
+
+    With sw = 1 everywhere this is bit-identical to `make_loss_fn`'s plain
+    mean (1.0*ce is exact, the reductions share shape and order, and the
+    divisor sum(ones) == B exactly), so the packed engine can thread sample
+    weights unconditionally. Zero-weight samples (the padding of a ragged
+    client batch) are exactly dropped from both the value and the gradient;
+    the result is the plain mean over the real samples, evaluated at the
+    padded shape — both trainer backends use this same function for ragged
+    clients, which is what makes them bit-for-bit comparable (XLA
+    reassociates reductions per *shape*, so a mean over [B'] and a masked
+    mean over [B] agree in exact arithmetic but not in fp32)."""
+    def loss(params, x, y, sw):
+        logits = apply_fn(params, x)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+        return jnp.sum((lse - gold) * sw) / jnp.sum(sw)
     return loss
 
 

@@ -1,0 +1,49 @@
+"""Shared packed-vs-reference trainer harness for the round-engine suites.
+
+One copy of the run-both-backends-and-compare-bitwise plumbing, imported by
+tests/test_packing.py and tests/test_round_engine.py (the tests/ directory
+is on sys.path via conftest.py).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import FederatedTrainer
+from repro.core.optimizer_ao import Schedule
+from repro.wireless import ChannelModel, SystemParams
+
+
+def make_schedule(a, lam):
+    """All-wireless-defaults Schedule from a selection matrix [S, N] and a
+    scalar / per-client / per-round-per-client lambda."""
+    a = np.asarray(a, float)
+    lam = np.broadcast_to(np.asarray(lam, float), a.shape).copy()
+    lam[a == 0] = 0.0
+    return Schedule(a=a, lam=lam, power=0.3 * np.ones_like(a),
+                    freq=3e8 * np.ones_like(a), theta=0.0, energy=0.0,
+                    delay=0.0, feasible=True)
+
+
+def run_pair(clients, params, loss_fn, sched, *, batch_size=16, **packed_kw):
+    """Run the same schedule on both backends from the same init; returns
+    {backend: (trainer, history)}. packed_kw reaches only the packed
+    trainer (e.g. shards=1 to pin the bit-for-bit single-device path)."""
+    out = {}
+    n = len(clients)
+    for backend in ("reference", "packed"):
+        tr = FederatedTrainer(loss_fn, params, clients, eta=0.1,
+                              batch_size=batch_size, seed=0, backend=backend,
+                              **(packed_kw if backend == "packed" else {}))
+        sp = SystemParams.table1(n)
+        ch = ChannelModel(n)
+        out[backend] = (tr, tr.run(sched, sp, ch.uplink, ch.downlink))
+    return out
+
+
+def assert_trainers_bitwise(tr_ref, tr_pk):
+    for a, b in zip(jax.tree_util.tree_leaves(tr_ref.params),
+                    jax.tree_util.tree_leaves(tr_pk.params)):
+        assert bool(jnp.all(a == b))
+    for a, b in zip(jax.tree_util.tree_leaves(tr_ref.global_grad),
+                    jax.tree_util.tree_leaves(tr_pk.global_grad)):
+        assert bool(jnp.all(a == b))

@@ -5,8 +5,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _trainer_pair import (assert_trainers_bitwise, make_schedule,
+                           run_pair)
 from repro.core import ClientData, FederatedTrainer, ParamPack, pruning
-from repro.core.optimizer_ao import Schedule
 from repro.core.round_engine import kth_smallest_threshold
 from repro.data import make_dataset, partition_by_dirichlet
 from repro.models import lenet_init, lenet_apply, make_loss_fn
@@ -84,11 +85,14 @@ def test_pack_is_differentiable():
     np.testing.assert_allclose(np.asarray(g["b"]), 2 * np.ones((2, 2)))
 
 
+@pytest.mark.parametrize("coarse", ["bisect", "histogram"])
 @pytest.mark.parametrize("scale", [1.0, 10.0, 1e6])
 @pytest.mark.parametrize("lam", [0.0, 0.1, 0.37, 0.9])
-def test_device_threshold_matches_host_global_threshold(lam, scale):
+def test_device_threshold_matches_host_global_threshold(lam, scale, coarse):
     """`scale` > 2 guards the bit-pattern binary search against int32
-    midpoint overflow (bit patterns >= 2^30 for values >= 2.0)."""
+    midpoint overflow (bit patterns >= 2^30 for values >= 2.0); both the
+    31-pass bisection and the 24-pass exponent-histogram variant must be
+    exact."""
     rng = np.random.default_rng(3)
     imp = {"w1": jnp.asarray(scale * rng.random((33, 7)), jnp.float32),
            "norm_scale": jnp.asarray(rng.random((16,)), jnp.float32),
@@ -98,11 +102,72 @@ def test_device_threshold_matches_host_global_threshold(lam, scale):
     q = pack.pack(imp)
     k = int(np.floor(lam * pack.n_prunable))
     thr_dev = kth_smallest_threshold(
-        q, jnp.asarray(pack.prunable_mask()), jnp.asarray(k, jnp.int32))
+        q, jnp.asarray(pack.prunable_mask()), jnp.asarray(k, jnp.int32),
+        coarse=coarse)
     if thr_host == -np.inf:
         assert float(thr_dev) == -np.inf
     else:
         assert np.float32(thr_host) == np.float32(thr_dev)
+
+
+@pytest.mark.parametrize("coarse", ["bisect", "histogram"])
+@pytest.mark.parametrize("scale", [1e-38, 1e-18, 1e18, 1e30])
+def test_device_threshold_extreme_exponents(scale, coarse):
+    """Both search modes must stay exact across the whole fp32 exponent
+    range (subnormal-adjacent through near-overflow), ties included."""
+    rng = np.random.default_rng(11)
+    vals = (scale * rng.random((1025,))).astype(np.float32)
+    vals[::7] = 0.0                              # ties at the bottom bin
+    imp = {"w": jnp.asarray(vals)}
+    pack = ParamPack.build(imp)
+    q = pack.pack(imp)
+    for lam in (0.1, 0.37, 0.9):
+        thr_host = pruning.global_threshold(imp, lam)
+        k = int(np.floor(lam * pack.n_prunable))
+        thr_dev = kth_smallest_threshold(
+            q, jnp.asarray(pack.prunable_mask()), jnp.asarray(k, jnp.int32),
+            coarse=coarse)
+        assert np.float32(thr_host) == np.float32(thr_dev), (scale, lam)
+    # the vector-k (per-client) form agrees with per-scalar calls
+    ks = jnp.asarray([0, 100, 700], jnp.int32)
+    vec = kth_smallest_threshold(q, jnp.asarray(pack.prunable_mask()), ks,
+                                 coarse=coarse)
+    for i, k in enumerate([0, 100, 700]):
+        one = kth_smallest_threshold(q, jnp.asarray(pack.prunable_mask()),
+                                     jnp.asarray(k, jnp.int32), coarse=coarse)
+        assert np.float32(vec[i]) == np.float32(one)
+    # k at / beyond the valid count (out of round_step's lam < 1 contract
+    # but the function is public): both modes agree — the histogram's bin
+    # clamp keeps it from overflowing the exponent shift
+    for k in (pack.n_prunable, pack.n_prunable + 5):
+        got = kth_smallest_threshold(q, jnp.asarray(pack.prunable_mask()),
+                                     jnp.asarray(k, jnp.int32), coarse=coarse)
+        ref = kth_smallest_threshold(q, jnp.asarray(pack.prunable_mask()),
+                                     jnp.asarray(k, jnp.int32),
+                                     coarse="bisect")
+        # k > count saturates the search (NaN for both modes); equal_nan
+        # compares the in-range k == count case exactly
+        assert np.array_equal(np.float32(got), np.float32(ref),
+                              equal_nan=True), (scale, k)
+
+
+def test_weighted_loss_matches_plain_mean_bitwise():
+    """make_loss_fn's weighted companion with all-ones weights is bitwise
+    equal to the plain mean (value and gradients) — the property that lets
+    the packed engine thread sample weights unconditionally."""
+    from repro.models import lenet_apply, make_loss_fn
+    rng = np.random.default_rng(2)
+    params = lenet_init(jax.random.key(2))
+    loss = make_loss_fn(lenet_apply)
+    x = jnp.asarray(rng.normal(size=(16, 28, 28, 1)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 10, size=16))
+    l0, g0 = jax.jit(jax.value_and_grad(loss))(params, x, y)
+    l1, g1 = jax.jit(jax.value_and_grad(loss.weighted))(
+        params, x, y, jnp.ones(16, jnp.float32))
+    assert bool(l0 == l1)
+    for a, b in zip(jax.tree_util.tree_leaves(g0),
+                    jax.tree_util.tree_leaves(g1)):
+        assert bool(jnp.all(a == b))
 
 
 # -- packed engine vs reference trainer, bit for bit ------------------------
@@ -120,41 +185,17 @@ def small_env():
 
 
 def _sched(n_rounds, lam):
-    a = np.ones((n_rounds, N))
-    return Schedule(a=a, lam=np.asarray(lam) * a, power=0.3 * a, freq=3e8 * a,
-                    theta=0.0, energy=0.0, delay=0.0, feasible=True)
-
-
-def _run_pair(clients, params, loss_fn, sched, **packed_kw):
-    out = {}
-    for backend in ("reference", "packed"):
-        tr = FederatedTrainer(loss_fn, params, clients, eta=0.1,
-                              batch_size=16, seed=0, backend=backend,
-                              **(packed_kw if backend == "packed" else {}))
-        sp = SystemParams.table1(N)
-        ch = ChannelModel(N)
-        hist = tr.run(sched, sp, ch.uplink, ch.downlink)
-        out[backend] = (tr, hist)
-    return out
-
-
-def _assert_bitwise(tr_ref, tr_pk):
-    for a, b in zip(jax.tree_util.tree_leaves(tr_ref.params),
-                    jax.tree_util.tree_leaves(tr_pk.params)):
-        assert bool(jnp.all(a == b))
-    for a, b in zip(jax.tree_util.tree_leaves(tr_ref.global_grad),
-                    jax.tree_util.tree_leaves(tr_pk.global_grad)):
-        assert bool(jnp.all(a == b))
+    return make_schedule(np.ones((n_rounds, N)), lam)
 
 
 @pytest.mark.parametrize("lam", [0.0, 0.4])
 def test_packed_round_matches_reference_bitwise(small_env, lam):
     clients, params, loss_fn = small_env
-    out = _run_pair(clients, params, loss_fn, _sched(4, lam))
+    out = run_pair(clients, params, loss_fn, _sched(4, lam))
     (tr_ref, h_ref), (tr_pk, h_pk) = out["reference"], out["packed"]
     for mr, mp in zip(h_ref, h_pk):
         assert mr.train_loss == mp.train_loss          # exact, per round
-    _assert_bitwise(tr_ref, tr_pk)
+    assert_trainers_bitwise(tr_ref, tr_pk)
 
 
 def test_packed_per_client_lambda_matches_reference_bitwise(small_env):
@@ -162,8 +203,8 @@ def test_packed_per_client_lambda_matches_reference_bitwise(small_env):
     lam_row = np.asarray([0.0, 0.25, 0.6])
     sched = _sched(3, 1.0)
     sched.lam[:] = lam_row[None, :]
-    out = _run_pair(clients, params, loss_fn, sched)
-    _assert_bitwise(out["reference"][0], out["packed"][0])
+    out = run_pair(clients, params, loss_fn, sched)
+    assert_trainers_bitwise(out["reference"][0], out["packed"][0])
 
 
 def test_packed_same_threshold_and_selected_coordinates(small_env):
@@ -194,6 +235,6 @@ def test_packed_same_threshold_and_selected_coordinates(small_env):
 
 def test_unroll_axis_also_bitwise(small_env):
     clients, params, loss_fn = small_env
-    out = _run_pair(clients, params, loss_fn, _sched(3, 0.3),
+    out = run_pair(clients, params, loss_fn, _sched(3, 0.3),
                     client_axis="unroll")
-    _assert_bitwise(out["reference"][0], out["packed"][0])
+    assert_trainers_bitwise(out["reference"][0], out["packed"][0])
