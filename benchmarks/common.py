@@ -51,6 +51,9 @@ class ExpConfig:
     e0: float = 4.0                      # [J]
     t0: float = 40.0                     # [s]
     seed: int = 0
+    # "auto": per-round dispatch on CPU, multi-round lax.scan blocks on
+    # accelerators (core/round_engine.block_step); any int forces it
+    rounds_per_dispatch: int | str = "auto"
 
 
 @dataclasses.dataclass
@@ -120,7 +123,8 @@ def run_scheme(env: Env, scheme: str, *, e0: float | None = None,
                      env.sp, c, scheme_config(scheme))
     trainer = FederatedTrainer(env.loss_fn, env.init_fn(jax.random.key(cfg.seed)),
                                env.clients, eta=cfg.eta, batch_size=cfg.batch,
-                               seed=cfg.seed)
+                               seed=cfg.seed,
+                               rounds_per_dispatch=cfg.rounds_per_dispatch)
     hist = trainer.run(sched, env.sp, env.ch.uplink, env.ch.downlink,
                        eval_fn=env.eval_fn, eval_every=eval_every,
                        stop_delay=t0, stop_energy=e0)

@@ -42,7 +42,50 @@ def main() -> None:
             print("FAILED: smoke compare produced no rows (baseline "
                   "missing or no overlapping configs)")
             sys.exit(1)
-        regressed = [r["config"] for r in rows if r["regressed"]]
+        # block-mode gates: the sweep must have run, must have been
+        # compared against the committed baseline, and the block path must
+        # not have uploaded any per-round batch data
+        block = report.get("block_sweep")
+        if not block:
+            print("FAILED: smoke did not run the rounds_per_dispatch sweep")
+            sys.exit(1)
+        if not any(r["config"].startswith("block/") for r in rows):
+            print("FAILED: no block-mode rows in the compare (committed "
+                  "baseline predates the block sweep? re-run the fast "
+                  "profile to refresh BENCH_round_engine.json)")
+            sys.exit(1)
+        leaky = [rpd for rpd, p in block["per_rpd"].items()
+                 if rpd != "1" and p["batch_h2d_uploads_per_round"] != 0]
+        if leaky:
+            print("FAILED: block path uploaded per-round batch data at "
+                  "rounds_per_dispatch", leaky)
+            sys.exit(1)
+        # Block speedups are throttle-sensitive in a way the interleaved
+        # packed-vs-reference ratio is not: one K-round dispatch is a long
+        # uninterrupted compute burst, so cgroup CFS throttling hits it
+        # harder than K short dispatches whose host gaps refill the quota
+        # (measured on this box: 1.65x quiet -> 0.93x under load at rpd=8,
+        # see ROADMAP). The 10% delta rule therefore only WARNS for block
+        # rows; the hard gate is an absolute floor that load noise never
+        # reaches but structural regressions (a reintroduced per-round
+        # sync/upload, a per-block retrace storm) do.
+        block_floor = 0.75
+        warned = [r["config"] for r in rows
+                  if r["config"].startswith("block/") and r["regressed"]]
+        if warned:
+            print("WARNING: block speedup below committed baseline "
+                  "(throttle-sensitive, not gated):", warned)
+        # the floor is an absolute ratio from THIS run, so it needs no
+        # baseline overlap — every swept rpd leg is covered even when the
+        # committed report predates a change to the rpd ladder
+        floored = [f"rpd{r}" for r, p in block["per_rpd"].items()
+                   if r != "1" and p["speedup_vs_1"] < block_floor]
+        if floored:
+            print(f"FAILED: block speedup below the {block_floor} floor "
+                  "(structural regression):", floored)
+            sys.exit(1)
+        regressed = [r["config"] for r in rows
+                     if r["regressed"] and not r["config"].startswith("block/")]
         if regressed:
             print("FAILED: speedup regression vs committed report:",
                   regressed)

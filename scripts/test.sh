@@ -17,13 +17,17 @@ status=0
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@" \
     || status=$?
 
-echo "== sharded smoke leg: round-engine tier-1 under 4 forced host devices =="
+echo "== sharded smoke leg: round/block engines under 4 forced host devices =="
 # forced flag goes LAST: XLA takes the final occurrence of a duplicated
 # flag, so an inherited force-count must not override the leg's; an
-# inherited shard-count override would likewise silently unshard the leg
+# inherited shard-count override would likewise silently unshard the leg.
+# Both the per-round and the multi-round-block parity suites run here (the
+# 1-device leg above already ran them unsharded), so every engine path is
+# exercised on the mesh.
 XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=4" \
     REPRO_ROUND_SHARDS= \
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
-    python -m pytest -x -q tests/test_round_engine.py || status=$?
+    python -m pytest -x -q tests/test_round_engine.py tests/test_block_engine.py \
+    || status=$?
 
 exit $status

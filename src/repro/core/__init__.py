@@ -25,6 +25,7 @@ from repro.core.pruning import (
 )
 from repro.core.optimizer_ao import AOConfig, Schedule, solve_p1
 from repro.core.packing import ParamPack
+from repro.core.client_store import ClientStore
 from repro.core.round_engine import RoundEngine, kth_smallest_threshold
 from repro.core.federated import ClientData, FederatedTrainer, RoundMetrics
 
@@ -36,6 +37,6 @@ __all__ = [
     "PruneSpec", "taylor_importance", "exact_importance", "build_masks",
     "apply_masks", "global_threshold", "actual_ratio", "pruning_distortion",
     "AOConfig", "Schedule", "solve_p1",
-    "ParamPack", "RoundEngine", "kth_smallest_threshold",
+    "ParamPack", "ClientStore", "RoundEngine", "kth_smallest_threshold",
     "ClientData", "FederatedTrainer", "RoundMetrics",
 ]

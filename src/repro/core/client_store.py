@@ -1,0 +1,84 @@
+"""Device-resident client datasets for the multi-round block engine.
+
+`ClientStore` hoists every client's samples onto the device **once** as
+padded ``[C, N_max, ...]`` buffers (one for inputs, one for labels) plus a
+host-side per-client sample count. `RoundEngine.block_step` then samples
+mini-batches *on device* by gathering host-drawn index arrays ``[K, C, B]``
+— the per-round host→device upload of stacked batches (the last recurring
+transfer inside the round loop) disappears, and only O(K·C·B) int32 indices
+cross the boundary per K-round block.
+
+The batch *indices* stay host-drawn from the trainer's existing numpy RNG —
+one `rng.choice` call per (round, selected client), exactly the calls the
+reference loop makes — so the block engine consumes the identical batch
+sequence and the bit-for-bit parity contract with ``backend="reference"``
+survives (values gathered on device from the store equal the values the
+host would have fancy-indexed out of `ClientData`).
+
+Padding rows (samples beyond a client's count) are zeros and are never
+gathered: host-drawn indices are always < the client's count, and padding
+*clients* on the bucketed client axis replicate a real client's id/indices.
+
+Memory: the store holds ``C * N_max`` samples on device (vs one batch per
+selected client for the per-round path). For edge-scale federations this is
+small (the paper's MNIST/CIFAR splits are a few MB); `nbytes` reports the
+footprint so callers can decide, and the trainer only builds the store when
+block execution is actually enabled (``rounds_per_dispatch > 1``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientStore:
+    """Padded on-device datasets: x [C, N_max, ...], y [C, N_max]."""
+
+    x: jnp.ndarray
+    y: jnp.ndarray
+    counts: np.ndarray          # host [C] int — real samples per client
+
+    @classmethod
+    def build(cls, clients: Sequence) -> "ClientStore":
+        """Pack `ClientData`-like objects (``.x``, ``.y`` numpy arrays) into
+        one padded device buffer per field. Dtypes go through the same
+        `jnp.asarray` canonicalization as the per-round upload path
+        (float64 -> float32, int64 -> int32 under default jax config), so
+        gathered batches are bitwise what the host would have uploaded."""
+        counts = np.asarray([len(c) for c in clients], np.int64)
+        n_max = int(counts.max())
+        x0 = np.asarray(clients[0].x)
+        y0 = np.asarray(clients[0].y)
+        x = np.zeros((len(clients), n_max) + x0.shape[1:], x0.dtype)
+        y = np.zeros((len(clients), n_max), y0.dtype)
+        for i, c in enumerate(clients):
+            x[i, : counts[i]] = c.x
+            y[i, : counts[i]] = c.y
+        return cls(x=jnp.asarray(x), y=jnp.asarray(y), counts=counts)
+
+    @property
+    def n_clients(self) -> int:
+        return int(self.x.shape[0])
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.x.nbytes + self.y.nbytes)
+
+    def replicated(self, mesh) -> "ClientStore":
+        """Copy with (x, y) explicitly replicated over `mesh` (NamedSharding
+        with an empty PartitionSpec), so the sharded block step never
+        re-transfers the store: every device holds the full dataset and
+        gathers only its shard's clients."""
+        from repro.launch.mesh import replicate
+        x, y = replicate((self.x, self.y), mesh)
+        return ClientStore(x=x, y=y, counts=self.counts)
+
+    def gather(self, cids, idx) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Device-side batch assembly: cids [C], idx [C, B] ->
+        (x [C, B, ...], y [C, B]). Jittable; used inside the block scan."""
+        return self.x[cids[:, None], idx], self.y[cids[:, None], idx]

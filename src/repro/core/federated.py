@@ -54,12 +54,32 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import pruning
+from repro.core.client_store import ClientStore
 from repro.core.optimizer_ao import Schedule
 from repro.core.packing import ParamPack
 from repro.core.round_engine import RoundEngine
 from repro.wireless.comm import SystemParams, round_delay, round_energy
 
 PyTree = Any
+
+# Block length the packed backend targets per dispatch when
+# rounds_per_dispatch="auto" resolves to block execution (accelerators).
+DEFAULT_ROUNDS_PER_DISPATCH = 32
+
+
+def _resolve_rounds_per_dispatch(rpd) -> int:
+    """"auto" -> 1 on CPU (rounds there are gradient-FLOP-bound and the
+    per-round dispatch is the bit-for-bit-audited default for parity /
+    reference work), DEFAULT_ROUNDS_PER_DISPATCH on accelerator backends
+    (where the per-round dispatch + H2D upload dominates). Ints pass
+    through; both block (>1) and per-round (1) modes are exact."""
+    if rpd == "auto":
+        return (1 if jax.default_backend() == "cpu"
+                else DEFAULT_ROUNDS_PER_DISPATCH)
+    r = int(rpd)
+    if r < 1:
+        raise ValueError(f"rounds_per_dispatch must be >= 1, got {rpd!r}")
+    return r
 
 
 @dataclasses.dataclass
@@ -106,6 +126,7 @@ class FederatedTrainer:
         kernel_impl: str = "auto",
         weighted_loss_fn: Callable | None = None,
         shards: int | None = None,
+        rounds_per_dispatch: int | str = "auto",
     ):
         if backend not in ("packed", "reference"):
             raise ValueError(f"unknown backend {backend!r}")
@@ -128,6 +149,18 @@ class FederatedTrainer:
         self._wgrad_fn = (jax.jit(jax.value_and_grad(self._weighted_loss))
                           if self._weighted_loss is not None else None)
         self.n_fallback_rounds = 0
+        # Block execution (rounds_per_dispatch > 1, packed backend only):
+        # K consecutive schedule rounds run as ONE jitted lax.scan dispatch
+        # with batches gathered on device from a ClientStore — no per-round
+        # host sync, no per-round batch upload, K-1 of every K dispatches
+        # gone. n_batch_uploads counts per-round host->device stacked-batch
+        # transfers (the block path performs none — bench-asserted).
+        self.rounds_per_dispatch = (
+            _resolve_rounds_per_dispatch(rounds_per_dispatch)
+            if backend == "packed" else 1)
+        self._store: ClientStore | None = None
+        self.n_batch_uploads = 0
+        self.n_block_dispatches = 0
         if backend == "packed":
             self.pack = ParamPack.build(params, prune_spec)
             # the trainer owns the packed buffers and reassigns them every
@@ -186,6 +219,16 @@ class FederatedTrainer:
 
     # -- round primitives ---------------------------------------------------
 
+    def _draw_indices(self, client: ClientData) -> np.ndarray:
+        """THE batch-index draw — one `choice` call per (round, selected
+        client), shared by the per-round path (which gathers on host) and
+        the block path (which ships the indices to the on-device gather).
+        Keeping the call in one place is what pins both paths to the same
+        RNG stream, which the bit-for-bit contract depends on."""
+        return self.rng.choice(
+            len(client), size=min(self.batch_size, len(client)),
+            replace=len(client) < self.batch_size)
+
     def _sample_batch(
         self, client: ClientData,
     ) -> tuple[jnp.ndarray, jnp.ndarray, np.ndarray]:
@@ -196,8 +239,7 @@ class FederatedTrainer:
         with repeated samples carrying weight 0, so every client's batch is
         stackable and the round stays on the packed path. The RNG stream is
         identical to the unpadded draw (one `choice` call either way)."""
-        idx = self.rng.choice(len(client), size=min(self.batch_size, len(client)),
-                              replace=len(client) < self.batch_size)
+        idx = self._draw_indices(client)
         x, y = client.x[idx], client.y[idx]
         n = len(idx)
         if n < self.batch_size and self._weighted_loss is not None:
@@ -285,12 +327,122 @@ class FederatedTrainer:
         xs = jnp.stack([b[0] for b in batches])
         ys = jnp.stack([b[1] for b in batches])
         sws = np.stack([b[2] for b in batches])
+        self.n_batch_uploads += 1
         self._w, self._v, losses, _, _ = self.engine.round_step(
             self._w, self._v, xs, ys, lam_sel,
             # all-ones weights carry no information: skip the transfer and
             # let the engine materialize them on device
             sample_weights=None if sws.all() else sws)
         return losses
+
+    # -- block execution ----------------------------------------------------
+
+    def _ensure_store(self) -> ClientStore:
+        """Build (once) the device-resident dataset store the block path
+        gathers batches from; replicated over the engine's mesh when the
+        client axis is sharded, so shards never re-transfer the data."""
+        if self._store is None:
+            store = ClientStore.build(self.clients)
+            if self.engine is not None and self.engine.mesh is not None:
+                store = store.replicated(self.engine.mesh)
+            self._store = store
+        return self._store
+
+    def _block_key(self, selected: list[int], lam_s: np.ndarray):
+        """Homogeneity key for grouping consecutive rounds into one block
+        (client-axis bucket, lambda family, drawn batch length) — or None
+        when the round cannot take the block path (empty selection, or
+        mixed batch lengths without a weighted loss: those rounds fall to
+        the per-round path, which handles them exactly as before)."""
+        if not selected:
+            return None
+        lens = [min(self.batch_size, len(self.clients[n])) for n in selected]
+        if self._weighted_loss is not None:
+            blen = self.batch_size       # ragged clients pad to batch_size
+        elif len(set(lens)) == 1:
+            blen = lens[0]               # uniformly short: packed, no pad
+        else:
+            return None                  # per-round path -> reference fallback
+        ks = np.floor(np.asarray([lam_s[n] for n in selected], np.float64)
+                      * self.pack.n_prunable).astype(np.int32)
+        shared = bool((ks == ks[0]).all())
+        return (self.engine.bucket_size(len(selected)), shared, blen)
+
+    def _plan_blocks(self, infos, eval_rounds: set, rpd: int) -> dict:
+        """Partition the (truncated) schedule into blocks: {start: K}.
+
+        Rounds group while their _block_key matches; a run always ends at
+        an eval round (eval reads params AFTER that round, so a block may
+        not span it). Each homogeneous run is then decomposed into
+        power-of-two chunks of at most `rpd` rounds — decomposition rather
+        than padding, because a padded round would cost a full round of
+        gradient FLOPs — which keeps compiled block lengths on a pow2
+        ladder (<= log2(rpd)+1 distinct K per (bucket, family) pair)."""
+        blocks: dict[int, int] = {}
+        n = len(infos)
+        i = 0
+        while i < n:
+            key = self._block_key(infos[i][0], infos[i][1])
+            if key is None:
+                i += 1
+                continue
+            j = i
+            while j < n and self._block_key(infos[j][0], infos[j][1]) == key:
+                j += 1
+                if (j - 1) in eval_rounds:
+                    break
+            start, left = i, j - i
+            while left:
+                k = 1 << (min(left, rpd).bit_length() - 1)
+                blocks[start] = k
+                start += k
+                left -= k
+            i = j
+        return blocks
+
+    def _exec_block(self, start: int, n_rounds: int, infos,
+                    out: dict) -> None:
+        """Run rounds [start, start+n_rounds) as one engine.block_step
+        dispatch; per-round loss slices (still device arrays) land in
+        `out`. Indices are drawn from self.rng with the identical
+        `choice` calls — same order, same arguments — that the per-round
+        path's _sample_batch would make, so the batch sequence is
+        bit-for-bit the reference one."""
+        sels = [infos[start + k][0] for k in range(n_rounds)]
+        counts = np.asarray([len(s) for s in sels], np.int64)
+        c_max = int(counts.max())
+        blen = self._block_key(sels[0], infos[start][1])[2]
+        cids = np.empty((n_rounds, c_max), np.int32)
+        idxs = np.empty((n_rounds, c_max, blen), np.int32)
+        sw = np.ones((n_rounds, c_max, blen), np.float32)
+        lams = np.empty((n_rounds, c_max), np.float64)
+        any_ragged = False
+        for k, sel in enumerate(sels):
+            lam_s = infos[start + k][1]
+            for j, n in enumerate(sel):
+                draw = self._draw_indices(self.clients[n])
+                m = len(draw)
+                cids[k, j] = n
+                lams[k, j] = lam_s[n]
+                if m < blen:             # ragged: repeat last drawn sample
+                    idxs[k, j, :m] = draw           # with weight 0, exactly
+                    idxs[k, j, m:] = draw[-1]       # like _sample_batch
+                    sw[k, j, m:] = 0.0
+                    any_ragged = True
+                else:
+                    idxs[k, j] = draw
+            c_k = len(sel)               # pad rows to c_max by replicating
+            cids[k, c_k:] = sel[-1]      # the round's last real client
+            idxs[k, c_k:] = idxs[k, c_k - 1]
+            sw[k, c_k:] = sw[k, c_k - 1]
+            lams[k, c_k:] = lam_s[sel[-1]]
+        store = self._ensure_store()
+        self._w, self._v, losses, _ = self.engine.block_step(
+            self._w, self._v, store, cids, idxs, lams, counts,
+            sample_weights=sw if any_ragged else None)
+        self.n_block_dispatches += 1
+        for k in range(n_rounds):
+            out[start + k] = losses[k, : int(counts[k])]
 
     # -- full run -----------------------------------------------------------
 
@@ -312,6 +464,16 @@ class FederatedTrainer:
         lazily (at eval points and at the end of the run): the packed round
         then never blocks on a device->host sync, so consecutive rounds
         pipeline on accelerators instead of serializing on `float(loss)`.
+
+        With ``rounds_per_dispatch > 1`` (packed backend) the schedule is
+        consumed in multi-round BLOCKS: the wireless bookkeeping and stop
+        conditions are schedule-pure, so they are precomputed, the
+        surviving rounds are partitioned into homogeneous blocks ending at
+        eval points (`_plan_blocks`), and each block runs as a single
+        `RoundEngine.block_step` dispatch with batches sampled on device —
+        no per-round dispatch, host sync, or batch upload. Per-round
+        metrics, eval cadence, stop behavior, and the training trajectory
+        (bit-for-bit on fp32 single-device) are unchanged.
         """
         history: list[RoundMetrics] = []
         # rounds whose train_loss is still an unmaterialized device array
@@ -326,22 +488,52 @@ class FederatedTrainer:
                     m.train_loss = float(arr.mean()) if arr.size else float("nan")
             pending.clear()
 
-        cum_t = cum_e = 0.0
         n_rounds = schedule.a.shape[0]
+        # Per-round host bookkeeping is schedule-pure (independent of
+        # training state), so compute it — and the stop-condition
+        # truncation — up front; the block partition then only has to
+        # respect eval boundaries.
+        infos = []
+        cum_t = cum_e = 0.0
         for s in range(n_rounds):
             a_s, lam_s = schedule.a[s], schedule.lam[s]
             p_s, f_s = schedule.power[s], schedule.freq[s]
             selected = [int(i) for i in np.flatnonzero(a_s > 0)]
-            losses = self._round(selected, lam_s) if selected else None
             d = round_delay(a_s, lam_s, p_s, f_s, h_up, h_down, sp)
             e = round_energy(a_s, lam_s, p_s, f_s, h_up, h_down, sp)
             cum_t += d
             cum_e += e
+            infos.append((selected, lam_s, d, e, cum_t, cum_e))
+            if stop_delay is not None and cum_t >= stop_delay:
+                break
+            if stop_energy is not None and cum_e >= stop_energy:
+                break
+
+        blocks: dict[int, int] = {}
+        if self.rounds_per_dispatch > 1 and self.backend == "packed":
+            eval_rounds = set()
+            if eval_fn is not None:
+                eval_rounds = {s for s in range(len(infos))
+                               if s % eval_every == 0}
+                eval_rounds.add(n_rounds - 1)
+            blocks = self._plan_blocks(infos, eval_rounds,
+                                       self.rounds_per_dispatch)
+
+        block_losses: dict[int, Any] = {}
+        for s, (selected, lam_s, d, e, cum_t, cum_e) in enumerate(infos):
+            if s in blocks:
+                self._exec_block(s, blocks[s], infos, block_losses)
+            if s in block_losses:
+                losses = block_losses.pop(s)
+            elif selected:
+                losses = self._round(selected, lam_s)
+            else:
+                losses = None
             m = RoundMetrics(
                 round=s,
                 train_loss=float("nan"),
                 selected=selected,
-                mean_lambda=float(lam_s[a_s > 0].mean()) if selected else 0.0,
+                mean_lambda=float(lam_s[selected].mean()) if selected else 0.0,
                 delay=d, energy=e,
                 cumulative_delay=cum_t, cumulative_energy=cum_e,
             )
@@ -350,9 +542,5 @@ class FederatedTrainer:
                 materialize()   # eval syncs anyway; drain the loss backlog
                 m.test_loss, m.test_accuracy = eval_fn(self.params)
             history.append(m)
-            if stop_delay is not None and cum_t >= stop_delay:
-                break
-            if stop_energy is not None and cum_e >= stop_energy:
-                break
         materialize()
         return history

@@ -20,6 +20,17 @@ Packing is a pure layout transform:
 
 Both ``pack`` and ``unpack`` are jittable and differentiable, so gradients
 can be taken directly with respect to the packed buffer.
+
+Buffer ownership and donation: the packed (w, v) buffers are long-lived
+device state owned by their trainer — `RoundEngine` steps them functionally
+by default, but an owner may opt into donation (``RoundEngine(donate=
+True)``), in which case the buffers are donated to each ``round_step`` /
+``block_step`` dispatch on accelerator backends and updated in place.
+Inside a multi-round block the (w, v) pair is additionally the
+``lax.scan`` carry, so XLA double-buffers it across the K rounds of the
+block without ever round-tripping it to host — callers must treat the
+passed-in buffers as consumed either way (`FederatedTrainer` reassigns
+them every dispatch).
 """
 from __future__ import annotations
 

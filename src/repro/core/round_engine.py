@@ -70,6 +70,27 @@ With ``donate=True`` (used by `FederatedTrainer`, which owns the buffers)
 the parameter / global-gradient buffers are donated to the step on
 accelerator backends and updated in place round over round; the default
 keeps ``round_step`` purely functional.
+
+Multi-round blocks (``block_step``)
+-----------------------------------
+``round_step`` still pays one dispatch + one stacked-batch host->device
+upload per round. ``block_step`` removes both: client datasets live on
+device in a `ClientStore` (core/client_store.py), batches are gathered on
+device from host-drawn index arrays ``[K, C, B]`` (the indices come from
+the trainer's existing numpy RNG, so the batch sequence — and bit-for-bit
+parity — is preserved), the schedule is stacked into ``[K]``-leading
+arrays (client ids, ks, client weights, 1/C), and a `lax.scan` over the
+round axis runs K rounds in ONE jitted dispatch, carrying (w, v). Per-round
+losses come back as a ``[K, C_b]`` device array that drops into the
+trainer's lazy-materialization path. K is bucketed the same power-of-two
+way as the client axis (the trainer decomposes arbitrary block lengths into
+pow2 chunks instead of padding — padded rounds would cost full gradient
+FLOPs), so AO-driven varying (C, K, lambda) schedules stay within
+``(log2(C_max)+1) * (log2(K_max)+1)`` traces per lambda family
+(`n_traces` / `buckets_used` / `k_buckets_used` account for it). On a mesh
+each scan step wraps the same shard_map region the per-round sharded path
+uses — still exactly one `psum` per round, with the store replicated so
+every device gathers from local memory.
 """
 from __future__ import annotations
 
@@ -90,7 +111,8 @@ PyTree = Any
 
 def kth_smallest_threshold(q: jnp.ndarray, prunable: jnp.ndarray,
                            k: jnp.ndarray, *,
-                           coarse: str | None = None) -> jnp.ndarray:
+                           coarse: str | None = None,
+                           hist_impl: str = "auto") -> jnp.ndarray:
     """Threshold such that exactly k prunable entries are strictly below it.
 
     Matches `pruning.global_threshold` bit-for-bit: the k-th smallest
@@ -114,6 +136,13 @@ def kth_smallest_threshold(q: jnp.ndarray, prunable: jnp.ndarray,
     the seven count passes it saves (measured, see ROADMAP) — so CPU keeps
     the pure bisection. Both modes are exact and tested against the host
     oracle.
+
+    `hist_impl` picks how the histogram pass is computed when
+    ``coarse="histogram"``: "pallas" uses the tiled exponent-histogram
+    kernel (per-block bin counts accumulated in VMEM scratch — no
+    scatter-add; requires a packed [R, 128*k] layout), "xla" the
+    scatter-add mirror, "auto" pallas on TPU and xla elsewhere
+    (`kernels/ops.packed_exponent_histogram`).
     """
     if coarse is None:
         coarse = "histogram" if jax.default_backend() == "tpu" else "bisect"
@@ -134,8 +163,7 @@ def kth_smallest_threshold(q: jnp.ndarray, prunable: jnp.ndarray,
         # pass 1/24: exponent-byte histogram; cum[b] = #valid, top byte <= b.
         # The k-th smallest lives in the first bin whose cumulative count
         # reaches k, which pins bits 30..23 of the answer in one data scan.
-        hist = jnp.zeros((256,), jnp.int32).at[bits >> 23].add(
-            valid.astype(jnp.int32))
+        hist = ops.packed_exponent_histogram(q, prunable, impl=hist_impl)
         cum = jnp.cumsum(hist)
         # clamp: k beyond the valid count would return 256 and overflow the
         # shift; bin 255 then degrades to the same max-element answer the
@@ -211,11 +239,17 @@ class RoundEngine:
         # lambda family regardless of how C varies round to round
         self.n_traces = 0
         self.buckets_used: set[int] = set()
-        # device-array caches for the per-round auxiliary inputs (all-ones
-        # sample weights by [C_b, B]; 0/1 client weights by (C_b, C)):
-        # reusing them avoids two host->device transfers per round
-        self._sw_cache: dict[tuple[int, int], jnp.ndarray] = {}
-        self._cw_cache: dict[tuple[int, int], jnp.ndarray] = {}
+        self.k_buckets_used: set[int] = set()
+        # device-array caches for the per-round / per-block auxiliary
+        # inputs: all-ones sample weights by shape (block keys tagged
+        # "blk" — same shape family, different rank) and the per-round
+        # path's 0/1 client weights by (bucket, selected count). Both key
+        # sets are bounded by the bucket ladder; block client weights are
+        # instead derived on device from the [K] counts array (a cache
+        # keyed by the full counts tuple would almost never hit under an
+        # AO schedule and would grow without bound).
+        self._sw_cache: dict[tuple, jnp.ndarray] = {}
+        self._cw_cache: dict[tuple, jnp.ndarray] = {}
 
         if self.shards > 1:
             # client axis sharded over the data axis of a host mesh; layered
@@ -243,15 +277,24 @@ class RoundEngine:
         donate_args = ((0, 1) if donate
                        and jax.default_backend() in ("tpu", "gpu") else ())
         if self.mesh is None:
+            round_shared, round_multi = self._round_shared, self._round_multi
             self._step_shared = jax.jit(self._shared_impl,
                                         donate_argnums=donate_args)
             self._step_multi = jax.jit(self._multi_impl,
                                        donate_argnums=donate_args)
         else:
+            round_shared = self._round_shared_sharded
+            round_multi = self._round_multi_sharded
             self._step_shared = jax.jit(self._shared_sharded_impl,
                                         donate_argnums=donate_args)
             self._step_multi = jax.jit(self._multi_sharded_impl,
                                        donate_argnums=donate_args)
+        # block dispatches wrap the SAME per-round bodies in the scan
+        # scaffold, so block and per-round modes can never diverge
+        self._blk_shared = jax.jit(self._make_block_impl(round_shared),
+                                   donate_argnums=donate_args)
+        self._blk_multi = jax.jit(self._make_block_impl(round_multi),
+                                  donate_argnums=donate_args)
 
     # -- jitted bodies ------------------------------------------------------
 
@@ -313,8 +356,10 @@ class RoundEngine:
         _, (losses, grads) = jax.lax.scan(body, 0.0, (masks, xs, ys, sw))
         return losses, grads
 
-    def _shared_impl(self, w, v, xs, ys, sw, cw, inv, k):
-        self.n_traces += 1
+    def _round_shared(self, w, v, xs, ys, sw, cw, inv, k):
+        """One shared-lambda round, given device batches — the single body
+        traced by both the per-round jit and the block scan, so the two
+        paths compile the identical round math (bit-for-bit contract)."""
         q = (w * v) ** 2
         thr = kth_smallest_threshold(q, self.prunable, k)
         _, mask = ops.packed_importance_mask(w, v, self.prunable, thr,
@@ -326,8 +371,8 @@ class RoundEngine:
             w, grads, cw, inv, self.eta, impl=self.kernel_impl)
         return w2, g, losses, thr, step
 
-    def _multi_impl(self, w, v, xs, ys, sw, cw, inv, ks):
-        self.n_traces += 1
+    def _round_multi(self, w, v, xs, ys, sw, cw, inv, ks):
+        """One per-client-lambda round (see _round_shared)."""
         q = (w * v) ** 2
         thr = kth_smallest_threshold(q, self.prunable, ks)      # [C]
         _, masks = ops.packed_importance_masks(w, v, self.prunable, thr,
@@ -336,6 +381,52 @@ class RoundEngine:
         w2, g, step = ops.packed_fedsgd_update_weighted(
             w, grads, cw, inv, self.eta, impl=self.kernel_impl)
         return w2, g, losses, thr, step
+
+    def _shared_impl(self, w, v, xs, ys, sw, cw, inv, k):
+        self.n_traces += 1
+        return self._round_shared(w, v, xs, ys, sw, cw, inv, k)
+
+    def _multi_impl(self, w, v, xs, ys, sw, cw, inv, ks):
+        self.n_traces += 1
+        return self._round_multi(w, v, xs, ys, sw, cw, inv, ks)
+
+    # -- block scaffold: lax.scan over the round axis -----------------------
+
+    def _make_block_impl(self, round_fn):
+        """K rounds per dispatch around any of the four per-round bodies:
+        the scan carries (w, v) and consumes [K]-leading stacked schedule
+        arrays; batches are gathered ON DEVICE from the ClientStore
+        buffers (dx, dy) via host-drawn indices (`ClientStore.gather` is
+        the reference form of the same expression), so no batch data
+        crosses host->device inside a block. One scaffold serves the
+        shared/multi x unsharded/sharded grid — each scan step is exactly
+        the corresponding per-round body, which is what makes a block
+        bit-for-bit equal to K round_step dispatches."""
+
+        def impl(w, v, dx, dy, cids, idxs, sw, counts, inv, ks):
+            self.n_traces += 1
+            # 0/1 client-validity weights straight from the per-round real
+            # counts — built on device (exact 0.0/1.0, so the weighted
+            # aggregate is unchanged bit for bit), because host-building
+            # them per block would mean an uncacheable [K, C_b] upload for
+            # every distinct counts vector an AO schedule produces
+            cw = (jnp.arange(cids.shape[1])[None, :]
+                  < counts[:, None]).astype(jnp.float32)
+
+            def body(carry, inp):
+                w, v = carry
+                cid, ix, sw_k, cw_k, inv_k, k = inp
+                xs = dx[cid[:, None], ix]
+                ys = dy[cid[:, None], ix]
+                w2, g, losses, thr, _ = round_fn(
+                    w, v, xs, ys, sw_k, cw_k, inv_k, k)
+                return (w2, g), (losses, thr)
+
+            (w2, v2), (losses, thrs) = jax.lax.scan(
+                body, (w, v), (cids, idxs, sw, cw, inv, ks))
+            return w2, v2, losses, thrs
+
+        return impl
 
     # -- sharded bodies: client axis over the mesh data axis ----------------
     #
@@ -346,8 +437,13 @@ class RoundEngine:
     # per-shard gradient sums. The FedSGD update then runs replicated so
     # (w, v) never need resharding between rounds.
 
-    def _shared_sharded_impl(self, w, v, xs, ys, sw, cw, inv, k):
-        self.n_traces += 1
+    def _round_shared_sharded(self, w, v, xs, ys, sw, cw, inv, k):
+        """Mesh variant of _round_shared: threshold / mask / FedSGD update
+        replicated OUTSIDE the shard_map region (the shard_map replication
+        checker has no rule for the `while` ops inside the threshold
+        search and the FMA fence), per-shard gradient scan + the round's
+        single psum inside. Traced by both the per-round jit and the block
+        scan, like its single-device sibling."""
         q = (w * v) ** 2
         thr = kth_smallest_threshold(q, self.prunable, k)
         _, mask = ops.packed_importance_mask(w, v, self.prunable, thr,
@@ -366,8 +462,8 @@ class RoundEngine:
         w2, g, step = ops.packed_apply_mean_update(w, gsum, inv, self.eta)
         return w2, g, losses, thr, step
 
-    def _multi_sharded_impl(self, w, v, xs, ys, sw, cw, inv, ks):
-        self.n_traces += 1
+    def _round_multi_sharded(self, w, v, xs, ys, sw, cw, inv, ks):
+        """Mesh variant of _round_multi (see _round_shared_sharded)."""
         q = (w * v) ** 2
         thr = kth_smallest_threshold(q, self.prunable, ks)      # [C]
 
@@ -388,6 +484,14 @@ class RoundEngine:
                 w, v, self.prunable, thr, xs, ys, sw, cw)
         w2, g, step = ops.packed_apply_mean_update(w, gsum, inv, self.eta)
         return w2, g, losses, thr, step
+
+    def _shared_sharded_impl(self, w, v, xs, ys, sw, cw, inv, k):
+        self.n_traces += 1
+        return self._round_shared_sharded(w, v, xs, ys, sw, cw, inv, k)
+
+    def _multi_sharded_impl(self, w, v, xs, ys, sw, cw, inv, ks):
+        self.n_traces += 1
+        return self._round_multi_sharded(w, v, xs, ys, sw, cw, inv, ks)
 
     # -- public API ---------------------------------------------------------
 
@@ -467,3 +571,86 @@ class RoundEngine:
             if thr.ndim:                      # per-client thresholds
                 thr = thr[:n_clients]
         return w2, g, losses, thr, step
+
+    def block_step(self, w, v, store, cids, idxs, lams, counts,
+                   sample_weights=None):
+        """K rounds in ONE jitted dispatch (`lax.scan` over the round axis).
+
+        store : ClientStore — device-resident [C_all, N_max, ...] data.
+        cids  : [K, C] int  — selected client ids per round in selected
+            order; rounds with fewer than C clients are right-padded by
+            replicating their last real id (exactly the per-round path's
+            padding-client convention).
+        idxs  : [K, C, B] int — host-drawn sample indices into each
+            client's store rows. Drawing them from the same numpy RNG
+            stream as `_sample_batch` keeps the batch sequence — and the
+            bit-for-bit contract with the reference loop — intact.
+        lams  : [K, C] float — pruning ratios, padded like cids.
+        counts: [K] int     — real selected count per round.
+        sample_weights : [K, C, B] 0/1 weights or None (ragged clients
+            padded to B carry 0 on their repeat samples).
+
+        Returns (w', v', losses [K, C_b], thresholds [K] or [K, C_b]) —
+        all device arrays, nothing synced; `losses[k, counts[k]:]` belongs
+        to padding clients (callers slice). Batch DATA never crosses
+        host->device here — only O(K*C*B) int32 index/schedule arrays do.
+
+        The client axis buckets exactly like `round_step` (all rounds in a
+        block must share one bucket — the trainer groups rounds so this
+        holds); K is NOT padded — padding rounds would cost full gradient
+        FLOPs — so callers keep K on a pow2 ladder by decomposition, and
+        `k_buckets_used` records the ladder for the trace-bound tests.
+        """
+        lams = np.asarray(lams, np.float64)
+        if np.any((lams < 0.0) | (lams >= 1.0)):
+            raise ValueError(f"lambda must be in [0,1), got {lams}")
+        n_rounds, c_max, batch = idxs.shape
+        counts = np.asarray(counts, np.int64)
+        if counts.shape != (n_rounds,) or cids.shape != (n_rounds, c_max) \
+                or lams.shape != (n_rounds, c_max):
+            raise ValueError("inconsistent block array shapes")
+        if int(counts.max()) > c_max or int(counts.min()) < 1:
+            raise ValueError(f"counts {counts} outside [1, {c_max}]")
+        ks = np.floor(lams * self.pack.n_prunable).astype(np.int32)
+
+        c_b = self.bucket_size(int(counts.max()))
+        if self.bucket_size(int(counts.min())) != c_b:
+            raise ValueError(
+                "rounds in one block must share a client-axis bucket "
+                f"(got counts {counts} -> buckets "
+                f"{sorted({self.bucket_size(int(c)) for c in counts})})")
+        self.buckets_used.add(c_b)
+        self.k_buckets_used.add(n_rounds)
+        pad = c_b - c_max
+
+        def pad_cols(a):
+            return np.concatenate(
+                [a, np.repeat(a[:, -1:], pad, axis=1)], axis=1) if pad else a
+
+        cids = pad_cols(np.asarray(cids, np.int32))
+        idxs = pad_cols(np.asarray(idxs, np.int32))
+        ks = pad_cols(ks)
+        if sample_weights is None:
+            key = ("blk", n_rounds, c_b, batch)
+            sw = self._sw_cache.get(key)
+            if sw is None:
+                sw = self._sw_cache[key] = jnp.ones(key[1:], jnp.float32)
+        else:
+            sw = jnp.asarray(pad_cols(
+                np.asarray(sample_weights, np.float32)))
+        # per-round 1/C on host, like the reference server_step's
+        # 1/len(grads); the 0/1 client weights are derived from `counts`
+        # on device inside the block impl (no per-block [K, C_b] upload)
+        inv = jnp.asarray((1.0 / counts).astype(np.float32))
+        counts_dev = jnp.asarray(counts.astype(np.int32))
+
+        shared = bool((ks == ks[:, :1]).all())
+        if shared:
+            out = self._blk_shared(w, v, store.x, store.y, jnp.asarray(cids),
+                                   jnp.asarray(idxs), sw, counts_dev, inv,
+                                   jnp.asarray(ks[:, 0]))
+        else:
+            out = self._blk_multi(w, v, store.x, store.y, jnp.asarray(cids),
+                                  jnp.asarray(idxs), sw, counts_dev, inv,
+                                  jnp.asarray(ks))
+        return out

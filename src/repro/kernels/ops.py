@@ -128,6 +128,28 @@ def packed_importance_masks(w, v, prunable, thresholds, *, impl="auto"):
     return q, jnp.where(prunable[None] > 0, keep, 1.0)
 
 
+@functools.partial(jax.jit, static_argnames=("impl",))
+def packed_exponent_histogram(q, prunable, *, impl="auto"):
+    """256-bin histogram of fp32 exponent bytes over valid coordinates.
+
+    The coarse first pass of ``kth_smallest_threshold(coarse="histogram")``
+    (core/round_engine.py): bin b counts coordinates with
+    ``bits(q) >> 23 == b`` and prunable > 0. ``impl="pallas"`` runs the
+    tiled kernel (per-block bin counts in VMEM scratch, compare-reduce
+    instead of scatter — requires the packed [R, 128*k] layout and falls
+    back to the mirror otherwise); "xla" is the scatter-add mirror, exact
+    everywhere but ~130 ns/element on CPU (why coarse="auto" keeps plain
+    bisection there, see ROADMAP)."""
+    if _resolve_impl(impl) == "pallas" and q.ndim == 2 \
+            and q.shape[1] % LANES == 0:
+        return _pm.exponent_histogram(
+            q, prunable, block_rows=_packed_block_rows(q.shape[0]))
+    bits = jax.lax.bitcast_convert_type(q.reshape(-1), jnp.int32)
+    valid = prunable.reshape(-1) > 0
+    return jnp.zeros((256,), jnp.int32).at[bits >> 23].add(
+        valid.astype(jnp.int32))
+
+
 def _rounded_product(eta, g):
     """eta * g rounded to fp32 *before* any consumer sees it.
 

@@ -34,6 +34,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 LANES = 128
 
@@ -222,6 +223,77 @@ def fedsgd_aggregate_weighted(w, grads, cweights, inv, eta, *,
                    jax.ShapeDtypeStruct((r, c), jnp.float32)],
         interpret=interpret,
     )(w, grads, cw, scal)
+
+
+def _exponent_histogram_kernel(q_ref, pr_ref, hist_ref, acc_ref):
+    """256-bin histogram over the exponent byte of non-negative fp32 q.
+
+    Per grid block: bin counts accumulate in the VMEM scratch `acc_ref`
+    (laid out (2, 128) so the bin axis tiles the VPU lanes), built by a
+    compare-against-bin-iota reduction over row chunks — no scatter-add,
+    which XLA:CPU serializes at ~130 ns/element and which TPU lowers
+    poorly for int32. Grid steps are sequential on TPU, so the running
+    total in `hist_ref` (same output block every step) is race-free."""
+    rows = q_ref.shape[0]
+    chunk = min(rows, 8)
+    while rows % chunk:
+        chunk -= 1
+    # bins as a 2D iota (TPU requires >= 2D); bin id = 128*sub + lane
+    bins = jax.lax.broadcasted_iota(jnp.int32, (256, 1), 0)
+
+    acc_ref[...] = jnp.zeros((2, 128), jnp.int32)
+
+    def body(c, carry):
+        q = q_ref[pl.ds(c * chunk, chunk), :].astype(jnp.float32)
+        valid = pr_ref[pl.ds(c * chunk, chunk), :] > 0
+        byte = jax.lax.bitcast_convert_type(q, jnp.int32) >> 23
+        flat = byte.reshape(1, -1)
+        ones = jnp.where(valid.reshape(1, -1), 1, 0)
+        acc_ref[...] += jnp.sum(jnp.where(flat == bins, ones, 0),
+                                axis=1).reshape(2, 128)
+        return carry
+
+    jax.lax.fori_loop(0, rows // chunk, body, 0)
+
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        hist_ref[...] = acc_ref[...]
+
+    @pl.when(i > 0)
+    def _accum():
+        hist_ref[...] += acc_ref[...]
+
+
+def exponent_histogram(q, prunable, *, block_rows: int = 256,
+                       interpret: bool | None = None):
+    """Counts of valid coordinates per fp32 exponent byte.
+
+    q (non-negative fp32), prunable: [R, 128*k] -> [256] int32, where bin
+    b counts coordinates with ``bits(q) >> 23 == b`` and prunable > 0 —
+    the coarse first pass of `kth_smallest_threshold(coarse="histogram")`
+    (core/round_engine.py), whose cumulative sum pins the top 8 bits of
+    the k-th smallest importance in one data scan."""
+    r, c = q.shape
+    if c % LANES:
+        raise ValueError(f"last dim must be a multiple of {LANES}")
+    br = min(block_rows, r)
+    if r % br:
+        raise ValueError(f"rows {r} must divide block {br}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    spec = pl.BlockSpec((br, c), lambda i: (i, 0))
+    hist = pl.pallas_call(
+        _exponent_histogram_kernel,
+        grid=(r // br,),
+        in_specs=[spec, spec],
+        out_specs=pl.BlockSpec((2, 128), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((2, 128), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((2, 128), jnp.int32)],
+        interpret=interpret,
+    )(q, prunable)
+    return hist.reshape(256)
 
 
 def _masked_update_kernel(w_ref, g_ref, m_ref, eta_ref, o_ref):

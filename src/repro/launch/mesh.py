@@ -45,6 +45,19 @@ def make_host_mesh(*, model: int | None = None, data: int | None = None):
     return Mesh(devs, ("data", "model"))
 
 
+def replicate(tree, mesh):
+    """device_put every array in `tree` fully replicated over `mesh`.
+
+    Used for operands that every shard reads whole — e.g. the block
+    engine's `ClientStore` buffers: committing them once with an empty
+    PartitionSpec means the jitted shard_map step never has to re-transfer
+    or re-lay-out the data on each dispatch."""
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    sharding = NamedSharding(mesh, PartitionSpec())
+    return jax.tree.map(lambda a: jax.device_put(a, sharding), tree)
+
+
 # TPU v5e hardware constants (per chip) for the roofline (EXPERIMENTS.md).
 PEAK_FLOPS_BF16 = 197e12       # FLOP/s
 HBM_BW = 819e9                 # bytes/s

@@ -1,0 +1,346 @@
+"""Multi-round block engine: `RoundEngine.block_step` (lax.scan over the
+schedule) + the trainer's block partitioning and on-device client store.
+
+Parity contract under test: a K-round block is bit-for-bit equal to K
+sequential `round_step` dispatches AND to ``backend="reference"`` on fp32
+single-device runs — shared-lambda, per-client-lambda, ragged clients, and
+varying AO-style selection included — while compiling a bounded number of
+traces and uploading ZERO per-round batch data.
+
+The sharded tests need a multi-device host; scripts/test.sh reruns this
+file under XLA_FLAGS=--xla_force_host_platform_device_count=4 (the sharded
+smoke leg), which un-skips them and runs every other test here on the
+mesh-parallel block path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _trainer_pair import (assert_trainers_bitwise, make_schedule,
+                           run_pair)
+from repro.core import ClientData, FederatedTrainer, ParamPack, RoundEngine
+from repro.core.client_store import ClientStore
+from repro.data import make_dataset
+from repro.models import lenet_init, lenet_apply, make_loss_fn
+from repro.wireless import ChannelModel, SystemParams
+
+multidevice = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs a multi-device host "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+
+
+def _hetero_env(sizes, seed=0):
+    ds = make_dataset("synthetic-mnist", n_train=sum(sizes),
+                      n_test=60, seed=seed)
+    off = np.cumsum([0] + list(sizes))
+    clients = [ClientData(ds.x_train[a:b], ds.y_train[a:b])
+               for a, b in zip(off, off[1:])]
+    return clients, lenet_init(jax.random.key(seed)), make_loss_fn(lenet_apply)
+
+
+def _varying_schedule(n, rounds, seed, min_sel=1):
+    rng = np.random.default_rng(seed)
+    a = np.zeros((rounds, n))
+    for s in range(rounds):
+        sel = rng.choice(n, size=rng.integers(min_sel, n + 1), replace=False)
+        a[s, sel] = 1.0
+    return a
+
+
+# -- client store ------------------------------------------------------------
+
+
+def test_client_store_matches_host_upload():
+    """Gathered batches are bitwise what the per-round path would upload."""
+    clients, _, _ = _hetero_env([40, 20, 7])
+    store = ClientStore.build(clients)
+    assert store.n_clients == 3
+    assert list(store.counts) == [40, 20, 7]
+    assert store.x.shape[1] == 40 and store.nbytes > 0
+    rng = np.random.default_rng(0)
+    idx = np.stack([rng.choice(len(c), size=5) for c in clients])
+    cids = jnp.asarray([0, 1, 2], jnp.int32)
+    xs, ys = store.gather(cids, jnp.asarray(idx, jnp.int32))
+    for c in range(3):
+        assert bool(jnp.all(xs[c] == jnp.asarray(clients[c].x[idx[c]])))
+        assert bool(jnp.all(ys[c] == jnp.asarray(clients[c].y[idx[c]])))
+    # dtypes canonicalize exactly like the per-round jnp.asarray upload
+    assert xs.dtype == jnp.asarray(clients[0].x).dtype
+    assert ys.dtype == jnp.asarray(clients[0].y).dtype
+
+
+# -- engine-level block parity ----------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def block_env():
+    clients, params, loss_fn = _hetero_env([120, 90, 90])
+    pack = ParamPack.build(params)
+    eng = RoundEngine(loss_fn, pack, eta=0.1, shards=1,
+                      weighted_loss_fn=loss_fn.weighted)
+    return clients, params, loss_fn, pack, eng
+
+
+def _draws(clients, cids_row, batch, rng):
+    return np.stack([rng.choice(len(clients[c]), size=batch,
+                                replace=len(clients[c]) < batch)
+                     for c in cids_row]).astype(np.int32)
+
+
+@pytest.mark.parametrize("family", ["shared", "multi"])
+def test_block_step_bitwise_equals_sequential_round_steps(block_env, family):
+    clients, params, loss_fn, pack, eng = block_env
+    store = ClientStore.build(clients)
+    k_rounds, n_c, batch = 4, 3, 8
+    rng = np.random.default_rng(0)
+    cids = np.broadcast_to(np.arange(n_c, dtype=np.int32),
+                           (k_rounds, n_c)).copy()
+    idxs = np.stack([_draws(clients, cids[k], batch, rng)
+                     for k in range(k_rounds)])
+    if family == "shared":
+        # per-round varying shared lambda (round 0 warms v at lam=0)
+        lams = np.broadcast_to(np.asarray([0.0, 0.2, 0.3, 0.4])[:, None],
+                               (k_rounds, n_c)).copy()
+    else:
+        lams = np.broadcast_to(np.asarray([0.1, 0.3, 0.45]),
+                               (k_rounds, n_c)).copy()
+    counts = np.full(k_rounds, n_c)
+
+    w0, v0 = eng.init_buffers(params)
+    w, v = w0, v0
+    seq_losses, seq_thrs = [], []
+    for k in range(k_rounds):
+        xs = jnp.asarray(np.stack([clients[c].x[idxs[k][c]]
+                                   for c in range(n_c)]))
+        ys = jnp.asarray(np.stack([clients[c].y[idxs[k][c]]
+                                   for c in range(n_c)]))
+        w, v, losses, thr, _ = eng.round_step(w, v, xs, ys, lams[k])
+        seq_losses.append(np.asarray(losses))
+        seq_thrs.append(np.asarray(thr))
+
+    w_b, v_b, losses_b, thr_b = eng.block_step(
+        w0, v0, store, cids, idxs, lams, counts)
+    assert bool(jnp.all(w_b == w))
+    assert bool(jnp.all(v_b == v))
+    assert bool(jnp.all(jnp.asarray(np.stack(seq_losses))
+                        == losses_b[:, :n_c]))
+    if family == "shared":
+        assert thr_b.shape == (k_rounds,)
+        assert np.array_equal(np.stack(seq_thrs), np.asarray(thr_b))
+    else:
+        assert thr_b.shape[0] == k_rounds
+        assert np.array_equal(np.stack(seq_thrs),
+                              np.asarray(thr_b)[:, :n_c])
+
+
+def test_block_step_validates_inputs(block_env):
+    clients, params, _, _, eng = block_env
+    store = ClientStore.build(clients)
+    w, v = eng.init_buffers(params)
+    cids = np.zeros((2, 2), np.int32)
+    idxs = np.zeros((2, 2, 4), np.int32)
+    with pytest.raises(ValueError):        # lambda out of range
+        eng.block_step(w, v, store, cids, idxs, np.full((2, 2), 1.0),
+                       np.full(2, 2))
+    with pytest.raises(ValueError):        # count exceeds array width
+        eng.block_step(w, v, store, cids, idxs, np.full((2, 2), 0.2),
+                       np.asarray([2, 3]))
+    with pytest.raises(ValueError):        # mixed buckets in one block
+        eng.block_step(w, v, store,
+                       np.zeros((2, 3), np.int32),
+                       np.zeros((2, 3, 4), np.int32),
+                       np.full((2, 3), 0.2), np.asarray([1, 3]))
+
+
+# -- trainer-level block parity ----------------------------------------------
+
+
+def test_block_trainer_bitwise_vs_reference_varying_schedule():
+    """AO-style varying selection (varying C, ragged stragglers, eval
+    boundaries) through rounds_per_dispatch=4: bit-for-bit equal to the
+    reference backend, zero fallbacks, zero per-round batch uploads, and a
+    bounded trace count over the (C, K) bucket grid."""
+    sizes = [60, 40, 30, 25, 20, 18, 10, 7, 3]
+    clients, params, loss_fn = _hetero_env(sizes)
+    a = _varying_schedule(len(sizes), 20, seed=5)
+    out = run_pair(clients, params, loss_fn, make_schedule(a, 0.3),
+                   shards=1, rounds_per_dispatch=4)
+    (tr_ref, h_ref), (tr_pk, h_pk) = out["reference"], out["packed"]
+    assert tr_pk.n_fallback_rounds == 0
+    assert tr_pk.n_batch_uploads == 0
+    assert tr_pk.n_block_dispatches > 0
+    for mr, mp in zip(h_ref, h_pk):
+        assert mr.train_loss == mp.train_loss
+    assert_trainers_bitwise(tr_ref, tr_pk)
+    eng = tr_pk.engine
+    assert eng.k_buckets_used <= {1, 2, 4}           # pow2 ladder, <= rpd
+    assert eng.n_traces <= len(eng.buckets_used) * len(eng.k_buckets_used)
+
+
+def test_block_trainer_per_client_lambda_bitwise():
+    sizes = [60, 40, 30, 20, 10]
+    clients, params, loss_fn = _hetero_env(sizes)
+    a = _varying_schedule(len(sizes), 12, seed=9, min_sel=2)
+    lam = np.broadcast_to(np.linspace(0.1, 0.5, len(sizes)), a.shape)
+    out = run_pair(clients, params, loss_fn, make_schedule(a, lam),
+                   shards=1, rounds_per_dispatch=8)
+    (tr_ref, _), (tr_pk, _) = out["reference"], out["packed"]
+    assert tr_pk.n_fallback_rounds == 0
+    assert tr_pk.n_batch_uploads == 0
+    assert tr_pk.engine.n_traces <= (len(tr_pk.engine.buckets_used)
+                                     * len(tr_pk.engine.k_buckets_used))
+    assert_trainers_bitwise(tr_ref, tr_pk)
+
+
+def test_block_mode_matches_per_round_with_eval_and_stop():
+    """Eval cadence (blocks must end at eval rounds) and stop conditions
+    (schedule truncation) behave identically in block and per-round mode —
+    including the eval numbers, which are bitwise because params are."""
+    sizes = [60, 40, 30, 20]
+    clients, params, loss_fn = _hetero_env(sizes)
+    ds = make_dataset("synthetic-mnist", n_train=150, n_test=80, seed=3)
+    from repro.models import make_eval_fn
+    eval_fn = make_eval_fn(lenet_apply, ds.x_test, ds.y_test)
+    n = len(sizes)
+    a = np.ones((11, n))
+    hists = {}
+    for rpd in (1, 8):
+        tr = FederatedTrainer(loss_fn, params, clients, eta=0.1,
+                              batch_size=16, seed=0, backend="packed",
+                              shards=1, rounds_per_dispatch=rpd)
+        sp = SystemParams.table1(n)
+        ch = ChannelModel(n)
+        hists[rpd] = tr.run(make_schedule(a, 0.3), sp, ch.uplink, ch.downlink,
+                            eval_fn=eval_fn, eval_every=3,
+                            stop_delay=None)
+    assert len(hists[1]) == len(hists[8])
+    for m1, mb in zip(hists[1], hists[8]):
+        assert m1.train_loss == mb.train_loss
+        assert m1.test_loss == mb.test_loss
+        assert m1.test_accuracy == mb.test_accuracy
+    # stop_delay truncation: identical history length + metrics
+    for rpd in (1, 8):
+        tr = FederatedTrainer(loss_fn, params, clients, eta=0.1,
+                              batch_size=16, seed=0, backend="packed",
+                              shards=1, rounds_per_dispatch=rpd)
+        sp = SystemParams.table1(n)
+        ch = ChannelModel(n)
+        hists[rpd] = tr.run(make_schedule(a, 0.3), sp, ch.uplink, ch.downlink,
+                            stop_delay=hists[1][4].cumulative_delay)
+    assert len(hists[1]) == len(hists[8]) == 5
+    for m1, mb in zip(hists[1], hists[8]):
+        assert m1.train_loss == mb.train_loss
+
+
+def test_block_mode_empty_rounds_and_fallback_rounds_interleave():
+    """Rounds the block path cannot take (empty selection; mixed-length
+    batches without a weighted loss) still run exactly as before, with
+    blocks resuming around them."""
+    sizes = [40, 30, 7]                     # 7 < batch 16 -> ragged
+    clients, params, loss_fn = _hetero_env(sizes)
+    n = len(sizes)
+    a = np.ones((6, n))
+    a[2] = 0.0                              # empty round mid-schedule
+    # strip the weighted loss: ragged rounds must fall back per-round
+    def bare_loss(p, x, y):
+        return loss_fn(p, x, y)
+    out = run_pair(clients, params, bare_loss, make_schedule(a, 0.3),
+                   shards=1, rounds_per_dispatch=4)
+    (tr_ref, h_ref), (tr_pk, h_pk) = out["reference"], out["packed"]
+    assert tr_pk.n_fallback_rounds == 5     # every non-empty round is mixed
+    for mr, mp in zip(h_ref, h_pk):
+        assert (np.isnan(mr.train_loss) and np.isnan(mp.train_loss)) \
+            or mr.train_loss == mp.train_loss
+    assert_trainers_bitwise(tr_ref, tr_pk)
+
+
+def test_block_auto_resolution():
+    sizes = [40, 30]
+    clients, params, loss_fn = _hetero_env(sizes)
+    tr = FederatedTrainer(loss_fn, params, clients, eta=0.1, batch_size=8,
+                          seed=0, backend="packed")
+    expect = 1 if jax.default_backend() == "cpu" else 32
+    assert tr.rounds_per_dispatch == expect
+    tr = FederatedTrainer(loss_fn, params, clients, eta=0.1, batch_size=8,
+                          seed=0, backend="reference",
+                          rounds_per_dispatch=16)
+    assert tr.rounds_per_dispatch == 1      # reference never blocks
+    with pytest.raises(ValueError):
+        FederatedTrainer(loss_fn, params, clients, eta=0.1, batch_size=8,
+                         seed=0, backend="packed", rounds_per_dispatch=0)
+
+
+def test_trace_bound_over_varying_c_k_lambda():
+    """50 AO-style rounds with varying C, varying shared lambda, ragged
+    stragglers, rpd=8: compiled traces stay within the (C-bucket x
+    K-bucket) grid — no retrace storm from block mode."""
+    sizes = [60, 40, 30, 25, 20, 18, 10, 7, 3]
+    clients, params, loss_fn = _hetero_env(sizes)
+    n = len(sizes)
+    a = _varying_schedule(n, 50, seed=11)
+    rng = np.random.default_rng(12)
+    lam = np.broadcast_to(
+        np.round(rng.uniform(0.1, 0.5, size=(50, 1)), 2), a.shape)
+    tr = FederatedTrainer(loss_fn, params, clients, eta=0.1, batch_size=16,
+                          seed=0, backend="packed", shards=1,
+                          rounds_per_dispatch=8)
+    sp = SystemParams.table1(n)
+    ch = ChannelModel(n)
+    tr.run(make_schedule(a, lam), sp, ch.uplink, ch.downlink)
+    eng = tr.engine
+    assert tr.n_batch_uploads == 0
+    assert eng.k_buckets_used <= {1, 2, 4, 8}
+    assert eng.n_traces <= len(eng.buckets_used) * len(eng.k_buckets_used)
+    # the bound is meaningfully below one-trace-per-round
+    assert eng.n_traces < 50
+
+
+# -- sharded block path (multi-device host) ----------------------------------
+
+
+@multidevice
+def test_sharded_block_matches_sharded_per_round():
+    """Block mode on the mesh: bitwise-equal losses to the sharded
+    per-round path (identical math modulo program structure) and params
+    matching within the same tolerance the sharded per-round tests use."""
+    sizes = [60, 30, 20, 10, 7, 3]
+    clients, params, loss_fn = _hetero_env(sizes)
+    n = len(sizes)
+    a = _varying_schedule(n, 8, seed=3, min_sel=2)
+    hists, trs = {}, {}
+    for rpd in (1, 4):
+        tr = FederatedTrainer(loss_fn, params, clients, eta=0.1,
+                              batch_size=16, seed=0, backend="packed",
+                              rounds_per_dispatch=rpd)
+        sp = SystemParams.table1(n)
+        ch = ChannelModel(n)
+        hists[rpd] = tr.run(make_schedule(a, 0.3), sp, ch.uplink, ch.downlink)
+        trs[rpd] = tr
+    assert trs[4].engine.mesh is not None
+    assert trs[4].n_batch_uploads == 0 and trs[4].n_block_dispatches > 0
+    for m1, mb in zip(hists[1], hists[4]):
+        assert m1.train_loss == mb.train_loss
+    for p1, pb in zip(jax.tree_util.tree_leaves(trs[1].params),
+                      jax.tree_util.tree_leaves(trs[4].params)):
+        np.testing.assert_allclose(np.asarray(p1), np.asarray(pb),
+                                   rtol=1e-6, atol=1e-7)
+
+
+@multidevice
+def test_sharded_block_per_client_lambda():
+    sizes = [60, 30, 20, 10]
+    clients, params, loss_fn = _hetero_env(sizes)
+    n = len(sizes)
+    a = np.ones((4, n))
+    lam = np.broadcast_to(np.linspace(0.1, 0.4, n), a.shape)
+    hists = {}
+    for rpd in (1, 4):
+        tr = FederatedTrainer(loss_fn, params, clients, eta=0.1,
+                              batch_size=16, seed=0, backend="packed",
+                              rounds_per_dispatch=rpd)
+        sp = SystemParams.table1(n)
+        ch = ChannelModel(n)
+        hists[rpd] = tr.run(make_schedule(a, lam), sp, ch.uplink, ch.downlink)
+    for m1, mb in zip(hists[1], hists[4]):
+        assert m1.train_loss == mb.train_loss

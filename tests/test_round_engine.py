@@ -187,6 +187,42 @@ def test_weighted_aggregate_matches_unweighted_and_skips_padding(env):
                                rtol=1e-6, atol=1e-8)
 
 
+def test_exponent_histogram_kernel_matches_xla(env):
+    """The Pallas exponent-histogram kernel (per-block bin counts in VMEM
+    scratch, no scatter-add) is bin-for-bin equal to the scatter-add
+    mirror, and kth_smallest_threshold(coarse="histogram") gives the same
+    threshold through either hist impl as the pure bisection."""
+    _, params, _ = env
+    pack = ParamPack.build(params)
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(np.square(rng.normal(size=(pack.rows, 128))), jnp.float32)
+    pr = jnp.asarray(pack.prunable_mask())
+    h_x = ops.packed_exponent_histogram(q, pr, impl="xla")
+    h_p = ops.packed_exponent_histogram(q, pr, impl="pallas")
+    assert bool(jnp.all(h_x == h_p))
+    assert int(h_x.sum()) == int(pr.sum())
+    # zeros / tiny / huge importances land in the right bins
+    q2 = q.at[0, 0].set(0.0).at[0, 1].set(1e-38).at[0, 2].set(3e38)
+    assert bool(jnp.all(ops.packed_exponent_histogram(q2, pr, impl="xla")
+                        == ops.packed_exponent_histogram(q2, pr,
+                                                         impl="pallas")))
+    from repro.core.round_engine import kth_smallest_threshold
+    n_valid = int(pr.sum())
+    for k in (0, 1, n_valid // 3, n_valid):
+        kk = jnp.int32(k)
+        t_ref = kth_smallest_threshold(q, pr, kk, coarse="bisect")
+        for impl in ("xla", "pallas"):
+            t = kth_smallest_threshold(q, pr, kk, coarse="histogram",
+                                       hist_impl=impl)
+            assert bool(t == t_ref), (k, impl)
+    # vector k (per-client thresholds) through the kernel path
+    ks = jnp.asarray([0, 5, n_valid // 2, n_valid], jnp.int32)
+    t_ref = kth_smallest_threshold(q, pr, ks, coarse="bisect")
+    t_pal = kth_smallest_threshold(q, pr, ks, coarse="histogram",
+                                   hist_impl="pallas")
+    assert bool(jnp.all(t_ref == t_pal))
+
+
 # -- bucketed client axis: ragged batches + varying selection ----------------
 
 
