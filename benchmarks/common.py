@@ -1,8 +1,12 @@
-"""Shared experiment harness for the paper-figure benchmarks (Sec. V).
+"""Shared experiment harness for the paper-figure benchmarks (Sec. V) —
+now a THIN WRAPPER over the unified experiment API (repro.api).
 
-Builds the FEEL environment (synthetic dataset + Dirichlet(sigma) clients +
-Table-I wireless system), runs one of the six schemes, and returns the round
-history. The six schemes are exactly the paper's comparisons:
+`ExpConfig`/`Env`/`run_scheme` keep their pre-API shapes so the figure
+scripts are unchanged in behavior, but the wiring lives in one place:
+`spec_from_config` maps an ExpConfig onto an `ExperimentSpec`, `build_env`
+delegates to `repro.api.build_environment`, and `run_scheme` executes a
+per-scheme spec against the shared environment via `Experiment.build(env=
+...).run()`. The six schemes are exactly the paper's comparisons:
 
   proposed         joint (P1) with generalization statement
   no_gen           conventional bound (phi = 0 in the optimizer) [31]
@@ -10,23 +14,23 @@ history. The six schemes are exactly the paper's comparisons:
   fixed_selection  a_n = 1 every round
   fixed_power      p_n = 0.5 W
   fixed_clock      f_n = f_max
+
+(The registry also carries `proposed_exact`, the 2^N-exact (P5) minimizer
+kept out of the figure set — see EXPERIMENTS.md §Paper findings.)
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Callable
 
-import jax
 import numpy as np
 
-from repro.core import (
-    AOConfig, BoundConstants, ClientData, FederatedTrainer, phis, solve_p1,
+from repro.api import (
+    DataSpec, Environment, Experiment, ExperimentSpec, ModelSpec, RunSpec,
+    SchemeSpec, WirelessSpec, build_environment,
 )
-from repro.data import make_dataset, partition_by_dirichlet
-from repro.models import (
-    lenet_init, lenet_apply, resnet_init, resnet_apply,
-    make_loss_fn, make_eval_fn,
-)
+from repro.api import SCHEMES as _SCHEME_REGISTRY
+from repro.core.optimizer_ao import AOConfig
 from repro.wireless import ChannelModel, SystemParams
 
 SCHEMES = ("proposed", "no_gen", "fixed_pruning", "fixed_selection",
@@ -56,6 +60,24 @@ class ExpConfig:
     rounds_per_dispatch: int | str = "auto"
 
 
+def spec_from_config(cfg: ExpConfig, scheme: str = "proposed", *,
+                     e0: float | None = None, t0: float | None = None,
+                     eval_every: int = 10) -> ExperimentSpec:
+    """Map the benchmark ExpConfig onto a declarative ExperimentSpec."""
+    return ExperimentSpec(
+        data=DataSpec(dataset=cfg.dataset, n_clients=cfg.n_clients,
+                      sigma=cfg.sigma, n_train=cfg.n_train,
+                      n_test=cfg.n_test, seed=cfg.seed),
+        model=ModelSpec(name="lenet" if "mnist" in cfg.dataset else "resnet"),
+        wireless=WirelessSpec(e0=cfg.e0 if e0 is None else e0,
+                              t0=cfg.t0 if t0 is None else t0,
+                              seed=cfg.seed),
+        scheme=SchemeSpec(name=scheme, rounds=cfg.rounds, eta=cfg.eta,
+                          batch=cfg.batch),
+        run=RunSpec(seed=cfg.seed, eval_every=eval_every,
+                    rounds_per_dispatch=cfg.rounds_per_dispatch))
+
+
 @dataclasses.dataclass
 class Env:
     cfg: ExpConfig
@@ -67,73 +89,45 @@ class Env:
     apply_fn: Callable
     eval_fn: Callable
     loss_fn: Callable
+    core: Environment | None = None      # the API-side environment
 
 
 def build_env(cfg: ExpConfig) -> Env:
-    ds = make_dataset(cfg.dataset, n_train=cfg.n_train, n_test=cfg.n_test,
-                      seed=cfg.seed)
-    parts = partition_by_dirichlet(ds.y_train, cfg.n_clients, cfg.sigma,
-                                   rng=np.random.default_rng(cfg.seed))
-    clients = [ClientData(ds.x_train[i], ds.y_train[i]) for i in parts]
-    test_hist = np.bincount(ds.y_test, minlength=10).astype(float)
-    phi = phis(np.stack([c.label_histogram(10) for c in clients]),
-               test_hist[None])
-    table = "mnist" if "mnist" in cfg.dataset else "cifar10"
-    sp = SystemParams.table1(cfg.n_clients, dataset=table,
-                             batch_size=cfg.batch)
-    ch = ChannelModel(cfg.n_clients, seed=cfg.seed)
-    if table == "mnist":
-        init_fn = lambda key: lenet_init(key, in_channels=1)
-        apply_fn = lenet_apply
-    else:
-        init_fn = lambda key: resnet_init(key, depth=20, in_channels=3)
-        apply_fn = resnet_apply
-    return Env(cfg=cfg, clients=clients, phi=phi, sp=sp, ch=ch,
-               init_fn=init_fn, apply_fn=apply_fn,
-               eval_fn=make_eval_fn(apply_fn, ds.x_test, ds.y_test),
-               loss_fn=make_loss_fn(apply_fn))
+    core = build_environment(spec_from_config(cfg))
+    return Env(cfg=cfg, clients=core.clients, phi=core.phi, sp=core.sp,
+               ch=core.ch, init_fn=core.init_fn, apply_fn=core.apply_fn,
+               eval_fn=core.eval_fn, loss_fn=core.loss_fn, core=core)
 
 
 def scheme_config(scheme: str) -> AOConfig:
-    # selection_method="paper": the paper's iterative (P5) prefix sweep.
-    # The exact enumerator finds a LOWER theta but degenerates to 1-2
-    # clients/round (the bound's quadratic phi-coupling over-penalizes
-    # participation) and trains worse — see EXPERIMENTS.md §Paper findings.
-    base = dict(outer_iters=3, selection_method="paper",
-                phi_coupling="mean")
-    return {
-        "proposed": AOConfig(**base),
-        "proposed_exact": AOConfig(outer_iters=3, selection_method="exact"),
-        "no_gen": AOConfig(use_phi=False, **base),
-        "fixed_pruning": AOConfig(fix_lambda=0.0, **base),
-        "fixed_selection": AOConfig(fix_selection=True, **base),
-        "fixed_power": AOConfig(fix_power=0.5, **base),
-        "fixed_clock": AOConfig(fix_freq=True, **base),
-    }[scheme]
+    """The scheme's AOConfig, resolved through the API scheme registry."""
+    return _SCHEME_REGISTRY.get(scheme)(SchemeSpec(name=scheme))
 
 
 def run_scheme(env: Env, scheme: str, *, e0: float | None = None,
-               t0: float | None = None, eval_every: int = 10):
-    cfg = env.cfg
-    e0 = cfg.e0 if e0 is None else e0
-    t0 = cfg.t0 if t0 is None else t0
-    c = BoundConstants(rounds_S=cfg.rounds - 1, batch_Z=cfg.batch,
-                       eta=cfg.eta)
-    sched = solve_p1(env.phi, e0, t0, env.ch.uplink, env.ch.downlink,
-                     env.sp, c, scheme_config(scheme))
-    trainer = FederatedTrainer(env.loss_fn, env.init_fn(jax.random.key(cfg.seed)),
-                               env.clients, eta=cfg.eta, batch_size=cfg.batch,
-                               seed=cfg.seed,
-                               rounds_per_dispatch=cfg.rounds_per_dispatch)
-    hist = trainer.run(sched, env.sp, env.ch.uplink, env.ch.downlink,
-                       eval_fn=env.eval_fn, eval_every=eval_every,
-                       stop_delay=t0, stop_energy=e0)
-    return sched, hist
+               t0: float | None = None, eval_every: int = 10,
+               out: str | None = None):
+    """Solve (P1) for `scheme` over `env` and train under the schedule.
+
+    Returns (schedule, history) exactly as before; `out=` additionally
+    exports the full RunResult as JSON-lines (the shared metrics format —
+    benchmarks/report.py ingests these)."""
+    spec = spec_from_config(env.cfg, scheme, e0=e0, t0=t0,
+                            eval_every=eval_every)
+    result = Experiment(spec).build(env=env.core).run()
+    if out:
+        result.to_jsonl(out)
+    return result.schedule, result.history
 
 
-def final_accuracy(hist) -> float:
-    accs = [m.test_accuracy for m in hist if m.test_accuracy is not None]
-    return accs[-1] if accs else float("nan")
+def final_accuracy(hist) -> tuple[float, int]:
+    """Last evaluated accuracy and the round it was measured at.
+
+    Tolerates an empty (or never-evaluated) history: returns
+    (nan, -1) instead of raising."""
+    evals = [(m.test_accuracy, m.round) for m in (hist or [])
+             if m.test_accuracy is not None]
+    return evals[-1] if evals else (float("nan"), -1)
 
 
 def csv_row(name: str, wall_us: float, derived: str) -> str:

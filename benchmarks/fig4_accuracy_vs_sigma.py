@@ -15,10 +15,14 @@ def run(sigmas=(0.5, 1.0, 5.0, 100.0), rounds=60, fast=False):
         env = build_env(cfg)
         _, h_with = run_scheme(env, "proposed")
         _, h_wo = run_scheme(env, "no_gen")
+        acc_with, round_with = final_accuracy(h_with)
+        acc_wo, round_wo = final_accuracy(h_wo)
         rows.append({
             "sigma": sigma,
-            "acc_with_phi": final_accuracy(h_with),
-            "acc_without_phi": final_accuracy(h_wo),
+            "acc_with_phi": acc_with,
+            "acc_without_phi": acc_wo,
+            "eval_round_with_phi": round_with,
+            "eval_round_without_phi": round_wo,
         })
     return rows
 

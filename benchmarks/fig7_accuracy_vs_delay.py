@@ -15,7 +15,7 @@ def run(t0s=(15.0, 25.0, 40.0, 60.0), rounds=60, fast=False):
         row = {"t0": t0}
         for scheme in SCHEMES:
             _, hist = run_scheme(env, scheme, t0=t0, eval_every=20)
-            row[scheme] = final_accuracy(hist)
+            row[scheme], row[f"{scheme}_round"] = final_accuracy(hist)
         rows.append(row)
     return rows
 

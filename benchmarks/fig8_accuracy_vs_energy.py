@@ -15,7 +15,7 @@ def run(e0s=(1.0, 2.0, 4.0, 8.0), rounds=60, fast=False):
         row = {"e0": e0}
         for scheme in SCHEMES:
             _, hist = run_scheme(env, scheme, e0=e0, eval_every=20)
-            row[scheme] = final_accuracy(hist)
+            row[scheme], row[f"{scheme}_round"] = final_accuracy(hist)
         rows.append(row)
     return rows
 

@@ -1,15 +1,23 @@
 """Generate the data-driven sections of EXPERIMENTS.md from artifacts:
-§Dry-run table (experiments/dryrun/*.json) and §Roofline table.
+§Dry-run table (experiments/dryrun/*.json), §Roofline table, and §Runs —
+a summary of RunResult JSON-lines files (the shared metrics format the
+experiment API's `RunResult.to_jsonl` and `benchmarks.common.run_scheme(
+out=...)` both emit).
 
     PYTHONPATH=src python -m benchmarks.report > experiments/report.md
+    PYTHONPATH=src python -m benchmarks.report --runs 'experiments/runs/*.jsonl'
 """
 from __future__ import annotations
 
+import argparse
+import glob
 import json
 import os
 
 from benchmarks.roofline import DRYRUN_DIR, full_table, load_dryrun
 from repro.configs.registry import INPUT_SHAPES, list_configs
+
+DEFAULT_RUNS_GLOB = "experiments/runs/*.jsonl"
 
 
 def dryrun_table() -> str:
@@ -46,11 +54,57 @@ def roofline_md() -> str:
     return markdown_table(full_table("16x16"))
 
 
-def main():
+def load_run(path: str):
+    """Ingest one RunResult JSON-lines file (repro.api.RunResult)."""
+    from repro.api import RunResult
+    return RunResult.from_jsonl(path)
+
+
+def runs_table(paths) -> str:
+    """Markdown summary of RunResult JSONL exports, one row per run."""
+    out = ["| run | dataset | model | scheme | rounds | final acc @ round | "
+           "E used [J] | T used [s] | theta | feasible |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for path in sorted(paths):
+        r = load_run(path)
+        s = r.summary
+        spec = r.spec or {}
+        name = os.path.splitext(os.path.basename(path))[0]
+
+        def num(key, default=float("nan")):
+            # strict-JSON exports write nan as null -> json None
+            v = s.get(key)
+            return default if v is None else v
+
+        out.append(
+            f"| {name} "
+            f"| {spec.get('data', {}).get('dataset', '?')} "
+            f"| {spec.get('model', {}).get('name', '?')} "
+            f"| {spec.get('scheme', {}).get('name', '?')} "
+            f"| {s.get('rounds_run', len(r.history))} "
+            f"| {num('final_accuracy'):.3f} @ "
+            f"{num('final_accuracy_round', -1)} "
+            f"| {num('cumulative_energy', 0.0):.2f} "
+            f"| {num('cumulative_delay', 0.0):.2f} "
+            f"| {num('theta'):.3f} "
+            f"| {s.get('feasible', '?')} |")
+    return "\n".join(out)
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--runs", default=DEFAULT_RUNS_GLOB,
+                   help="glob of RunResult JSONL files to summarize")
+    args = p.parse_args(argv)
     print("## §Dry-run — 10 archs x 4 shapes x {16x16, 2x16x16}\n")
     print(dryrun_table())
     print("\n\n## §Roofline — single-pod (16x16), analytic terms\n")
     print(roofline_md())
+    run_paths = glob.glob(args.runs)
+    if run_paths:
+        print(f"\n\n## §Runs — {len(run_paths)} RunResult export(s) "
+              f"({args.runs})\n")
+        print(runs_table(run_paths))
 
 
 if __name__ == "__main__":

@@ -54,7 +54,8 @@ from benchmarks.common import csv_row
 from repro.core import ClientData, FederatedTrainer
 from repro.core.optimizer_ao import Schedule
 from repro.data import make_dataset, partition_by_dirichlet
-from repro.models import (lenet_init, lenet_apply, resnet_init, resnet_apply,
+from repro.models import (lenet_init, lenet_apply, mlp_edge_init,
+                          mlp_edge_apply, resnet_init, resnet_apply,
                           make_loss_fn, make_eval_fn)
 from repro.wireless import ChannelModel, SystemParams
 
@@ -99,34 +100,21 @@ def _lenet_apply_seed(params, x):
     return x @ params["fc3"] + params["b3"]
 
 
-def _mlp_edge_init(key, hidden=128):
-    """Bench-local two-layer MLP (~100k params): the dispatch-bound edge
-    model for the block sweep. A LeNet round on this 2-core CPU box is
-    gradient-FLOP-bound (~3.5 ms/client even at batch 1), which drowns the
-    per-round dispatch + H2D + sync overhead the block engine removes; the
-    MLP round is cheap enough that the overhead is a measurable fraction —
-    the same regime real accelerators put ANY of these models in (device
-    compute shrinks, the host round-trip does not)."""
-    k1, k2 = jax.random.split(key)
-    return {"fc1": jax.random.normal(k1, (784, hidden)) * 0.05,
-            "b1": jnp.zeros((hidden,)),
-            "fc2": jax.random.normal(k2, (hidden, 10)) * 0.05,
-            "b2": jnp.zeros((10,))}
-
-
-def _mlp_edge_apply(params, x):
-    x = x.reshape(x.shape[0], -1)
-    x = jax.nn.relu(x @ params["fc1"] + params["b1"])
-    return x @ params["fc2"] + params["b2"]
-
-
 MODELS = {
     "lenet": ("synthetic-mnist",
               lambda key: lenet_init(key, in_channels=1), lenet_apply),
     "lenet-seed": ("synthetic-mnist",
                    lambda key: lenet_init(key, in_channels=1),
                    _lenet_apply_seed),
-    "mlp-edge": ("synthetic-mnist", _mlp_edge_init, _mlp_edge_apply),
+    # mlp-edge (repro.models, promoted from this file in PR 4): the
+    # dispatch-bound edge model for the block sweep. A LeNet round on this
+    # 2-core CPU box is gradient-FLOP-bound (~3.5 ms/client even at batch
+    # 1), which drowns the per-round dispatch + H2D + sync overhead the
+    # block engine removes; the MLP round is cheap enough that the
+    # overhead is a measurable fraction — the same regime real
+    # accelerators put ANY of these models in (device compute shrinks, the
+    # host round-trip does not).
+    "mlp-edge": ("synthetic-mnist", mlp_edge_init, mlp_edge_apply),
     "resnet20": ("synthetic-cifar10",
                  lambda key: resnet_init(key, depth=20, in_channels=3),
                  resnet_apply),

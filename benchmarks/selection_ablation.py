@@ -43,10 +43,12 @@ def run(rounds=60):
         hist = tr.run(sched, env.sp, env.ch.uplink, env.ch.downlink,
                       eval_fn=env.eval_fn, eval_every=cfg.rounds - 1,
                       stop_delay=cfg.t0, stop_energy=cfg.e0)
+        acc, acc_round = final_accuracy(hist)
         rows[name] = {
             "theta": sched.theta,
             "clients_per_round": float(sched.a.sum(axis=1).mean()),
-            "final_accuracy": final_accuracy(hist),
+            "final_accuracy": acc,
+            "final_accuracy_round": acc_round,
         }
     return rows
 

@@ -32,9 +32,10 @@ def main():
     for scheme in SCHEMES:
         t0 = time.time()
         sched, hist = run_scheme(env, scheme, eval_every=25)
-        acc = final_accuracy(hist)
+        acc, acc_round = final_accuracy(hist)
         results[scheme] = {
             "final_accuracy": acc,
+            "final_accuracy_round": acc_round,
             "final_loss": hist[-1].train_loss,
             "rounds_completed": len(hist),
             "energy_used": hist[-1].cumulative_energy,

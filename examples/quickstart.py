@@ -1,64 +1,61 @@
-"""Quickstart: the paper's pipeline in ~60 lines.
+"""Quickstart: the paper's pipeline as ONE declarative spec.
 
-1. Build a Dirichlet-non-IID federation over a synthetic dataset.
-2. Compute each client's generalization statement phi_n (Lemma 1).
-3. Solve the joint problem (P1) for {a, lambda, p, f} (Algorithm 1).
-4. Run parameter-efficient FedSGD under the resulting schedule.
+The unified experiment API (repro.api, DESIGN.md §8) replaces the seven
+manually-wired steps this file used to spell out (dataset -> Dirichlet
+partition -> phis -> SystemParams/ChannelModel -> solve_p1 ->
+FederatedTrainer -> run): an `ExperimentSpec` names the components through
+string-keyed registries, `Experiment.build()` resolves and solves them,
+and `Run.run()` executes the schedule and returns a structured,
+JSONL-exportable `RunResult`. The spec path is bit-for-bit identical to
+the old hand wiring (asserted in tests/test_api.py); the scheme below,
+`proposed_exact`, is the plain `AOConfig(outer_iters=3)` the original
+quickstart used.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Checkpoint/resume the same run from the command line:
+
+    PYTHONPATH=src python -m repro.api.cli run spec.json \
+        --checkpoint-dir ckpts --checkpoint-every 10
+    PYTHONPATH=src python -m repro.api.cli resume ckpts
 """
-import jax
 import numpy as np
 
-from repro.core import (AOConfig, BoundConstants, ClientData,
-                        FederatedTrainer, phis, solve_p1)
-from repro.data import make_dataset, partition_by_dirichlet
-from repro.models import lenet_init, lenet_apply, make_eval_fn, make_loss_fn
-from repro.wireless import ChannelModel, SystemParams
+from repro.api import (DataSpec, Experiment, ExperimentSpec, ModelSpec,
+                       RunSpec, SchemeSpec, WirelessSpec)
 
 N_CLIENTS, SIGMA, ROUNDS = 10, 5.0, 40
 E0, T0 = 250.0, 150.0  # paper Table-I MNIST budgets [J], [s]
 
-# 1. data + federation ------------------------------------------------------
-ds = make_dataset("synthetic-mnist", n_train=4000, n_test=800, seed=0)
-parts = partition_by_dirichlet(ds.y_train, N_CLIENTS, SIGMA,
-                               rng=np.random.default_rng(0))
-clients = [ClientData(ds.x_train[i], ds.y_train[i]) for i in parts]
+spec = ExperimentSpec(
+    # 1. data + federation: Dirichlet-non-IID over a synthetic dataset
+    data=DataSpec(dataset="synthetic-mnist", n_clients=N_CLIENTS,
+                  sigma=SIGMA, n_train=4000, n_test=800, seed=0),
+    model=ModelSpec(name="lenet"),
+    # 2. Table-I wireless system + the paper's budgets
+    wireless=WirelessSpec(e0=E0, t0=T0, seed=0),
+    # 3. joint problem (P1, Algorithm 1) via the scheme registry
+    scheme=SchemeSpec(name="proposed_exact", rounds=ROUNDS, eta=0.1,
+                      batch=32),
+    # 4. parameter-efficient FedSGD: rounds_per_dispatch="auto" (default)
+    # consumes the AO schedule in multi-round lax.scan blocks on
+    # accelerators and per-round dispatches on CPU — bit-for-bit either way
+    run=RunSpec(seed=0, eval_every=10))
 
-# 2. generalization statements (Lemma 1) ------------------------------------
-test_hist = np.bincount(ds.y_test, minlength=10).astype(float)
-phi = phis(np.stack([c.label_histogram(10) for c in clients]),
-           test_hist[None])
-print("phi per client:", np.round(phi, 2))
-
-# 3. joint optimization (P1, Algorithm 1) ------------------------------------
-sp = SystemParams.table1(N_CLIENTS, dataset="mnist")
-ch = ChannelModel(N_CLIENTS, seed=0)
-consts = BoundConstants(rounds_S=ROUNDS - 1, batch_Z=32, eta=0.1)
-sched = solve_p1(phi, E0, T0, ch.uplink, ch.downlink, sp, consts,
-                 AOConfig(outer_iters=3))
+run = Experiment(spec).build()
+print("phi per client:", np.round(run.env.phi, 2))
+sched = run.schedule
 print(f"schedule: theta={sched.theta:.2f} E={sched.energy:.1f}J "
       f"T={sched.delay:.1f}s feasible={sched.feasible}")
 print("clients/round:", sched.a.sum(axis=1)[:8], "...")
 print("mean pruning ratio:", float(sched.lam[sched.a > 0].mean()))
 
-# 4. parameter-efficient FedSGD ----------------------------------------------
-# rounds_per_dispatch="auto" (the default) consumes the AO schedule in
-# multi-round blocks on accelerators — client data lives on device and K
-# rounds run per jitted dispatch (lax.scan) with batches sampled on device;
-# on CPU it resolves to the classic one-dispatch-per-round loop. Any int
-# (e.g. rounds_per_dispatch=32) forces block execution; the trajectory is
-# bit-for-bit identical either way on fp32 single-device runs.
-trainer = FederatedTrainer(make_loss_fn(lenet_apply),
-                           lenet_init(jax.random.key(0)), clients,
-                           eta=0.1, batch_size=32,
-                           rounds_per_dispatch="auto")
-eval_fn = make_eval_fn(lenet_apply, ds.x_test, ds.y_test)
-history = trainer.run(sched, sp, ch.uplink, ch.downlink,
-                      eval_fn=eval_fn, eval_every=10,
-                      stop_delay=T0, stop_energy=E0)
-for m in history:
+result = run.run()
+for m in result.history:
     if m.test_accuracy is not None:
         print(f"round {m.round:3d}  loss {m.train_loss:.3f}  "
               f"acc {m.test_accuracy:.3f}  E {m.cumulative_energy:6.1f}J  "
               f"T {m.cumulative_delay:6.1f}s")
+s = result.summary
+print(f"final acc {s['final_accuracy']:.3f} @ round "
+      f"{s['final_accuracy_round']} after {s['rounds_run']} rounds")

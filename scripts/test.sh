@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Test/CI entrypoint: install declared deps (best effort — offline containers
 # fall back to tests/_hypothesis_stub.py via tests/conftest.py), then run the
-# tier-1 suite, then the sharded smoke leg (round-engine tests on a forced
+# tier-1 suite + the experiment-API CLI smoke, then the sharded smoke leg
+# (round/block-engine + API tests and the same CLI smoke on a forced
 # 4-device host mesh, exercising the shard_map client axis on CPU).
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -11,23 +12,70 @@ if ! python -c "import hypothesis" >/dev/null 2>&1; then
         || echo "pip install unavailable (offline?); using vendored hypothesis shim"
 fi
 
-# run both legs even if the first fails (the seed ships with known-failing
-# arch/serving suites); exit non-zero if either leg failed
+# CLI smoke: run a 4-round synthetic spec through `python -m repro.api.cli
+# run`, then `resume` from the mid-run checkpoint it wrote (round 2 is the
+# latest checkpoint, so resume really executes round 3). Runs in BOTH legs
+# — single-device and forced-4-device — so the spec -> build -> run ->
+# checkpoint -> resume path is exercised on the sharded client axis too.
+# NOTE: callers invoke this as `cli_smoke || status=$?`, which disables
+# set -e INSIDE the function body — so every step's failure is recorded
+# explicitly in `ok` (otherwise the trailing rm -rf's exit 0 would mask a
+# broken CLI and the smoke legs could never fail CI).
+cli_smoke() {
+    local work ok=0
+    work="$(mktemp -d)"
+    cat > "$work/spec.json" <<'EOF'
+{
+  "data": {"dataset": "synthetic-mnist", "n_clients": 6, "sigma": 5.0,
+           "n_train": 240, "n_test": 60, "seed": 0},
+  "model": {"name": "mlp-edge"},
+  "wireless": {"e0": 1000000.0, "t0": 1000000.0, "seed": 0},
+  "scheme": {"name": "proposed", "rounds": 4, "eta": 0.1, "batch": 8,
+             "ao": {"outer_iters": 1}},
+  "run": {"seed": 0, "eval_every": 2, "checkpoint_every": 2,
+          "rounds_per_dispatch": 2}
+}
+EOF
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m repro.api.cli run "$work/spec.json" \
+        --checkpoint-dir "$work/ckpt" --out "$work/run.jsonl" || ok=1
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m repro.api.cli resume "$work/ckpt" \
+        --out "$work/resumed.jsonl" || ok=1
+    test -s "$work/run.jsonl" || ok=1
+    test -s "$work/resumed.jsonl" || ok=1
+    rm -rf "$work"
+    return "$ok"
+}
+
+# run all legs even if an earlier one fails (the seed ships with
+# known-failing arch/serving suites); exit non-zero if any leg failed
 status=0
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@" \
     || status=$?
 
-echo "== sharded smoke leg: round/block engines under 4 forced host devices =="
+echo "== CLI smoke leg: spec run + checkpoint resume (1 device) =="
+cli_smoke || status=$?
+
+echo "== sharded smoke leg: round/block engines + API under 4 forced host devices =="
 # forced flag goes LAST: XLA takes the final occurrence of a duplicated
 # flag, so an inherited force-count must not override the leg's; an
 # inherited shard-count override would likewise silently unshard the leg.
-# Both the per-round and the multi-round-block parity suites run here (the
-# 1-device leg above already ran them unsharded), so every engine path is
-# exercised on the mesh.
+# The per-round, multi-round-block, and experiment-API parity suites all
+# run here (the 1-device leg above already ran them unsharded), so every
+# engine path is exercised on the mesh.
 XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=4" \
     REPRO_ROUND_SHARDS= \
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m pytest -x -q tests/test_round_engine.py tests/test_block_engine.py \
+        tests/test_api.py \
     || status=$?
+
+echo "== CLI smoke leg: spec run + checkpoint resume (4 forced devices) =="
+(
+    export XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=4"
+    export REPRO_ROUND_SHARDS=
+    cli_smoke
+) || status=$?
 
 exit $status

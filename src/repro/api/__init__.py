@@ -1,0 +1,35 @@
+"""Unified experiment API (DESIGN.md §8): declarative specs, component
+registries, run lifecycle hooks, and bit-for-bit resumable runs.
+
+    from repro.api import ExperimentSpec, Experiment
+    result = Experiment(ExperimentSpec.from_file("spec.json")).run()
+
+CLI: `python -m repro.api.cli run spec.json` / `resume CKPT_DIR`.
+"""
+from repro.api.spec import (
+    DataSpec, ExperimentSpec, ModelSpec, RunSpec, SchemeSpec, SpecError,
+    WirelessSpec,
+)
+from repro.api.registry import (
+    DATASETS, MODELS, SCHEMES, Registry,
+    register_dataset, register_model, register_scheme,
+)
+from repro.api.callbacks import (
+    Callback, CheckpointCallback, load_run_state, restore_trainer_state,
+    save_trainer_state,
+)
+from repro.api.experiment import (
+    Environment, Experiment, Run, RunResult, build_environment,
+    resume_from_checkpoint,
+)
+
+__all__ = [
+    "DataSpec", "ModelSpec", "WirelessSpec", "SchemeSpec", "RunSpec",
+    "ExperimentSpec", "SpecError",
+    "Registry", "MODELS", "DATASETS", "SCHEMES",
+    "register_model", "register_dataset", "register_scheme",
+    "Callback", "CheckpointCallback",
+    "save_trainer_state", "restore_trainer_state", "load_run_state",
+    "Environment", "build_environment", "Experiment", "Run", "RunResult",
+    "resume_from_checkpoint",
+]

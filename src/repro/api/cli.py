@@ -1,0 +1,112 @@
+"""Experiment CLI: run / resume / validate declarative spec files.
+
+    PYTHONPATH=src python -m repro.api.cli run spec.json \
+        [--out run.jsonl] [--checkpoint-dir DIR] [--checkpoint-every N]
+    PYTHONPATH=src python -m repro.api.cli resume DIR [--step N] [--out ...]
+    PYTHONPATH=src python -m repro.api.cli validate spec.json
+
+`run` executes a spec end-to-end (data -> phi -> P1 -> federated training)
+and optionally exports the RunResult as JSON-lines. `resume` rebuilds the
+experiment from the spec stored inside the checkpoint directory and
+continues it bit-for-bit from the checkpointed round. `validate` parses a
+spec, resolves every registry key, and prints the normalized JSON — a dry
+syntax/typo check that runs no training.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+
+from repro.api.experiment import (
+    Experiment, RunResult, resume_from_checkpoint,
+)
+from repro.api.registry import DATASETS, MODELS, SCHEMES
+from repro.api.spec import ExperimentSpec
+
+
+def _print_result(res: RunResult) -> None:
+    s = res.summary
+    print(f"schedule: theta={s['theta']:.3f} E={s['energy']:.2f}J "
+          f"T={s['delay']:.2f}s feasible={s['feasible']}")
+    for m in res.history:
+        if m.test_accuracy is not None:
+            print(f"round {m.round:4d}  loss {m.train_loss:.4f}  "
+                  f"acc {m.test_accuracy:.3f}  "
+                  f"E {m.cumulative_energy:8.2f}J  "
+                  f"T {m.cumulative_delay:8.2f}s")
+    tail = (f" (resumed from round {s['resumed_from']})"
+            if s.get("resumed_from") is not None else "")
+    print(f"done: {s['rounds_run']} rounds, final acc "
+          f"{s['final_accuracy']:.3f} @ round {s['final_accuracy_round']}"
+          + tail)
+
+
+def _cmd_run(args) -> int:
+    spec = ExperimentSpec.from_file(args.spec)
+    run_spec = spec.run
+    if args.checkpoint_dir is not None:
+        run_spec = dataclasses.replace(run_spec,
+                                       checkpoint_dir=args.checkpoint_dir)
+    if args.checkpoint_every is not None:
+        run_spec = dataclasses.replace(run_spec,
+                                       checkpoint_every=args.checkpoint_every)
+    spec = dataclasses.replace(spec, run=run_spec)
+    res = Experiment(spec).run()
+    _print_result(res)
+    if args.out:
+        print(f"wrote {res.to_jsonl(args.out)}")
+    return 0
+
+
+def _cmd_resume(args) -> int:
+    res = resume_from_checkpoint(args.checkpoint_dir, step=args.step)
+    _print_result(res)
+    if args.out:
+        print(f"wrote {res.to_jsonl(args.out)}")
+    return 0
+
+
+def _cmd_validate(args) -> int:
+    spec = ExperimentSpec.from_file(args.spec)
+    DATASETS.get(spec.data.dataset)
+    MODELS.get(spec.model.name)
+    SCHEMES.get(spec.scheme.name)
+    print(spec.to_json())
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.api.cli",
+        description="Run / resume / validate declarative FEEL experiments.")
+    sub = p.add_subparsers(dest="cmd", required=True)
+
+    pr = sub.add_parser("run", help="execute a spec file end-to-end")
+    pr.add_argument("spec", help="path to an ExperimentSpec JSON file")
+    pr.add_argument("--out", help="export the RunResult as JSON-lines")
+    pr.add_argument("--checkpoint-dir",
+                    help="override spec.run.checkpoint_dir")
+    pr.add_argument("--checkpoint-every", type=int,
+                    help="override spec.run.checkpoint_every")
+    pr.set_defaults(fn=_cmd_run)
+
+    ps = sub.add_parser("resume",
+                        help="continue a checkpointed run bit-for-bit")
+    ps.add_argument("checkpoint_dir")
+    ps.add_argument("--step", type=int,
+                    help="checkpoint round to resume from (default latest)")
+    ps.add_argument("--out", help="export the RunResult as JSON-lines")
+    ps.set_defaults(fn=_cmd_resume)
+
+    pv = sub.add_parser("validate",
+                        help="parse a spec + resolve registry keys, no run")
+    pv.add_argument("spec")
+    pv.set_defaults(fn=_cmd_validate)
+
+    args = p.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,307 @@
+"""Experiment -> Run -> RunResult: the unified entry point (DESIGN.md §8).
+
+Replaces the seven manually-wired steps (dataset -> Dirichlet partition ->
+phis -> SystemParams/ChannelModel -> solve_p1 -> FederatedTrainer -> run)
+with one declarative flow:
+
+    spec = ExperimentSpec(...)            # or ExperimentSpec.from_file(p)
+    run = Experiment(spec).build()        # resolves registries, solves P1
+    result = run.run()                    # RunResult (JSONL-exportable)
+    result = run.resume("ckpt_dir")       # bit-for-bit continuation
+
+`Experiment.build` is deterministic in the spec (every RNG is seeded from
+it), so the same spec always yields the same schedule and trajectory —
+which is what makes checkpoint resume (`Run.resume`) reconstructible from
+the spec stored inside the checkpoint. The environment half (dataset,
+clients, phi, wireless system, model/loss/eval functions) is scheme-
+independent and reusable across schemes via `build(env=...)` — the
+benchmark harness sweeps the seven schemes over one environment that way.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Callable, Sequence
+
+import jax
+import numpy as np
+
+from repro.api.callbacks import (
+    Callback, CheckpointCallback, metrics_from_dict, metrics_to_dict,
+    restore_trainer_state,
+)
+from repro.api.registry import DATASETS, MODELS, SCHEMES
+from repro.api.spec import ExperimentSpec
+from repro.checkpoint import CheckpointManager
+from repro.core import (
+    BoundConstants, ClientData, FederatedTrainer, RoundMetrics, phis,
+    solve_p1,
+)
+from repro.core.optimizer_ao import Schedule
+from repro.data import partition_by_dirichlet
+from repro.models import make_eval_fn, make_loss_fn
+from repro.wireless import ChannelModel, SystemParams
+
+
+@dataclasses.dataclass
+class Environment:
+    """The scheme-independent half of a built experiment."""
+
+    spec: ExperimentSpec
+    dataset: Any                      # SyntheticImageDataset-like
+    clients: list[ClientData]
+    phi: np.ndarray                   # [N] generalization statements (Lemma 1)
+    sp: SystemParams
+    ch: ChannelModel
+    init_fn: Callable
+    apply_fn: Callable
+    loss_fn: Callable
+    eval_fn: Callable
+
+
+def build_environment(spec: ExperimentSpec) -> Environment:
+    """Steps 1-4 of the pipeline: data, federation, phi, wireless system,
+    model/loss/eval functions — everything the scheme solver and trainer
+    consume. Pure in the spec (all randomness seeded from it)."""
+    d = spec.data
+    dataset = DATASETS.get(d.dataset)(d)
+    parts = partition_by_dirichlet(dataset.y_train, d.n_clients, d.sigma,
+                                   rng=np.random.default_rng(d.seed))
+    clients = [ClientData(dataset.x_train[i], dataset.y_train[i])
+               for i in parts]
+    nc = int(dataset.num_classes)
+    test_hist = np.bincount(dataset.y_test, minlength=nc).astype(float)
+    phi = phis(np.stack([c.label_histogram(nc) for c in clients]),
+               test_hist[None])
+    table = spec.wireless.table
+    if table == "auto":
+        table = "mnist" if "mnist" in d.dataset else "cifar10"
+    sp = SystemParams.table1(d.n_clients, dataset=table,
+                             batch_size=spec.scheme.batch)
+    ch = ChannelModel(d.n_clients, path_loss=spec.wireless.path_loss,
+                      seed=spec.wireless.seed)
+    init_fn, apply_fn = MODELS.get(spec.model.name)(spec.model, dataset)
+    return Environment(
+        spec=spec, dataset=dataset, clients=clients, phi=phi, sp=sp, ch=ch,
+        init_fn=init_fn, apply_fn=apply_fn,
+        loss_fn=make_loss_fn(apply_fn),
+        eval_fn=make_eval_fn(apply_fn, dataset.x_test, dataset.y_test))
+
+
+def _json_finite(obj):
+    """Replace non-finite floats with None, recursively (strict JSON)."""
+    if isinstance(obj, float):
+        return obj if np.isfinite(obj) else None
+    if isinstance(obj, dict):
+        return {k: _json_finite(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_json_finite(v) for v in obj]
+    return obj
+
+
+@dataclasses.dataclass
+class RunResult:
+    """Structured outcome of a run: the solved schedule, the per-round
+    history (train losses, selections, the energy/delay ledger, eval
+    points), and a summary block. Serializes to JSON-lines — one header
+    record then one record per round — so figure scripts, the bench
+    harness, and external tooling share one metrics format
+    (benchmarks/report.py ingests these)."""
+
+    spec: dict
+    summary: dict
+    history: list[RoundMetrics]
+    schedule: Schedule | None = None   # arrays kept in-process only
+
+    @classmethod
+    def build(cls, spec: ExperimentSpec, schedule: Schedule,
+              history: list[RoundMetrics], *,
+              resumed_from: int | None = None) -> "RunResult":
+        evals = [(m.test_accuracy, m.round) for m in history
+                 if m.test_accuracy is not None]
+        acc, acc_round = evals[-1] if evals else (float("nan"), -1)
+        last = history[-1] if history else None
+        summary = {
+            "theta": float(schedule.theta),
+            "energy": float(schedule.energy),
+            "delay": float(schedule.delay),
+            "feasible": bool(schedule.feasible),
+            "rounds_run": len(history),
+            "final_accuracy": acc,
+            "final_accuracy_round": acc_round,
+            "cumulative_delay": last.cumulative_delay if last else 0.0,
+            "cumulative_energy": last.cumulative_energy if last else 0.0,
+            "resumed_from": resumed_from,
+        }
+        return cls(spec=spec.to_dict(), summary=summary, history=history,
+                   schedule=schedule)
+
+    def to_jsonl(self, path: str) -> str:
+        # strict JSON: non-finite floats (nan train_loss of an empty
+        # round, nan final_accuracy of an eval-free run) become null so
+        # jq/JS/log pipelines can parse every line, not just Python
+        with open(path, "w") as f:
+            f.write(json.dumps(_json_finite(
+                {"kind": "experiment", "spec": self.spec,
+                 "summary": self.summary}), allow_nan=False) + "\n")
+            for m in self.history:
+                f.write(json.dumps(_json_finite(
+                    {"kind": "round", **metrics_to_dict(m)}),
+                    allow_nan=False) + "\n")
+        return path
+
+    @classmethod
+    def from_jsonl(cls, path: str) -> "RunResult":
+        spec: dict = {}
+        summary: dict = {}
+        history: list[RoundMetrics] = []
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                rec = json.loads(line)
+                kind = rec.pop("kind", "round")
+                if kind == "experiment":
+                    spec, summary = rec["spec"], rec["summary"]
+                else:
+                    history.append(metrics_from_dict(rec))
+        return cls(spec=spec, summary=summary, history=history)
+
+
+class Run:
+    """A built experiment: environment + solved schedule + trainer.
+
+    `.run()` executes the schedule from round 0; `.resume(dir)` restores
+    the latest (or a chosen) checkpoint and continues from the next round,
+    returning the FULL from-round-0 history (checkpointed prefix + newly
+    executed rounds). Both honor RunSpec's eval cadence, budget stops, and
+    checkpoint policy."""
+
+    def __init__(self, spec: ExperimentSpec, env: Environment,
+                 schedule: Schedule, trainer: FederatedTrainer):
+        self.spec = spec
+        self.env = env
+        self.schedule = schedule
+        self.trainer = trainer
+
+    def run(self, *, callbacks: Sequence[Callback] = ()) -> RunResult:
+        return self._execute(start_round=0, prefix=[], callbacks=callbacks)
+
+    def resume(self, directory: str | None = None, *,
+               step: int | None = None,
+               callbacks: Sequence[Callback] = ()) -> RunResult:
+        directory = directory or self.spec.run.checkpoint_dir
+        if not directory:
+            raise ValueError("no checkpoint directory: pass resume(dir) or "
+                             "set spec.run.checkpoint_dir")
+        manager = CheckpointManager(directory)
+        extra = restore_trainer_state(manager, self.trainer, step=step)
+        start = int(extra["round"]) + 1
+        prefix = [metrics_from_dict(d) for d in extra.get("history", [])]
+        return self._execute(start_round=start, prefix=prefix,
+                             callbacks=callbacks,
+                             resumed_from=int(extra["round"]))
+
+    def _execute(self, *, start_round: int, prefix: list[RoundMetrics],
+                 callbacks: Sequence[Callback],
+                 resumed_from: int | None = None) -> RunResult:
+        rs = self.spec.run
+        cbs: list[Callback] = []
+        if rs.checkpoint_dir:
+            # a directory alone is an explicit request to checkpoint:
+            # default the cadence to the eval cadence rather than
+            # silently writing nothing. The checkpointer goes FIRST so a
+            # user hook that raises at the same round (e.g. a kill in
+            # tests) observes the saved state.
+            cbs.append(CheckpointCallback(
+                rs.checkpoint_dir, rs.checkpoint_every or rs.eval_every,
+                spec=self.spec.to_dict(), history=prefix))
+        cbs.extend(callbacks)
+        history = self.trainer.run(
+            self.schedule, self.env.sp, self.env.ch.uplink,
+            self.env.ch.downlink,
+            eval_fn=self.env.eval_fn if rs.evaluate else None,
+            eval_every=rs.eval_every,
+            stop_delay=self.spec.wireless.t0 if rs.stop_on_budget else None,
+            stop_energy=self.spec.wireless.e0 if rs.stop_on_budget else None,
+            callbacks=cbs, start_round=start_round)
+        return RunResult.build(self.spec, self.schedule, prefix + history,
+                               resumed_from=resumed_from)
+
+
+class Experiment:
+    """Declarative front door: resolve an ExperimentSpec into a Run."""
+
+    def __init__(self, spec: ExperimentSpec):
+        self.spec = spec
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Experiment":
+        return cls(ExperimentSpec.from_dict(d))
+
+    @classmethod
+    def from_file(cls, path: str) -> "Experiment":
+        return cls(ExperimentSpec.from_file(path))
+
+    def build(self, *, env: Environment | None = None) -> Run:
+        """Resolve registries, solve (P1), and construct the trainer.
+
+        `env=` reuses a previously built scheme-independent environment
+        (same data/model/wireless axes) so scheme sweeps don't rebuild the
+        dataset or re-draw the channel."""
+        spec = self.spec
+        if env is None:
+            env = build_environment(spec)
+        else:
+            # The environment is scheme-independent EXCEPT for the batch
+            # size baked into SystemParams (Table-I bookkeeping): reusing
+            # one across specs is only sound when the data/model/wireless
+            # axes and the batch agree (budgets e0/t0 are fine to vary —
+            # they only reach solve_p1 and the stop conditions).
+            es = env.spec
+            mismatch = [name for name, a, b in (
+                ("data", es.data, spec.data),
+                ("model", es.model, spec.model),
+                ("scheme.batch", es.scheme.batch, spec.scheme.batch),
+                ("wireless.table", es.wireless.table, spec.wireless.table),
+                ("wireless.path_loss", es.wireless.path_loss,
+                 spec.wireless.path_loss),
+                ("wireless.seed", es.wireless.seed, spec.wireless.seed),
+            ) if a != b]
+            if mismatch:
+                raise ValueError(
+                    "build(env=...) reuse requires matching environment "
+                    f"axes; spec differs from env.spec on: {mismatch}")
+        sc = spec.scheme
+        consts = BoundConstants(rounds_S=sc.rounds - 1, batch_Z=sc.batch,
+                                eta=sc.eta, **sc.bound)
+        ao = SCHEMES.get(sc.name)(sc)
+        schedule = solve_p1(env.phi, spec.wireless.e0, spec.wireless.t0,
+                            env.ch.uplink, env.ch.downlink, env.sp, consts,
+                            ao)
+        trainer = FederatedTrainer(
+            env.loss_fn, env.init_fn(jax.random.key(spec.run.seed)),
+            env.clients, eta=sc.eta, batch_size=sc.batch, seed=spec.run.seed,
+            backend=spec.run.backend, shards=spec.run.shards,
+            rounds_per_dispatch=spec.run.rounds_per_dispatch)
+        return Run(spec, env, schedule, trainer)
+
+    def run(self, **kw) -> RunResult:
+        """Convenience: build() then run()."""
+        return self.build().run(**kw)
+
+
+def resume_from_checkpoint(directory: str, *, step: int | None = None,
+                           callbacks: Sequence[Callback] = ()) -> RunResult:
+    """Rebuild the experiment from the spec stored INSIDE the checkpoint
+    and continue it — the `python -m repro.api.cli resume` entry point."""
+    from repro.api.callbacks import load_run_state
+    step, extra = load_run_state(directory, step=step)
+    if not extra.get("spec"):
+        raise ValueError(f"checkpoint {directory!r} step {step} carries no "
+                         "spec; resume via Experiment(spec).build()."
+                         "resume(dir) instead")
+    spec = ExperimentSpec.from_dict(extra["spec"])
+    run = Experiment(spec).build()
+    return run.resume(directory, step=step, callbacks=callbacks)

@@ -1,0 +1,153 @@
+"""String-keyed component registries backing the declarative specs.
+
+Three registries resolve the spec's string fields into build-time factories:
+
+  MODELS    name -> factory(spec: ModelSpec, dataset) -> (init_fn, apply_fn)
+  DATASETS  name -> factory(spec: DataSpec) -> SyntheticImageDataset-like
+  SCHEMES   name -> factory(spec: SchemeSpec) -> AOConfig
+
+Register new components with the `register_model` / `register_dataset` /
+`register_scheme` decorators (or call them with the factory directly); an
+unknown key raises a KeyError that names the registry and lists what IS
+registered, so a typo in a spec file fails with an actionable message.
+
+Seeded here: the paper's evaluation models (lenet, resnet) plus the
+dispatch-bound mlp-edge model, both synthetic datasets, and the seven
+benchmark schemes (the paper's six Sec.-V comparisons + `proposed_exact`,
+the 2^N-exact (P5) minimizer — see benchmarks/common.py for the finding
+that motivates keeping both selection variants).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+from repro.api.spec import DataSpec, ModelSpec, SchemeSpec
+from repro.core.optimizer_ao import AOConfig
+from repro.data import make_dataset
+from repro.models import (
+    lenet_apply, lenet_init, mlp_edge_apply, mlp_edge_init,
+    resnet_apply, resnet_init,
+)
+
+
+class Registry:
+    """A named string -> factory map with helpful unknown-key errors."""
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._items: dict[str, Callable] = {}
+
+    def register(self, name: str, factory: Callable | None = None,
+                 *, override: bool = False):
+        """Register `factory` under `name`; usable as a decorator."""
+        def _do(fn: Callable) -> Callable:
+            if name in self._items and not override:
+                raise ValueError(
+                    f"{self.kind} {name!r} is already registered; pass "
+                    f"override=True to replace it")
+            self._items[name] = fn
+            return fn
+        return _do if factory is None else _do(factory)
+
+    def get(self, name: str) -> Callable:
+        try:
+            return self._items[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown {self.kind} {name!r}; registered {self.kind}s: "
+                f"{self.names()}") from None
+
+    def names(self) -> list[str]:
+        return sorted(self._items)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._items
+
+
+MODELS = Registry("model")
+DATASETS = Registry("dataset")
+SCHEMES = Registry("scheme")
+
+register_model = MODELS.register
+register_dataset = DATASETS.register
+register_scheme = SCHEMES.register
+
+
+# ---------------------------------------------------------------------------
+# Seed models. A model factory receives the (resolved) dataset so image
+# shape / class count flow in from the data side; ModelSpec.kwargs carries
+# the model's own knobs (depth, hidden, ...).
+# ---------------------------------------------------------------------------
+
+@register_model("lenet")
+def _lenet(spec: ModelSpec, dataset) -> tuple[Callable, Callable]:
+    in_ch = int(dataset.image_shape[2])
+    nc = int(dataset.num_classes)
+    kw = dict(spec.kwargs)
+    return (lambda key: lenet_init(key, in_channels=in_ch, num_classes=nc,
+                                   **kw),
+            lenet_apply)
+
+
+@register_model("mlp-edge")
+def _mlp_edge(spec: ModelSpec, dataset) -> tuple[Callable, Callable]:
+    h, w, c = dataset.image_shape
+    nc = int(dataset.num_classes)
+    kw = dict(spec.kwargs)
+    return (lambda key: mlp_edge_init(key, in_dim=h * w * c, num_classes=nc,
+                                      **kw),
+            mlp_edge_apply)
+
+
+@register_model("resnet")
+def _resnet(spec: ModelSpec, dataset) -> tuple[Callable, Callable]:
+    in_ch = int(dataset.image_shape[2])
+    nc = int(dataset.num_classes)
+    kw = {"depth": 20, **spec.kwargs}
+    return (lambda key: resnet_init(key, in_channels=in_ch, num_classes=nc,
+                                    **kw),
+            resnet_apply)
+
+
+# ---------------------------------------------------------------------------
+# Seed datasets: the two synthetic substrates (the container is offline, so
+# MNIST/CIFAR shapes come from learnable synthetic problems — data/synthetic).
+# ---------------------------------------------------------------------------
+
+def _make_synthetic(name: str):
+    def factory(spec: DataSpec):
+        return make_dataset(name, n_train=spec.n_train, n_test=spec.n_test,
+                            noise=spec.noise, seed=spec.seed)
+    return factory
+
+
+for _name in ("synthetic-mnist", "synthetic-cifar10"):
+    register_dataset(_name, _make_synthetic(_name))
+
+
+# ---------------------------------------------------------------------------
+# Seed schemes: the paper's Sec.-V comparisons. `_PAPER_BASE` is the
+# benchmark default (paper (P5) prefix-sweep selection, mean-coupled phi —
+# see EXPERIMENTS.md §Paper findings for why the exact enumerator is kept
+# as a separate scheme rather than the default). SchemeSpec.ao overrides
+# win over the scheme definition.
+# ---------------------------------------------------------------------------
+
+_PAPER_BASE: dict[str, Any] = dict(outer_iters=3, selection_method="paper",
+                                   phi_coupling="mean")
+
+
+def _scheme(**fields):
+    def factory(spec: SchemeSpec) -> AOConfig:
+        return AOConfig(**{**fields, **spec.ao})
+    return factory
+
+
+register_scheme("proposed", _scheme(**_PAPER_BASE))
+register_scheme("proposed_exact", _scheme(outer_iters=3,
+                                          selection_method="exact"))
+register_scheme("no_gen", _scheme(use_phi=False, **_PAPER_BASE))
+register_scheme("fixed_pruning", _scheme(fix_lambda=0.0, **_PAPER_BASE))
+register_scheme("fixed_selection", _scheme(fix_selection=True, **_PAPER_BASE))
+register_scheme("fixed_power", _scheme(fix_power=0.5, **_PAPER_BASE))
+register_scheme("fixed_clock", _scheme(fix_freq=True, **_PAPER_BASE))

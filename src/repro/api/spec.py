@@ -1,0 +1,153 @@
+"""Declarative experiment specs (DESIGN.md §8).
+
+One `ExperimentSpec` captures everything the paper's pipeline needs — data
+federation, model, wireless system, optimization scheme, and run policy —
+as a tree of plain dataclasses that round-trips losslessly through
+dict/JSON (`to_dict`/`from_dict`, `to_json`/`from_json`).  String-valued
+fields (`data.dataset`, `model.name`, `scheme.name`) are resolved through
+the component registries (repro.api.registry) at build time, so new
+datasets / models / schemes plug in without touching the pipeline wiring.
+
+The spec is *inert*: constructing one performs no work and imports no
+heavyweight machinery.  `repro.api.experiment.Experiment` turns it into a
+built `Run`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+
+class SpecError(ValueError):
+    """A spec dict does not match the declared schema."""
+
+
+def _check_keys(cls, d: dict, where: str) -> None:
+    if not isinstance(d, dict):
+        raise SpecError(f"{where}: expected a dict, got {type(d).__name__}")
+    valid = {f.name for f in dataclasses.fields(cls)}
+    unknown = sorted(set(d) - valid)
+    if unknown:
+        raise SpecError(
+            f"{where}: unknown key(s) {unknown}; valid keys: {sorted(valid)}")
+
+
+class _SpecBase:
+    """Shared dict/JSON plumbing. Subclasses set _NESTED for spec-typed
+    fields so `from_dict` recurses with per-field error context."""
+
+    _NESTED: dict[str, type] = {}
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict, *, _where: str | None = None):
+        where = _where or cls.__name__
+        _check_keys(cls, d, where)
+        kw: dict[str, Any] = {}
+        for k, v in d.items():
+            sub = cls._NESTED.get(k)
+            kw[k] = (sub.from_dict(v, _where=f"{where}.{k}")
+                     if sub is not None else v)
+        return cls(**kw)
+
+    def to_json(self, *, indent: int | None = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @classmethod
+    def from_json(cls, s: str):
+        return cls.from_dict(json.loads(s))
+
+
+@dataclasses.dataclass
+class DataSpec(_SpecBase):
+    """The federated data substrate: dataset + Dirichlet(sigma) partition."""
+
+    dataset: str = "synthetic-mnist"   # registry key (repro.api.registry)
+    n_clients: int = 10
+    sigma: float = 1.0                 # Dirichlet concentration (non-IIDness)
+    n_train: int = 4000
+    n_test: int = 800
+    noise: float = 0.35                # synthetic template-to-noise ratio
+    seed: int = 0                      # dataset generation + partition rng
+
+
+@dataclasses.dataclass
+class ModelSpec(_SpecBase):
+    """The client model; `kwargs` reach the registered init factory
+    (e.g. {"depth": 20} for resnet, {"hidden": 128} for mlp-edge)."""
+
+    name: str = "lenet"                # registry key
+    kwargs: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class WirelessSpec(_SpecBase):
+    """The wireless edge system (paper Table I) and the run budgets."""
+
+    table: str = "auto"                # "mnist" | "cifar10" | "auto" (by dataset)
+    e0: float = 4.0                    # energy budget E0 [J]
+    t0: float = 40.0                   # delay budget T0 [s]
+    path_loss: float = 1e-5
+    seed: int = 0                      # Rayleigh channel draw
+
+
+@dataclasses.dataclass
+class SchemeSpec(_SpecBase):
+    """The joint-optimization scheme (P1 / Algorithm 1) and its constants.
+
+    `name` picks one of the registered schemes (the paper's six comparisons
+    plus `proposed_exact`); `ao` overrides AOConfig fields on top of the
+    scheme's definition (e.g. {"outer_iters": 1} for smoke runs) and
+    `bound` overrides BoundConstants fields beyond the ones derived from
+    (rounds, batch, eta)."""
+
+    name: str = "proposed"             # registry key
+    rounds: int = 60                   # S+1 (schedule length)
+    eta: float = 0.1
+    batch: int = 32
+    ao: dict = dataclasses.field(default_factory=dict)
+    bound: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class RunSpec(_SpecBase):
+    """Execution policy: backends, eval cadence, checkpointing."""
+
+    seed: int = 0                      # trainer batch rng + model init key
+    eval_every: int = 10
+    evaluate: bool = True              # run test-set eval at the cadence
+    stop_on_budget: bool = True        # stop when cumulative E/T pass E0/T0
+    backend: str = "packed"            # FederatedTrainer backend
+    rounds_per_dispatch: int | str = "auto"
+    shards: int | None = None          # client-axis shard count (None = auto)
+    checkpoint_dir: str | None = None
+    # rounds between checkpoints; None with a checkpoint_dir set falls
+    # back to the eval cadence (a dir alone is a request to checkpoint)
+    checkpoint_every: int | None = None
+
+
+@dataclasses.dataclass
+class ExperimentSpec(_SpecBase):
+    """The full declarative experiment: data x model x wireless x scheme x run."""
+
+    data: DataSpec = dataclasses.field(default_factory=DataSpec)
+    model: ModelSpec = dataclasses.field(default_factory=ModelSpec)
+    wireless: WirelessSpec = dataclasses.field(default_factory=WirelessSpec)
+    scheme: SchemeSpec = dataclasses.field(default_factory=SchemeSpec)
+    run: RunSpec = dataclasses.field(default_factory=RunSpec)
+
+    _NESTED = {"data": DataSpec, "model": ModelSpec, "wireless": WirelessSpec,
+               "scheme": SchemeSpec, "run": RunSpec}
+
+    @classmethod
+    def from_file(cls, path: str) -> "ExperimentSpec":
+        with open(path) as f:
+            return cls.from_dict(json.load(f))
+
+    def save(self, path: str) -> str:
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+        return path

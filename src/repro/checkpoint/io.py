@@ -91,6 +91,11 @@ class CheckpointManager:
     def _name(self, step: int) -> str:
         return os.path.join(self.directory, f"{self.prefix}_{step:08d}")
 
+    def meta_path(self, step: int) -> str:
+        """Path of the JSON metadata sidecar for `step` (readable without
+        reconstructing the pytree — the CLI resume path uses this)."""
+        return self._name(step) + ".meta.json"
+
     def save(self, step: int, params: PyTree, **kw) -> str:
         path = self._name(step)
         save_checkpoint(path, params, step=step, **kw)

@@ -161,6 +161,10 @@ class FederatedTrainer:
         self._store: ClientStore | None = None
         self.n_batch_uploads = 0
         self.n_block_dispatches = 0
+        # lifecycle hooks for the current run() (repro.api.Callback
+        # protocol); held on the instance so _exec_block can fire
+        # on_block_end without threading them through every call
+        self._callbacks: tuple = ()
         if backend == "packed":
             self.pack = ParamPack.build(params, prune_spec)
             # the trainer owns the packed buffers and reassigns them every
@@ -368,19 +372,23 @@ class FederatedTrainer:
         shared = bool((ks == ks[0]).all())
         return (self.engine.bucket_size(len(selected)), shared, blen)
 
-    def _plan_blocks(self, infos, eval_rounds: set, rpd: int) -> dict:
+    def _plan_blocks(self, infos, boundaries: set, rpd: int,
+                     first_round: int = 0) -> dict:
         """Partition the (truncated) schedule into blocks: {start: K}.
 
         Rounds group while their _block_key matches; a run always ends at
-        an eval round (eval reads params AFTER that round, so a block may
-        not span it). Each homogeneous run is then decomposed into
-        power-of-two chunks of at most `rpd` rounds — decomposition rather
-        than padding, because a padded round would cost a full round of
-        gradient FLOPs — which keeps compiled block lengths on a pow2
-        ladder (<= log2(rpd)+1 distinct K per (bucket, family) pair)."""
+        a boundary round — an eval round or a checkpoint round (both read
+        coherent state AFTER that round, so a block may not span one).
+        Each homogeneous run is then decomposed into power-of-two chunks
+        of at most `rpd` rounds — decomposition rather than padding,
+        because a padded round would cost a full round of gradient FLOPs —
+        which keeps compiled block lengths on a pow2 ladder
+        (<= log2(rpd)+1 distinct K per (bucket, family) pair).
+        `first_round` skips already-executed rounds when resuming from a
+        checkpoint."""
         blocks: dict[int, int] = {}
         n = len(infos)
-        i = 0
+        i = first_round
         while i < n:
             key = self._block_key(infos[i][0], infos[i][1])
             if key is None:
@@ -389,7 +397,7 @@ class FederatedTrainer:
             j = i
             while j < n and self._block_key(infos[j][0], infos[j][1]) == key:
                 j += 1
-                if (j - 1) in eval_rounds:
+                if (j - 1) in boundaries:
                     break
             start, left = i, j - i
             while left:
@@ -443,6 +451,10 @@ class FederatedTrainer:
         self.n_block_dispatches += 1
         for k in range(n_rounds):
             out[start + k] = losses[k, : int(counts[k])]
+        # fires right after the dispatch returns: the block's losses are
+        # still lazy device arrays, so hooks here never force a sync
+        for cb in self._callbacks:
+            cb.on_block_end(start, n_rounds, self)
 
     # -- full run -----------------------------------------------------------
 
@@ -457,24 +469,57 @@ class FederatedTrainer:
         eval_every: int = 10,
         stop_delay: float | None = None,
         stop_energy: float | None = None,
+        callbacks: Sequence = (),
+        start_round: int = 0,
     ) -> list[RoundMetrics]:
         """Execute the schedule. eval_fn(params) -> (test_loss, test_acc).
 
+        ``eval_fn``/``eval_every`` are the LEGACY direct-use evaluation
+        path, kept for hand-wired callers; new code should drive runs
+        through the experiment API (repro.api), whose RunSpec configures
+        them and layers the callback protocol on top.
+
+        ``callbacks`` take objects following the repro.api.Callback
+        protocol. Hooks fire at MATERIALIZATION points only — they never
+        force a per-round device sync (see repro.api.callbacks):
+
+          * ``on_round_end(m, self)`` — once per round, in order, batched
+            at the next materialization point (m.train_loss is set);
+          * ``on_eval(m, self)`` — at eval rounds, after eval_fn;
+          * ``on_block_end(start, k, self)`` — after each block dispatch;
+          * ``on_checkpoint(m, self)`` — at rounds where ``m.round %
+            cb.checkpoint_every == 0``. Those rounds become block
+            boundaries and materialization points, so trainer state there
+            is exactly the state after round m.round (what bit-for-bit
+            checkpoint/resume requires).
+
+        ``start_round`` skips execution of rounds before it (their
+        wireless bookkeeping is still computed, keeping cumulative
+        counters, stop truncation, and eval cadence bitwise identical to
+        an uninterrupted run): with params/global-grad/batch-RNG restored
+        from a checkpoint taken after round ``start_round - 1``, the
+        remaining trajectory replays bit-for-bit on fp32 — the resume
+        contract the experiment API builds on. The returned history covers
+        only the executed rounds.
+
         Per-round train losses are kept as device arrays and materialized
-        lazily (at eval points and at the end of the run): the packed round
-        then never blocks on a device->host sync, so consecutive rounds
-        pipeline on accelerators instead of serializing on `float(loss)`.
+        lazily (at eval/checkpoint points and at the end of the run): the
+        packed round then never blocks on a device->host sync, so
+        consecutive rounds pipeline on accelerators instead of
+        serializing on `float(loss)`.
 
         With ``rounds_per_dispatch > 1`` (packed backend) the schedule is
         consumed in multi-round BLOCKS: the wireless bookkeeping and stop
         conditions are schedule-pure, so they are precomputed, the
         surviving rounds are partitioned into homogeneous blocks ending at
-        eval points (`_plan_blocks`), and each block runs as a single
-        `RoundEngine.block_step` dispatch with batches sampled on device —
-        no per-round dispatch, host sync, or batch upload. Per-round
-        metrics, eval cadence, stop behavior, and the training trajectory
-        (bit-for-bit on fp32 single-device) are unchanged.
+        eval/checkpoint points (`_plan_blocks`), and each block runs as a
+        single `RoundEngine.block_step` dispatch with batches sampled on
+        device — no per-round dispatch, host sync, or batch upload.
+        Per-round metrics, eval cadence, stop behavior, and the training
+        trajectory (bit-for-bit on fp32 single-device) are unchanged.
         """
+        callbacks = tuple(callbacks)
+        self._callbacks = callbacks
         history: list[RoundMetrics] = []
         # rounds whose train_loss is still an unmaterialized device array
         pending: list[tuple[RoundMetrics, Any]] = []
@@ -486,6 +531,8 @@ class FederatedTrainer:
                     # to the old eager np.mean over a list of floats
                     arr = np.asarray(losses, np.float64)
                     m.train_loss = float(arr.mean()) if arr.size else float("nan")
+                for cb in callbacks:
+                    cb.on_round_end(m, self)
             pending.clear()
 
         n_rounds = schedule.a.shape[0]
@@ -509,38 +556,65 @@ class FederatedTrainer:
             if stop_energy is not None and cum_e >= stop_energy:
                 break
 
+        # Checkpoint rounds (repro.api.Callback.checkpoint_every): these
+        # become materialization points and block boundaries so the hook
+        # observes state coherent at exactly that round.
+        def _ckpt_cbs(s: int) -> list:
+            return [cb for cb in callbacks
+                    if getattr(cb, "checkpoint_every", None)
+                    and s % cb.checkpoint_every == 0]
+
+        ckpt_rounds = {s for s in range(start_round, len(infos))
+                       if _ckpt_cbs(s)}
+
         blocks: dict[int, int] = {}
         if self.rounds_per_dispatch > 1 and self.backend == "packed":
-            eval_rounds = set()
+            boundaries = set(ckpt_rounds)
             if eval_fn is not None:
-                eval_rounds = {s for s in range(len(infos))
+                boundaries |= {s for s in range(len(infos))
                                if s % eval_every == 0}
-                eval_rounds.add(n_rounds - 1)
-            blocks = self._plan_blocks(infos, eval_rounds,
-                                       self.rounds_per_dispatch)
+                boundaries.add(n_rounds - 1)
+            blocks = self._plan_blocks(infos, boundaries,
+                                       self.rounds_per_dispatch,
+                                       first_round=start_round)
 
         block_losses: dict[int, Any] = {}
-        for s, (selected, lam_s, d, e, cum_t, cum_e) in enumerate(infos):
-            if s in blocks:
-                self._exec_block(s, blocks[s], infos, block_losses)
-            if s in block_losses:
-                losses = block_losses.pop(s)
-            elif selected:
-                losses = self._round(selected, lam_s)
-            else:
-                losses = None
-            m = RoundMetrics(
-                round=s,
-                train_loss=float("nan"),
-                selected=selected,
-                mean_lambda=float(lam_s[selected].mean()) if selected else 0.0,
-                delay=d, energy=e,
-                cumulative_delay=cum_t, cumulative_energy=cum_e,
-            )
-            pending.append((m, losses))
-            if eval_fn is not None and (s % eval_every == 0 or s == n_rounds - 1):
-                materialize()   # eval syncs anyway; drain the loss backlog
-                m.test_loss, m.test_accuracy = eval_fn(self.params)
-            history.append(m)
-        materialize()
+        try:
+            for s, (selected, lam_s, d, e, cum_t, cum_e) in enumerate(infos):
+                if s < start_round:
+                    continue   # already executed before the checkpoint
+                if s in blocks:
+                    self._exec_block(s, blocks[s], infos, block_losses)
+                if s in block_losses:
+                    losses = block_losses.pop(s)
+                elif selected:
+                    losses = self._round(selected, lam_s)
+                else:
+                    losses = None
+                m = RoundMetrics(
+                    round=s,
+                    train_loss=float("nan"),
+                    selected=selected,
+                    mean_lambda=(float(lam_s[selected].mean())
+                                 if selected else 0.0),
+                    delay=d, energy=e,
+                    cumulative_delay=cum_t, cumulative_energy=cum_e,
+                )
+                pending.append((m, losses))
+                is_eval = (eval_fn is not None
+                           and (s % eval_every == 0 or s == n_rounds - 1))
+                if is_eval or s in ckpt_rounds:
+                    materialize()  # eval/ckpt sync anyway; drain the backlog
+                    if is_eval:
+                        m.test_loss, m.test_accuracy = eval_fn(self.params)
+                        for cb in callbacks:
+                            cb.on_eval(m, self)
+                    for cb in _ckpt_cbs(s):
+                        cb.on_checkpoint(m, self)
+                history.append(m)
+            materialize()
+        finally:
+            # a raising hook (e.g. a simulated kill after a checkpoint)
+            # must not leave stale callback refs on the long-lived trainer
+            self._callbacks = ()
         return history

@@ -7,6 +7,7 @@ from repro.models.transformer import (
 )
 from repro.models.cnn import (
     lenet_init, lenet_apply, resnet_init, resnet_apply,
+    mlp_edge_init, mlp_edge_apply,
     make_loss_fn, make_weighted_loss_fn, make_eval_fn,
 )
 
@@ -14,5 +15,6 @@ __all__ = [
     "Runtime", "init_params", "param_shapes", "param_count",
     "active_param_count", "forward", "loss_fn", "init_cache", "prefill",
     "decode_step", "lenet_init", "lenet_apply", "resnet_init", "resnet_apply",
+    "mlp_edge_init", "mlp_edge_apply",
     "make_loss_fn", "make_weighted_loss_fn", "make_eval_fn",
 ]

@@ -138,6 +138,29 @@ def resnet_apply(params, x):
 
 
 # ---------------------------------------------------------------------------
+# mlp-edge: a two-layer MLP (~100k params) over flattened images. The
+# dispatch-bound edge model: one round is cheap enough that the per-round
+# host overhead the block engine removes is a measurable fraction of the
+# round — the regime real accelerators put any of these models in. Promoted
+# from benchmarks/round_engine.py so the experiment API can register it.
+# ---------------------------------------------------------------------------
+
+def mlp_edge_init(key, *, hidden: int = 128, num_classes: int = 10,
+                  in_dim: int = 784):
+    k1, k2 = jax.random.split(key)
+    return {"fc1": jax.random.normal(k1, (in_dim, hidden)) * 0.05,
+            "b1": jnp.zeros((hidden,)),
+            "fc2": jax.random.normal(k2, (hidden, num_classes)) * 0.05,
+            "b2": jnp.zeros((num_classes,))}
+
+
+def mlp_edge_apply(params, x):
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"] + params["b1"])
+    return x @ params["fc2"] + params["b2"]
+
+
+# ---------------------------------------------------------------------------
 # Shared loss / eval helpers
 # ---------------------------------------------------------------------------
 

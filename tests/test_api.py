@@ -1,0 +1,454 @@
+"""Unified experiment API (repro.api, DESIGN.md §8).
+
+Covers: spec dict/JSON round-tripping, registry error messages, the
+spec-path-vs-hand-wiring bit-for-bit equivalence (the old quickstart
+wiring IS the oracle), callback firing points, mid-run kill + bit-for-bit
+resume (per-round and multi-round-block execution), RunResult JSONL
+round-tripping, the CLI entry points, and the final_accuracy satellite.
+"""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (
+    Callback, DataSpec, Experiment, ExperimentSpec, ModelSpec, MODELS,
+    DATASETS, SCHEMES, RunResult, RunSpec, SchemeSpec, SpecError,
+    WirelessSpec, register_model, resume_from_checkpoint,
+)
+from repro.api import cli
+from repro.core import (
+    AOConfig, BoundConstants, ClientData, FederatedTrainer, phis, solve_p1,
+)
+from repro.data import make_dataset, partition_by_dirichlet
+from repro.models import lenet_apply, lenet_init, make_eval_fn, make_loss_fn
+from repro.wireless import ChannelModel, SystemParams
+
+from _trainer_pair import make_schedule
+
+N, SIGMA, ROUNDS, BATCH = 5, 5.0, 10, 8
+E0 = T0 = 1e6  # non-binding budgets: every schedule round runs
+
+
+def small_spec(model: str = "lenet", **run_kw) -> ExperimentSpec:
+    return ExperimentSpec(
+        data=DataSpec(dataset="synthetic-mnist", n_clients=N, sigma=SIGMA,
+                      n_train=300, n_test=80, seed=0),
+        model=ModelSpec(name=model),
+        wireless=WirelessSpec(e0=E0, t0=T0, seed=0),
+        scheme=SchemeSpec(name="proposed_exact", rounds=ROUNDS, eta=0.1,
+                          batch=BATCH, ao={"outer_iters": 1}),
+        run=RunSpec(seed=0, eval_every=5, **run_kw))
+
+
+def params_equal(a, b) -> bool:
+    return all(bool(jnp.all(x == y)) for x, y in
+               zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# Spec serialization
+# ---------------------------------------------------------------------------
+
+def test_spec_dict_roundtrip_identity():
+    spec = small_spec(checkpoint_dir="/tmp/x", checkpoint_every=3)
+    d = spec.to_dict()
+    spec2 = ExperimentSpec.from_dict(d)
+    assert spec2 == spec
+    assert spec2.to_dict() == d          # dict -> spec -> dict identity
+    # and the default-constructed spec too
+    d0 = ExperimentSpec().to_dict()
+    assert ExperimentSpec.from_dict(d0).to_dict() == d0
+
+
+def test_spec_json_roundtrip():
+    spec = small_spec()
+    assert ExperimentSpec.from_json(spec.to_json()) == spec
+
+
+def test_spec_file_roundtrip(tmp_path):
+    spec = small_spec()
+    path = spec.save(str(tmp_path / "spec.json"))
+    assert ExperimentSpec.from_file(path) == spec
+
+
+def test_spec_unknown_keys_raise_with_context():
+    with pytest.raises(SpecError) as e:
+        ExperimentSpec.from_dict({"data": {"n_cleints": 3}})
+    msg = str(e.value)
+    assert "n_cleints" in msg and "n_clients" in msg and ".data" in msg
+    with pytest.raises(SpecError) as e:
+        ExperimentSpec.from_dict({"banana": {}})
+    assert "banana" in str(e.value) and "scheme" in str(e.value)
+    with pytest.raises(SpecError):
+        ExperimentSpec.from_dict({"data": "not-a-dict"})
+
+
+# ---------------------------------------------------------------------------
+# Registries
+# ---------------------------------------------------------------------------
+
+def test_registry_unknown_key_messages():
+    for reg, known in ((MODELS, "lenet"), (DATASETS, "synthetic-mnist"),
+                       (SCHEMES, "proposed")):
+        with pytest.raises(KeyError) as e:
+            reg.get("no-such-component")
+        msg = str(e.value)
+        assert "no-such-component" in msg and known in msg and reg.kind in msg
+        assert known in reg and "no-such-component" not in reg
+
+
+def test_registry_register_and_duplicate():
+    @register_model("test-api-dummy")
+    def _dummy(spec, dataset):
+        return (lambda key: {"w": jnp.zeros((2, 2))},
+                lambda p, x: x.reshape(x.shape[0], -1)[:, :2] @ p["w"])
+
+    assert MODELS.get("test-api-dummy") is _dummy
+    with pytest.raises(ValueError, match="already registered"):
+        register_model("test-api-dummy", lambda s, d: None)
+    register_model("test-api-dummy", _dummy, override=True)  # explicit wins
+
+
+def test_scheme_registry_matches_legacy_scheme_config():
+    common = pytest.importorskip("benchmarks.common")
+    assert common.scheme_config("proposed") == AOConfig(
+        outer_iters=3, selection_method="paper", phi_coupling="mean")
+    assert common.scheme_config("proposed_exact") == AOConfig(outer_iters=3)
+    # ao overrides win over the scheme definition
+    ao = SCHEMES.get("proposed")(SchemeSpec(name="proposed",
+                                            ao={"outer_iters": 1}))
+    assert ao.outer_iters == 1 and ao.selection_method == "paper"
+
+
+# ---------------------------------------------------------------------------
+# Spec path == hand wiring (the old quickstart pipeline, bit for bit)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def hand_wired():
+    """The pre-API seven-step wiring, exactly as examples/quickstart.py
+    spelled it out before PR 4 — the equivalence oracle."""
+    ds = make_dataset("synthetic-mnist", n_train=300, n_test=80, seed=0)
+    parts = partition_by_dirichlet(ds.y_train, N, SIGMA,
+                                   rng=np.random.default_rng(0))
+    clients = [ClientData(ds.x_train[i], ds.y_train[i]) for i in parts]
+    test_hist = np.bincount(ds.y_test, minlength=10).astype(float)
+    phi = phis(np.stack([c.label_histogram(10) for c in clients]),
+               test_hist[None])
+    sp = SystemParams.table1(N, dataset="mnist", batch_size=BATCH)
+    ch = ChannelModel(N, seed=0)
+    consts = BoundConstants(rounds_S=ROUNDS - 1, batch_Z=BATCH, eta=0.1)
+    sched = solve_p1(phi, E0, T0, ch.uplink, ch.downlink, sp, consts,
+                     AOConfig(outer_iters=1))
+    trainer = FederatedTrainer(make_loss_fn(lenet_apply),
+                               lenet_init(jax.random.key(0)), clients,
+                               eta=0.1, batch_size=BATCH, seed=0)
+    eval_fn = make_eval_fn(lenet_apply, ds.x_test, ds.y_test)
+    hist = trainer.run(sched, sp, ch.uplink, ch.downlink, eval_fn=eval_fn,
+                       eval_every=5, stop_delay=T0, stop_energy=E0)
+    return sched, trainer, hist
+
+
+@pytest.fixture(scope="module")
+def api_result():
+    run = Experiment(small_spec()).build()
+    return run, run.run()
+
+
+def test_spec_path_matches_hand_wiring_bitwise(hand_wired, api_result):
+    sched_h, trainer_h, hist_h = hand_wired
+    run, res = api_result
+    # same solved schedule
+    for field in ("a", "lam", "power", "freq"):
+        assert np.array_equal(getattr(sched_h, field),
+                              getattr(run.schedule, field)), field
+    assert sched_h.theta == run.schedule.theta
+    # same per-round trajectory, to the last bit
+    assert [m.round for m in res.history] == [m.round for m in hist_h]
+    assert [m.train_loss for m in res.history] == \
+        [m.train_loss for m in hist_h]
+    assert [m.test_loss for m in res.history] == \
+        [m.test_loss for m in hist_h]
+    assert [m.test_accuracy for m in res.history] == \
+        [m.test_accuracy for m in hist_h]
+    assert [m.cumulative_energy for m in res.history] == \
+        [m.cumulative_energy for m in hist_h]
+    # same final model, bitwise
+    assert params_equal(trainer_h.params, run.trainer.params)
+    assert params_equal(trainer_h.global_grad, run.trainer.global_grad)
+
+
+# ---------------------------------------------------------------------------
+# Callback firing points
+# ---------------------------------------------------------------------------
+
+class Recorder(Callback):
+    def __init__(self):
+        self.round_end, self.evals, self.blocks, self.ckpts = [], [], [], []
+
+    def on_round_end(self, m, trainer):
+        self.round_end.append(m.round)
+        assert not np.isnan(m.train_loss) or not m.selected
+
+    def on_eval(self, m, trainer):
+        self.evals.append(m.round)
+        assert m.test_accuracy is not None
+
+    def on_block_end(self, start, n_rounds, trainer):
+        self.blocks.append((start, n_rounds))
+
+    def on_checkpoint(self, m, trainer):
+        self.ckpts.append(m.round)
+
+
+def test_callbacks_fire_at_materialization_points():
+    rec = Recorder()
+    rec.checkpoint_every = 3
+    run = Experiment(small_spec("mlp-edge", rounds_per_dispatch=4)).build()
+    run.run(callbacks=[rec])
+    assert rec.round_end == list(range(ROUNDS))   # every round, in order
+    assert rec.evals == [0, 5, ROUNDS - 1]        # eval cadence + last round
+    assert rec.ckpts == [0, 3, 6, 9]
+    # block dispatches cover disjoint in-order spans within the schedule
+    covered = [s for start, k in rec.blocks for s in range(start, start + k)]
+    assert covered == sorted(set(covered)) and len(covered) <= ROUNDS
+
+
+def test_trainer_level_callbacks_reference_backend():
+    """The callbacks= hook is a FederatedTrainer feature, not an API-layer
+    one: it must work on the reference backend and without eval_fn."""
+    rng = np.random.default_rng(0)
+    clients = [ClientData(rng.normal(size=(12, 4, 4, 1)).astype(np.float32),
+                          rng.integers(0, 3, size=12).astype(np.int32))
+               for _ in range(3)]
+
+    def apply_fn(p, x):
+        return x.reshape(x.shape[0], -1) @ p["w"]
+
+    params = {"w": jnp.asarray(rng.normal(size=(16, 3)).astype(np.float32))}
+    rec = Recorder()
+    rec.checkpoint_every = 2
+    tr = FederatedTrainer(make_loss_fn(apply_fn), params, clients, eta=0.1,
+                          batch_size=4, seed=0, backend="reference")
+    sched = make_schedule(np.ones((5, 3)), 0.3)
+    sp = SystemParams.table1(3)
+    ch = ChannelModel(3)
+    tr.run(sched, sp, ch.uplink, ch.downlink, callbacks=[rec])
+    assert rec.round_end == [0, 1, 2, 3, 4]
+    assert rec.ckpts == [0, 2, 4]
+    assert rec.evals == [] and rec.blocks == []
+
+
+# ---------------------------------------------------------------------------
+# Kill / resume: bit-for-bit trajectory equality
+# ---------------------------------------------------------------------------
+
+class KillAt(Callback):
+    """Simulates a mid-run crash right AFTER the checkpoint at `round` is
+    written (the CheckpointCallback is ordered first)."""
+
+    def __init__(self, round_, every):
+        self.round_ = round_
+        self.checkpoint_every = every
+
+    def on_checkpoint(self, m, trainer):
+        if m.round == self.round_:
+            raise RuntimeError("simulated mid-run kill")
+
+
+@pytest.mark.parametrize("rpd", [1, 4])
+def test_kill_resume_bitwise(tmp_path, rpd):
+    base = small_spec("mlp-edge", rounds_per_dispatch=rpd)
+    # the uninterrupted oracle (no checkpointing at all)
+    run_a = Experiment(base).build()
+    res_a = run_a.run()
+    assert res_a.summary["rounds_run"] == ROUNDS
+
+    ckpt = str(tmp_path / f"ckpt_rpd{rpd}")
+    spec = dataclasses.replace(
+        base, run=dataclasses.replace(base.run, checkpoint_dir=ckpt,
+                                      checkpoint_every=3))
+    with pytest.raises(RuntimeError, match="simulated"):
+        Experiment(spec).build().run(callbacks=[KillAt(3, 3)])
+
+    # fresh process-equivalent: rebuild everything from the spec, restore
+    run_b = Experiment(spec).build()
+    res_b = run_b.resume(ckpt)
+    assert res_b.summary["resumed_from"] == 3
+    assert [m.round for m in res_b.history] == list(range(ROUNDS))
+
+    # the resumed trajectory is EXACTLY the uninterrupted one (0.0 diff)
+    for fld in ("train_loss", "test_loss", "test_accuracy",
+                "cumulative_delay", "cumulative_energy", "selected"):
+        assert [getattr(m, fld) for m in res_b.history] == \
+            [getattr(m, fld) for m in res_a.history], fld
+    assert params_equal(run_a.trainer.params, run_b.trainer.params)
+    assert params_equal(run_a.trainer.global_grad, run_b.trainer.global_grad)
+    diff = max(float(jnp.max(jnp.abs(x - y))) for x, y in zip(
+        jax.tree_util.tree_leaves(run_a.trainer.params),
+        jax.tree_util.tree_leaves(run_b.trainer.params)))
+    assert diff == 0.0
+
+    # resume_from_checkpoint rebuilds from the spec stored in the ckpt
+    res_c = resume_from_checkpoint(ckpt, step=3)
+    assert [m.train_loss for m in res_c.history] == \
+        [m.train_loss for m in res_a.history]
+
+
+def test_resume_restores_rng_and_counters(tmp_path):
+    """The checkpoint carries the numpy RNG state and budget counters:
+    a resumed trainer draws the SAME batch indices the uninterrupted one
+    would, and the ledger continues seamlessly."""
+    ckpt = str(tmp_path / "ckpt")
+    base = small_spec("mlp-edge")
+    spec = dataclasses.replace(
+        base, run=dataclasses.replace(base.run, checkpoint_dir=ckpt,
+                                      checkpoint_every=4))
+    run_a = Experiment(spec).build()
+    res_a = run_a.run()
+    rng_after = run_a.trainer.rng.bit_generator.state
+
+    run_b = Experiment(spec).build()
+    res_b = run_b.resume(ckpt, step=4)
+    assert res_b.summary["resumed_from"] == 4
+    assert run_b.trainer.rng.bit_generator.state == rng_after
+    assert [m.cumulative_energy for m in res_b.history] == \
+        [m.cumulative_energy for m in res_a.history]
+
+
+# ---------------------------------------------------------------------------
+# RunResult JSONL
+# ---------------------------------------------------------------------------
+
+def test_runresult_jsonl_roundtrip(tmp_path, api_result):
+    _, res = api_result
+    path = str(tmp_path / "run.jsonl")
+    res.to_jsonl(path)
+    back = RunResult.from_jsonl(path)
+    assert back.spec == res.spec
+    assert back.summary == res.summary
+    assert len(back.history) == len(res.history)
+    assert [dataclasses.asdict(m) for m in back.history] == \
+        [dataclasses.asdict(m) for m in res.history]
+    # every line is valid standalone JSON with a kind tag
+    with open(path) as f:
+        kinds = [json.loads(line)["kind"] for line in f]
+    assert kinds[0] == "experiment" and set(kinds[1:]) == {"round"}
+
+
+def test_jsonl_is_strict_json(tmp_path, api_result):
+    """Non-finite floats must export as null, not bare NaN tokens."""
+    run, res = api_result
+    broke = RunResult(spec=res.spec,
+                      summary={**res.summary, "final_accuracy": float("nan")},
+                      history=res.history)
+    path = str(tmp_path / "nan.jsonl")
+    broke.to_jsonl(path)
+    with open(path) as f:
+        for line in f:
+            assert "NaN" not in line
+            json.loads(line)   # every line parses strictly
+    back = RunResult.from_jsonl(path)
+    assert back.summary["final_accuracy"] is None
+
+
+def test_env_reuse_rejects_mismatched_axes(api_result):
+    run, _ = api_result
+    other = dataclasses.replace(
+        run.spec, scheme=dataclasses.replace(run.spec.scheme, batch=16))
+    with pytest.raises(ValueError, match="scheme.batch"):
+        Experiment(other).build(env=run.env)
+    # budgets MAY vary across a reused environment (the scheme sweep does)
+    budgets = dataclasses.replace(
+        run.spec, wireless=dataclasses.replace(run.spec.wireless, e0=123.0))
+    Experiment(budgets).build(env=run.env)
+
+
+def test_checkpoint_dir_alone_defaults_cadence(tmp_path):
+    """A checkpoint_dir without checkpoint_every still checkpoints (at
+    the eval cadence) — the CLI --checkpoint-dir flag relies on this."""
+    ckpt = str(tmp_path / "ckpt")
+    spec = small_spec("mlp-edge", checkpoint_dir=ckpt)
+    run = Experiment(spec).build()
+    run.run()
+    from repro.api import load_run_state
+    step, extra = load_run_state(ckpt)
+    assert step == ROUNDS - 1 or step % spec.run.eval_every == 0
+    assert extra["round"] == step
+
+
+def test_raising_hook_clears_trainer_callbacks(tmp_path):
+    ckpt = str(tmp_path / "ckpt")
+    spec = small_spec("mlp-edge", checkpoint_dir=ckpt, checkpoint_every=3)
+    run = Experiment(spec).build()
+    with pytest.raises(RuntimeError):
+        run.run(callbacks=[KillAt(3, 3)])
+    assert run.trainer._callbacks == ()
+
+
+def test_report_ingests_runresult(tmp_path, api_result):
+    report = pytest.importorskip("benchmarks.report")
+    _, res = api_result
+    path = str(tmp_path / "run.jsonl")
+    res.to_jsonl(path)
+    table = report.runs_table([path])
+    assert "synthetic-mnist" in table and "proposed_exact" in table
+    assert f"{res.summary['final_accuracy']:.3f}" in table
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_run_validate_resume(tmp_path, capsys):
+    spec = small_spec("mlp-edge")
+    spec = dataclasses.replace(
+        spec, scheme=dataclasses.replace(spec.scheme, rounds=4),
+        run=dataclasses.replace(spec.run, eval_every=2, checkpoint_every=2))
+    spec_path = spec.save(str(tmp_path / "spec.json"))
+    ckpt = str(tmp_path / "ckpt")
+    out1, out2 = str(tmp_path / "run.jsonl"), str(tmp_path / "res.jsonl")
+
+    assert cli.main(["validate", spec_path]) == 0
+    assert cli.main(["run", spec_path, "--out", out1,
+                     "--checkpoint-dir", ckpt]) == 0
+    assert cli.main(["resume", ckpt, "--out", out2]) == 0
+    capsys.readouterr()
+
+    full = RunResult.from_jsonl(out1)
+    resumed = RunResult.from_jsonl(out2)
+    assert full.summary["rounds_run"] == 4
+    assert resumed.summary["resumed_from"] == 2   # latest ckpt: round 2
+    assert [m.train_loss for m in resumed.history] == \
+        [m.train_loss for m in full.history]
+
+
+def test_cli_validate_catches_unknown_component(tmp_path):
+    bad = small_spec()
+    bad = dataclasses.replace(bad, model=ModelSpec(name="wat"))
+    path = bad.save(str(tmp_path / "bad.json"))
+    with pytest.raises(KeyError, match="unknown model 'wat'"):
+        cli.main(["validate", path])
+
+
+# ---------------------------------------------------------------------------
+# final_accuracy satellite
+# ---------------------------------------------------------------------------
+
+def test_final_accuracy_tolerates_empty_and_reports_round(api_result):
+    common = pytest.importorskip("benchmarks.common")
+    for empty in ([], None):
+        acc, rnd = common.final_accuracy(empty)
+        assert np.isnan(acc) and rnd == -1
+    _, res = api_result
+    acc, rnd = common.final_accuracy(res.history)
+    assert acc == res.summary["final_accuracy"]
+    assert rnd == res.summary["final_accuracy_round"] == ROUNDS - 1
+    # never-evaluated history: still (nan, -1), no raise
+    no_eval = [m for m in res.history if m.test_accuracy is None]
+    acc, rnd = common.final_accuracy(no_eval)
+    assert np.isnan(acc) and rnd == -1
