@@ -10,9 +10,12 @@ out=...)` both emit).
 from __future__ import annotations
 
 import argparse
+import copy
 import glob
 import json
+import math
 import os
+import re
 
 from benchmarks.roofline import DRYRUN_DIR, full_table, load_dryrun
 from repro.configs.registry import INPUT_SHAPES, list_configs
@@ -60,13 +63,24 @@ def load_run(path: str):
     return RunResult.from_jsonl(path)
 
 
+def _parseable_runs(paths) -> list:
+    """(path, RunResult) pairs, skipping files that are not RunResult
+    exports (e.g. a sweep directory's `sweep.jsonl` index, whose records
+    `RunResult.from_jsonl` ignores, leaving an empty shell)."""
+    out = []
+    for path in sorted(paths):
+        r = load_run(path)
+        if r.spec or r.summary or r.history:
+            out.append((path, r))
+    return out
+
+
 def runs_table(paths) -> str:
     """Markdown summary of RunResult JSONL exports, one row per run."""
     out = ["| run | dataset | model | scheme | rounds | final acc @ round | "
            "E used [J] | T used [s] | theta | feasible |",
            "|---|---|---|---|---|---|---|---|---|---|"]
-    for path in sorted(paths):
-        r = load_run(path)
+    for path, r in _parseable_runs(paths):
         s = r.summary
         spec = r.spec or {}
         name = os.path.splitext(os.path.basename(path))[0]
@@ -91,6 +105,87 @@ def runs_table(paths) -> str:
     return "\n".join(out)
 
 
+def _seedless_key(spec: dict) -> str:
+    """Canonical grouping key for seed aggregation: the spec with every
+    seed field (data / wireless / run) and the checkpoint dir stripped.
+    Runs that differ ONLY in seeds are repetitions of one scenario."""
+    s = copy.deepcopy(spec) if spec else {}
+    for section, key in (("data", "seed"), ("wireless", "seed"),
+                         ("run", "seed")):
+        s.get(section, {}).pop(key, None)
+    s.get("run", {}).pop("checkpoint_dir", None)
+    return json.dumps(s, sort_keys=True)
+
+
+def _mean_std(values) -> tuple[float, float, int]:
+    vals = [v for v in values if v is not None and not math.isnan(v)]
+    n = len(vals)
+    if not n:
+        return float("nan"), float("nan"), 0
+    mean = sum(vals) / n
+    std = math.sqrt(sum((v - mean) ** 2 for v in vals) / n)
+    return mean, std, n
+
+
+def aggregate_runs(paths) -> list[dict]:
+    """Group RunResult exports by seed-stripped spec and summarize each
+    group with per-seed variance: final_accuracy / energy / delay as
+    (mean, std, n) instead of a bare scalar. Groups of one pass through
+    (std 0, n 1) so the caller can render a uniform table."""
+    groups: dict[str, list] = {}
+    for path, r in _parseable_runs(paths):
+        groups.setdefault(_seedless_key(r.spec), []).append((path, r))
+    rows = []
+    for key in sorted(groups):
+        runs = groups[key]
+        spec = runs[0][1].spec or {}
+        names = [os.path.splitext(os.path.basename(p))[0] for p, _ in runs]
+        # scenario label: the first member's name minus the parts that vary
+        # within the group (the sweep's NNN_ matrix index and seed=N axis
+        # segments) — "003_sigma=0.5_scheme=no_gen_seed=1" -> the scenario
+        # "sigma=0.5_scheme=no_gen"
+        label = re.sub(r"^\d+_", "", names[0])
+        label = re.sub(r"(^|_)seed=[^_]+", "", label).strip("_") or names[0]
+        row = {
+            "group": label + (f" (n={len(runs)})" if len(runs) > 1 else ""),
+            "dataset": spec.get("data", {}).get("dataset", "?"),
+            "model": spec.get("model", {}).get("name", "?"),
+            "scheme": spec.get("scheme", {}).get("name", "?"),
+            "n": len(runs),
+        }
+        for field in ("final_accuracy", "cumulative_energy",
+                      "cumulative_delay"):
+            row[field] = _mean_std(r.summary.get(field) for _, r in runs)
+        rows.append(row)
+    return rows
+
+
+def sweep_table(paths=None, *, rows=None) -> str:
+    """Markdown seed-aggregated summary (mean ± std, n) of RunResult
+    exports — the §Runs companion for sweep output directories. Pass
+    `rows=` (an `aggregate_runs` result) to render without re-parsing."""
+    if rows is None:
+        rows = aggregate_runs(paths)
+    out = ["| scenario | dataset | model | scheme | n | "
+           "final acc (mean ± std) | E used [J] | T used [s] |",
+           "|---|---|---|---|---|---|---|---|"]
+
+    def ms(t, digits):
+        mean, std, n = t
+        if n == 0:
+            return "—"
+        return f"{mean:.{digits}f} ± {std:.{digits}f}"
+
+    for row in rows:
+        out.append(
+            f"| {row['group']} | {row['dataset']} | {row['model']} "
+            f"| {row['scheme']} | {row['n']} "
+            f"| {ms(row['final_accuracy'], 3)} "
+            f"| {ms(row['cumulative_energy'], 2)} "
+            f"| {ms(row['cumulative_delay'], 2)} |")
+    return "\n".join(out)
+
+
 def main(argv=None):
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--runs", default=DEFAULT_RUNS_GLOB,
@@ -105,6 +200,11 @@ def main(argv=None):
         print(f"\n\n## §Runs — {len(run_paths)} RunResult export(s) "
               f"({args.runs})\n")
         print(runs_table(run_paths))
+        rows = aggregate_runs(run_paths)
+        if any(row["n"] > 1 for row in rows):
+            print("\n\n## §Runs, seed-aggregated — mean ± std over "
+                  "seed-only repetitions\n")
+            print(sweep_table(rows=rows))
 
 
 if __name__ == "__main__":

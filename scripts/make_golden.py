@@ -1,0 +1,50 @@
+"""Regenerate the committed golden-trajectory fixture (tests/golden/).
+
+    PYTHONPATH=src python scripts/make_golden.py
+
+The fixture is a tiny fixed-seed RunResult JSONL whose spec is stored in
+its own header record; tests/test_golden.py re-runs that spec and asserts
+BITWISE-equal per-round history on fp32 — one test that guards the packed
+/ block / sharded engines (and the whole spec -> schedule -> trainer
+pipeline above them) against silent numeric drift. Only regenerate after
+an INTENDED numerics change, and say so in the commit message: a diff in
+this file is a change to the reproduction's trajectory contract.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.api import (  # noqa: E402
+    DataSpec, Experiment, ExperimentSpec, ModelSpec, RunSpec, SchemeSpec,
+    WirelessSpec,
+)
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "tests", "golden",
+                   "run_mlp_edge.jsonl")
+
+# Small enough to run in seconds, rich enough to touch selection, pruning,
+# aggregation, eval, and the budget ledger. shards=1 pins the single-device
+# engine so the fixture holds on forced-multi-device CI hosts too;
+# rounds_per_dispatch=2 exercises the block engine (bitwise == per-round).
+GOLDEN_SPEC = ExperimentSpec(
+    data=DataSpec(dataset="synthetic-mnist", n_clients=6, sigma=5.0,
+                  n_train=240, n_test=60, seed=0),
+    model=ModelSpec(name="mlp-edge"),
+    wireless=WirelessSpec(e0=1e6, t0=1e6, seed=0),
+    scheme=SchemeSpec(name="proposed", rounds=6, eta=0.1, batch=8,
+                      ao={"outer_iters": 1}),
+    run=RunSpec(seed=0, eval_every=3, shards=1, rounds_per_dispatch=2))
+
+
+def main() -> None:
+    res = Experiment(GOLDEN_SPEC).run()
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    res.to_jsonl(OUT)
+    print(f"wrote {os.path.normpath(OUT)} "
+          f"({res.summary['rounds_run']} rounds, final acc "
+          f"{res.summary['final_accuracy']:.3f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,11 +1,22 @@
 #!/usr/bin/env bash
 # Test/CI entrypoint: install declared deps (best effort — offline containers
 # fall back to tests/_hypothesis_stub.py via tests/conftest.py), then run the
-# tier-1 suite + the experiment-API CLI smoke, then the sharded smoke leg
-# (round/block-engine + API tests and the same CLI smoke on a forced
-# 4-device host mesh, exercising the shard_map client axis on CPU).
+# tier-1 suite + the experiment-API CLI smoke + the sweep-CLI smoke, then the
+# sharded smoke leg (round/block-engine + API + sweep/axes tests and the same
+# CLI smokes on a forced 4-device host mesh, exercising the shard_map client
+# axis on CPU).
+#
+# Tiering (pytest.ini): the default run selects tier-1 only (-m "not slow");
+# pass --all as the FIRST argument to include slow-marked tests. Remaining
+# arguments are forwarded to pytest.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+MARKER=(-m "not slow")
+if [[ "${1:-}" == "--all" ]]; then
+    MARKER=()
+    shift
+fi
 
 if ! python -c "import hypothesis" >/dev/null 2>&1; then
     python -m pip install -q -r requirements.txt 2>/dev/null \
@@ -48,27 +59,66 @@ EOF
     return "$ok"
 }
 
+# Sweep-CLI smoke: 2 seeds x 2 schemes over one spec template, streamed as
+# per-run JSONL into --out-dir (4 run files + the sweep.jsonl index), then
+# the report's seed-aggregated mean±std section over the directory glob.
+# Same error discipline as cli_smoke.
+sweep_smoke() {
+    local work ok=0 n
+    work="$(mktemp -d)"
+    cat > "$work/spec.json" <<'EOF'
+{
+  "data": {"dataset": "synthetic-mnist", "n_clients": 6, "sigma": 5.0,
+           "n_train": 240, "n_test": 60, "seed": 0},
+  "model": {"name": "mlp-edge"},
+  "wireless": {"e0": 1000000.0, "t0": 1000000.0, "seed": 0},
+  "scheme": {"name": "proposed", "rounds": 3, "eta": 0.1, "batch": 8,
+             "ao": {"outer_iters": 1}},
+  "run": {"seed": 0, "eval_every": 2}
+}
+EOF
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m repro.api.cli sweep "$work/spec.json" \
+        --seeds 0,1 --schemes proposed,no_gen \
+        --out-dir "$work/runs" || ok=1
+    n="$(ls "$work"/runs/0*.jsonl 2>/dev/null | wc -l)"
+    [[ "$n" -eq 4 ]] || { echo "sweep smoke: expected 4 run files, got $n"; ok=1; }
+    test -s "$work/runs/sweep.jsonl" || ok=1
+    # plain grep (not -q) drains the whole pipe, so the report never dies
+    # on a broken pipe mid-print
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m benchmarks.report --runs "$work/runs/*.jsonl" \
+        | grep "seed-aggregated" >/dev/null || ok=1
+    rm -rf "$work"
+    return "$ok"
+}
+
 # run all legs even if an earlier one fails (the seed ships with
 # known-failing arch/serving suites); exit non-zero if any leg failed
 status=0
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@" \
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m pytest -x -q ${MARKER[@]+"${MARKER[@]}"} "$@" \
     || status=$?
 
 echo "== CLI smoke leg: spec run + checkpoint resume (1 device) =="
 cli_smoke || status=$?
 
+echo "== sweep-CLI smoke leg: 2 seeds x 2 schemes, streamed JSONL (1 device) =="
+sweep_smoke || status=$?
+
 echo "== sharded smoke leg: round/block engines + API under 4 forced host devices =="
 # forced flag goes LAST: XLA takes the final occurrence of a duplicated
 # flag, so an inherited force-count must not override the leg's; an
 # inherited shard-count override would likewise silently unshard the leg.
-# The per-round, multi-round-block, and experiment-API parity suites all
-# run here (the 1-device leg above already ran them unsharded), so every
-# engine path is exercised on the mesh.
+# The per-round, multi-round-block, experiment-API, sweep, and scenario-axes
+# parity suites all run here (the 1-device leg above already ran them
+# unsharded), so every engine path is exercised on the mesh.
 XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=4" \
     REPRO_ROUND_SHARDS= \
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
-    python -m pytest -x -q tests/test_round_engine.py tests/test_block_engine.py \
-        tests/test_api.py \
+    python -m pytest -x -q ${MARKER[@]+"${MARKER[@]}"} \
+        tests/test_round_engine.py tests/test_block_engine.py \
+        tests/test_api.py tests/test_sweep.py tests/test_scenario_axes.py \
     || status=$?
 
 echo "== CLI smoke leg: spec run + checkpoint resume (4 forced devices) =="
@@ -76,6 +126,13 @@ echo "== CLI smoke leg: spec run + checkpoint resume (4 forced devices) =="
     export XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=4"
     export REPRO_ROUND_SHARDS=
     cli_smoke
+) || status=$?
+
+echo "== sweep-CLI smoke leg: streamed sweep (4 forced devices) =="
+(
+    export XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=4"
+    export REPRO_ROUND_SHARDS=
+    sweep_smoke
 ) || status=$?
 
 exit $status

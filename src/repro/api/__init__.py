@@ -11,8 +11,9 @@ from repro.api.spec import (
     WirelessSpec,
 )
 from repro.api.registry import (
-    DATASETS, MODELS, SCHEMES, Registry,
-    register_dataset, register_model, register_scheme,
+    CHANNEL_NOISE, DATA_SELECTION, DATASETS, MODELS, SCHEMES, Registry,
+    register_channel_noise, register_data_selection, register_dataset,
+    register_model, register_scheme,
 )
 from repro.api.callbacks import (
     Callback, CheckpointCallback, load_run_state, restore_trainer_state,
@@ -22,14 +23,22 @@ from repro.api.experiment import (
     Environment, Experiment, Run, RunResult, build_environment,
     resume_from_checkpoint,
 )
+from repro.api.sweep import (
+    JsonlDirSink, RunSink, SweepCell, SweepResult, SweepSpec,
+    override_field, run_sweep,
+)
 
 __all__ = [
     "DataSpec", "ModelSpec", "WirelessSpec", "SchemeSpec", "RunSpec",
     "ExperimentSpec", "SpecError",
     "Registry", "MODELS", "DATASETS", "SCHEMES",
+    "DATA_SELECTION", "CHANNEL_NOISE",
     "register_model", "register_dataset", "register_scheme",
+    "register_data_selection", "register_channel_noise",
     "Callback", "CheckpointCallback",
     "save_trainer_state", "restore_trainer_state", "load_run_state",
     "Environment", "build_environment", "Experiment", "Run", "RunResult",
     "resume_from_checkpoint",
+    "SweepSpec", "SweepCell", "SweepResult", "RunSink", "JsonlDirSink",
+    "run_sweep", "override_field",
 ]

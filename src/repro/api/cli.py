@@ -1,21 +1,29 @@
-"""Experiment CLI: run / resume / validate declarative spec files.
+"""Experiment CLI: run / resume / validate / sweep declarative spec files.
 
     PYTHONPATH=src python -m repro.api.cli run spec.json \
         [--out run.jsonl] [--checkpoint-dir DIR] [--checkpoint-every N]
     PYTHONPATH=src python -m repro.api.cli resume DIR [--step N] [--out ...]
     PYTHONPATH=src python -m repro.api.cli validate spec.json
+    PYTHONPATH=src python -m repro.api.cli sweep sweep.json --out-dir DIR \
+        [--seeds 0,1,2] [--schemes proposed,no_gen] \
+        [--grid data.sigma=0.5,5.0] [--expand-only]
 
 `run` executes a spec end-to-end (data -> phi -> P1 -> federated training)
 and optionally exports the RunResult as JSON-lines. `resume` rebuilds the
 experiment from the spec stored inside the checkpoint directory and
 continues it bit-for-bit from the checkpointed round. `validate` parses a
 spec, resolves every registry key, and prints the normalized JSON — a dry
-syntax/typo check that runs no training.
+syntax/typo check that runs no training. `sweep` expands a SweepSpec (or
+an ExperimentSpec used as the base template with axes given by flags) into
+its deterministic run matrix and executes it with environment / trainer
+reuse, streaming per-run JSONL files into --out-dir as runs finish
+(repro.api.sweep).
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import sys
 
 from repro.api.experiment import (
@@ -23,6 +31,7 @@ from repro.api.experiment import (
 )
 from repro.api.registry import DATASETS, MODELS, SCHEMES
 from repro.api.spec import ExperimentSpec
+from repro.api.sweep import JsonlDirSink, SweepSpec, run_sweep
 
 
 def _print_result(res: RunResult) -> None:
@@ -76,6 +85,54 @@ def _cmd_validate(args) -> int:
     return 0
 
 
+def _parse_values(raw: str) -> list:
+    """Comma-separated axis values; each parsed as JSON when possible
+    (numbers, booleans) and kept as a string otherwise."""
+    out = []
+    for tok in raw.split(","):
+        tok = tok.strip()
+        try:
+            out.append(json.loads(tok))
+        except json.JSONDecodeError:
+            out.append(tok)
+    return out
+
+
+def _cmd_sweep(args) -> int:
+    with open(args.spec) as f:
+        d = json.load(f)
+    # a SweepSpec file carries a "base" template; a plain ExperimentSpec
+    # file IS the base, with axes supplied by flags
+    sweep = (SweepSpec.from_dict(d) if "base" in d
+             else SweepSpec(base=ExperimentSpec.from_dict(d)))
+    if args.seeds:
+        sweep = dataclasses.replace(sweep, seeds=_parse_values(args.seeds))
+    if args.schemes:
+        sweep = dataclasses.replace(
+            sweep, schemes=[str(s) for s in _parse_values(args.schemes)])
+    for axis in args.grid or ():
+        path, _, raw = axis.partition("=")
+        if not raw:
+            raise SystemExit(f"--grid expects PATH=V1,V2,..., got {axis!r}")
+        sweep = dataclasses.replace(
+            sweep, grid={**sweep.grid, path: _parse_values(raw)})
+    cells = sweep.expand()
+    print(f"sweep matrix: {len(cells)} run(s)")
+    if args.expand_only:
+        for c in cells:
+            print(f"  {c.name}")
+        return 0
+    sink = JsonlDirSink(args.out_dir) if args.out_dir else None
+    res = run_sweep(sweep, sink=sink, log=print)
+    print(f"done: {len(res.results)} runs; environments built "
+          f"{res.n_env_builds}, trainers built {res.n_trainer_builds} "
+          f"(reused across {len(res.results) - res.n_trainer_builds} runs)")
+    if sink is not None:
+        print(f"wrote {len(sink.paths)} run files + index under "
+              f"{sink.directory}")
+    return 0
+
+
 def main(argv: list[str] | None = None) -> int:
     p = argparse.ArgumentParser(
         prog="python -m repro.api.cli",
@@ -103,6 +160,21 @@ def main(argv: list[str] | None = None) -> int:
                         help="parse a spec + resolve registry keys, no run")
     pv.add_argument("spec")
     pv.set_defaults(fn=_cmd_validate)
+
+    pw = sub.add_parser(
+        "sweep", help="expand + execute a run matrix with env/trainer reuse")
+    pw.add_argument("spec", help="SweepSpec JSON (with 'base') or an "
+                                 "ExperimentSpec JSON used as the template")
+    pw.add_argument("--out-dir", help="stream per-run JSONL files (+ a "
+                                      "sweep.jsonl index) here as runs finish")
+    pw.add_argument("--seeds", help="override the run.seed axis, e.g. 0,1,2")
+    pw.add_argument("--schemes", help="override the scheme.name axis")
+    pw.add_argument("--grid", action="append", metavar="PATH=V1,V2",
+                    help="add a cartesian axis over a spec field path "
+                         "(repeatable)")
+    pw.add_argument("--expand-only", action="store_true",
+                    help="print the deterministic matrix, run nothing")
+    pw.set_defaults(fn=_cmd_sweep)
 
     args = p.parse_args(argv)
     return args.fn(args)

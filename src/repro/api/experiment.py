@@ -30,7 +30,9 @@ from repro.api.callbacks import (
     Callback, CheckpointCallback, metrics_from_dict, metrics_to_dict,
     restore_trainer_state,
 )
-from repro.api.registry import DATASETS, MODELS, SCHEMES
+from repro.api.registry import (
+    CHANNEL_NOISE, DATA_SELECTION, DATASETS, MODELS, SCHEMES,
+)
 from repro.api.spec import ExperimentSpec
 from repro.checkpoint import CheckpointManager
 from repro.core import (
@@ -62,7 +64,10 @@ class Environment:
 def build_environment(spec: ExperimentSpec) -> Environment:
     """Steps 1-4 of the pipeline: data, federation, phi, wireless system,
     model/loss/eval functions — everything the scheme solver and trainer
-    consume. Pure in the spec (all randomness seeded from it)."""
+    consume. Pure in the spec (all randomness seeded from it).
+    `build_environment.n_builds` counts invocations — the sweep engine's
+    env-reuse tests assert on it."""
+    build_environment.n_builds += 1
     d = spec.data
     dataset = DATASETS.get(d.dataset)(d)
     parts = partition_by_dirichlet(dataset.y_train, d.n_clients, d.sigma,
@@ -86,6 +91,9 @@ def build_environment(spec: ExperimentSpec) -> Environment:
         init_fn=init_fn, apply_fn=apply_fn,
         loss_fn=make_loss_fn(apply_fn),
         eval_fn=make_eval_fn(apply_fn, dataset.x_test, dataset.y_test))
+
+
+build_environment.n_builds = 0
 
 
 def _json_finite(obj):
@@ -164,8 +172,10 @@ class RunResult:
                 kind = rec.pop("kind", "round")
                 if kind == "experiment":
                     spec, summary = rec["spec"], rec["summary"]
-                else:
+                elif kind == "round":
                     history.append(metrics_from_dict(rec))
+                # unknown kinds (e.g. a sweep index's "sweep_run" records)
+                # are skipped for forward compatibility
         return cls(spec=spec, summary=summary, history=history)
 
 
@@ -244,12 +254,22 @@ class Experiment:
     def from_file(cls, path: str) -> "Experiment":
         return cls(ExperimentSpec.from_file(path))
 
-    def build(self, *, env: Environment | None = None) -> Run:
+    def build(self, *, env: Environment | None = None,
+              trainer: FederatedTrainer | None = None) -> Run:
         """Resolve registries, solve (P1), and construct the trainer.
 
         `env=` reuses a previously built scheme-independent environment
         (same data/model/wireless axes) so scheme sweeps don't rebuild the
-        dataset or re-draw the channel."""
+        dataset or re-draw the channel.
+
+        `trainer=` additionally reuses a previously built trainer over the
+        SAME environment and (eta, batch, backend, shards, data-selection)
+        wiring: its compiled engine traces and device-resident ClientStore
+        survive while `FederatedTrainer.reset` reinitializes params, the
+        global gradient, the batch RNG, and every counter from this spec —
+        bit-for-bit a cold build. The sweep engine (repro.api.sweep) pools
+        trainers this way; it owns the compatibility bookkeeping beyond
+        the cheap scalar checks asserted here."""
         spec = self.spec
         if env is None:
             env = build_environment(spec)
@@ -257,8 +277,9 @@ class Experiment:
             # The environment is scheme-independent EXCEPT for the batch
             # size baked into SystemParams (Table-I bookkeeping): reusing
             # one across specs is only sound when the data/model/wireless
-            # axes and the batch agree (budgets e0/t0 are fine to vary —
-            # they only reach solve_p1 and the stop conditions).
+            # axes and the batch agree (budgets e0/t0 — and the trainer-
+            # level noise/selection axes — are fine to vary: they only
+            # reach solve_p1, the stop conditions, and the trainer).
             es = env.spec
             mismatch = [name for name, a, b in (
                 ("data", es.data, spec.data),
@@ -280,11 +301,28 @@ class Experiment:
         schedule = solve_p1(env.phi, spec.wireless.e0, spec.wireless.t0,
                             env.ch.uplink, env.ch.downlink, env.sp, consts,
                             ao)
-        trainer = FederatedTrainer(
-            env.loss_fn, env.init_fn(jax.random.key(spec.run.seed)),
-            env.clients, eta=sc.eta, batch_size=sc.batch, seed=spec.run.seed,
-            backend=spec.run.backend, shards=spec.run.shards,
-            rounds_per_dispatch=spec.run.rounds_per_dispatch)
+        noise = CHANNEL_NOISE.get(spec.wireless.noise_model)(spec.wireless)
+        select = DATA_SELECTION.get(sc.data_selection)(sc)
+        params = env.init_fn(jax.random.key(spec.run.seed))
+        if trainer is not None:
+            bad = [name for name, a, b in (
+                ("scheme.eta", trainer.eta, sc.eta),
+                ("scheme.batch", trainer.batch_size, sc.batch),
+                ("run.backend", trainer.backend, spec.run.backend),
+            ) if a != b]
+            if bad:
+                raise ValueError(
+                    f"build(trainer=...) reuse requires matching {bad}")
+            trainer.reset(params, spec.run.seed, channel_noise=noise)
+        else:
+            clients = select(env.clients) if select is not None \
+                else env.clients
+            trainer = FederatedTrainer(
+                env.loss_fn, params, clients,
+                eta=sc.eta, batch_size=sc.batch, seed=spec.run.seed,
+                backend=spec.run.backend, shards=spec.run.shards,
+                rounds_per_dispatch=spec.run.rounds_per_dispatch,
+                channel_noise=noise)
         return Run(spec, env, schedule, trainer)
 
     def run(self, **kw) -> RunResult:

@@ -1,27 +1,35 @@
 """String-keyed component registries backing the declarative specs.
 
-Three registries resolve the spec's string fields into build-time factories:
+Five registries resolve the spec's string fields into build-time factories:
 
-  MODELS    name -> factory(spec: ModelSpec, dataset) -> (init_fn, apply_fn)
-  DATASETS  name -> factory(spec: DataSpec) -> SyntheticImageDataset-like
-  SCHEMES   name -> factory(spec: SchemeSpec) -> AOConfig
+  MODELS          name -> factory(spec: ModelSpec, dataset) -> (init, apply)
+  DATASETS        name -> factory(spec: DataSpec) -> SyntheticImageDataset-like
+  SCHEMES         name -> factory(spec: SchemeSpec) -> AOConfig
+  DATA_SELECTION  name -> factory(spec: SchemeSpec) -> (clients -> clients)
+                  or None ("none"): per-client sample curation applied once
+                  per run before training (core/selection.py, Albaseer)
+  CHANNEL_NOISE   name -> factory(spec: WirelessSpec) -> channel-noise model
+                  or None ("none"): noisy-aggregation axis consumed by the
+                  trainer per round (wireless/channel.py, Wu)
 
 Register new components with the `register_model` / `register_dataset` /
-`register_scheme` decorators (or call them with the factory directly); an
-unknown key raises a KeyError that names the registry and lists what IS
-registered, so a typo in a spec file fails with an actionable message.
+`register_scheme` / `register_data_selection` / `register_channel_noise`
+decorators (or call them with the factory directly); an unknown key raises
+a KeyError that names the registry and lists what IS registered, so a typo
+in a spec file fails with an actionable message.
 
 Seeded here: the paper's evaluation models (lenet, resnet) plus the
-dispatch-bound mlp-edge model, both synthetic datasets, and the seven
+dispatch-bound mlp-edge model, both synthetic datasets, the seven
 benchmark schemes (the paper's six Sec.-V comparisons + `proposed_exact`,
 the 2^N-exact (P5) minimizer — see benchmarks/common.py for the finding
-that motivates keeping both selection variants).
+that motivates keeping both selection variants), the two Albaseer-style
+data-selection policies, and the Gaussian aggregation-noise model.
 """
 from __future__ import annotations
 
 from typing import Any, Callable
 
-from repro.api.spec import DataSpec, ModelSpec, SchemeSpec
+from repro.api.spec import DataSpec, ModelSpec, SchemeSpec, WirelessSpec
 from repro.core.optimizer_ao import AOConfig
 from repro.data import make_dataset
 from repro.models import (
@@ -67,10 +75,14 @@ class Registry:
 MODELS = Registry("model")
 DATASETS = Registry("dataset")
 SCHEMES = Registry("scheme")
+DATA_SELECTION = Registry("data-selection policy")
+CHANNEL_NOISE = Registry("channel-noise model")
 
 register_model = MODELS.register
 register_dataset = DATASETS.register
 register_scheme = SCHEMES.register
+register_data_selection = DATA_SELECTION.register
+register_channel_noise = CHANNEL_NOISE.register
 
 
 # ---------------------------------------------------------------------------
@@ -151,3 +163,61 @@ register_scheme("fixed_pruning", _scheme(fix_lambda=0.0, **_PAPER_BASE))
 register_scheme("fixed_selection", _scheme(fix_selection=True, **_PAPER_BASE))
 register_scheme("fixed_power", _scheme(fix_power=0.5, **_PAPER_BASE))
 register_scheme("fixed_clock", _scheme(fix_freq=True, **_PAPER_BASE))
+
+
+# ---------------------------------------------------------------------------
+# Data-selection policies (SchemeSpec.data_selection). A factory receives
+# the SchemeSpec and returns a clients -> clients transform (or None for
+# the identity): each client's shard is filtered ONCE, deterministically,
+# before the trainer is built — phi and the wireless system stay computed
+# on the full federation (the policy models energy-saving curation at
+# training time, not a change of the underlying distributions), which is
+# also what keeps the scheme-independent Environment reusable across
+# policies in a sweep.
+# ---------------------------------------------------------------------------
+
+@register_data_selection("none")
+def _data_selection_none(spec: SchemeSpec):
+    return None
+
+
+def _data_selection_policy(policy: str):
+    def factory(spec: SchemeSpec):
+        from repro.core.federated import ClientData
+        from repro.core.selection import data_selection_keep_mask
+        kw = dict(spec.data_selection_kwargs)
+
+        def apply(clients):
+            out = []
+            for c in clients:
+                keep = data_selection_keep_mask(c.x, c.y, policy=policy, **kw)
+                out.append(ClientData(c.x[keep], c.y[keep]))
+            return out
+        return apply
+    return factory
+
+
+register_data_selection("threshold", _data_selection_policy("threshold"))
+register_data_selection("fine_grained", _data_selection_policy("fine_grained"))
+
+
+# ---------------------------------------------------------------------------
+# Channel-noise models (WirelessSpec.noise_model): the noisy-aggregation
+# axis. A factory receives the WirelessSpec and returns an object with the
+# `sample_packed(round, shape, valid)` protocol (or None for the paper's
+# noiseless channel); the trainer draws per-round noise from it keyed by
+# the round index only, so trajectories are invariant to dispatch grouping
+# and checkpoint resume.
+# ---------------------------------------------------------------------------
+
+@register_channel_noise("none")
+def _channel_noise_none(spec: WirelessSpec):
+    return None
+
+
+@register_channel_noise("gaussian")
+def _channel_noise_gaussian(spec: WirelessSpec):
+    from repro.wireless.channel import GaussianAggregateNoise
+    kw = dict(spec.noise_kwargs)
+    kw.setdefault("seed", spec.seed)
+    return GaussianAggregateNoise(**kw)

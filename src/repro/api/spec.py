@@ -85,13 +85,21 @@ class ModelSpec(_SpecBase):
 
 @dataclasses.dataclass
 class WirelessSpec(_SpecBase):
-    """The wireless edge system (paper Table I) and the run budgets."""
+    """The wireless edge system (paper Table I) and the run budgets.
+
+    `noise_model` picks a registered aggregation-channel noise model
+    (repro.api.registry CHANNEL_NOISE; "none" = the paper's noiseless
+    aggregation, "gaussian" = AWGN on the averaged gradient à la Wu et
+    al.); `noise_kwargs` reach its factory (e.g. {"std": 1e-3} — the draw
+    seed defaults to this spec's `seed`)."""
 
     table: str = "auto"                # "mnist" | "cifar10" | "auto" (by dataset)
     e0: float = 4.0                    # energy budget E0 [J]
     t0: float = 40.0                   # delay budget T0 [s]
     path_loss: float = 1e-5
     seed: int = 0                      # Rayleigh channel draw
+    noise_model: str = "none"          # registry key (CHANNEL_NOISE)
+    noise_kwargs: dict = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -102,7 +110,11 @@ class SchemeSpec(_SpecBase):
     plus `proposed_exact`); `ao` overrides AOConfig fields on top of the
     scheme's definition (e.g. {"outer_iters": 1} for smoke runs) and
     `bound` overrides BoundConstants fields beyond the ones derived from
-    (rounds, batch, eta)."""
+    (rounds, batch, eta). `data_selection` picks a registered per-client
+    data-selection policy (repro.api.registry DATA_SELECTION; "none",
+    "threshold", "fine_grained" — Albaseer-style sample curation applied
+    once per run, see core/selection.py) with `data_selection_kwargs`
+    reaching its factory (e.g. {"keep_frac": 0.8})."""
 
     name: str = "proposed"             # registry key
     rounds: int = 60                   # S+1 (schedule length)
@@ -110,6 +122,8 @@ class SchemeSpec(_SpecBase):
     batch: int = 32
     ao: dict = dataclasses.field(default_factory=dict)
     bound: dict = dataclasses.field(default_factory=dict)
+    data_selection: str = "none"       # registry key (DATA_SELECTION)
+    data_selection_kwargs: dict = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass

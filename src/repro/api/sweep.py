@@ -1,0 +1,330 @@
+"""Multi-seed sweep engine over ExperimentSpec templates (DESIGN.md §9).
+
+The paper's claims are statistical — Figs. 4-8 are means over seeds and
+over scenario knobs (sigma, budgets, heterogeneity) — so the unit of
+reproduction above a single run is a *matrix* of runs. `SweepSpec` takes a
+base `ExperimentSpec` template plus axis overrides and expands it into a
+deterministic run matrix:
+
+    sweep = SweepSpec(
+        base=ExperimentSpec(...),
+        seeds=[0, 1, 2],                       # run.seed axis
+        schemes=["proposed", "no_gen"],        # scheme.name axis
+        grid={"data.sigma": [0.5, 5.0]},       # cartesian over field paths
+        zip={"wireless.e0": [2.0, 4.0],        # paths varied in lockstep
+             "wireless.t0": [20.0, 40.0]})     # (one composite axis)
+    result = run_sweep(sweep, sink=JsonlDirSink("runs/"))
+
+Expansion is pure and deterministic in the spec: axes nest in the order
+grid (insertion order) -> zip -> schemes -> seeds, with the later axes
+varying fastest, and every cell gets a stable, filename-safe name
+(`expand()` twice yields the identical matrix — property-tested). Field
+paths are validated against the spec tree; a typo fails with the field
+path and the valid keys, like every other spec error.
+
+Execution exploits what single runs cannot: one scheme-independent
+`Environment` is built per distinct (data, model, wireless, batch) group
+and reused through `Experiment.build(env=...)`, and one `FederatedTrainer`
+is pooled per (environment, eta, batch, backend, shards, rounds-per-
+dispatch, data-selection) family and re-seeded via `FederatedTrainer.
+reset` — its compiled engine traces and device-resident ClientStore
+survive across the matrix, so an S-seed sweep costs far less than S cold
+runs while every cell stays bit-for-bit equal to the same spec run
+standalone (test-asserted). Each finished `RunResult` is streamed to the
+sink AS RUNS FINISH (one per-run JSONL file plus an appended, flushed
+index record), so long sweeps are observable and interruptible without
+losing completed cells.
+
+CLI: `python -m repro.api.cli sweep sweep.json --out-dir DIR`
+(`benchmarks/report.py --runs 'DIR/*.jsonl'` aggregates mean±std over the
+seed axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import json
+import os
+import re
+from typing import Any, Callable, Sequence
+
+from repro.api.experiment import (
+    Environment, Experiment, RunResult, build_environment, _json_finite,
+)
+from repro.api.spec import ExperimentSpec, SpecError, _SpecBase
+
+
+# ---------------------------------------------------------------------------
+# Field-path overrides
+# ---------------------------------------------------------------------------
+
+def override_field(spec: ExperimentSpec, path: str, value: Any):
+    """Return a copy of `spec` with the dotted `path` (e.g. "data.sigma",
+    "scheme.name", "run.backend") replaced by `value`. Unknown segments
+    fail with the offending field path and the valid keys at that level —
+    sweep axes get the same actionable errors as spec files."""
+    parts = path.split(".")
+
+    def rec(node, i: int):
+        where = ".".join([type(spec).__name__] + parts[:i])
+        if not dataclasses.is_dataclass(node):
+            raise SpecError(
+                f"{where}: cannot descend into non-spec field with "
+                f"{'.'.join(parts[i:])!r}")
+        valid = {f.name for f in dataclasses.fields(node)}
+        key = parts[i]
+        if key not in valid:
+            raise SpecError(
+                f"{where}: unknown field {key!r} in sweep axis path "
+                f"{path!r}; valid keys: {sorted(valid)}")
+        if i == len(parts) - 1:
+            return dataclasses.replace(node, **{key: value})
+        return dataclasses.replace(node,
+                                   **{key: rec(getattr(node, key), i + 1)})
+
+    if not path:
+        raise SpecError("empty sweep axis path")
+    return rec(spec, 0)
+
+
+def _axis_label(path: str, value: Any) -> str:
+    parts = path.split(".")
+    # "scheme.name" -> "scheme=...": a bare "name=" label says nothing
+    tail = parts[-2] if parts[-1] == "name" and len(parts) > 1 else parts[-1]
+    v = value if isinstance(value, (str, int, float, bool)) else \
+        json.dumps(value, sort_keys=True)
+    return f"{tail}={v}"
+
+
+def _sanitize(name: str) -> str:
+    return re.sub(r"[^A-Za-z0-9_.=+-]+", "-", name)
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepCell:
+    """One expanded run: a stable filename-safe name + its full spec."""
+
+    index: int
+    name: str
+    spec: ExperimentSpec
+
+
+# ---------------------------------------------------------------------------
+# SweepSpec
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SweepSpec(_SpecBase):
+    """A base ExperimentSpec template + axis overrides.
+
+    seeds    run.seed values (the innermost / fastest axis);
+    schemes  scheme.name values;
+    grid     {field path: [values]} — cartesian product, axes nest in
+             insertion order;
+    zip      {field path: [values]} — all paths varied in lockstep as ONE
+             composite axis (every list must have the same length).
+
+    Empty axes are skipped; with no axes at all the sweep is the single
+    base run. Round-trips through dict/JSON like every spec."""
+
+    base: ExperimentSpec = dataclasses.field(default_factory=ExperimentSpec)
+    seeds: list = dataclasses.field(default_factory=list)
+    schemes: list = dataclasses.field(default_factory=list)
+    grid: dict = dataclasses.field(default_factory=dict)
+    zip: dict = dataclasses.field(default_factory=dict)
+
+    _NESTED = {"base": ExperimentSpec}
+
+    @classmethod
+    def from_file(cls, path: str) -> "SweepSpec":
+        with open(path) as f:
+            return cls.from_dict(json.load(f))
+
+    def save(self, path: str) -> str:
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+        return path
+
+    # -- expansion ----------------------------------------------------------
+
+    def axes(self) -> list[tuple[tuple[str, ...], list[tuple]]]:
+        """The ordered axis list: [(paths, [value-tuples])]. grid axes come
+        first (insertion order, one path each), then the zip composite
+        (all its paths at once), then schemes, then seeds."""
+        axes: list[tuple[tuple[str, ...], list[tuple]]] = []
+        for path, values in self.grid.items():
+            if not isinstance(values, (list, tuple)) or not values:
+                raise SpecError(
+                    f"sweep grid axis {path!r} needs a non-empty value "
+                    f"list, got {values!r}")
+            axes.append(((path,), [(v,) for v in values]))
+        if self.zip:
+            lens = {p: len(v) for p, v in self.zip.items()}
+            if len(set(lens.values())) > 1:
+                raise SpecError(
+                    f"sweep zip axes must have equal lengths, got {lens}")
+            if not next(iter(lens.values())):
+                raise SpecError("sweep zip axes need non-empty value lists")
+            paths = tuple(self.zip)
+            axes.append((paths,
+                         [tuple(vals) for vals in zip(*self.zip.values())]))
+        if self.schemes:
+            axes.append((("scheme.name",), [(s,) for s in self.schemes]))
+        if self.seeds:
+            axes.append((("run.seed",), [(int(s),) for s in self.seeds]))
+        return axes
+
+    def expand(self) -> list[SweepCell]:
+        """Materialize the deterministic run matrix. The same template
+        always yields the same cells in the same order (itertools.product
+        over the ordered axes, later axes fastest)."""
+        axes = self.axes()
+        # validate every path once up front so a typo fails before any run
+        for paths, values in axes:
+            for p, v in zip(paths, values[0]):
+                override_field(self.base, p, v)
+        cells: list[SweepCell] = []
+        combos = itertools.product(*[vals for _, vals in axes]) if axes \
+            else iter([()])
+        for i, combo in enumerate(combos):
+            spec = self.base
+            labels: list[str] = []
+            for (paths, _), vals in zip(axes, combo):
+                for p, v in zip(paths, vals):
+                    spec = override_field(spec, p, v)
+                    labels.append(_axis_label(p, v))
+            name = _sanitize("_".join(labels)) if labels else "base"
+            cells.append(SweepCell(index=i, name=f"{i:03d}_{name}",
+                                   spec=spec))
+        return cells
+
+
+# ---------------------------------------------------------------------------
+# Streaming sinks
+# ---------------------------------------------------------------------------
+
+class RunSink:
+    """Streaming consumer of finished runs: `write(name, result)` is
+    called AS EACH RUN FINISHES (never post-sweep), `close()` once after
+    the last run. Subclass for custom streaming (DBs, sockets, ...)."""
+
+    def write(self, name: str, result: RunResult) -> None:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+
+class JsonlDirSink(RunSink):
+    """The standard JSONL sink: each finished run lands as
+    `<dir>/<name>.jsonl` (the full RunResult — header + per-round records,
+    complete and parseable the moment `write` returns) plus one summary
+    record appended AND FLUSHED to `<dir>/sweep.jsonl`, so a running sweep
+    can be tailed and a killed one keeps every completed cell.
+    `benchmarks/report.py --runs '<dir>/*.jsonl'` ingests the per-run
+    files (the index's `sweep_run` records are skipped on ingest)."""
+
+    def __init__(self, directory: str, *, index_name: str = "sweep.jsonl"):
+        os.makedirs(directory, exist_ok=True)
+        self.directory = directory
+        self.paths: list[str] = []
+        self.index_path = os.path.join(directory, index_name)
+        self._index = open(self.index_path, "w")
+
+    def write(self, name: str, result: RunResult) -> None:
+        path = os.path.join(self.directory, f"{name}.jsonl")
+        result.to_jsonl(path)
+        self.paths.append(path)
+        self._index.write(json.dumps(_json_finite(
+            {"kind": "sweep_run", "name": name, "spec": result.spec,
+             "summary": result.summary}), allow_nan=False) + "\n")
+        self._index.flush()
+
+    def close(self) -> None:
+        if not self._index.closed:
+            self._index.close()
+
+
+# ---------------------------------------------------------------------------
+# Execution: env + trainer reuse across the matrix
+# ---------------------------------------------------------------------------
+
+def _env_key(spec: ExperimentSpec) -> str:
+    """Runs sharing this key may share one Environment: the data / model
+    axes, the wireless channel draw, and the batch baked into Table-I
+    bookkeeping. Budgets (e0/t0) and the trainer-level noise / selection
+    axes deliberately stay OUT of the key — they vary freely over a
+    reused environment (mirrors Experiment.build's env-reuse contract)."""
+    w = spec.wireless
+    return json.dumps([spec.data.to_dict(), spec.model.to_dict(),
+                       w.table, w.path_loss, w.seed, spec.scheme.batch],
+                      sort_keys=True)
+
+
+def _trainer_key(spec: ExperimentSpec) -> str:
+    """Runs sharing an environment AND this key may share one trainer
+    (reset between runs): everything that shapes the compiled engine or
+    the client roster. channel noise is NOT included — it is per-round
+    host data, swapped by `reset(channel_noise=...)`."""
+    sc, r = spec.scheme, spec.run
+    return json.dumps([sc.eta, sc.batch, r.backend, r.shards,
+                       r.rounds_per_dispatch, sc.data_selection,
+                       sc.data_selection_kwargs], sort_keys=True)
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Outcome of `run_sweep`: results in matrix order + reuse accounting
+    (the env/trainer build counters the acceptance tests assert on)."""
+
+    cells: list[SweepCell]
+    results: list[RunResult]
+    n_env_builds: int
+    n_trainer_builds: int
+
+    def summary_rows(self) -> list[dict]:
+        return [{"name": c.name, **r.summary}
+                for c, r in zip(self.cells, self.results)]
+
+
+def run_sweep(sweep: SweepSpec, *, sink: RunSink | None = None,
+              log: Callable[[str], None] | None = None,
+              callbacks: Sequence = ()) -> SweepResult:
+    """Execute the full matrix, streaming each RunResult to `sink` as it
+    finishes. Runs execute in matrix order; environments and trainers are
+    pooled by `_env_key` / `_trainer_key`, which preserves bit-for-bit
+    equality with standalone runs (reset re-derives every piece of run
+    state from the cell's own spec). `callbacks` are passed to every run
+    (careful with stateful hooks — one instance sees all cells)."""
+    cells = sweep.expand()
+    envs: dict[str, Environment] = {}
+    trainers: dict[str, Any] = {}
+    n_env = n_trainer = 0
+    results: list[RunResult] = []
+    try:
+        for cell in cells:
+            ek = _env_key(cell.spec)
+            env = envs.get(ek)
+            if env is None:
+                env = envs[ek] = build_environment(cell.spec)
+                n_env += 1
+            tk = ek + "\x00" + _trainer_key(cell.spec)
+            trainer = trainers.get(tk)
+            run = Experiment(cell.spec).build(env=env, trainer=trainer)
+            if trainer is None:
+                trainers[tk] = run.trainer
+                n_trainer += 1
+            res = run.run(callbacks=callbacks)
+            results.append(res)
+            if sink is not None:
+                sink.write(cell.name, res)
+            if log is not None:
+                s = res.summary
+                log(f"[{len(results)}/{len(cells)}] {cell.name}: "
+                    f"{s['rounds_run']} rounds, acc "
+                    f"{s['final_accuracy']:.3f}")
+    finally:
+        if sink is not None:
+            sink.close()
+    return SweepResult(cells=cells, results=results, n_env_builds=n_env,
+                       n_trainer_builds=n_trainer)

@@ -30,6 +30,14 @@ Two execution backends (DESIGN.md §5):
     the TPU Pallas path may differ by 1 ulp per update (FMA contraction in
     the fused aggregate kernel, see kernels/ops.packed_fedsgd_update).
 
+Noisy aggregation (beyond the paper, Wu et al.): with ``channel_noise``
+set, the server observes ``mean(g) + noise`` instead of the clean
+aggregate — the noisy value becomes both the FedSGD update and the next
+round's broadcast v. Noise is drawn on host per ROUND INDEX in the packed
+buffer layout and consumed identically by both backends and both dispatch
+modes (see wireless/channel.GaussianAggregateNoise and DESIGN.md §9), so
+the bit-for-bit contract below extends to noisy runs.
+
 Ragged clients (fewer samples than the batch size): when the loss provides
 a weighted form (`models.make_loss_fn` attaches one as ``loss.weighted``),
 *both* backends evaluate that client via the weighted mean
@@ -56,7 +64,7 @@ import numpy as np
 from repro.core import pruning
 from repro.core.client_store import ClientStore
 from repro.core.optimizer_ao import Schedule
-from repro.core.packing import ParamPack
+from repro.core.packing import LANES, ParamPack
 from repro.core.round_engine import RoundEngine
 from repro.wireless.comm import SystemParams, round_delay, round_energy
 
@@ -127,6 +135,7 @@ class FederatedTrainer:
         weighted_loss_fn: Callable | None = None,
         shards: int | None = None,
         rounds_per_dispatch: int | str = "auto",
+        channel_noise=None,
     ):
         if backend not in ("packed", "reference"):
             raise ValueError(f"unknown backend {backend!r}")
@@ -161,6 +170,15 @@ class FederatedTrainer:
         self._store: ClientStore | None = None
         self.n_batch_uploads = 0
         self.n_block_dispatches = 0
+        # Noisy aggregation channel (wireless/channel.GaussianAggregateNoise
+        # protocol: sample_packed(round, shape, valid)). Noise is drawn on
+        # host keyed by the ROUND INDEX only, in the packed [R, 128] layout
+        # (the reference backend unpacks the same buffer through a layout-
+        # only ParamPack, built lazily), so both backends, both dispatch
+        # modes, and resumed runs all consume identical draws.
+        self.channel_noise = channel_noise
+        self._noise_ref_pack: ParamPack | None = None
+        self._noise_valid: np.ndarray | None = None
         # lifecycle hooks for the current run() (repro.api.Callback
         # protocol); held on the instance so _exec_block can fire
         # on_block_end without threading them through every call
@@ -220,6 +238,59 @@ class FederatedTrainer:
             self._v_view = None
         else:
             self._global_grad = tree
+
+    # -- run-state lifecycle ------------------------------------------------
+
+    def reset(self, params: PyTree, seed: int, *, channel_noise=None) -> None:
+        """Reinitialize all run state for a FRESH run over the same
+        (clients, loss, eta, batch, backend, shards) wiring — the sweep
+        engine's trainer-reuse hook (repro.api.sweep). Compiled engine
+        traces and the device-resident ClientStore survive, which is what
+        makes an S-seed sweep cost far less than S cold trainers; params,
+        the global gradient, the batch RNG, and every counter are reset
+        exactly as the constructor would, so a reused trainer's trajectory
+        is bit-for-bit a cold one's."""
+        self.rng = np.random.default_rng(seed)
+        self.channel_noise = channel_noise
+        self.n_fallback_rounds = 0
+        self.n_batch_uploads = 0
+        self.n_block_dispatches = 0
+        self._callbacks = ()
+        if self.backend == "packed":
+            self._w, self._v = self.engine.init_buffers(params)
+            self._w_view = self._v_view = None
+        else:
+            self._params = params
+            self._global_grad = jax.tree.map(jnp.zeros_like, params)
+
+    # -- noisy aggregation channel ------------------------------------------
+
+    def _noise_layout(self) -> ParamPack:
+        """The packed layout noise is drawn in: the engine's pack on the
+        packed backend; a lazily built layout-only pack on the reference
+        backend (ParamPack.build is pure metadata — no buffers)."""
+        if self.pack is not None:
+            return self.pack
+        if self._noise_ref_pack is None:
+            self._noise_ref_pack = ParamPack.build(self._params,
+                                                   self.prune_spec)
+        return self._noise_ref_pack
+
+    def _noise_packed(self, s: int) -> np.ndarray:
+        """Round-s aggregation noise as a packed [R, 128] host array with
+        padding lanes zeroed (they hold no real coordinates and must stay
+        zero in the buffers)."""
+        pack = self._noise_layout()
+        if self._noise_valid is None:
+            self._noise_valid = pack.valid_mask()
+        return self.channel_noise.sample_packed(
+            s, (pack.rows, LANES), self._noise_valid)
+
+    def _noise_tree(self, s: int) -> PyTree:
+        """The same round-s draw as a pytree (reference backend): unpack is
+        a pure gather of the packed draw, so per-coordinate values are
+        identical to what the packed engine adds."""
+        return self._noise_layout().unpack(jnp.asarray(self._noise_packed(s)))
 
     # -- round primitives ---------------------------------------------------
 
@@ -281,8 +352,11 @@ class FederatedTrainer:
         grads = pruning.apply_masks(grads, masks)  # pruned coords not uploaded
         return grads, masks, float(loss)
 
-    def server_step(self, grads: list[PyTree]) -> None:
+    def server_step(self, grads: list[PyTree], noise: PyTree | None = None) -> None:
         """Eqs. (6)-(7): average selected gradients, FedSGD update.
+        `noise` (a pytree, `_noise_tree`) models the noisy aggregation
+        channel: the server observes mean(g) + noise and both broadcasts
+        and updates with it.
 
         Deliberately eager: each op runs as its own dispatch, so eta*g is
         rounded to fp32 before the subtraction. The packed engine blocks
@@ -295,22 +369,26 @@ class FederatedTrainer:
         for extra in grads[1:]:
             g = jax.tree.map(lambda acc, e: acc + e, g, extra)
         g = jax.tree.map(lambda t: t * inv, g)
+        if noise is not None:
+            g = jax.tree.map(lambda t, nz: t + nz, g, noise)
         self.global_grad = g
         self.params = jax.tree.map(
             lambda w, gg: w - self.eta * gg.astype(w.dtype), self.params, g)
 
     def _reference_round(self, selected: list[int], lam_s: np.ndarray,
-                         batches: list) -> list[float]:
+                         batches: list, s: int = 0) -> list[float]:
         """Original per-client loop: steps 2-4 with host-side thresholds."""
         grads, losses = [], []
         for n, batch in zip(selected, batches):
             g, _, loss = self.client_update(n, float(lam_s[n]), batch=batch)
             grads.append(g)
             losses.append(loss)
-        self.server_step(grads)
+        self.server_step(
+            grads,
+            noise=self._noise_tree(s) if self.channel_noise else None)
         return losses
 
-    def _round(self, selected: list[int], lam_s: np.ndarray):
+    def _round(self, selected: list[int], lam_s: np.ndarray, s: int = 0):
         """Steps 2-4 for one round; batches are drawn once, in selected
         order, so both backends consume the identical RNG sequence.
 
@@ -326,7 +404,7 @@ class FederatedTrainer:
         if self.backend != "packed" or not stackable:
             if self.backend == "packed":
                 self.n_fallback_rounds += 1
-            return self._reference_round(selected, lam_s, batches)
+            return self._reference_round(selected, lam_s, batches, s=s)
         lam_sel = np.asarray([lam_s[n] for n in selected], np.float64)
         xs = jnp.stack([b[0] for b in batches])
         ys = jnp.stack([b[1] for b in batches])
@@ -336,7 +414,8 @@ class FederatedTrainer:
             self._w, self._v, xs, ys, lam_sel,
             # all-ones weights carry no information: skip the transfer and
             # let the engine materialize them on device
-            sample_weights=None if sws.all() else sws)
+            sample_weights=None if sws.all() else sws,
+            noise=self._noise_packed(s) if self.channel_noise else None)
         return losses
 
     # -- block execution ----------------------------------------------------
@@ -445,9 +524,12 @@ class FederatedTrainer:
             sw[k, c_k:] = sw[k, c_k - 1]
             lams[k, c_k:] = lam_s[sel[-1]]
         store = self._ensure_store()
+        noises = (np.stack([self._noise_packed(start + k)
+                            for k in range(n_rounds)])
+                  if self.channel_noise else None)
         self._w, self._v, losses, _ = self.engine.block_step(
             self._w, self._v, store, cids, idxs, lams, counts,
-            sample_weights=sw if any_ragged else None)
+            sample_weights=sw if any_ragged else None, noises=noises)
         self.n_block_dispatches += 1
         for k in range(n_rounds):
             out[start + k] = losses[k, : int(counts[k])]
@@ -588,7 +670,7 @@ class FederatedTrainer:
                 if s in block_losses:
                     losses = block_losses.pop(s)
                 elif selected:
-                    losses = self._round(selected, lam_s)
+                    losses = self._round(selected, lam_s, s=s)
                 else:
                     losses = None
                 m = RoundMetrics(

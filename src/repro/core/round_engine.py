@@ -296,6 +296,26 @@ class RoundEngine:
         self._blk_multi = jax.jit(self._make_block_impl(round_multi),
                                   donate_argnums=donate_args)
 
+        # Noisy-aggregation variants: separate jit entry points (the noise
+        # operand changes the traced graph), wrapping the same round
+        # bodies, so the noiseless traces stay byte-identical to before.
+        def _noisy_step(fn):
+            def impl(w, v, xs, ys, sw, cw, inv, k, noise):
+                self.n_traces += 1
+                return fn(w, v, xs, ys, sw, cw, inv, k, noise=noise)
+            return impl
+
+        self._step_shared_nz = jax.jit(_noisy_step(round_shared),
+                                       donate_argnums=donate_args)
+        self._step_multi_nz = jax.jit(_noisy_step(round_multi),
+                                      donate_argnums=donate_args)
+        self._blk_shared_nz = jax.jit(
+            self._make_block_impl(round_shared, noisy=True),
+            donate_argnums=donate_args)
+        self._blk_multi_nz = jax.jit(
+            self._make_block_impl(round_multi, noisy=True),
+            donate_argnums=donate_args)
+
     # -- jitted bodies ------------------------------------------------------
 
     @property
@@ -356,7 +376,22 @@ class RoundEngine:
         _, (losses, grads) = jax.lax.scan(body, 0.0, (masks, xs, ys, sw))
         return losses, grads
 
-    def _round_shared(self, w, v, xs, ys, sw, cw, inv, k):
+    def _aggregate_update(self, w, grads, cw, inv, noise):
+        """Weighted aggregate + FedSGD tail, with an optional noisy
+        aggregation channel: when `noise` (packed [R, L], zero on padding
+        lanes) is traced in, the update consumes mean(g) + noise — the
+        server never sees the clean aggregate (wireless/channel.py). The
+        noiseless path keeps the fused kernel; the noisy path goes through
+        the XLA mirror so the fenced mean product is materialized before
+        the add (bit-parity with the eager reference sequence)."""
+        if noise is None:
+            return ops.packed_fedsgd_update_weighted(
+                w, grads, cw, inv, self.eta, impl=self.kernel_impl)
+        gsum = ops.packed_weighted_grad_sum(grads, cw)
+        return ops.packed_apply_mean_update(w, gsum, inv, self.eta,
+                                            noise=noise)
+
+    def _round_shared(self, w, v, xs, ys, sw, cw, inv, k, noise=None):
         """One shared-lambda round, given device batches — the single body
         traced by both the per-round jit and the block scan, so the two
         paths compile the identical round math (bit-for-bit contract)."""
@@ -367,19 +402,17 @@ class RoundEngine:
         pruned = w * mask
         losses, grads = self._grads_shared(pruned, mask, xs, ys, sw)
         # step stays an output of the jitted graph: see the weighted update
-        w2, g, step = ops.packed_fedsgd_update_weighted(
-            w, grads, cw, inv, self.eta, impl=self.kernel_impl)
+        w2, g, step = self._aggregate_update(w, grads, cw, inv, noise)
         return w2, g, losses, thr, step
 
-    def _round_multi(self, w, v, xs, ys, sw, cw, inv, ks):
+    def _round_multi(self, w, v, xs, ys, sw, cw, inv, ks, noise=None):
         """One per-client-lambda round (see _round_shared)."""
         q = (w * v) ** 2
         thr = kth_smallest_threshold(q, self.prunable, ks)      # [C]
         _, masks = ops.packed_importance_masks(w, v, self.prunable, thr,
                                                impl=self.kernel_impl)
         losses, grads = self._grads_multi(w, masks, xs, ys, sw)
-        w2, g, step = ops.packed_fedsgd_update_weighted(
-            w, grads, cw, inv, self.eta, impl=self.kernel_impl)
+        w2, g, step = self._aggregate_update(w, grads, cw, inv, noise)
         return w2, g, losses, thr, step
 
     def _shared_impl(self, w, v, xs, ys, sw, cw, inv, k):
@@ -392,7 +425,7 @@ class RoundEngine:
 
     # -- block scaffold: lax.scan over the round axis -----------------------
 
-    def _make_block_impl(self, round_fn):
+    def _make_block_impl(self, round_fn, noisy: bool = False):
         """K rounds per dispatch around any of the four per-round bodies:
         the scan carries (w, v) and consumes [K]-leading stacked schedule
         arrays; batches are gathered ON DEVICE from the ClientStore
@@ -401,9 +434,12 @@ class RoundEngine:
         crosses host->device inside a block. One scaffold serves the
         shared/multi x unsharded/sharded grid — each scan step is exactly
         the corresponding per-round body, which is what makes a block
-        bit-for-bit equal to K round_step dispatches."""
+        bit-for-bit equal to K round_step dispatches. With ``noisy`` the
+        scan additionally consumes a [K, R, L] per-round noise stack (one
+        upload per BLOCK, not per round — the zero-per-round-H2D property
+        is preserved)."""
 
-        def impl(w, v, dx, dy, cids, idxs, sw, counts, inv, ks):
+        def impl(w, v, dx, dy, cids, idxs, sw, counts, inv, ks, *noises):
             self.n_traces += 1
             # 0/1 client-validity weights straight from the per-round real
             # counts — built on device (exact 0.0/1.0, so the weighted
@@ -415,15 +451,16 @@ class RoundEngine:
 
             def body(carry, inp):
                 w, v = carry
-                cid, ix, sw_k, cw_k, inv_k, k = inp
+                cid, ix, sw_k, cw_k, inv_k, k = inp[:6]
                 xs = dx[cid[:, None], ix]
                 ys = dy[cid[:, None], ix]
                 w2, g, losses, thr, _ = round_fn(
-                    w, v, xs, ys, sw_k, cw_k, inv_k, k)
+                    w, v, xs, ys, sw_k, cw_k, inv_k, k,
+                    noise=inp[6] if noisy else None)
                 return (w2, g), (losses, thr)
 
-            (w2, v2), (losses, thrs) = jax.lax.scan(
-                body, (w, v), (cids, idxs, sw, cw, inv, ks))
+            xss = (cids, idxs, sw, cw, inv, ks) + noises
+            (w2, v2), (losses, thrs) = jax.lax.scan(body, (w, v), xss)
             return w2, v2, losses, thrs
 
         return impl
@@ -437,13 +474,14 @@ class RoundEngine:
     # per-shard gradient sums. The FedSGD update then runs replicated so
     # (w, v) never need resharding between rounds.
 
-    def _round_shared_sharded(self, w, v, xs, ys, sw, cw, inv, k):
+    def _round_shared_sharded(self, w, v, xs, ys, sw, cw, inv, k, noise=None):
         """Mesh variant of _round_shared: threshold / mask / FedSGD update
         replicated OUTSIDE the shard_map region (the shard_map replication
         checker has no rule for the `while` ops inside the threshold
         search and the FMA fence), per-shard gradient scan + the round's
         single psum inside. Traced by both the per-round jit and the block
-        scan, like its single-device sibling."""
+        scan, like its single-device sibling. `noise` (replicated) joins
+        the replicated update tail — the collective count is unchanged."""
         q = (w * v) ** 2
         thr = kth_smallest_threshold(q, self.prunable, k)
         _, mask = ops.packed_importance_mask(w, v, self.prunable, thr,
@@ -459,10 +497,11 @@ class RoundEngine:
             body, mesh=self.mesh,
             in_specs=(P(), P(), P("data"), P("data"), P("data"), P("data")),
             out_specs=(P("data"), P()))(pruned, mask, xs, ys, sw, cw)
-        w2, g, step = ops.packed_apply_mean_update(w, gsum, inv, self.eta)
+        w2, g, step = ops.packed_apply_mean_update(w, gsum, inv, self.eta,
+                                                   noise=noise)
         return w2, g, losses, thr, step
 
-    def _round_multi_sharded(self, w, v, xs, ys, sw, cw, inv, ks):
+    def _round_multi_sharded(self, w, v, xs, ys, sw, cw, inv, ks, noise=None):
         """Mesh variant of _round_multi (see _round_shared_sharded)."""
         q = (w * v) ** 2
         thr = kth_smallest_threshold(q, self.prunable, ks)      # [C]
@@ -482,7 +521,8 @@ class RoundEngine:
                       P("data"), P("data")),
             out_specs=(P("data"), P()))(
                 w, v, self.prunable, thr, xs, ys, sw, cw)
-        w2, g, step = ops.packed_apply_mean_update(w, gsum, inv, self.eta)
+        w2, g, step = ops.packed_apply_mean_update(w, gsum, inv, self.eta,
+                                                   noise=noise)
         return w2, g, losses, thr, step
 
     def _shared_sharded_impl(self, w, v, xs, ys, sw, cw, inv, k):
@@ -513,14 +553,19 @@ class RoundEngine:
         w = self.pack.pack(params)
         return w, jnp.zeros_like(w)
 
-    def round_step(self, w, v, xs, ys, lams, sample_weights=None):
+    def round_step(self, w, v, xs, ys, lams, sample_weights=None,
+                   noise=None):
         """One full round. xs: [C, B, ...], ys: [C, B], lams: [C] host-side
         pruning ratios for the selected clients; sample_weights: optional
-        [C, B] 0/1 per-sample weights (ragged clients padded to B). Returns
-        (w', v', losses [C], threshold, step) — all device arrays; nothing
-        is synced to host. `step` is the applied update eta*v' (kept as an
-        output so the update's multiply can never be FMA-contracted — the
-        bit-for-bit contract with the reference trainer depends on it)."""
+        [C, B] 0/1 per-sample weights (ragged clients padded to B);
+        noise: optional packed [R, L] aggregation-channel noise (zero on
+        padding lanes) added to the mean gradient before the update — the
+        noisy-uplink axis (wireless/channel.GaussianAggregateNoise).
+        Returns (w', v', losses [C], threshold, step) — all device arrays;
+        nothing is synced to host. `step` is the applied update eta*v'
+        (kept as an output so the update's multiply can never be
+        FMA-contracted — the bit-for-bit contract with the reference
+        trainer depends on it)."""
         lams = np.atleast_1d(np.asarray(lams, np.float64))
         if np.any((lams < 0.0) | (lams >= 1.0)):
             raise ValueError(f"lambda must be in [0,1), got {lams}")
@@ -558,13 +603,19 @@ class RoundEngine:
         inv = np.float32(1.0 / n_clients)
 
         if np.all(ks == ks[0]):
-            out = self._step_shared(w, v, xs, ys, sw, cw, inv,
-                                    jnp.asarray(ks[0], jnp.int32))
+            k_dev = jnp.asarray(ks[0], jnp.int32)
+            out = (self._step_shared(w, v, xs, ys, sw, cw, inv, k_dev)
+                   if noise is None else
+                   self._step_shared_nz(w, v, xs, ys, sw, cw, inv, k_dev,
+                                        jnp.asarray(noise)))
         else:
             ks_b = np.concatenate(
                 [ks, np.full(pad, ks[-1], np.int32)]) if pad else ks
-            out = self._step_multi(w, v, xs, ys, sw, cw, inv,
-                                   jnp.asarray(ks_b))
+            ks_dev = jnp.asarray(ks_b)
+            out = (self._step_multi(w, v, xs, ys, sw, cw, inv, ks_dev)
+                   if noise is None else
+                   self._step_multi_nz(w, v, xs, ys, sw, cw, inv, ks_dev,
+                                       jnp.asarray(noise)))
         w2, g, losses, thr, step = out
         if pad:
             losses = losses[:n_clients]
@@ -573,7 +624,7 @@ class RoundEngine:
         return w2, g, losses, thr, step
 
     def block_step(self, w, v, store, cids, idxs, lams, counts,
-                   sample_weights=None):
+                   sample_weights=None, noises=None):
         """K rounds in ONE jitted dispatch (`lax.scan` over the round axis).
 
         store : ClientStore — device-resident [C_all, N_max, ...] data.
@@ -589,6 +640,9 @@ class RoundEngine:
         counts: [K] int     — real selected count per round.
         sample_weights : [K, C, B] 0/1 weights or None (ragged clients
             padded to B carry 0 on their repeat samples).
+        noises : [K, R, L] per-round packed aggregation noise or None —
+            one stack per block dispatch (never a per-round upload), each
+            round consuming its own slice inside the scan.
 
         Returns (w', v', losses [K, C_b], thresholds [K] or [K, C_b]) —
         all device arrays, nothing synced; `losses[k, counts[k]:]` belongs
@@ -645,12 +699,15 @@ class RoundEngine:
         counts_dev = jnp.asarray(counts.astype(np.int32))
 
         shared = bool((ks == ks[:, :1]).all())
+        nz = () if noises is None else (jnp.asarray(noises),)
         if shared:
-            out = self._blk_shared(w, v, store.x, store.y, jnp.asarray(cids),
-                                   jnp.asarray(idxs), sw, counts_dev, inv,
-                                   jnp.asarray(ks[:, 0]))
+            fn = self._blk_shared if noises is None else self._blk_shared_nz
+            out = fn(w, v, store.x, store.y, jnp.asarray(cids),
+                     jnp.asarray(idxs), sw, counts_dev, inv,
+                     jnp.asarray(ks[:, 0]), *nz)
         else:
-            out = self._blk_multi(w, v, store.x, store.y, jnp.asarray(cids),
-                                  jnp.asarray(idxs), sw, counts_dev, inv,
-                                  jnp.asarray(ks))
+            fn = self._blk_multi if noises is None else self._blk_multi_nz
+            out = fn(w, v, store.x, store.y, jnp.asarray(cids),
+                     jnp.asarray(idxs), sw, counts_dev, inv,
+                     jnp.asarray(ks), *nz)
         return out

@@ -1,4 +1,4 @@
-"""(P4)/(P5): client selection.
+"""(P4)/(P5): client selection, and per-client data selection.
 
 Per-round objective (Theorem 1 summand):
 
@@ -16,6 +16,20 @@ subject to the round's energy/delay feasibility. Two solvers:
   quadratic+pruning term, relax a to [0,1], solve the resulting program by
   projected gradient, round by threshold sweep, update mu; iterate until the
   objective stops decreasing (Sec. IV-B-3).
+
+Per-client DATA selection (`data_selection_*`, beyond the paper): Albaseer
+et al. ("Fine-Grained Data Selection for Improved Energy Efficiency of
+Federated Edge Learning") have each client train on a curated subset of its
+local samples — excluding marginal/noisy ones — to cut per-round energy at
+matched accuracy. Reproduced here as deterministic per-client sample
+filters applied ONCE per run, before training: each sample is scored by its
+squared distance to its class centroid within the client's own shard (a
+model-free typicality proxy), and a policy keeps either the samples under a
+relative score threshold (`threshold`) or a fixed fraction of the most
+typical ones (`fine_grained`). Static filtering composes with the packed /
+block engines untouched — smaller clients simply ride the existing ragged
+path — so the axis adds zero per-round host work (the experiment API wires
+it through `SchemeSpec.data_selection`).
 """
 from __future__ import annotations
 
@@ -28,6 +42,58 @@ from repro.core.resource import solve_round_resources
 from repro.wireless.comm import SystemParams
 
 EXACT_LIMIT = 16
+
+
+# ---------------------------------------------------------------------------
+# Per-client data selection (Albaseer-style threshold / fine-grained filters)
+# ---------------------------------------------------------------------------
+
+def data_selection_scores(x: np.ndarray, y: np.ndarray) -> np.ndarray:
+    """Per-sample atypicality: squared distance to the sample's class
+    centroid, computed within the client's own shard. Deterministic in
+    (x, y); lower = more typical. Classes with a single sample score 0."""
+    y = np.asarray(y)
+    if len(y) == 0:
+        return np.zeros(0, np.float64)
+    x = np.asarray(x, np.float64).reshape(len(y), -1)
+    scores = np.zeros(len(y), np.float64)
+    for cls in np.unique(y):
+        idx = np.flatnonzero(y == cls)
+        centroid = x[idx].mean(axis=0)
+        scores[idx] = ((x[idx] - centroid) ** 2).sum(axis=1)
+    return scores
+
+
+def data_selection_keep_mask(
+    x: np.ndarray, y: np.ndarray, *, policy: str, tau: float = 1.5,
+    keep_frac: float = 0.8,
+) -> np.ndarray:
+    """Boolean keep-mask for one client's samples under a selection policy.
+
+    ``policy="threshold"``: keep samples whose score is <= tau * mean
+    score (relative threshold — scale-free across clients with very
+    different shard sizes / spreads). ``policy="fine_grained"``: keep the
+    ``ceil(keep_frac * n)`` most typical samples (ties broken by original
+    order via a stable argsort). Both always keep at least one sample, and
+    kept samples preserve their original order, so the filtered shard is
+    reproducible and independent of any RNG."""
+    scores = data_selection_scores(x, y)
+    n = len(scores)
+    if policy == "threshold":
+        if tau <= 0:
+            raise ValueError(f"tau must be > 0, got {tau}")
+        keep = scores <= tau * (scores.mean() if n else 0.0)
+    elif policy == "fine_grained":
+        if not 0.0 < keep_frac <= 1.0:
+            raise ValueError(f"keep_frac must be in (0, 1], got {keep_frac}")
+        k = max(1, int(np.ceil(keep_frac * n)))
+        keep = np.zeros(n, bool)
+        keep[np.argsort(scores, kind="stable")[:k]] = True
+    else:
+        raise ValueError(f"unknown data-selection policy {policy!r}")
+    if not keep.any() and n:
+        keep[int(np.argmin(scores))] = True
+    return keep
 
 
 def round_objective(

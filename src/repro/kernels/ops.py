@@ -178,13 +178,24 @@ def _rounded_product(eta, g):
 rounded_step = _rounded_product
 
 
-def packed_apply_mean_update(w, gsum, inv, eta):
-    """g = gsum * inv, then the FMA-fenced FedSGD step: (w', g, step).
+def packed_apply_mean_update(w, gsum, inv, eta, noise=None):
+    """g = gsum * inv (+ noise), then the FMA-fenced FedSGD step:
+    (w', g, step).
 
     The single tail shared by the weighted aggregate's XLA mirror and the
     sharded round engine (which applies it after the cross-shard psum) —
-    one copy of the fence-sensitive sequence, not three."""
-    g = gsum * inv
+    one copy of the fence-sensitive sequence, not three.
+
+    `noise` models a noisy aggregation channel (the server only observes
+    mean(g) + noise): it is added BEFORE the update and becomes part of the
+    broadcast g. The mean product is fenced on that path so the add cannot
+    be FMA-contracted with it — the eager reference sequence (scale, then
+    add, two dispatches) rounds each op, and bit-parity requires the fused
+    graph to do the same."""
+    if noise is None:
+        g = gsum * inv
+    else:
+        g = _rounded_product(inv, gsum) + noise
     step = _rounded_product(eta, g)
     return (w.astype(jnp.float32) - step).astype(w.dtype), g, step
 

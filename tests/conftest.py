@@ -21,3 +21,14 @@ except ModuleNotFoundError:
     import _hypothesis_stub
 
     _hypothesis_stub.install()
+
+
+def pytest_collection_modifyitems(items):
+    """Tiering (pytest.ini): anything not explicitly marked `slow` is
+    tier-1, so `-m tier1` == `-m "not slow"` and new tests are fast-tier
+    by default."""
+    import pytest
+
+    for item in items:
+        if "slow" not in item.keywords:
+            item.add_marker(pytest.mark.tier1)

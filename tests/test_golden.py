@@ -1,0 +1,99 @@
+"""Golden-trajectory regression: re-run the committed fixed-seed fixture
+and assert BITWISE-equal per-round history on fp32.
+
+The fixture (tests/golden/run_mlp_edge.jsonl, regenerated only
+deliberately via scripts/make_golden.py) carries its own spec in the
+header record, so this one test pins the entire pipeline — dataset
+generation, Dirichlet partition, phi, Table-I system, channel draw, the
+P1 solve, and the packed/block round engines — against silent numeric
+drift: any change to any of those layers that moves a single ulp in any
+round's mean train loss, eval metric, or ledger entry fails here with the
+exact round named.
+
+Float comparison is exact by construction: JSON serializes doubles via
+repr (shortest round-trip), so the parsed golden values are the bitwise
+floats the original run produced.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import Experiment, ExperimentSpec, RunResult
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "run_mlp_edge.jsonl")
+
+# The TRAINING trajectory (losses, selection, ledger) is bitwise on any
+# host: the fixture pins shards=1, so the engine math is single-device
+# regardless of how many devices XLA exposes. The EVAL reduction
+# (make_eval_fn's mean over the test set) is outside that contract — its
+# compiled reduction order follows the host's device count — so eval
+# metrics are held bitwise only on 1-device hosts and to float tolerance
+# on forced-multi-device CI hosts.
+EXACT_FIELDS = ("train_loss", "mean_lambda", "delay", "energy",
+                "cumulative_delay", "cumulative_energy")
+EVAL_FIELDS = ("test_loss", "test_accuracy")
+SINGLE_DEVICE = len(jax.devices()) == 1
+
+
+@pytest.fixture(scope="module")
+def golden():
+    return RunResult.from_jsonl(GOLDEN)
+
+
+def test_golden_fixture_shape(golden):
+    assert golden.spec, "golden fixture must embed its spec"
+    assert golden.summary["rounds_run"] == len(golden.history) > 0
+    # the fixture pins the single-device engine + block dispatch
+    assert golden.spec["run"]["shards"] == 1
+    assert golden.spec["run"]["rounds_per_dispatch"] == 2
+
+
+def test_golden_trajectory_bitwise(golden):
+    spec = ExperimentSpec.from_dict(golden.spec)
+    res = Experiment(spec).run()
+    assert len(res.history) == len(golden.history)
+    for got, want in zip(res.history, golden.history):
+        r = want.round
+        assert got.round == r
+        assert got.selected == want.selected, f"round {r}: selection"
+        for field in EXACT_FIELDS + (EVAL_FIELDS if SINGLE_DEVICE else ()):
+            a, b = getattr(got, field), getattr(want, field)
+            if isinstance(b, float) and np.isnan(b):
+                assert isinstance(a, float) and np.isnan(a), \
+                    f"round {r}: {field}"
+            else:
+                assert a == b, (f"round {r}: {field} drifted "
+                                f"{b!r} -> {a!r}")
+        if not SINGLE_DEVICE:
+            for field in EVAL_FIELDS:
+                a, b = getattr(got, field), getattr(want, field)
+                if b is not None:
+                    np.testing.assert_allclose(a, b, rtol=1e-5,
+                                               err_msg=f"round {r}: {field}")
+    if SINGLE_DEVICE:
+        # the summary (incl. the solved schedule's theta/energy/delay) too
+        assert res.summary == golden.summary
+    else:
+        assert res.summary["rounds_run"] == golden.summary["rounds_run"]
+        assert res.summary["theta"] == golden.summary["theta"]
+
+
+def test_golden_rerun_through_reference_backend(golden):
+    """The golden trajectory is also the REFERENCE backend's trajectory
+    (the fixture pins shards=1, where packed == reference bit-for-bit):
+    one more angle on the same fixture that catches a drift in either
+    backend even if both engines drift together on the packed side."""
+    import dataclasses
+
+    spec = ExperimentSpec.from_dict(golden.spec)
+    spec = dataclasses.replace(
+        spec, run=dataclasses.replace(spec.run, backend="reference"))
+    res = Experiment(spec).run()
+    assert [m.train_loss for m in res.history] == \
+        [m.train_loss for m in golden.history]
+    if SINGLE_DEVICE:
+        assert [m.test_accuracy for m in res.history] == \
+            [m.test_accuracy for m in golden.history]

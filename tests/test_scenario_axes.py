@@ -1,0 +1,293 @@
+"""Scenario axes: per-client data selection (Albaseer-style, SchemeSpec.
+data_selection) and the noisy aggregation channel (Wu-style, WirelessSpec.
+noise_model).
+
+Differential coverage (the PR-5 satellite): runs with either axis active
+are bitwise-equal between backend="packed" and backend="reference" (shards
+pinned to 1 — the single-device bit-for-bit contract), and between
+rounds_per_dispatch=1 and =4 block dispatch under the DEFAULT shard count
+(so the same tests exercise the mesh path bitwise-vs-itself in the forced
+4-device CI leg). Plus unit coverage for the policy filters, the noise
+model's round-keyed determinism, and spec round-tripping of the new
+fields.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (
+    CHANNEL_NOISE, DATA_SELECTION, DataSpec, Experiment, ExperimentSpec,
+    ModelSpec, RunSpec, SchemeSpec, WirelessSpec,
+)
+from repro.core import ClientData, FederatedTrainer
+from repro.core.selection import (
+    data_selection_keep_mask, data_selection_scores,
+)
+from repro.models import make_loss_fn
+from repro.wireless import ChannelModel, SystemParams
+from repro.wireless.channel import GaussianAggregateNoise
+
+from _trainer_pair import assert_trainers_bitwise, make_schedule
+
+N, ROUNDS, BATCH = 5, 6, 8
+
+
+def axes_spec(*, backend="packed", shards=None, rpd=1,
+              selection="none", selection_kwargs=None,
+              noise_model="none", noise_kwargs=None) -> ExperimentSpec:
+    return ExperimentSpec(
+        data=DataSpec(dataset="synthetic-mnist", n_clients=N, sigma=5.0,
+                      n_train=200, n_test=60, seed=0),
+        model=ModelSpec(name="mlp-edge"),
+        wireless=WirelessSpec(e0=1e6, t0=1e6, seed=0,
+                              noise_model=noise_model,
+                              noise_kwargs=noise_kwargs or {}),
+        scheme=SchemeSpec(name="proposed", rounds=ROUNDS, eta=0.1,
+                          batch=BATCH, ao={"outer_iters": 1},
+                          data_selection=selection,
+                          data_selection_kwargs=selection_kwargs or {}),
+        run=RunSpec(seed=0, eval_every=3, backend=backend, shards=shards,
+                    rounds_per_dispatch=rpd))
+
+
+def tiny_trainer_inputs():
+    rng = np.random.default_rng(0)
+    clients = [ClientData(rng.normal(size=(12, 4, 4, 1)).astype(np.float32),
+                          rng.integers(0, 3, size=12).astype(np.int32))
+               for _ in range(4)]
+
+    def apply_fn(p, x):
+        return x.reshape(x.shape[0], -1) @ p["w"]
+
+    params = {"w": jnp.asarray(rng.normal(size=(16, 3)).astype(np.float32))}
+    return clients, params, make_loss_fn(apply_fn)
+
+
+# ---------------------------------------------------------------------------
+# Data-selection policy units
+# ---------------------------------------------------------------------------
+
+def test_data_selection_scores_deterministic_and_classwise():
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(20, 4)).astype(np.float32)
+    y = rng.integers(0, 3, size=20)
+    s1, s2 = data_selection_scores(x, y), data_selection_scores(x, y)
+    assert np.array_equal(s1, s2)
+    assert (s1 >= 0).all()
+    # a single-sample class sits exactly on its own centroid
+    x1 = np.vstack([x, np.ones((1, 4), np.float32)])
+    y1 = np.concatenate([y, [7]])
+    assert data_selection_scores(x1, y1)[-1] == 0.0
+
+
+def test_keep_mask_fine_grained_fraction_and_order():
+    rng = np.random.default_rng(4)
+    x = rng.normal(size=(10, 3))
+    y = np.zeros(10, int)
+    keep = data_selection_keep_mask(x, y, policy="fine_grained",
+                                    keep_frac=0.5)
+    assert keep.sum() == 5
+    scores = data_selection_scores(x, y)
+    assert scores[keep].max() <= scores[~keep].min()     # most typical kept
+    # keep_frac=1.0 keeps everything; tiny fractions keep at least one
+    assert data_selection_keep_mask(x, y, policy="fine_grained",
+                                    keep_frac=1.0).all()
+    assert data_selection_keep_mask(x, y, policy="fine_grained",
+                                    keep_frac=1e-9).sum() == 1
+
+
+def test_keep_mask_threshold_and_errors():
+    rng = np.random.default_rng(5)
+    x = rng.normal(size=(16, 3))
+    y = np.zeros(16, int)
+    keep = data_selection_keep_mask(x, y, policy="threshold", tau=1.0)
+    scores = data_selection_scores(x, y)
+    assert np.array_equal(keep, scores <= scores.mean())
+    assert 1 <= keep.sum() < 16
+    # an enormous tau excludes nothing
+    assert data_selection_keep_mask(x, y, policy="threshold",
+                                    tau=1e9).all()
+    with pytest.raises(ValueError, match="unknown data-selection"):
+        data_selection_keep_mask(x, y, policy="wat")
+    with pytest.raises(ValueError, match="tau"):
+        data_selection_keep_mask(x, y, policy="threshold", tau=0.0)
+    with pytest.raises(ValueError, match="keep_frac"):
+        data_selection_keep_mask(x, y, policy="fine_grained", keep_frac=0.0)
+
+
+def test_data_selection_registry_filters_clients():
+    assert DATA_SELECTION.get("none")(SchemeSpec()) is None
+    sc = SchemeSpec(data_selection="fine_grained",
+                    data_selection_kwargs={"keep_frac": 0.5})
+    apply = DATA_SELECTION.get(sc.data_selection)(sc)
+    rng = np.random.default_rng(0)
+    clients = [ClientData(rng.normal(size=(10, 2, 2, 1)).astype(np.float32),
+                          rng.integers(0, 2, size=10).astype(np.int32))]
+    out = apply(clients)
+    assert len(out) == 1 and 1 <= len(out[0]) < 10
+    with pytest.raises(KeyError, match="data-selection"):
+        DATA_SELECTION.get("wat")
+
+
+# ---------------------------------------------------------------------------
+# Channel-noise units
+# ---------------------------------------------------------------------------
+
+def test_gaussian_noise_round_keyed_determinism():
+    nz = GaussianAggregateNoise(std=0.1, seed=3)
+    a = nz.sample_packed(5, (4, 128))
+    assert np.array_equal(a, nz.sample_packed(5, (4, 128)))   # same round
+    assert not np.array_equal(a, nz.sample_packed(6, (4, 128)))
+    assert not np.array_equal(
+        a, GaussianAggregateNoise(std=0.1, seed=4).sample_packed(5, (4, 128)))
+    assert a.dtype == np.float32
+    # valid mask zeroes padding lanes
+    valid = np.zeros((4, 128), np.float32)
+    valid[:2] = 1.0
+    masked = nz.sample_packed(5, (4, 128), valid)
+    assert (masked[2:] == 0).all() and (masked[:2] == a[:2]).all()
+    # std scales linearly over the same underlying draw
+    b = GaussianAggregateNoise(std=0.2, seed=3).sample_packed(5, (4, 128))
+    np.testing.assert_allclose(b, 2.0 * a, rtol=1e-6)
+
+
+def test_channel_noise_registry_and_spec_roundtrip():
+    assert CHANNEL_NOISE.get("none")(WirelessSpec()) is None
+    w = WirelessSpec(seed=9, noise_model="gaussian",
+                     noise_kwargs={"std": 0.01})
+    nz = CHANNEL_NOISE.get(w.noise_model)(w)
+    assert nz.std == 0.01 and nz.seed == 9          # seed defaults from spec
+    w2 = WirelessSpec(noise_model="gaussian",
+                      noise_kwargs={"std": 0.01, "seed": 3})
+    assert CHANNEL_NOISE.get(w2.noise_model)(w2).seed == 3
+    spec = axes_spec(noise_model="gaussian", noise_kwargs={"std": 0.01},
+                     selection="threshold", selection_kwargs={"tau": 2.0})
+    assert ExperimentSpec.from_json(spec.to_json()) == spec
+
+
+# ---------------------------------------------------------------------------
+# Differential: packed vs reference, bitwise (single-device contract)
+# ---------------------------------------------------------------------------
+
+def run_backend_pair(channel_noise=None):
+    """Both backends over the same tiny problem; packed pinned to one
+    shard (the bit-for-bit contract is single-device)."""
+    clients, params, loss_fn = tiny_trainer_inputs()
+    sched = make_schedule(np.ones((ROUNDS, 4)), 0.3)
+    sp = SystemParams.table1(4)
+    ch = ChannelModel(4)
+    out = {}
+    for backend in ("reference", "packed"):
+        kw = {"shards": 1} if backend == "packed" else {}
+        tr = FederatedTrainer(loss_fn, params, clients, eta=0.1,
+                              batch_size=4, seed=0, backend=backend,
+                              channel_noise=channel_noise, **kw)
+        out[backend] = (tr, tr.run(sched, sp, ch.uplink, ch.downlink))
+    return out
+
+
+def test_noise_packed_vs_reference_bitwise():
+    noise = GaussianAggregateNoise(std=1e-2, seed=7)
+    out = run_backend_pair(channel_noise=noise)
+    (tr_ref, hist_ref), (tr_pk, hist_pk) = out["reference"], out["packed"]
+    assert [m.train_loss for m in hist_ref] == \
+        [m.train_loss for m in hist_pk]
+    assert_trainers_bitwise(tr_ref, tr_pk)
+    # and the noise really is a different trajectory than the clean channel
+    clean = run_backend_pair(channel_noise=None)
+    assert [m.train_loss for m in clean["packed"][1]] != \
+        [m.train_loss for m in hist_pk]
+
+
+def test_selection_policy_packed_vs_reference_bitwise_api():
+    """Full API path: identical specs except run.backend, with a data-
+    selection policy active (filtered shards go ragged through the padded
+    weighted-loss path on both backends)."""
+    results = {}
+    for backend in ("reference", "packed"):
+        spec = axes_spec(backend=backend, shards=1, selection="fine_grained",
+                         selection_kwargs={"keep_frac": 0.6})
+        run = Experiment(spec).build()
+        results[backend] = (run, run.run())
+    (run_r, res_r), (run_p, res_p) = results["reference"], results["packed"]
+    # the policy actually filtered: every client lost samples vs the env
+    assert all(len(c) < len(e) for c, e in
+               zip(run_p.trainer.clients, run_p.env.clients))
+    assert [m.train_loss for m in res_r.history] == \
+        [m.train_loss for m in res_p.history]
+    assert [m.test_accuracy for m in res_r.history] == \
+        [m.test_accuracy for m in res_p.history]
+    assert_trainers_bitwise(run_r.trainer, run_p.trainer)
+
+
+def test_noise_packed_vs_reference_bitwise_api():
+    results = {}
+    for backend in ("reference", "packed"):
+        spec = axes_spec(backend=backend, shards=1, noise_model="gaussian",
+                         noise_kwargs={"std": 1e-3})
+        results[backend] = Experiment(spec).build().run()
+    assert [m.train_loss for m in results["reference"].history] == \
+        [m.train_loss for m in results["packed"].history]
+    assert [m.test_loss for m in results["reference"].history] == \
+        [m.test_loss for m in results["packed"].history]
+
+
+# ---------------------------------------------------------------------------
+# Differential: rpd=1 vs rpd=4 block dispatch (default shards — the forced
+# 4-device CI leg runs this file on the mesh, where both sides shard)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("axis_kw", [
+    {"selection": "fine_grained", "selection_kwargs": {"keep_frac": 0.6}},
+    {"noise_model": "gaussian", "noise_kwargs": {"std": 1e-3}},
+])
+def test_axes_block_dispatch_bitwise(axis_kw):
+    results = {}
+    for rpd in (1, 4):
+        spec = axes_spec(rpd=rpd, **axis_kw)
+        run = Experiment(spec).build()
+        results[rpd] = (run, run.run())
+    (run1, res1), (run4, res4) = results[1], results[4]
+    assert run4.trainer.n_block_dispatches > 0       # blocks actually ran
+    assert [m.train_loss for m in res1.history] == \
+        [m.train_loss for m in res4.history]
+    assert [m.test_accuracy for m in res1.history] == \
+        [m.test_accuracy for m in res4.history]
+    for a, b in zip(jax.tree_util.tree_leaves(run1.trainer.params),
+                    jax.tree_util.tree_leaves(run4.trainer.params)):
+        assert bool(jnp.all(a == b))
+
+
+@pytest.mark.slow
+def test_combined_axes_packed_vs_reference_bitwise_lenet():
+    """Slow-tier (scripts/test.sh --all): both axes ACTIVE AT ONCE on the
+    conv model — selection-filtered ragged clients AND a noisy channel,
+    packed vs reference, bitwise."""
+    results = {}
+    for backend in ("reference", "packed"):
+        spec = axes_spec(backend=backend, shards=1,
+                         selection="threshold", selection_kwargs={"tau": 1.2},
+                         noise_model="gaussian", noise_kwargs={"std": 1e-3})
+        spec = dataclasses.replace(spec, model=ModelSpec(name="lenet"))
+        run = Experiment(spec).build()
+        results[backend] = (run, run.run())
+    (run_r, res_r), (run_p, res_p) = results["reference"], results["packed"]
+    assert [m.train_loss for m in res_r.history] == \
+        [m.train_loss for m in res_p.history]
+    assert_trainers_bitwise(run_r.trainer, run_p.trainer)
+
+
+def test_noise_composes_with_sweep_axes():
+    """noise_std is sweepable like any other field path, and the noise
+    axis changes the trajectory while sharing one environment."""
+    from repro.api import SweepSpec, run_sweep
+    sw = SweepSpec(base=axes_spec(),
+                   grid={"wireless.noise_model": ["none", "gaussian"]})
+    res = run_sweep(sw)
+    assert res.n_env_builds == 1                 # noise is trainer-level
+    a, b = res.results
+    assert [m.train_loss for m in a.history] != \
+        [m.train_loss for m in b.history]

@@ -1,0 +1,308 @@
+"""Multi-seed sweep engine (repro.api.sweep, DESIGN.md §9).
+
+Covers: SweepSpec dict/JSON round-trip identity on randomized trees
+(hypothesis, stub-compatible offline), unknown-key field-path errors for
+sweep axes, deterministic matrix expansion (same template -> same matrix
+order), axis nesting/zip semantics, the execution engine's environment +
+trainer reuse (build-counter-asserted), streaming-sink ordering, bitwise
+equality of swept runs vs the same spec run standalone through `cli run`,
+the `cli sweep` subcommand, and the report's seed-aggregated mean±std
+section.
+"""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.api import (
+    DataSpec, Experiment, ExperimentSpec, JsonlDirSink, ModelSpec, RunSink,
+    RunResult, RunSpec, SchemeSpec, SpecError, SweepSpec, WirelessSpec,
+    build_environment, override_field, run_sweep,
+)
+from repro.api import cli
+
+N_CLIENTS, ROUNDS, BATCH = 5, 4, 8
+
+
+def base_spec(**run_kw) -> ExperimentSpec:
+    return ExperimentSpec(
+        data=DataSpec(dataset="synthetic-mnist", n_clients=N_CLIENTS,
+                      sigma=5.0, n_train=200, n_test=60, seed=0),
+        model=ModelSpec(name="mlp-edge"),
+        wireless=WirelessSpec(e0=1e6, t0=1e6, seed=0),
+        scheme=SchemeSpec(name="proposed", rounds=ROUNDS, eta=0.1,
+                          batch=BATCH, ao={"outer_iters": 1}),
+        run=RunSpec(seed=0, eval_every=2, **run_kw))
+
+
+# ---------------------------------------------------------------------------
+# Property-based: spec round-trips + expansion determinism
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.floats(min_value=0.1, max_value=10.0),
+       st.integers(min_value=2, max_value=40),
+       st.integers(min_value=1, max_value=200),
+       st.sampled_from(["proposed", "no_gen", "fixed_pruning",
+                        "proposed_exact"]),
+       st.sampled_from(["lenet", "mlp-edge", "resnet"]),
+       st.sampled_from(["none", "threshold", "fine_grained"]),
+       st.sampled_from(["none", "gaussian"]))
+def test_experiment_spec_roundtrip_randomized(sigma, n_clients, rounds,
+                                              scheme, model, selection,
+                                              noise_model):
+    spec = ExperimentSpec(
+        data=DataSpec(sigma=sigma, n_clients=n_clients, seed=n_clients),
+        model=ModelSpec(name=model),
+        wireless=WirelessSpec(e0=float(rounds), noise_model=noise_model,
+                              noise_kwargs={"std": sigma / 100.0}),
+        scheme=SchemeSpec(name=scheme, rounds=rounds,
+                          data_selection=selection,
+                          data_selection_kwargs={"keep_frac": 0.5}),
+        run=RunSpec(seed=rounds))
+    d = spec.to_dict()
+    assert ExperimentSpec.from_dict(d) == spec
+    assert ExperimentSpec.from_dict(d).to_dict() == d
+    assert ExperimentSpec.from_json(spec.to_json()) == spec
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=99), min_size=0,
+                max_size=4),
+       st.lists(st.floats(min_value=0.1, max_value=9.0), min_size=1,
+                max_size=3),
+       st.sampled_from([[], ["proposed"], ["proposed", "no_gen"]]))
+def test_sweep_spec_roundtrip_and_deterministic_expansion(seeds, sigmas,
+                                                          schemes):
+    sw = SweepSpec(base=base_spec(), seeds=seeds, schemes=list(schemes),
+                   grid={"data.sigma": list(sigmas)})
+    d = sw.to_dict()
+    assert SweepSpec.from_dict(d) == sw
+    assert SweepSpec.from_dict(d).to_dict() == d
+    back = SweepSpec.from_json(sw.to_json())
+    assert back == sw
+
+    cells_a = sw.expand()
+    cells_b = sw.expand()
+    cells_c = back.expand()
+    assert [(c.index, c.name, c.spec) for c in cells_a] == \
+        [(c.index, c.name, c.spec) for c in cells_b] == \
+        [(c.index, c.name, c.spec) for c in cells_c]
+    expect = len(sigmas) * max(len(schemes), 1) * max(len(seeds), 1)
+    assert len(cells_a) == expect
+    assert len({c.name for c in cells_a}) == len(cells_a)   # names unique
+
+
+# ---------------------------------------------------------------------------
+# Field-path overrides + axis semantics
+# ---------------------------------------------------------------------------
+
+def test_override_field_paths():
+    spec = base_spec()
+    assert override_field(spec, "data.sigma", 0.5).data.sigma == 0.5
+    assert override_field(spec, "scheme.name", "no_gen").scheme.name == \
+        "no_gen"
+    assert override_field(spec, "run.seed", 7).run.seed == 7
+    # the original spec is never mutated
+    assert spec.data.sigma == 5.0 and spec.run.seed == 0
+
+
+def test_override_unknown_paths_error_with_context():
+    spec = base_spec()
+    with pytest.raises(SpecError) as e:
+        override_field(spec, "data.bogus", 1)
+    msg = str(e.value)
+    assert "ExperimentSpec.data" in msg and "bogus" in msg
+    assert "sigma" in msg                       # lists the valid keys
+    with pytest.raises(SpecError, match="banana"):
+        override_field(spec, "banana.sigma", 1)
+    with pytest.raises(SpecError, match="cannot descend"):
+        override_field(spec, "data.sigma.deeper", 1)
+    with pytest.raises(SpecError, match="empty"):
+        override_field(spec, "", 1)
+    # a bad axis path fails at expand() time, before any run executes
+    with pytest.raises(SpecError, match="wat"):
+        SweepSpec(base=spec, grid={"data.wat": [1, 2]}).expand()
+
+
+def test_axis_nesting_order_and_names():
+    sw = SweepSpec(base=base_spec(), seeds=[0, 1],
+                   schemes=["proposed", "no_gen"],
+                   grid={"data.sigma": [0.5, 5.0]})
+    names = [c.name for c in sw.expand()]
+    # grid outermost, schemes next, seeds fastest
+    assert names == [
+        "000_sigma=0.5_scheme=proposed_seed=0",
+        "001_sigma=0.5_scheme=proposed_seed=1",
+        "002_sigma=0.5_scheme=no_gen_seed=0",
+        "003_sigma=0.5_scheme=no_gen_seed=1",
+        "004_sigma=5.0_scheme=proposed_seed=0",
+        "005_sigma=5.0_scheme=proposed_seed=1",
+        "006_sigma=5.0_scheme=no_gen_seed=0",
+        "007_sigma=5.0_scheme=no_gen_seed=1",
+    ]
+    specs = [c.spec for c in sw.expand()]
+    assert specs[0].data.sigma == 0.5 and specs[4].data.sigma == 5.0
+    assert specs[2].scheme.name == "no_gen" and specs[3].run.seed == 1
+
+
+def test_zip_axis_lockstep_and_mismatch():
+    sw = SweepSpec(base=base_spec(),
+                   zip={"wireless.e0": [2.0, 4.0],
+                        "wireless.t0": [20.0, 40.0]})
+    cells = sw.expand()
+    assert len(cells) == 2                      # ONE composite axis
+    assert cells[0].spec.wireless.e0 == 2.0
+    assert cells[0].spec.wireless.t0 == 20.0
+    assert cells[1].spec.wireless.e0 == 4.0
+    assert cells[1].spec.wireless.t0 == 40.0
+    with pytest.raises(SpecError, match="equal lengths"):
+        SweepSpec(base=base_spec(),
+                  zip={"wireless.e0": [1.0],
+                       "wireless.t0": [1.0, 2.0]}).expand()
+
+
+def test_empty_sweep_is_single_base_run():
+    cells = SweepSpec(base=base_spec()).expand()
+    assert len(cells) == 1
+    assert cells[0].spec == base_spec()
+
+
+# ---------------------------------------------------------------------------
+# Execution: reuse accounting, streaming, bitwise parity with cli run
+# ---------------------------------------------------------------------------
+
+class RecordingSink(RunSink):
+    """Asserts streaming: every write happens one-at-a-time as runs finish,
+    with the result fully formed at write time."""
+
+    def __init__(self):
+        self.names, self.rounds_seen, self.closed = [], [], False
+
+    def write(self, name, result):
+        self.names.append(name)
+        self.rounds_seen.append(len(result.history))
+
+    def close(self):
+        self.closed = True
+
+
+@pytest.fixture(scope="module")
+def sweep_result(tmp_path_factory):
+    d = str(tmp_path_factory.mktemp("sweep"))
+    sw = SweepSpec(base=base_spec(), seeds=[0, 1],
+                   schemes=["proposed", "no_gen"])
+    sink = JsonlDirSink(d)
+    rec = RecordingSink()
+
+    class Both(RunSink):
+        def write(self, name, result):
+            sink.write(name, result)
+            rec.write(name, result)
+            # STREAMING: the per-run file exists the moment the run ends
+            assert os.path.exists(os.path.join(d, f"{name}.jsonl"))
+
+        def close(self):
+            sink.close()
+            rec.close()
+
+    n0 = build_environment.n_builds
+    res = run_sweep(sw, sink=Both())
+    return sw, res, sink, rec, d, build_environment.n_builds - n0
+
+
+def test_sweep_reuses_environment_and_trainer(sweep_result):
+    sw, res, sink, rec, d, env_delta = sweep_result
+    assert len(res.results) == 4
+    # ONE environment serves 2 schemes x 2 seeds (build-counter-asserted)
+    assert res.n_env_builds == 1 and env_delta == 1
+    # ONE trainer pool entry serves all 4 runs (reset between runs)
+    assert res.n_trainer_builds == 1
+
+
+def test_sweep_streams_results_incrementally(sweep_result):
+    sw, res, sink, rec, d, _ = sweep_result
+    assert rec.names == [c.name for c in res.cells]    # matrix order
+    assert rec.rounds_seen == [ROUNDS] * 4             # fully formed
+    assert rec.closed
+    assert len(sink.paths) == 4
+    with open(sink.index_path) as f:
+        index = [json.loads(line) for line in f]
+    assert [r["kind"] for r in index] == ["sweep_run"] * 4
+    assert [r["name"] for r in index] == rec.names
+
+
+def test_swept_run_bitwise_equals_standalone_cli_run(sweep_result, tmp_path):
+    """Acceptance: every swept cell == the same spec run via `cli run`."""
+    sw, res, sink, rec, d, _ = sweep_result
+    cell = res.cells[3]                    # no_gen, seed 1: a reused-
+    spec_path = cell.spec.save(str(tmp_path / "cell.json"))   # trainer run
+    out = str(tmp_path / "solo.jsonl")
+    assert cli.main(["run", spec_path, "--out", out]) == 0
+    solo = RunResult.from_jsonl(out)
+    swept = res.results[3]
+    assert [m.train_loss for m in solo.history] == \
+        [m.train_loss for m in swept.history]
+    assert [m.test_accuracy for m in solo.history] == \
+        [m.test_accuracy for m in swept.history]
+    assert [m.cumulative_energy for m in solo.history] == \
+        [m.cumulative_energy for m in swept.history]
+    assert solo.summary == swept.summary
+
+
+def test_sweep_jsonl_roundtrip_and_report_aggregation(sweep_result):
+    report = pytest.importorskip("benchmarks.report")
+    sw, res, sink, rec, d, _ = sweep_result
+    paths = sorted(os.path.join(d, p) for p in os.listdir(d))
+    table = report.runs_table(paths)
+    assert "no_gen" in table and "proposed" in table
+    # seed aggregation: 2 groups (one per scheme), each n=2, mean ± std
+    rows = report.aggregate_runs(paths)
+    assert [row["n"] for row in rows] == [2, 2]
+    for row in rows:
+        mean, std, n = row["final_accuracy"]
+        assert n == 2 and np.isfinite(mean) and std >= 0.0
+    agg = report.sweep_table(paths)
+    assert "±" in agg and "| 2 |" in agg
+    # the index file is skipped on ingest, not misparsed as a run
+    assert all("sweep.jsonl" not in p or True for p in paths)
+    assert len(report._parseable_runs(paths)) == 4
+
+
+def test_cli_sweep_end_to_end(tmp_path, capsys):
+    spec_path = base_spec().save(str(tmp_path / "base.json"))
+    out_dir = str(tmp_path / "runs")
+    assert cli.main(["sweep", spec_path, "--seeds", "0,1",
+                     "--schemes", "proposed",
+                     "--out-dir", out_dir]) == 0
+    out = capsys.readouterr().out
+    assert "sweep matrix: 2 run(s)" in out
+    assert "environments built 1" in out
+    files = sorted(os.listdir(out_dir))
+    assert len([f for f in files if f != "sweep.jsonl"]) == 2
+    assert "sweep.jsonl" in files
+    r = RunResult.from_jsonl(os.path.join(out_dir, files[0]))
+    assert r.summary["rounds_run"] == ROUNDS
+
+
+def test_cli_sweep_expand_only_and_sweepspec_file(tmp_path, capsys):
+    sw = SweepSpec(base=base_spec(), seeds=[0, 1, 2],
+                   grid={"data.sigma": [0.5, 5.0]})
+    path = sw.save(str(tmp_path / "sweep.json"))
+    assert cli.main(["sweep", path, "--expand-only"]) == 0
+    out = capsys.readouterr().out
+    assert "sweep matrix: 6 run(s)" in out
+    assert out.count("sigma=0.5") == 3 and out.count("seed=2") == 2
+
+
+def test_build_trainer_reuse_rejects_mismatch():
+    spec = base_spec()
+    run = Experiment(spec).build()
+    other = dataclasses.replace(
+        spec, scheme=dataclasses.replace(spec.scheme, eta=0.2))
+    with pytest.raises(ValueError, match="scheme.eta"):
+        Experiment(other).build(env=run.env, trainer=run.trainer)
