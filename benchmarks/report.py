@@ -78,8 +78,9 @@ def _parseable_runs(paths) -> list:
 def runs_table(paths) -> str:
     """Markdown summary of RunResult JSONL exports, one row per run."""
     out = ["| run | dataset | model | scheme | rounds | final acc @ round | "
-           "E used [J] | T used [s] | theta | feasible |",
-           "|---|---|---|---|---|---|---|---|---|---|"]
+           "E used [J] | T used [s] | theta | feasible | "
+           "faults (drop/quar/skip) |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
     for path, r in _parseable_runs(paths):
         s = r.summary
         spec = r.spec or {}
@@ -90,6 +91,12 @@ def runs_table(paths) -> str:
             v = s.get(key)
             return default if v is None else v
 
+        # degradation counters ride the summary only when a fault model
+        # was active (or something was actually quarantined)
+        f = s.get("faults")
+        faults = ("—" if not f else
+                  f"{f.get('n_dropped', 0)}/{f.get('n_quarantined', 0)}"
+                  f"/{f.get('n_skipped_rounds', 0)}")
         out.append(
             f"| {name} "
             f"| {spec.get('data', {}).get('dataset', '?')} "
@@ -101,7 +108,8 @@ def runs_table(paths) -> str:
             f"| {num('cumulative_energy', 0.0):.2f} "
             f"| {num('cumulative_delay', 0.0):.2f} "
             f"| {num('theta'):.3f} "
-            f"| {s.get('feasible', '?')} |")
+            f"| {s.get('feasible', '?')} "
+            f"| {faults} |")
     return "\n".join(out)
 
 

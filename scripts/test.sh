@@ -93,6 +93,42 @@ EOF
     return "$ok"
 }
 
+# Chaos smoke: the cli_smoke spec with the mixed fault model active
+# (dropouts + NaN-corrupt uploads), run -> resume from the mid-run
+# checkpoint -> assert the degradation counters surfaced in the exported
+# JSONL. Same error discipline as cli_smoke.
+chaos_smoke() {
+    local work ok=0
+    work="$(mktemp -d)"
+    cat > "$work/spec.json" <<'EOF'
+{
+  "data": {"dataset": "synthetic-mnist", "n_clients": 6, "sigma": 5.0,
+           "n_train": 240, "n_test": 60, "seed": 0},
+  "model": {"name": "mlp-edge"},
+  "wireless": {"e0": 1000000.0, "t0": 1000000.0, "seed": 0,
+               "fault_model": "mixed",
+               "fault_kwargs": {"dropout_rate": 0.3, "corrupt_rate": 0.3,
+                                "corrupt_mode": "nan", "seed": 7}},
+  "scheme": {"name": "proposed", "rounds": 4, "eta": 0.1, "batch": 8,
+             "ao": {"outer_iters": 1}},
+  "run": {"seed": 0, "eval_every": 2, "checkpoint_every": 2,
+          "rounds_per_dispatch": 2}
+}
+EOF
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m repro.api.cli run "$work/spec.json" \
+        --checkpoint-dir "$work/ckpt" --out "$work/run.jsonl" || ok=1
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m repro.api.cli resume "$work/ckpt" \
+        --out "$work/resumed.jsonl" || ok=1
+    grep '"faults"' "$work/run.jsonl" >/dev/null \
+        || { echo "chaos smoke: no faults block in run.jsonl"; ok=1; }
+    grep '"n_dropped"' "$work/resumed.jsonl" >/dev/null \
+        || { echo "chaos smoke: no counters in resumed.jsonl"; ok=1; }
+    rm -rf "$work"
+    return "$ok"
+}
+
 # run all legs even if an earlier one fails (the seed ships with
 # known-failing arch/serving suites); exit non-zero if any leg failed
 status=0
@@ -105,6 +141,9 @@ cli_smoke || status=$?
 
 echo "== sweep-CLI smoke leg: 2 seeds x 2 schemes, streamed JSONL (1 device) =="
 sweep_smoke || status=$?
+
+echo "== chaos smoke leg: mixed faults, run + resume + counters (1 device) =="
+chaos_smoke || status=$?
 
 echo "== sharded smoke leg: round/block engines + API under 4 forced host devices =="
 # forced flag goes LAST: XLA takes the final occurrence of a duplicated
@@ -119,6 +158,7 @@ XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=4" \
     python -m pytest -x -q ${MARKER[@]+"${MARKER[@]}"} \
         tests/test_round_engine.py tests/test_block_engine.py \
         tests/test_api.py tests/test_sweep.py tests/test_scenario_axes.py \
+        tests/test_faults.py \
     || status=$?
 
 echo "== CLI smoke leg: spec run + checkpoint resume (4 forced devices) =="
@@ -133,6 +173,13 @@ echo "== sweep-CLI smoke leg: streamed sweep (4 forced devices) =="
     export XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=4"
     export REPRO_ROUND_SHARDS=
     sweep_smoke
+) || status=$?
+
+echo "== chaos smoke leg: mixed faults, run + resume (4 forced devices) =="
+(
+    export XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=4"
+    export REPRO_ROUND_SHARDS=
+    chaos_smoke
 ) || status=$?
 
 exit $status

@@ -11,9 +11,9 @@ from repro.api.spec import (
     WirelessSpec,
 )
 from repro.api.registry import (
-    CHANNEL_NOISE, DATA_SELECTION, DATASETS, MODELS, SCHEMES, Registry,
-    register_channel_noise, register_data_selection, register_dataset,
-    register_model, register_scheme,
+    CHANNEL_NOISE, DATA_SELECTION, DATASETS, FAULT_MODELS, MODELS, SCHEMES,
+    Registry, register_channel_noise, register_data_selection,
+    register_dataset, register_fault_model, register_model, register_scheme,
 )
 from repro.api.callbacks import (
     Callback, CheckpointCallback, load_run_state, restore_trainer_state,
@@ -32,9 +32,10 @@ __all__ = [
     "DataSpec", "ModelSpec", "WirelessSpec", "SchemeSpec", "RunSpec",
     "ExperimentSpec", "SpecError",
     "Registry", "MODELS", "DATASETS", "SCHEMES",
-    "DATA_SELECTION", "CHANNEL_NOISE",
+    "DATA_SELECTION", "CHANNEL_NOISE", "FAULT_MODELS",
     "register_model", "register_dataset", "register_scheme",
     "register_data_selection", "register_channel_noise",
+    "register_fault_model",
     "Callback", "CheckpointCallback",
     "save_trainer_state", "restore_trainer_state", "load_run_state",
     "Environment", "build_environment", "Experiment", "Run", "RunResult",

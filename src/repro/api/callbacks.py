@@ -89,6 +89,10 @@ def save_trainer_state(
         "cumulative_energy": float(m.cumulative_energy),
         "spec": spec,
         "history": [metrics_to_dict(h) for h in history],
+        # counters accumulate only over EXECUTED rounds, so a resumed run
+        # must start from the checkpointed totals to match an
+        # uninterrupted run's (tests/test_faults.py)
+        "fault_counters": dict(getattr(trainer, "fault_counters", {})),
     }
     return manager.save(int(m.round), tree, extra=extra)
 
@@ -107,15 +111,19 @@ def restore_trainer_state(
     extra = meta.get("extra", {})
     if "rng_state" in extra:
         trainer.rng.bit_generator.state = extra["rng_state"]
+    if extra.get("fault_counters"):
+        trainer.fault_counters = dict(extra["fault_counters"])
     return extra
 
 
 def load_run_state(directory: str, *, step: int | None = None,
                    prefix: str = "ckpt") -> tuple[int, dict]:
     """Read a checkpoint's JSON metadata WITHOUT building a trainer —
-    (step, extra). The CLI uses this to recover the originating spec."""
+    (step, extra). The CLI uses this to recover the originating spec.
+    With step=None picks the newest INTACT checkpoint (skipping truncated
+    ones), matching the step `restore_trainer_state` will load."""
     manager = CheckpointManager(directory, prefix=prefix)
-    step = manager.latest_step() if step is None else step
+    step = manager.latest_intact_step() if step is None else step
     if step is None:
         raise FileNotFoundError(f"no checkpoints under {directory!r}")
     with open(manager.meta_path(step)) as f:

@@ -123,13 +123,21 @@ def _cmd_sweep(args) -> int:
             print(f"  {c.name}")
         return 0
     sink = JsonlDirSink(args.out_dir) if args.out_dir else None
-    res = run_sweep(sweep, sink=sink, log=print)
-    print(f"done: {len(res.results)} runs; environments built "
+    res = run_sweep(sweep, sink=sink, log=print,
+                    max_retries=args.max_retries)
+    n_ok = sum(r is not None for r in res.results)
+    print(f"done: {n_ok}/{len(res.results)} runs; environments built "
           f"{res.n_env_builds}, trainers built {res.n_trainer_builds} "
-          f"(reused across {len(res.results) - res.n_trainer_builds} runs)")
+          f"(reused across {n_ok - res.n_trainer_builds} runs)")
     if sink is not None:
         print(f"wrote {len(sink.paths)} run files + index under "
               f"{sink.directory}")
+    if res.errors:
+        for e in res.errors:
+            print(f"FAILED {e['name']}: {e['error']}", file=sys.stderr)
+        print(f"{len(res.errors)} cell(s) failed (errors recorded in "
+              f"sweep.jsonl)", file=sys.stderr)
+        return 1
     return 0
 
 
@@ -174,6 +182,9 @@ def main(argv: list[str] | None = None) -> int:
                          "(repeatable)")
     pw.add_argument("--expand-only", action="store_true",
                     help="print the deterministic matrix, run nothing")
+    pw.add_argument("--max-retries", type=int, default=0,
+                    help="retry a failing cell up to N times before "
+                         "recording the failure and moving on (default 0)")
     pw.set_defaults(fn=_cmd_sweep)
 
     args = p.parse_args(argv)

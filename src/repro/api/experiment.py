@@ -31,7 +31,7 @@ from repro.api.callbacks import (
     restore_trainer_state,
 )
 from repro.api.registry import (
-    CHANNEL_NOISE, DATA_SELECTION, DATASETS, MODELS, SCHEMES,
+    CHANNEL_NOISE, DATA_SELECTION, DATASETS, FAULT_MODELS, MODELS, SCHEMES,
 )
 from repro.api.spec import ExperimentSpec
 from repro.checkpoint import CheckpointManager
@@ -124,7 +124,8 @@ class RunResult:
     @classmethod
     def build(cls, spec: ExperimentSpec, schedule: Schedule,
               history: list[RoundMetrics], *,
-              resumed_from: int | None = None) -> "RunResult":
+              resumed_from: int | None = None,
+              faults: dict | None = None) -> "RunResult":
         evals = [(m.test_accuracy, m.round) for m in history
                  if m.test_accuracy is not None]
         acc, acc_round = evals[-1] if evals else (float("nan"), -1)
@@ -141,6 +142,12 @@ class RunResult:
             "cumulative_energy": last.cumulative_energy if last else 0.0,
             "resumed_from": resumed_from,
         }
+        if faults:
+            # present only when a fault model is active or the always-on
+            # guard actually fired — a healthy fault-free run's summary
+            # stays byte-identical to pre-fault-layer outputs (the golden
+            # test compares the whole dict)
+            summary["faults"] = dict(faults)
         return cls(spec=spec.to_dict(), summary=summary, history=history,
                    schedule=schedule)
 
@@ -236,8 +243,11 @@ class Run:
             stop_delay=self.spec.wireless.t0 if rs.stop_on_budget else None,
             stop_energy=self.spec.wireless.e0 if rs.stop_on_budget else None,
             callbacks=cbs, start_round=start_round)
+        fc = dict(self.trainer.fault_counters)
+        include = self.trainer.fault_model is not None or any(fc.values())
         return RunResult.build(self.spec, self.schedule, prefix + history,
-                               resumed_from=resumed_from)
+                               resumed_from=resumed_from,
+                               faults=fc if include else None)
 
 
 class Experiment:
@@ -302,6 +312,7 @@ class Experiment:
                             env.ch.uplink, env.ch.downlink, env.sp, consts,
                             ao)
         noise = CHANNEL_NOISE.get(spec.wireless.noise_model)(spec.wireless)
+        fault = FAULT_MODELS.get(spec.wireless.fault_model)(spec.wireless)
         select = DATA_SELECTION.get(sc.data_selection)(sc)
         params = env.init_fn(jax.random.key(spec.run.seed))
         if trainer is not None:
@@ -313,7 +324,8 @@ class Experiment:
             if bad:
                 raise ValueError(
                     f"build(trainer=...) reuse requires matching {bad}")
-            trainer.reset(params, spec.run.seed, channel_noise=noise)
+            trainer.reset(params, spec.run.seed, channel_noise=noise,
+                          fault_model=fault)
         else:
             clients = select(env.clients) if select is not None \
                 else env.clients
@@ -322,7 +334,7 @@ class Experiment:
                 eta=sc.eta, batch_size=sc.batch, seed=spec.run.seed,
                 backend=spec.run.backend, shards=spec.run.shards,
                 rounds_per_dispatch=spec.run.rounds_per_dispatch,
-                channel_noise=noise)
+                channel_noise=noise, fault_model=fault)
         return Run(spec, env, schedule, trainer)
 
     def run(self, **kw) -> RunResult:

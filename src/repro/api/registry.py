@@ -1,6 +1,6 @@
 """String-keyed component registries backing the declarative specs.
 
-Five registries resolve the spec's string fields into build-time factories:
+Six registries resolve the spec's string fields into build-time factories:
 
   MODELS          name -> factory(spec: ModelSpec, dataset) -> (init, apply)
   DATASETS        name -> factory(spec: DataSpec) -> SyntheticImageDataset-like
@@ -11,19 +11,25 @@ Five registries resolve the spec's string fields into build-time factories:
   CHANNEL_NOISE   name -> factory(spec: WirelessSpec) -> channel-noise model
                   or None ("none"): noisy-aggregation axis consumed by the
                   trainer per round (wireless/channel.py, Wu)
+  FAULT_MODELS    name -> factory(spec: WirelessSpec) -> fault model or
+                  None ("none"): client fault-injection axis — per-round
+                  dropout / straggler / corrupt-upload draws consumed by
+                  the trainer with graceful degradation (core/faults.py)
 
 Register new components with the `register_model` / `register_dataset` /
-`register_scheme` / `register_data_selection` / `register_channel_noise`
-decorators (or call them with the factory directly); an unknown key raises
-a KeyError that names the registry and lists what IS registered, so a typo
-in a spec file fails with an actionable message.
+`register_scheme` / `register_data_selection` / `register_channel_noise` /
+`register_fault_model` decorators (or call them with the factory
+directly); an unknown key raises a KeyError that names the registry and
+lists what IS registered, so a typo in a spec file fails with an
+actionable message.
 
 Seeded here: the paper's evaluation models (lenet, resnet) plus the
 dispatch-bound mlp-edge model, both synthetic datasets, the seven
 benchmark schemes (the paper's six Sec.-V comparisons + `proposed_exact`,
 the 2^N-exact (P5) minimizer — see benchmarks/common.py for the finding
 that motivates keeping both selection variants), the two Albaseer-style
-data-selection policies, and the Gaussian aggregation-noise model.
+data-selection policies, the Gaussian aggregation-noise model, and the
+four client fault models.
 """
 from __future__ import annotations
 
@@ -77,12 +83,14 @@ DATASETS = Registry("dataset")
 SCHEMES = Registry("scheme")
 DATA_SELECTION = Registry("data-selection policy")
 CHANNEL_NOISE = Registry("channel-noise model")
+FAULT_MODELS = Registry("fault model")
 
 register_model = MODELS.register
 register_dataset = DATASETS.register
 register_scheme = SCHEMES.register
 register_data_selection = DATA_SELECTION.register
 register_channel_noise = CHANNEL_NOISE.register
+register_fault_model = FAULT_MODELS.register
 
 
 # ---------------------------------------------------------------------------
@@ -221,3 +229,33 @@ def _channel_noise_gaussian(spec: WirelessSpec):
     kw = dict(spec.noise_kwargs)
     kw.setdefault("seed", spec.seed)
     return GaussianAggregateNoise(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Fault models (WirelessSpec.fault_model): the client fault-injection axis.
+# A factory receives the WirelessSpec and returns an object with the
+# core/faults.FaultModel `draw(round, n_clients, selected, ...)` protocol
+# (or None for the paper's always-reliable clients); the trainer draws
+# per-round faults keyed (seed, round, kind) only, so fault trajectories
+# are invariant to dispatch grouping and checkpoint resume, and applies
+# them identically on both execution backends.
+# ---------------------------------------------------------------------------
+
+@register_fault_model("none")
+def _fault_none(spec: WirelessSpec):
+    return None
+
+
+def _fault_factory(cls_name: str):
+    def factory(spec: WirelessSpec):
+        from repro.core import faults
+        kw = dict(spec.fault_kwargs)
+        kw.setdefault("seed", spec.seed)
+        return getattr(faults, cls_name)(**kw)
+    return factory
+
+
+register_fault_model("dropout", _fault_factory("ClientDropout"))
+register_fault_model("straggler", _fault_factory("StragglerTimeout"))
+register_fault_model("corrupt", _fault_factory("CorruptUpload"))
+register_fault_model("mixed", _fault_factory("MixedFaults"))

@@ -91,7 +91,15 @@ class WirelessSpec(_SpecBase):
     (repro.api.registry CHANNEL_NOISE; "none" = the paper's noiseless
     aggregation, "gaussian" = AWGN on the averaged gradient à la Wu et
     al.); `noise_kwargs` reach its factory (e.g. {"std": 1e-3} — the draw
-    seed defaults to this spec's `seed`)."""
+    seed defaults to this spec's `seed`).
+
+    `fault_model` picks a registered client fault model (repro.api.registry
+    FAULT_MODELS; "none" = the paper's always-reliable clients, "dropout" /
+    "straggler" / "corrupt" / "mixed" = core/faults.py injections);
+    `fault_kwargs` reach its factory (e.g. {"rate": 0.2} — the draw seed
+    defaults to this spec's `seed`). Like the noise axis it is sweepable:
+    accuracy-vs-dropout-rate is a one-line `cli sweep` over
+    `wireless.fault_kwargs.rate`."""
 
     table: str = "auto"                # "mnist" | "cifar10" | "auto" (by dataset)
     e0: float = 4.0                    # energy budget E0 [J]
@@ -100,6 +108,8 @@ class WirelessSpec(_SpecBase):
     seed: int = 0                      # Rayleigh channel draw
     noise_model: str = "none"          # registry key (CHANNEL_NOISE)
     noise_kwargs: dict = dataclasses.field(default_factory=dict)
+    fault_model: str = "none"          # registry key (FAULT_MODELS)
+    fault_kwargs: dict = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass

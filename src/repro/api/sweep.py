@@ -46,6 +46,7 @@ import itertools
 import json
 import os
 import re
+import traceback
 from typing import Any, Callable, Sequence
 
 from repro.api.experiment import (
@@ -62,17 +63,35 @@ def override_field(spec: ExperimentSpec, path: str, value: Any):
     """Return a copy of `spec` with the dotted `path` (e.g. "data.sigma",
     "scheme.name", "run.backend") replaced by `value`. Unknown segments
     fail with the offending field path and the valid keys at that level —
-    sweep axes get the same actionable errors as spec files."""
+    sweep axes get the same actionable errors as spec files.
+
+    Dict-valued fields (the `*_kwargs` factory knobs) descend one more
+    level: "wireless.fault_kwargs.rate" replaces just that key in a copy
+    of the dict — accuracy-vs-dropout-rate is a one-line sweep axis. Dict
+    keys are free-form (they are factory kwargs), so a new key is created
+    rather than rejected; scalar leaves still refuse to descend."""
     parts = path.split(".")
 
     def rec(node, i: int):
         where = ".".join([type(spec).__name__] + parts[:i])
+        key = parts[i]
+        if isinstance(node, dict):
+            new = dict(node)
+            if i == len(parts) - 1:
+                new[key] = value
+            else:
+                sub = node.get(key, {})
+                if not isinstance(sub, dict):
+                    raise SpecError(
+                        f"{where}: cannot descend into non-dict entry "
+                        f"{key!r} with {'.'.join(parts[i + 1:])!r}")
+                new[key] = rec(sub, i + 1)
+            return new
         if not dataclasses.is_dataclass(node):
             raise SpecError(
                 f"{where}: cannot descend into non-spec field with "
                 f"{'.'.join(parts[i:])!r}")
         valid = {f.name for f in dataclasses.fields(node)}
-        key = parts[i]
         if key not in valid:
             raise SpecError(
                 f"{where}: unknown field {key!r} in sweep axis path "
@@ -211,6 +230,11 @@ class RunSink:
     def write(self, name: str, result: RunResult) -> None:
         raise NotImplementedError
 
+    def write_error(self, name: str, spec, exc: BaseException,
+                    tb: str) -> None:
+        """Called when a cell fails permanently (after retries). Default:
+        ignore — sinks that persist (JsonlDirSink) record the failure."""
+
     def close(self) -> None:
         pass
 
@@ -238,6 +262,17 @@ class JsonlDirSink(RunSink):
         self._index.write(json.dumps(_json_finite(
             {"kind": "sweep_run", "name": name, "spec": result.spec,
              "summary": result.summary}), allow_nan=False) + "\n")
+        self._index.flush()
+
+    def write_error(self, name: str, spec, exc: BaseException,
+                    tb: str) -> None:
+        # flushed immediately, like sweep_run records: a tailing consumer
+        # (or a post-mortem) sees the failure the moment the cell dies
+        self._index.write(json.dumps(_json_finite(
+            {"kind": "sweep_error", "name": name,
+             "spec": spec.to_dict() if hasattr(spec, "to_dict") else spec,
+             "error": f"{type(exc).__name__}: {exc}",
+             "traceback": tb}), allow_nan=False) + "\n")
         self._index.flush()
 
     def close(self) -> None:
@@ -275,47 +310,80 @@ def _trainer_key(spec: ExperimentSpec) -> str:
 @dataclasses.dataclass
 class SweepResult:
     """Outcome of `run_sweep`: results in matrix order + reuse accounting
-    (the env/trainer build counters the acceptance tests assert on)."""
+    (the env/trainer build counters the acceptance tests assert on).
+    A failed cell holds None at its matrix position (so indices line up
+    with `cells`) and an error record — {"name", "error", "traceback"} —
+    in `errors`; a sweep with any error should exit nonzero (the CLI
+    does)."""
 
     cells: list[SweepCell]
-    results: list[RunResult]
+    results: list[RunResult | None]
     n_env_builds: int
     n_trainer_builds: int
+    errors: list[dict] = dataclasses.field(default_factory=list)
 
     def summary_rows(self) -> list[dict]:
         return [{"name": c.name, **r.summary}
-                for c, r in zip(self.cells, self.results)]
+                for c, r in zip(self.cells, self.results) if r is not None]
 
 
 def run_sweep(sweep: SweepSpec, *, sink: RunSink | None = None,
               log: Callable[[str], None] | None = None,
-              callbacks: Sequence = ()) -> SweepResult:
+              callbacks: Sequence = (), max_retries: int = 0) -> SweepResult:
     """Execute the full matrix, streaming each RunResult to `sink` as it
     finishes. Runs execute in matrix order; environments and trainers are
     pooled by `_env_key` / `_trainer_key`, which preserves bit-for-bit
     equality with standalone runs (reset re-derives every piece of run
     state from the cell's own spec). `callbacks` are passed to every run
-    (careful with stateful hooks — one instance sees all cells)."""
+    (careful with stateful hooks — one instance sees all cells).
+
+    Cell failures are ISOLATED: a raising cell is retried up to
+    `max_retries` times (for transient failures), then recorded — in the
+    sink's index via `write_error` and in `SweepResult.errors` — and the
+    rest of the matrix still runs. A failed cell's pooled trainer is
+    evicted (the exception may have left it mid-round), so retries and
+    later cells build fresh. KeyboardInterrupt still aborts the sweep."""
     cells = sweep.expand()
     envs: dict[str, Environment] = {}
     trainers: dict[str, Any] = {}
     n_env = n_trainer = 0
-    results: list[RunResult] = []
+    results: list[RunResult | None] = []
+    errors: list[dict] = []
     try:
         for cell in cells:
             ek = _env_key(cell.spec)
-            env = envs.get(ek)
-            if env is None:
-                env = envs[ek] = build_environment(cell.spec)
-                n_env += 1
             tk = ek + "\x00" + _trainer_key(cell.spec)
-            trainer = trainers.get(tk)
-            run = Experiment(cell.spec).build(env=env, trainer=trainer)
-            if trainer is None:
-                trainers[tk] = run.trainer
-                n_trainer += 1
-            res = run.run(callbacks=callbacks)
+            res = last_exc = last_tb = None
+            for attempt in range(int(max_retries) + 1):
+                trainer = trainers.get(tk)
+                try:
+                    env = envs.get(ek)
+                    if env is None:
+                        env = envs[ek] = build_environment(cell.spec)
+                        n_env += 1
+                    run = Experiment(cell.spec).build(env=env,
+                                                      trainer=trainer)
+                    if trainer is None:
+                        trainers[tk] = run.trainer
+                        n_trainer += 1
+                    res = run.run(callbacks=callbacks)
+                    break
+                except Exception as exc:
+                    trainers.pop(tk, None)
+                    last_exc, last_tb = exc, traceback.format_exc()
+                    if log is not None:
+                        log(f"[{cell.name}] attempt {attempt + 1} failed: "
+                            f"{type(exc).__name__}: {exc}")
             results.append(res)
+            if res is None:
+                errors.append({"name": cell.name,
+                               "error": (f"{type(last_exc).__name__}: "
+                                         f"{last_exc}"),
+                               "traceback": last_tb})
+                if sink is not None:
+                    sink.write_error(cell.name, cell.spec, last_exc,
+                                     last_tb)
+                continue
             if sink is not None:
                 sink.write(cell.name, res)
             if log is not None:
@@ -327,4 +395,4 @@ def run_sweep(sweep: SweepSpec, *, sink: RunSink | None = None,
         if sink is not None:
             sink.close()
     return SweepResult(cells=cells, results=results, n_env_builds=n_env,
-                       n_trainer_builds=n_trainer)
+                       n_trainer_builds=n_trainer, errors=errors)

@@ -1,4 +1,13 @@
 """Checkpointing: npz-based pytree save/restore with sharding metadata."""
-from repro.checkpoint.io import save_checkpoint, load_checkpoint, CheckpointManager
+from repro.checkpoint.io import (
+    CheckpointCorruptError,
+    CheckpointManager,
+    load_checkpoint,
+    save_checkpoint,
+    verify_checkpoint,
+)
 
-__all__ = ["save_checkpoint", "load_checkpoint", "CheckpointManager"]
+__all__ = [
+    "save_checkpoint", "load_checkpoint", "verify_checkpoint",
+    "CheckpointManager", "CheckpointCorruptError",
+]

@@ -2,19 +2,36 @@
 
 Stores each leaf under its tree path; restores into the same structure.
 Sharding metadata (PartitionSpec strings) rides along so a multi-host restore
-can re-shard without guessing. Atomic via write-to-temp + rename.
+can re-shard without guessing.
+
+Crash safety: both files of a step are written via mkstemp + os.replace, so
+a step is either fully present or absent — never half-written under its
+final name. The meta JSON is renamed BEFORE the npz: `_steps()` lists steps
+by their .npz, so a listed step always has its metadata (a crash between
+the two renames leaves only an orphaned .meta.json, which nothing lists).
+A torn file copied in from a dirty filesystem still surfaces as
+`CheckpointCorruptError`; `CheckpointManager.restore(step=None)` skips such
+steps and falls back to the newest intact one.
 """
 from __future__ import annotations
 
 import json
 import os
 import tempfile
+import zipfile
 from typing import Any
 
 import jax
 import numpy as np
 
 PyTree = Any
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint file is truncated or unreadable — typically a process
+    killed mid-write before the atomic renames existed, or a torn copy.
+    `CheckpointManager.restore(step=None)` catches this and resumes from
+    the previous intact step; an explicitly requested step re-raises."""
 
 
 def _path_dict(tree: PyTree) -> dict[str, np.ndarray]:
@@ -24,6 +41,18 @@ def _path_dict(tree: PyTree) -> dict[str, np.ndarray]:
         key = jax.tree_util.keystr(kp)
         out[key] = np.asarray(leaf)
     return out
+
+
+def _atomic_write_text(path: str, text: str) -> None:
+    d = os.path.dirname(os.path.abspath(path)) or "."
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            f.write(text)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
 
 
 def save_checkpoint(
@@ -40,6 +69,10 @@ def save_checkpoint(
         "sharding": sharding_meta or {},
         "extra": extra or {},
     }
+    # meta first (see module docstring): once the .npz rename makes the
+    # step visible to _steps(), its metadata is guaranteed on disk
+    meta_path = (path[:-4] if path.endswith(".npz") else path) + ".meta.json"
+    _atomic_write_text(meta_path, json.dumps(meta, indent=2))
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)) or ".",
                                suffix=".npz.tmp")
     os.close(fd)
@@ -50,21 +83,67 @@ def save_checkpoint(
     finally:
         if os.path.exists(tmp):
             os.unlink(tmp)
+
+
+def verify_checkpoint(path: str) -> None:
+    """Cheap integrity probe: raise CheckpointCorruptError when the npz
+    zip at `path` fails its CRC walk or the meta JSON is missing/unparsable
+    (save writes meta first, so an intact step always has one). Does not
+    reconstruct the pytree."""
+    npz_path = path if path.endswith(".npz") else path + ".npz"
     meta_path = (path[:-4] if path.endswith(".npz") else path) + ".meta.json"
-    with open(meta_path, "w") as f:
-        json.dump(meta, f, indent=2)
+    if not os.path.exists(npz_path):
+        raise FileNotFoundError(npz_path)
+    try:
+        with zipfile.ZipFile(npz_path) as z:
+            bad = z.testzip()
+        if bad is not None:
+            raise CheckpointCorruptError(
+                f"checkpoint {npz_path!r}: member {bad!r} fails its CRC — "
+                f"truncated or corrupt file, likely interrupted mid-write")
+    except (zipfile.BadZipFile, EOFError, OSError) as e:
+        raise CheckpointCorruptError(
+            f"checkpoint {npz_path!r} is truncated or corrupt "
+            f"({type(e).__name__}: {e}) — likely interrupted mid-write"
+        ) from e
+    if not os.path.exists(meta_path):
+        raise CheckpointCorruptError(
+            f"checkpoint {npz_path!r} has no metadata sidecar "
+            f"{meta_path!r} — torn write from a pre-atomic save")
+    try:
+        with open(meta_path) as f:
+            json.load(f)
+    except json.JSONDecodeError as e:
+        raise CheckpointCorruptError(
+            f"checkpoint metadata {meta_path!r} is not valid JSON "
+            f"({e}) — truncated or corrupt file") from e
 
 
 def load_checkpoint(path: str, like: PyTree) -> tuple[PyTree, dict]:
-    """Restore a pytree saved by save_checkpoint into the structure of `like`."""
+    """Restore a pytree saved by save_checkpoint into the structure of
+    `like`. Raises CheckpointCorruptError (not a raw zip/JSON error) when
+    the files are truncated, so callers can fall back to an older step."""
     npz_path = path if path.endswith(".npz") else path + ".npz"
     meta_path = (path[:-4] if path.endswith(".npz") else path) + ".meta.json"
-    with np.load(npz_path) as data:
-        arrays = {k.replace("⁄", "/"): data[k] for k in data.files}
+    try:
+        with np.load(npz_path) as data:
+            arrays = {k.replace("⁄", "/"): data[k] for k in data.files}
+    except FileNotFoundError:
+        raise
+    except (zipfile.BadZipFile, EOFError, OSError, ValueError) as e:
+        raise CheckpointCorruptError(
+            f"checkpoint {npz_path!r} is truncated or corrupt "
+            f"({type(e).__name__}: {e}) — likely interrupted mid-write; "
+            f"resume from an earlier step") from e
     meta = {}
     if os.path.exists(meta_path):
-        with open(meta_path) as f:
-            meta = json.load(f)
+        try:
+            with open(meta_path) as f:
+                meta = json.load(f)
+        except json.JSONDecodeError as e:
+            raise CheckpointCorruptError(
+                f"checkpoint metadata {meta_path!r} is not valid JSON "
+                f"({e}) — truncated or corrupt file") from e
     flat, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
     for kp, leaf in flat:
@@ -106,11 +185,34 @@ class CheckpointManager:
         steps = self._steps()
         return steps[-1] if steps else None
 
+    def latest_intact_step(self) -> int | None:
+        """Newest step that passes `verify_checkpoint` — the step
+        `restore(step=None)` will land on after corruption fallback.
+        None when no step is usable."""
+        for s in reversed(self._steps()):
+            try:
+                verify_checkpoint(self._name(s))
+                return s
+            except CheckpointCorruptError:
+                continue
+        return None
+
     def restore(self, like: PyTree, step: int | None = None) -> tuple[PyTree, dict]:
-        step = self.latest_step() if step is None else step
-        if step is None:
+        if step is not None:
+            # explicitly requested step: corruption is an error the caller
+            # asked to see, no silent fallback
+            return load_checkpoint(self._name(step), like)
+        steps = self._steps()
+        if not steps:
             raise FileNotFoundError("no checkpoints found")
-        return load_checkpoint(self._name(step), like)
+        last_err: CheckpointCorruptError | None = None
+        for s in reversed(steps):
+            try:
+                verify_checkpoint(self._name(s))
+                return load_checkpoint(self._name(s), like)
+            except CheckpointCorruptError as e:
+                last_err = e  # fall back to the previous intact step
+        raise last_err
 
     def _steps(self) -> list[int]:
         out = []

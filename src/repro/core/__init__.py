@@ -28,6 +28,14 @@ from repro.core.packing import ParamPack
 from repro.core.client_store import ClientStore
 from repro.core.round_engine import RoundEngine, kth_smallest_threshold
 from repro.core.federated import ClientData, FederatedTrainer, RoundMetrics
+from repro.core.faults import (
+    ClientDropout,
+    CorruptUpload,
+    FaultDraw,
+    FaultModel,
+    MixedFaults,
+    StragglerTimeout,
+)
 
 __all__ = [
     "GeneralizationStatement", "generalization_statement", "client_statements",
@@ -39,4 +47,6 @@ __all__ = [
     "AOConfig", "Schedule", "solve_p1",
     "ParamPack", "ClientStore", "RoundEngine", "kth_smallest_threshold",
     "ClientData", "FederatedTrainer", "RoundMetrics",
+    "FaultDraw", "FaultModel", "ClientDropout", "StragglerTimeout",
+    "CorruptUpload", "MixedFaults",
 ]

@@ -1,0 +1,203 @@
+"""Client fault models: per-(seed, round, client) failure draws (DESIGN.md §10).
+
+The paper's system model assumes every scheduled client uploads a finite
+gradient within the round deadline — the exact assumption real FEEL
+deployments violate (stragglers/dropouts are the dominant failure mode in
+the FEEL design-issues survey; Wu et al. motivate corrupted uploads over
+deep-fade links). A `FaultModel` injects those failures as a first-class,
+registry-resolved axis (repro.api.registry FAULT_MODELS, spec field
+`wireless.fault_model`):
+
+  * dropout   — the client never uploads (weight 0 in the aggregate);
+  * straggler — the upload exceeds a delay deadline derived from the
+    wireless delay model (eqs. 10-11): client n faults when its drawn
+    slowdown times its scheduled per-client delay exceeds ``tolerance *
+    deadline``, where the deadline is the round's scheduled straggler
+    latency (``max_n a_n (tau_n + tau^_n)``, eq. 12) — so exclusion
+    couples to the same T constraint the paper's schedule optimizes;
+  * corrupt   — the upload arrives but is scaled or NaN-poisoned
+    (deep-fade / decode-failure model).
+
+Draw protocol
+-------------
+``draw(round_index, n_clients, selected, ...)`` returns a `FaultDraw` for
+the round's selected clients. Every model draws a POPULATION-sized array
+from an rng keyed ONLY by ``(seed, round, kind)`` and then indexes it with
+the selected ids — so a client's fate at round s is a pure function of
+(seed, s, client id), invariant to how many clients are selected, to
+dispatch grouping (rounds_per_dispatch = 1 vs K), and to checkpoint
+resume. Both execution backends consume the identical draw (the trainer
+attaches it to the round's schedule info), which is what keeps fault runs
+bitwise packed-vs-reference (tests/test_faults.py).
+
+Graceful degradation — how draws are consumed — lives in the engine:
+faulted clients get weight 0 in the weighted aggregate, the mean
+renormalizes by the surviving count, non-finite (corrupt) uploads are
+quarantined by the engine's always-on isfinite guard, and an all-fault
+round skips the update entirely (core/round_engine.py, kernels/ops.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+# Distinct rng streams per fault kind so a mixed model's dropout draw never
+# correlates with its corruption draw at the same (seed, round).
+_DROPOUT, _STRAGGLER, _CORRUPT = 1, 2, 3
+
+
+def _round_rng(seed: int, round_index: int, kind: int) -> np.random.Generator:
+    """The (seed, round, kind)-keyed generator — same keying discipline as
+    wireless/channel.GaussianAggregateNoise: no shared stream position, so
+    draws are invariant to dispatch grouping and resume."""
+    return np.random.default_rng(np.random.SeedSequence(
+        [int(seed) & 0xFFFFFFFF, int(round_index), int(kind)]))
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultDraw:
+    """One round's fault outcome for the selected clients (selected order).
+
+    upload_ok : [C_sel] bool — False = the upload never arrives (dropout /
+        straggler past the deadline); the client gets weight 0 and the
+        aggregate renormalizes over the survivors.
+    corrupt   : [C_sel] float32 or None — per-client gradient scale factor
+        (1.0 = clean; NaN = poisoned). Applied to uploads that DO arrive;
+        non-finite results are then caught by the engine's isfinite guard.
+    """
+
+    upload_ok: np.ndarray
+    corrupt: np.ndarray | None = None
+
+    @property
+    def n_faulted(self) -> int:
+        return int((~np.asarray(self.upload_ok, bool)).sum())
+
+
+class FaultModel:
+    """Protocol: per-round fault draws over the client population.
+
+    ``delays`` ([C_sel] float, seconds — each selected client's scheduled
+    tau_n + tau^_n) and ``deadline`` (the round's scheduled straggler
+    latency) come from the wireless bookkeeping the trainer already
+    computes; models that don't need them ignore them.
+    """
+
+    def draw(self, round_index: int, n_clients: int, selected: np.ndarray,
+             *, delays: np.ndarray | None = None,
+             deadline: float | None = None) -> FaultDraw:
+        raise NotImplementedError
+
+    @staticmethod
+    def _all_ok(n_sel: int) -> np.ndarray:
+        return np.ones(n_sel, bool)
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientDropout(FaultModel):
+    """Each client independently drops its round with probability `rate`."""
+
+    rate: float = 0.1
+    seed: int = 0
+
+    def __post_init__(self):
+        if not 0.0 <= self.rate <= 1.0:
+            raise ValueError(f"dropout rate must be in [0, 1], got {self.rate}")
+
+    def draw(self, round_index, n_clients, selected, *, delays=None,
+             deadline=None) -> FaultDraw:
+        u = _round_rng(self.seed, round_index, _DROPOUT).random(n_clients)
+        return FaultDraw(upload_ok=u[np.asarray(selected, int)] >= self.rate)
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerTimeout(FaultModel):
+    """Lognormal per-client slowdown against a deadline from the wireless
+    delay model: client n misses the round when ``slowdown_n * delay_n >
+    tolerance * deadline`` — the deadline being the round's scheduled
+    straggler latency (eq. 12's per-round max), so the paper's T constraint
+    is exactly the budget stragglers are judged against. With no wireless
+    context (delays/deadline not supplied) nobody straggles."""
+
+    tolerance: float = 1.5              # deadline slack factor
+    sigma: float = 0.5                  # lognormal(0, sigma) slowdown spread
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.tolerance <= 0.0:
+            raise ValueError(f"tolerance must be > 0, got {self.tolerance}")
+
+    def draw(self, round_index, n_clients, selected, *, delays=None,
+             deadline=None) -> FaultDraw:
+        sel = np.asarray(selected, int)
+        slow = _round_rng(self.seed, round_index,
+                          _STRAGGLER).lognormal(0.0, self.sigma,
+                                                n_clients)[sel]
+        if delays is None or deadline is None or deadline <= 0.0:
+            return FaultDraw(upload_ok=self._all_ok(len(sel)))
+        eff = np.asarray(delays, np.float64) * slow
+        return FaultDraw(upload_ok=eff <= self.tolerance * float(deadline))
+
+
+@dataclasses.dataclass(frozen=True)
+class CorruptUpload(FaultModel):
+    """Each arriving upload is independently corrupted with probability
+    `rate`: ``mode="nan"`` poisons the gradient (quarantined by the
+    engine's isfinite guard), ``mode="scale"`` multiplies it by `scale`
+    (a finite deep-fade distortion that DOES reach the aggregate)."""
+
+    rate: float = 0.05
+    mode: str = "nan"                   # "nan" | "scale"
+    scale: float = 100.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.mode not in ("nan", "scale"):
+            raise ValueError(f"unknown corrupt mode {self.mode!r}")
+        if not 0.0 <= self.rate <= 1.0:
+            raise ValueError(f"corrupt rate must be in [0, 1], got {self.rate}")
+
+    def draw(self, round_index, n_clients, selected, *, delays=None,
+             deadline=None) -> FaultDraw:
+        sel = np.asarray(selected, int)
+        u = _round_rng(self.seed, round_index, _CORRUPT).random(n_clients)[sel]
+        cf = np.ones(len(sel), np.float32)
+        cf[u < self.rate] = (np.float32("nan") if self.mode == "nan"
+                             else np.float32(self.scale))
+        return FaultDraw(upload_ok=self._all_ok(len(sel)), corrupt=cf)
+
+
+@dataclasses.dataclass(frozen=True)
+class MixedFaults(FaultModel):
+    """Composition of the three kinds with independent per-kind streams
+    (the chaos model scripts/test.sh's chaos-smoke leg runs). A kind is
+    active when its knob is set: ``dropout_rate`` / ``corrupt_rate`` > 0,
+    ``straggler_tolerance`` not None."""
+
+    dropout_rate: float = 0.0
+    corrupt_rate: float = 0.0
+    corrupt_mode: str = "nan"
+    corrupt_scale: float = 100.0
+    straggler_tolerance: float | None = None
+    straggler_sigma: float = 0.5
+    seed: int = 0
+
+    def draw(self, round_index, n_clients, selected, *, delays=None,
+             deadline=None) -> FaultDraw:
+        sel = np.asarray(selected, int)
+        ok = self._all_ok(len(sel))
+        corrupt = None
+        if self.dropout_rate > 0.0:
+            ok &= ClientDropout(self.dropout_rate, self.seed).draw(
+                round_index, n_clients, sel).upload_ok
+        if self.straggler_tolerance is not None:
+            ok &= StragglerTimeout(self.straggler_tolerance,
+                                   self.straggler_sigma, self.seed).draw(
+                round_index, n_clients, sel, delays=delays,
+                deadline=deadline).upload_ok
+        if self.corrupt_rate > 0.0:
+            corrupt = CorruptUpload(self.corrupt_rate, self.corrupt_mode,
+                                    self.corrupt_scale, self.seed).draw(
+                round_index, n_clients, sel).corrupt
+        return FaultDraw(upload_ok=ok, corrupt=corrupt)

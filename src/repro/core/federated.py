@@ -66,7 +66,7 @@ from repro.core.client_store import ClientStore
 from repro.core.optimizer_ao import Schedule
 from repro.core.packing import LANES, ParamPack
 from repro.core.round_engine import RoundEngine
-from repro.wireless.comm import SystemParams, round_delay, round_energy
+from repro.wireless.comm import SystemParams, per_client_delay, round_energy
 
 PyTree = Any
 
@@ -114,6 +114,11 @@ class RoundMetrics:
     cumulative_energy: float
     test_loss: float | None = None
     test_accuracy: float | None = None
+    # graceful-degradation accounting (core/faults.py): uploads that never
+    # arrived (dropout/straggler draw) and arrived-but-non-finite uploads
+    # the engine's isfinite guard quarantined
+    n_faulted: int = 0
+    n_quarantined: int = 0
 
 
 class FederatedTrainer:
@@ -136,6 +141,7 @@ class FederatedTrainer:
         shards: int | None = None,
         rounds_per_dispatch: int | str = "auto",
         channel_noise=None,
+        fault_model=None,
     ):
         if backend not in ("packed", "reference"):
             raise ValueError(f"unknown backend {backend!r}")
@@ -179,6 +185,15 @@ class FederatedTrainer:
         self.channel_noise = channel_noise
         self._noise_ref_pack: ParamPack | None = None
         self._noise_valid: np.ndarray | None = None
+        # Client fault injection (core/faults.FaultModel protocol): draws
+        # are host-side, keyed (seed, round, kind), attached to the round's
+        # schedule info, and consumed identically by both backends — fault
+        # runs stay bitwise packed-vs-reference. Counters accumulate at
+        # materialization points (and checkpoint/restore with the batch
+        # RNG, so resumed totals match an uninterrupted run).
+        self.fault_model = fault_model
+        self.fault_counters = {"n_dropped": 0, "n_quarantined": 0,
+                               "n_skipped_rounds": 0}
         # lifecycle hooks for the current run() (repro.api.Callback
         # protocol); held on the instance so _exec_block can fire
         # on_block_end without threading them through every call
@@ -241,7 +256,8 @@ class FederatedTrainer:
 
     # -- run-state lifecycle ------------------------------------------------
 
-    def reset(self, params: PyTree, seed: int, *, channel_noise=None) -> None:
+    def reset(self, params: PyTree, seed: int, *, channel_noise=None,
+              fault_model=None) -> None:
         """Reinitialize all run state for a FRESH run over the same
         (clients, loss, eta, batch, backend, shards) wiring — the sweep
         engine's trainer-reuse hook (repro.api.sweep). Compiled engine
@@ -252,6 +268,9 @@ class FederatedTrainer:
         is bit-for-bit a cold one's."""
         self.rng = np.random.default_rng(seed)
         self.channel_noise = channel_noise
+        self.fault_model = fault_model
+        self.fault_counters = {"n_dropped": 0, "n_quarantined": 0,
+                               "n_skipped_rounds": 0}
         self.n_fallback_rounds = 0
         self.n_batch_uploads = 0
         self.n_block_dispatches = 0
@@ -376,19 +395,40 @@ class FederatedTrainer:
             lambda w, gg: w - self.eta * gg.astype(w.dtype), self.params, g)
 
     def _reference_round(self, selected: list[int], lam_s: np.ndarray,
-                         batches: list, s: int = 0) -> list[float]:
-        """Original per-client loop: steps 2-4 with host-side thresholds."""
+                         batches: list, s: int = 0, fault=None):
+        """Original per-client loop: steps 2-4 with host-side thresholds.
+
+        The fault draw is applied EAGERLY, mirroring the packed engine op
+        for op: every selected client still computes its update (identical
+        RNG stream), corruption factors scale the upload, uploads that
+        never arrived are dropped before aggregation, and — the eager form
+        of the engine's always-on isfinite guard — a non-finite upload is
+        quarantined host-side. `server_step` over the survivors then
+        renormalizes by their count (and early-returns when none survive),
+        which is the semantics the packed guard reproduces on device.
+        Returns (per-client losses, surviving upload count)."""
         grads, losses = [], []
-        for n, batch in zip(selected, batches):
+        ok = (np.asarray(fault.upload_ok, bool) if fault is not None
+              else np.ones(len(selected), bool))
+        cf = fault.corrupt if fault is not None else None
+        for j, (n, batch) in enumerate(zip(selected, batches)):
             g, _, loss = self.client_update(n, float(lam_s[n]), batch=batch)
-            grads.append(g)
             losses.append(loss)
+            if not ok[j]:
+                continue                     # the upload never arrived
+            if cf is not None:
+                g = jax.tree.map(
+                    lambda t, c=np.float32(cf[j]): t * c, g)
+            if all(bool(jnp.all(jnp.isfinite(leaf)))
+                   for leaf in jax.tree_util.tree_leaves(g)):
+                grads.append(g)
         self.server_step(
             grads,
             noise=self._noise_tree(s) if self.channel_noise else None)
-        return losses
+        return losses, len(grads)
 
-    def _round(self, selected: list[int], lam_s: np.ndarray, s: int = 0):
+    def _round(self, selected: list[int], lam_s: np.ndarray, s: int = 0,
+               fault=None):
         """Steps 2-4 for one round; batches are drawn once, in selected
         order, so both backends consume the identical RNG sequence.
 
@@ -398,13 +438,19 @@ class FederatedTrainer:
         With a weighted loss every batch is padded to batch_size, so ragged
         clients and round-to-round varying selection sizes all stay on the
         packed path (the engine buckets the client axis); the reference
-        fallback only fires for custom losses without a weighted form."""
+        fallback only fires for custom losses without a weighted form.
+
+        Returns (losses, n_ok): n_ok is the surviving weighted-upload
+        count — a lazy device scalar on the packed path (the engine's
+        `last_n_ok`), an int on the reference path — materialized with the
+        losses to drive the fault counters."""
         batches = [self._sample_batch(self.clients[n]) for n in selected]
         stackable = len({b[0].shape for b in batches}) <= 1
         if self.backend != "packed" or not stackable:
             if self.backend == "packed":
                 self.n_fallback_rounds += 1
-            return self._reference_round(selected, lam_s, batches, s=s)
+            return self._reference_round(selected, lam_s, batches, s=s,
+                                         fault=fault)
         lam_sel = np.asarray([lam_s[n] for n in selected], np.float64)
         xs = jnp.stack([b[0] for b in batches])
         ys = jnp.stack([b[1] for b in batches])
@@ -415,8 +461,11 @@ class FederatedTrainer:
             # all-ones weights carry no information: skip the transfer and
             # let the engine materialize them on device
             sample_weights=None if sws.all() else sws,
-            noise=self._noise_packed(s) if self.channel_noise else None)
-        return losses
+            noise=self._noise_packed(s) if self.channel_noise else None,
+            upload_weights=(fault.upload_ok.astype(np.float32)
+                            if fault is not None else None),
+            corrupt=fault.corrupt if fault is not None else None)
+        return losses, self.engine.last_n_ok
 
     # -- block execution ----------------------------------------------------
 
@@ -503,9 +552,23 @@ class FederatedTrainer:
         idxs = np.empty((n_rounds, c_max, blen), np.int32)
         sw = np.ones((n_rounds, c_max, blen), np.float32)
         lams = np.empty((n_rounds, c_max), np.float64)
+        # host-drawn fault masks join the stacked [K, C] schedule operands
+        # (ones = clean defaults, exact no-ops on device) whenever a fault
+        # model is active — one upload per block, zero per-round H2D
+        fault_on = self.fault_model is not None
+        if fault_on:
+            fw = np.ones((n_rounds, c_max), np.float32)
+            cfa = np.ones((n_rounds, c_max), np.float32)
         any_ragged = False
         for k, sel in enumerate(sels):
             lam_s = infos[start + k][1]
+            if fault_on:
+                fault = infos[start + k][6]
+                if fault is not None:
+                    fw[k, :len(sel)] = np.asarray(fault.upload_ok,
+                                                  np.float32)
+                    if fault.corrupt is not None:
+                        cfa[k, :len(sel)] = fault.corrupt
             for j, n in enumerate(sel):
                 draw = self._draw_indices(self.clients[n])
                 m = len(draw)
@@ -529,10 +592,13 @@ class FederatedTrainer:
                   if self.channel_noise else None)
         self._w, self._v, losses, _ = self.engine.block_step(
             self._w, self._v, store, cids, idxs, lams, counts,
-            sample_weights=sw if any_ragged else None, noises=noises)
+            sample_weights=sw if any_ragged else None, noises=noises,
+            upload_weights=fw if fault_on else None,
+            corrupt=cfa if fault_on else None)
+        n_oks = self.engine.last_n_ok        # [K] lazy survivor counts
         self.n_block_dispatches += 1
         for k in range(n_rounds):
-            out[start + k] = losses[k, : int(counts[k])]
+            out[start + k] = (losses[k, : int(counts[k])], n_oks[k])
         # fires right after the dispatch returns: the block's losses are
         # still lazy device arrays, so hooks here never force a sync
         for cb in self._callbacks:
@@ -603,16 +669,31 @@ class FederatedTrainer:
         callbacks = tuple(callbacks)
         self._callbacks = callbacks
         history: list[RoundMetrics] = []
-        # rounds whose train_loss is still an unmaterialized device array
-        pending: list[tuple[RoundMetrics, Any]] = []
+        # rounds whose train_loss / survivor count are still unmaterialized
+        # device values: (metrics, losses, n_ok, upload mask)
+        pending: list[tuple[RoundMetrics, Any, Any, Any]] = []
 
         def materialize():
-            for m, losses in pending:
+            for m, losses, n_ok, mask in pending:
                 if losses is not None:
                     # float64 mean over the synced fp32 values — identical
-                    # to the old eager np.mean over a list of floats
+                    # to the old eager np.mean over a list of floats;
+                    # restricted to the uploads that arrived (the server
+                    # never observes a dropped client's loss)
                     arr = np.asarray(losses, np.float64)
+                    if mask is not None:
+                        arr = arr[mask]
                     m.train_loss = float(arr.mean()) if arr.size else float("nan")
+                n_sel = len(m.selected)
+                n_up = int(mask.sum()) if mask is not None else n_sel
+                m.n_faulted = n_sel - n_up
+                if n_ok is not None:
+                    ok = int(n_ok)
+                    m.n_quarantined = max(0, n_up - ok)
+                    if n_sel and ok == 0:
+                        self.fault_counters["n_skipped_rounds"] += 1
+                self.fault_counters["n_dropped"] += m.n_faulted
+                self.fault_counters["n_quarantined"] += m.n_quarantined
                 for cb in callbacks:
                     cb.on_round_end(m, self)
             pending.clear()
@@ -628,11 +709,23 @@ class FederatedTrainer:
             a_s, lam_s = schedule.a[s], schedule.lam[s]
             p_s, f_s = schedule.power[s], schedule.freq[s]
             selected = [int(i) for i in np.flatnonzero(a_s > 0)]
-            d = round_delay(a_s, lam_s, p_s, f_s, h_up, h_down, sp)
+            # per-client tau_n + tau^_n feed both the round deadline (the
+            # gated max is round_delay's expression verbatim — bitwise
+            # identical bookkeeping) and the straggler fault model's
+            # judgment against that deadline
+            per = per_client_delay(lam_s, p_s, f_s, h_up, h_down, sp)
+            gated = np.asarray(a_s, np.float64) * per
+            d = float(gated.max()) if gated.size else 0.0
             e = round_energy(a_s, lam_s, p_s, f_s, h_up, h_down, sp)
             cum_t += d
             cum_e += e
-            infos.append((selected, lam_s, d, e, cum_t, cum_e))
+            fault = None
+            if self.fault_model is not None and selected:
+                sel_arr = np.asarray(selected, int)
+                fault = self.fault_model.draw(
+                    s, len(self.clients), sel_arr,
+                    delays=per[sel_arr], deadline=d)
+            infos.append((selected, lam_s, d, e, cum_t, cum_e, fault))
             if stop_delay is not None and cum_t >= stop_delay:
                 break
             if stop_energy is not None and cum_e >= stop_energy:
@@ -662,17 +755,19 @@ class FederatedTrainer:
 
         block_losses: dict[int, Any] = {}
         try:
-            for s, (selected, lam_s, d, e, cum_t, cum_e) in enumerate(infos):
+            for s, (selected, lam_s, d, e, cum_t, cum_e,
+                    fault) in enumerate(infos):
                 if s < start_round:
                     continue   # already executed before the checkpoint
                 if s in blocks:
                     self._exec_block(s, blocks[s], infos, block_losses)
                 if s in block_losses:
-                    losses = block_losses.pop(s)
+                    losses, n_ok = block_losses.pop(s)
                 elif selected:
-                    losses = self._round(selected, lam_s, s=s)
+                    losses, n_ok = self._round(selected, lam_s, s=s,
+                                               fault=fault)
                 else:
-                    losses = None
+                    losses = n_ok = None
                 m = RoundMetrics(
                     round=s,
                     train_loss=float("nan"),
@@ -682,7 +777,9 @@ class FederatedTrainer:
                     delay=d, energy=e,
                     cumulative_delay=cum_t, cumulative_energy=cum_e,
                 )
-                pending.append((m, losses))
+                pending.append((m, losses, n_ok,
+                                np.asarray(fault.upload_ok, bool)
+                                if fault is not None else None))
                 is_eval = (eval_fn is not None
                            and (s % eval_every == 0 or s == n_rounds - 1))
                 if is_eval or s in ckpt_rounds:

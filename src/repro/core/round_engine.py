@@ -276,6 +276,17 @@ class RoundEngine:
         # there to avoid per-compile warnings.
         donate_args = ((0, 1) if donate
                        and jax.default_backend() in ("tpu", "gpu") else ())
+        self._donate_args = donate_args
+        # Fault-injection entry points (dropout rides the plain entries via
+        # host-folded client weights; corruption and block fault masks need
+        # extra traced operands) are built LAZILY per (kind, noisy) so
+        # fault-free runs never pay their jit scaffolding.
+        self._fault_steps: dict[tuple, Callable] = {}
+        # survivor count of the most recent round_step ([] scalar) or
+        # block_step ([K]) — weighted clients whose summed gradient passed
+        # the isfinite guard; the trainer materializes it lazily alongside
+        # the losses to drive the n_quarantined / n_skipped_rounds counters
+        self.last_n_ok = None
         if self.mesh is None:
             round_shared, round_multi = self._round_shared, self._round_multi
             self._step_shared = jax.jit(self._shared_impl,
@@ -376,22 +387,49 @@ class RoundEngine:
         _, (losses, grads) = jax.lax.scan(body, 0.0, (masks, xs, ys, sw))
         return losses, grads
 
-    def _aggregate_update(self, w, grads, cw, inv, noise):
-        """Weighted aggregate + FedSGD tail, with an optional noisy
-        aggregation channel: when `noise` (packed [R, L], zero on padding
-        lanes) is traced in, the update consumes mean(g) + noise — the
-        server never sees the clean aggregate (wireless/channel.py). The
-        noiseless path keeps the fused kernel; the noisy path goes through
-        the XLA mirror so the fenced mean product is materialized before
-        the add (bit-parity with the eager reference sequence)."""
-        if noise is None:
-            return ops.packed_fedsgd_update_weighted(
-                w, grads, cw, inv, self.eta, impl=self.kernel_impl)
-        gsum = ops.packed_weighted_grad_sum(grads, cw)
-        return ops.packed_apply_mean_update(w, gsum, inv, self.eta,
-                                            noise=noise)
+    def _aggregate_update(self, w, v, grads, cw, inv, noise, cf=None):
+        """Weighted aggregate + FedSGD tail, with graceful degradation and
+        an optional noisy aggregation channel.
 
-    def _round_shared(self, w, v, xs, ys, sw, cw, inv, k, noise=None):
+        `cf` (optional [C] per-client corruption factors, 1.0 = clean)
+        scales each client's masked gradient before aggregation — the
+        corrupt-upload fault axis (core/faults.py); a `1.0 * g` multiply
+        is exact, so clean clients are bitwise unaffected.
+
+        The always-on non-finite guard (ops.packed_client_quarantine) then
+        zeroes the weight of any client whose summed gradient went
+        non-finite and renormalizes the mean over the survivors; with
+        every upload finite it passes (cw, inv) through value-identically,
+        so the default path stays bit-for-bit (tests/test_golden.py is the
+        sensor). When NO client survives, `alive` selects the carried
+        (w, v) — the round's update is skipped entirely, params unchanged.
+
+        When `noise` (packed [R, L], zero on padding lanes) is traced in,
+        the update consumes mean(g) + noise — the server never sees the
+        clean aggregate (wireless/channel.py). The noiseless path keeps
+        the fused kernel (the guard only rewrites its weight operands);
+        the noisy path goes through the XLA mirror so the fenced mean
+        product is materialized before the add (bit-parity with the eager
+        reference sequence)."""
+        if cf is not None:
+            grads = grads * cf.astype(jnp.float32)[:, None, None]
+        cw_eff, inv_eff, n_ok, alive = ops.packed_client_quarantine(
+            grads, cw, inv)
+        if noise is None:
+            w2, g, step = ops.packed_fedsgd_update_weighted(
+                w, grads, cw_eff, inv_eff, self.eta, impl=self.kernel_impl)
+        else:
+            gsum = ops.packed_weighted_grad_sum(grads, cw_eff)
+            w2, g, step = ops.packed_apply_mean_update(w, gsum, inv_eff,
+                                                       self.eta, noise=noise)
+        # all clients faulted: carry params and the broadcast v unchanged
+        # (the reference server_step's empty-grads early return)
+        w2 = jnp.where(alive, w2, w)
+        g = jnp.where(alive, g, v)
+        return w2, g, step, n_ok
+
+    def _round_shared(self, w, v, xs, ys, sw, cw, inv, k, noise=None,
+                      cf=None):
         """One shared-lambda round, given device batches — the single body
         traced by both the per-round jit and the block scan, so the two
         paths compile the identical round math (bit-for-bit contract)."""
@@ -402,18 +440,21 @@ class RoundEngine:
         pruned = w * mask
         losses, grads = self._grads_shared(pruned, mask, xs, ys, sw)
         # step stays an output of the jitted graph: see the weighted update
-        w2, g, step = self._aggregate_update(w, grads, cw, inv, noise)
-        return w2, g, losses, thr, step
+        w2, g, step, n_ok = self._aggregate_update(w, v, grads, cw, inv,
+                                                   noise, cf)
+        return w2, g, losses, thr, step, n_ok
 
-    def _round_multi(self, w, v, xs, ys, sw, cw, inv, ks, noise=None):
+    def _round_multi(self, w, v, xs, ys, sw, cw, inv, ks, noise=None,
+                     cf=None):
         """One per-client-lambda round (see _round_shared)."""
         q = (w * v) ** 2
         thr = kth_smallest_threshold(q, self.prunable, ks)      # [C]
         _, masks = ops.packed_importance_masks(w, v, self.prunable, thr,
                                                impl=self.kernel_impl)
         losses, grads = self._grads_multi(w, masks, xs, ys, sw)
-        w2, g, step = self._aggregate_update(w, grads, cw, inv, noise)
-        return w2, g, losses, thr, step
+        w2, g, step, n_ok = self._aggregate_update(w, v, grads, cw, inv,
+                                                   noise, cf)
+        return w2, g, losses, thr, step, n_ok
 
     def _shared_impl(self, w, v, xs, ys, sw, cw, inv, k):
         self.n_traces += 1
@@ -425,7 +466,8 @@ class RoundEngine:
 
     # -- block scaffold: lax.scan over the round axis -----------------------
 
-    def _make_block_impl(self, round_fn, noisy: bool = False):
+    def _make_block_impl(self, round_fn, noisy: bool = False,
+                         faulted: bool = False):
         """K rounds per dispatch around any of the four per-round bodies:
         the scan carries (w, v) and consumes [K]-leading stacked schedule
         arrays; batches are gathered ON DEVICE from the ClientStore
@@ -437,9 +479,13 @@ class RoundEngine:
         bit-for-bit equal to K round_step dispatches. With ``noisy`` the
         scan additionally consumes a [K, R, L] per-round noise stack (one
         upload per BLOCK, not per round — the zero-per-round-H2D property
-        is preserved)."""
+        is preserved). With ``faulted`` it consumes two more [K, C]
+        schedule operands the same way: host-drawn 0/1 fault weights `fw`
+        (multiplied into the counts-derived client weights — an exact 0/1
+        product, so dropped clients ride the padding-client path) and
+        per-client corruption factors `cf` (1.0 = clean, exact)."""
 
-        def impl(w, v, dx, dy, cids, idxs, sw, counts, inv, ks, *noises):
+        def impl(w, v, dx, dy, cids, idxs, sw, counts, inv, ks, *rest):
             self.n_traces += 1
             # 0/1 client-validity weights straight from the per-round real
             # counts — built on device (exact 0.0/1.0, so the weighted
@@ -448,22 +494,59 @@ class RoundEngine:
             # every distinct counts vector an AO schedule produces
             cw = (jnp.arange(cids.shape[1])[None, :]
                   < counts[:, None]).astype(jnp.float32)
+            if faulted:
+                fw, cf, rest = rest[0], rest[1], rest[2:]
+                cw = cw * fw
+            else:
+                cf = None
 
             def body(carry, inp):
                 w, v = carry
                 cid, ix, sw_k, cw_k, inv_k, k = inp[:6]
                 xs = dx[cid[:, None], ix]
                 ys = dy[cid[:, None], ix]
-                w2, g, losses, thr, _ = round_fn(
+                w2, g, losses, thr, _, n_ok = round_fn(
                     w, v, xs, ys, sw_k, cw_k, inv_k, k,
-                    noise=inp[6] if noisy else None)
-                return (w2, g), (losses, thr)
+                    noise=inp[-1] if noisy else None,
+                    cf=inp[6] if faulted else None)
+                return (w2, g), (losses, thr, n_ok)
 
-            xss = (cids, idxs, sw, cw, inv, ks) + noises
-            (w2, v2), (losses, thrs) = jax.lax.scan(body, (w, v), xss)
-            return w2, v2, losses, thrs
+            xss = ((cids, idxs, sw, cw, inv, ks)
+                   + ((cf,) if faulted else ()) + rest)
+            (w2, v2), (losses, thrs, n_oks) = jax.lax.scan(body, (w, v), xss)
+            return w2, v2, losses, thrs, n_oks
 
         return impl
+
+    def _fault_entry(self, kind: str, noisy: bool) -> Callable:
+        """Lazily built jit entry points for rounds with fault operands:
+        per-round corrupt steps take an extra [C] `cf`; block fault steps
+        take [K, C] `fw` + `cf` stacks (wired by _make_block_impl). Cached
+        per (kind, noisy) so fault runs stay on the same trace-count
+        ladder as fault-free ones, one extra family per mode used."""
+        key = (kind, noisy)
+        fn = self._fault_steps.get(key)
+        if fn is not None:
+            return fn
+        shared = kind.endswith("shared")
+        if self.mesh is None:
+            round_fn = self._round_shared if shared else self._round_multi
+        else:
+            round_fn = (self._round_shared_sharded if shared
+                        else self._round_multi_sharded)
+        if kind.startswith("blk"):
+            impl = self._make_block_impl(round_fn, noisy=noisy, faulted=True)
+        elif noisy:
+            def impl(w, v, xs, ys, sw, cw, inv, k, cf, noise, _fn=round_fn):
+                self.n_traces += 1
+                return _fn(w, v, xs, ys, sw, cw, inv, k, noise=noise, cf=cf)
+        else:
+            def impl(w, v, xs, ys, sw, cw, inv, k, cf, _fn=round_fn):
+                self.n_traces += 1
+                return _fn(w, v, xs, ys, sw, cw, inv, k, cf=cf)
+        fn = jax.jit(impl, donate_argnums=self._donate_args)
+        self._fault_steps[key] = fn
+        return fn
 
     # -- sharded bodies: client axis over the mesh data axis ----------------
     #
@@ -474,56 +557,107 @@ class RoundEngine:
     # per-shard gradient sums. The FedSGD update then runs replicated so
     # (w, v) never need resharding between rounds.
 
-    def _round_shared_sharded(self, w, v, xs, ys, sw, cw, inv, k, noise=None):
+    @staticmethod
+    def _guarded_partial(losses, grads, cw, cf):
+        """Shard-local half of the non-finite guard + the round's single
+        collective. Corruption factors (if any) scale the local gradients,
+        the isfinite flags zero the weight of any client whose summed
+        gradient went non-finite, and ONE tuple psum combines the weighted
+        partial gradient sums with the [2] (weighted, surviving) counts —
+        the per-round collective count stays at one."""
+        if cf is not None:
+            grads = grads * cf.astype(jnp.float32)[:, None, None]
+        fin = jnp.isfinite(grads).all(axis=(1, 2)).astype(jnp.float32)
+        cwe = cw * fin                       # exact: fin is 0.0/1.0
+        gsum = ops.packed_weighted_grad_sum(grads, cwe)
+        cnt = jnp.stack([cw.sum(), cwe.sum()])
+        gsum, cnt = jax.lax.psum((gsum, cnt), "data")
+        return losses, gsum, cnt
+
+    def _guarded_tail(self, w, v, gsum, cnt, inv, noise):
+        """Replicated guard tail for the sharded bodies: renormalize the
+        mean over the cross-shard survivor count (host `inv` passes through
+        value-identically when every weighted client survived — the same
+        contract as ops.packed_client_quarantine), apply the update, and
+        carry (w, v) unchanged when no client survived."""
+        n_w, n_ok = cnt[0], cnt[1]
+        inv_eff = jnp.where(
+            n_ok == n_w, jnp.asarray(inv, jnp.float32),
+            jnp.where(n_ok > 0.0, 1.0 / jnp.maximum(n_ok, 1.0), 0.0))
+        w2, g, step = ops.packed_apply_mean_update(w, gsum, inv_eff,
+                                                   self.eta, noise=noise)
+        alive = n_ok > 0.0
+        w2 = jnp.where(alive, w2, w)
+        g = jnp.where(alive, g, v)
+        return w2, g, step, n_ok.astype(jnp.int32)
+
+    def _round_shared_sharded(self, w, v, xs, ys, sw, cw, inv, k, noise=None,
+                              cf=None):
         """Mesh variant of _round_shared: threshold / mask / FedSGD update
         replicated OUTSIDE the shard_map region (the shard_map replication
         checker has no rule for the `while` ops inside the threshold
         search and the FMA fence), per-shard gradient scan + the round's
         single psum inside. Traced by both the per-round jit and the block
         scan, like its single-device sibling. `noise` (replicated) joins
-        the replicated update tail — the collective count is unchanged."""
+        the replicated update tail — the collective count is unchanged.
+        `cf` (per-client corruption factors) shards with the client axis."""
         q = (w * v) ** 2
         thr = kth_smallest_threshold(q, self.prunable, k)
         _, mask = ops.packed_importance_mask(w, v, self.prunable, thr,
                                              impl=self.kernel_impl)
         pruned = w * mask
 
-        def body(pruned, mask, xs, ys, sw, cw):
-            losses, grads = self._grads_shared(pruned, mask, xs, ys, sw)
-            gsum = ops.packed_weighted_grad_sum(grads, cw)
-            return losses, jax.lax.psum(gsum, "data")
+        if cf is None:
+            def body(pruned, mask, xs, ys, sw, cw):
+                losses, grads = self._grads_shared(pruned, mask, xs, ys, sw)
+                return self._guarded_partial(losses, grads, cw, None)
 
-        losses, gsum = shard_map(
-            body, mesh=self.mesh,
-            in_specs=(P(), P(), P("data"), P("data"), P("data"), P("data")),
-            out_specs=(P("data"), P()))(pruned, mask, xs, ys, sw, cw)
-        w2, g, step = ops.packed_apply_mean_update(w, gsum, inv, self.eta,
-                                                   noise=noise)
-        return w2, g, losses, thr, step
+            losses, gsum, cnt = shard_map(
+                body, mesh=self.mesh,
+                in_specs=(P(), P(), P("data"), P("data"), P("data"),
+                          P("data")),
+                out_specs=(P("data"), P(), P()))(pruned, mask, xs, ys, sw, cw)
+        else:
+            def body(pruned, mask, xs, ys, sw, cw, cf_):
+                losses, grads = self._grads_shared(pruned, mask, xs, ys, sw)
+                return self._guarded_partial(losses, grads, cw, cf_)
 
-    def _round_multi_sharded(self, w, v, xs, ys, sw, cw, inv, ks, noise=None):
+            losses, gsum, cnt = shard_map(
+                body, mesh=self.mesh,
+                in_specs=(P(), P(), P("data"), P("data"), P("data"),
+                          P("data"), P("data")),
+                out_specs=(P("data"), P(), P()))(pruned, mask, xs, ys, sw,
+                                                 cw, cf)
+        w2, g, step, n_ok = self._guarded_tail(w, v, gsum, cnt, inv, noise)
+        return w2, g, losses, thr, step, n_ok
+
+    def _round_multi_sharded(self, w, v, xs, ys, sw, cw, inv, ks, noise=None,
+                             cf=None):
         """Mesh variant of _round_multi (see _round_shared_sharded)."""
         q = (w * v) ** 2
         thr = kth_smallest_threshold(q, self.prunable, ks)      # [C]
 
-        def body(w_, v_, pr, thr_, xs_, ys_, sw_, cw_):
-            # per-shard masks from the local thresholds: the batched kernel
-            # reads the replicated (w, v) once and emits only local masks
-            _, masks = ops.packed_importance_masks(w_, v_, pr, thr_,
-                                                   impl=self.kernel_impl)
-            losses, grads = self._grads_multi(w_, masks, xs_, ys_, sw_)
-            gsum = ops.packed_weighted_grad_sum(grads, cw_)
-            return losses, jax.lax.psum(gsum, "data")
+        def mk_body(with_cf):
+            def body(w_, v_, pr, thr_, xs_, ys_, sw_, cw_, *cf_):
+                # per-shard masks from the local thresholds: the batched
+                # kernel reads the replicated (w, v) once, local masks only
+                _, masks = ops.packed_importance_masks(w_, v_, pr, thr_,
+                                                       impl=self.kernel_impl)
+                losses, grads = self._grads_multi(w_, masks, xs_, ys_, sw_)
+                return self._guarded_partial(losses, grads, cw_,
+                                             cf_[0] if with_cf else None)
+            return body
 
-        losses, gsum = shard_map(
-            body, mesh=self.mesh,
-            in_specs=(P(), P(), P(), P("data"), P("data"), P("data"),
-                      P("data"), P("data")),
-            out_specs=(P("data"), P()))(
-                w, v, self.prunable, thr, xs, ys, sw, cw)
-        w2, g, step = ops.packed_apply_mean_update(w, gsum, inv, self.eta,
-                                                   noise=noise)
-        return w2, g, losses, thr, step
+        specs = (P(), P(), P(), P("data"), P("data"), P("data"),
+                 P("data"), P("data"))
+        args = (w, v, self.prunable, thr, xs, ys, sw, cw)
+        if cf is not None:
+            specs, args = specs + (P("data"),), args + (cf,)
+        losses, gsum, cnt = shard_map(
+            mk_body(cf is not None), mesh=self.mesh, in_specs=specs,
+            out_specs=(P("data"), P(), P()))(*args)
+        w2, g, step, n_ok = self._guarded_tail(w, v, gsum, cnt, inv, noise)
+        return w2, g, losses, thr, step, n_ok
 
     def _shared_sharded_impl(self, w, v, xs, ys, sw, cw, inv, k):
         self.n_traces += 1
@@ -554,15 +688,23 @@ class RoundEngine:
         return w, jnp.zeros_like(w)
 
     def round_step(self, w, v, xs, ys, lams, sample_weights=None,
-                   noise=None):
+                   noise=None, upload_weights=None, corrupt=None):
         """One full round. xs: [C, B, ...], ys: [C, B], lams: [C] host-side
         pruning ratios for the selected clients; sample_weights: optional
         [C, B] 0/1 per-sample weights (ragged clients padded to B);
         noise: optional packed [R, L] aggregation-channel noise (zero on
         padding lanes) added to the mean gradient before the update — the
         noisy-uplink axis (wireless/channel.GaussianAggregateNoise).
+        upload_weights: optional [C] 0/1 floats — 0 marks a client whose
+        upload never arrived (dropout/straggler draw, core/faults.py); the
+        client rides the padding-client path (weight 0) and the host mean
+        scalar renormalizes over the survivors, so NO new trace is paid.
+        corrupt: optional [C] per-client gradient factors (1.0 = clean,
+        NaN = poisoned) — a traced operand, routed through the lazily
+        built fault entry points.
         Returns (w', v', losses [C], threshold, step) — all device arrays;
-        nothing is synced to host. `step` is the applied update eta*v'
+        nothing is synced to host (`last_n_ok` additionally holds the
+        round's lazy survivor count). `step` is the applied update eta*v'
         (kept as an output so the update's multiply can never be
         FMA-contracted — the bit-for-bit contract with the reference
         trainer depends on it)."""
@@ -594,29 +736,59 @@ class RoundEngine:
             xs, ys = tile(xs), tile(ys)
             if sample_weights is not None:
                 sw = tile(sw)
-        cw = self._cw_cache.get((c_b, n_clients))
-        if cw is None:
+        if upload_weights is None:
+            cw = self._cw_cache.get((c_b, n_clients))
+            if cw is None:
+                cw_host = np.zeros(c_b, np.float32)
+                cw_host[:n_clients] = 1.0
+                cw = self._cw_cache[(c_b, n_clients)] = jnp.asarray(cw_host)
+            # 1/C on host, like the reference server_step's 1/len(grads)
+            inv = np.float32(1.0 / n_clients)
+        else:
+            # fault draw folded into the same 0/1 weight operand padding
+            # clients already use — identical trace, new operand values;
+            # the mean renormalizes over the survivors exactly as the
+            # reference server_step's 1/len(surviving grads) does
+            uw = np.asarray(upload_weights, np.float32)
+            if uw.shape != (n_clients,):
+                raise ValueError(
+                    f"upload_weights shape {uw.shape} != ({n_clients},)")
             cw_host = np.zeros(c_b, np.float32)
-            cw_host[:n_clients] = 1.0
-            cw = self._cw_cache[(c_b, n_clients)] = jnp.asarray(cw_host)
-        # 1/C on host, exactly like the reference server_step's 1/len(grads)
-        inv = np.float32(1.0 / n_clients)
+            cw_host[:n_clients] = uw
+            cw = jnp.asarray(cw_host)
+            surv = float(np.asarray(uw, np.float64).sum())
+            inv = np.float32(1.0 / surv) if surv > 0 else np.float32(0.0)
+        cf = None
+        if corrupt is not None:
+            cf_host = np.ones(c_b, np.float32)   # padding clients clean
+            cf_host[:n_clients] = np.asarray(corrupt, np.float32)
+            cf = jnp.asarray(cf_host)
 
+        nz = () if noise is None else (jnp.asarray(noise),)
         if np.all(ks == ks[0]):
             k_dev = jnp.asarray(ks[0], jnp.int32)
-            out = (self._step_shared(w, v, xs, ys, sw, cw, inv, k_dev)
-                   if noise is None else
-                   self._step_shared_nz(w, v, xs, ys, sw, cw, inv, k_dev,
-                                        jnp.asarray(noise)))
+            if cf is not None:
+                out = self._fault_entry("shared", noise is not None)(
+                    w, v, xs, ys, sw, cw, inv, k_dev, cf, *nz)
+            else:
+                out = (self._step_shared(w, v, xs, ys, sw, cw, inv, k_dev)
+                       if noise is None else
+                       self._step_shared_nz(w, v, xs, ys, sw, cw, inv, k_dev,
+                                            *nz))
         else:
             ks_b = np.concatenate(
                 [ks, np.full(pad, ks[-1], np.int32)]) if pad else ks
             ks_dev = jnp.asarray(ks_b)
-            out = (self._step_multi(w, v, xs, ys, sw, cw, inv, ks_dev)
-                   if noise is None else
-                   self._step_multi_nz(w, v, xs, ys, sw, cw, inv, ks_dev,
-                                       jnp.asarray(noise)))
-        w2, g, losses, thr, step = out
+            if cf is not None:
+                out = self._fault_entry("multi", noise is not None)(
+                    w, v, xs, ys, sw, cw, inv, ks_dev, cf, *nz)
+            else:
+                out = (self._step_multi(w, v, xs, ys, sw, cw, inv, ks_dev)
+                       if noise is None else
+                       self._step_multi_nz(w, v, xs, ys, sw, cw, inv, ks_dev,
+                                           *nz))
+        w2, g, losses, thr, step, n_ok = out
+        self.last_n_ok = n_ok
         if pad:
             losses = losses[:n_clients]
             if thr.ndim:                      # per-client thresholds
@@ -624,7 +796,8 @@ class RoundEngine:
         return w2, g, losses, thr, step
 
     def block_step(self, w, v, store, cids, idxs, lams, counts,
-                   sample_weights=None, noises=None):
+                   sample_weights=None, noises=None, upload_weights=None,
+                   corrupt=None):
         """K rounds in ONE jitted dispatch (`lax.scan` over the round axis).
 
         store : ClientStore — device-resident [C_all, N_max, ...] data.
@@ -643,6 +816,16 @@ class RoundEngine:
         noises : [K, R, L] per-round packed aggregation noise or None —
             one stack per block dispatch (never a per-round upload), each
             round consuming its own slice inside the scan.
+        upload_weights : [K, C] 0/1 floats or None — host-drawn fault
+            masks (0 = the upload never arrived); they join the stacked
+            schedule operands exactly like cids/ks — ONE upload per block,
+            the zero-per-round-H2D property is preserved — and multiply
+            into the counts-derived client weights on device.
+        corrupt : [K, C] per-client gradient factors or None (1.0 =
+            clean). Either fault operand routes the block through the
+            lazily built fault entry, which always consumes BOTH stacks
+            (ones-filled defaults are exact no-ops), so a fault run uses
+            one entry per (shape bucket) regardless of which kinds fired.
 
         Returns (w', v', losses [K, C_b], thresholds [K] or [K, C_b]) —
         all device arrays, nothing synced; `losses[k, counts[k]:]` belongs
@@ -692,22 +875,57 @@ class RoundEngine:
         else:
             sw = jnp.asarray(pad_cols(
                 np.asarray(sample_weights, np.float32)))
-        # per-round 1/C on host, like the reference server_step's
-        # 1/len(grads); the 0/1 client weights are derived from `counts`
-        # on device inside the block impl (no per-block [K, C_b] upload)
-        inv = jnp.asarray((1.0 / counts).astype(np.float32))
+        faulted = upload_weights is not None or corrupt is not None
+        if faulted:
+            # per-round survivor counts drive the host mean scalars; the
+            # float64 1/n -> float32 cast gives the identical value to the
+            # reference server_step's np.float32(1.0 / n) (double rounding
+            # is safe: p=53 >= 2*24+2)
+            uw = (np.ones((n_rounds, c_max), np.float32)
+                  if upload_weights is None
+                  else np.asarray(upload_weights, np.float32))
+            cfa = (np.ones((n_rounds, c_max), np.float32)
+                   if corrupt is None else np.asarray(corrupt, np.float32))
+            if uw.shape != (n_rounds, c_max) or cfa.shape != (n_rounds, c_max):
+                raise ValueError("fault operand shapes must be [K, C]")
+            col = np.arange(c_max)[None, :]
+            surv = (uw.astype(np.float64) * (col < counts[:, None])).sum(1)
+            inv_host = np.where(surv > 0, 1.0 / np.maximum(surv, 1.0), 0.0)
+        else:
+            # per-round 1/C on host, like the reference server_step's
+            # 1/len(grads); the 0/1 client weights are derived from
+            # `counts` on device inside the block impl (no per-block
+            # [K, C_b] upload)
+            inv_host = 1.0 / counts
+        inv = jnp.asarray(inv_host.astype(np.float32))
         counts_dev = jnp.asarray(counts.astype(np.int32))
+
+        def pad_ones(a):
+            # padding clients carry weight 0 either way; keep their fault
+            # operands clean (1.0) so a poisoned last real client can't
+            # replicate NaNs into padding lanes
+            return np.concatenate(
+                [a, np.ones((n_rounds, pad), np.float32)],
+                axis=1) if pad else a
 
         shared = bool((ks == ks[:, :1]).all())
         nz = () if noises is None else (jnp.asarray(noises),)
-        if shared:
+        ks_dev = jnp.asarray(ks[:, 0]) if shared else jnp.asarray(ks)
+        if faulted:
+            fn = self._fault_entry("blk_shared" if shared else "blk_multi",
+                                   noises is not None)
+            out = fn(w, v, store.x, store.y, jnp.asarray(cids),
+                     jnp.asarray(idxs), sw, counts_dev, inv, ks_dev,
+                     jnp.asarray(pad_ones(uw)), jnp.asarray(pad_ones(cfa)),
+                     *nz)
+        elif shared:
             fn = self._blk_shared if noises is None else self._blk_shared_nz
             out = fn(w, v, store.x, store.y, jnp.asarray(cids),
-                     jnp.asarray(idxs), sw, counts_dev, inv,
-                     jnp.asarray(ks[:, 0]), *nz)
+                     jnp.asarray(idxs), sw, counts_dev, inv, ks_dev, *nz)
         else:
             fn = self._blk_multi if noises is None else self._blk_multi_nz
             out = fn(w, v, store.x, store.y, jnp.asarray(cids),
-                     jnp.asarray(idxs), sw, counts_dev, inv,
-                     jnp.asarray(ks), *nz)
-        return out
+                     jnp.asarray(idxs), sw, counts_dev, inv, ks_dev, *nz)
+        w2, v2, losses, thrs, n_oks = out
+        self.last_n_ok = n_oks
+        return w2, v2, losses, thrs

@@ -200,6 +200,40 @@ def packed_apply_mean_update(w, gsum, inv, eta, noise=None):
     return (w.astype(jnp.float32) - step).astype(w.dtype), g, step
 
 
+def packed_client_quarantine(grads, cweights, inv):
+    """Always-on non-finite upload guard (DESIGN.md §10): per-client
+    isfinite flags over the stacked masked gradients [C, R, 128], returning
+    ``(cw_eff, inv_eff, n_ok, alive)`` for the weighted aggregate.
+
+    * cw_eff  — cweights with non-finite clients zeroed. With every upload
+      finite (the default path) this is ``cweights * 1.0`` — the exact same
+      0/1 values, so the downstream weighted sum is bitwise unchanged.
+    * inv_eff — the mean's 1/n. When nobody is quarantined it passes the
+      HOST-computed `inv` through untouched (the bit-for-bit contract's
+      value); with survivors missing it renormalizes to 1/n_ok on device —
+      which equals the host convention ``float32(1/n)`` exactly, because
+      binary64->binary32 double rounding is safe for division (p=53 >=
+      2*24+2); all clients quarantined yields 0 (the caller skips the
+      update entirely via `alive`).
+    * n_ok    — int32 count of surviving (weighted AND finite) clients,
+      surfaced per round as RoundEngine.last_n_ok -> the n_quarantined /
+      n_skipped_rounds counters.
+    * alive   — scalar bool, False when no client survives: the caller
+      carries (w, v) unchanged through the round (params untouched).
+
+    Zero-weight clients (client-axis padding, host-dropped faults) are
+    excluded from both counts by construction (their cw is already 0)."""
+    cw = cweights.astype(jnp.float32)
+    fin = jnp.isfinite(grads).all(axis=(1, 2))
+    cw_eff = cw * fin.astype(jnp.float32)
+    n_w = cw.sum()
+    n_ok = cw_eff.sum()
+    inv_eff = jnp.where(
+        n_ok == n_w, jnp.asarray(inv, jnp.float32),
+        jnp.where(n_ok > 0.0, 1.0 / jnp.maximum(n_ok, 1.0), 0.0))
+    return cw_eff, inv_eff, n_ok.astype(jnp.int32), n_ok > 0.0
+
+
 def packed_weighted_grad_sum(grads, cweights):
     """sum_c cweights[c] * grads[c] in client-stack order, [C,R,128]->[R,128].
 

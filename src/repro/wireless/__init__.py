@@ -6,6 +6,7 @@ from repro.wireless.comm import (
     downlink_rate,
     computation_delay,
     communication_delay,
+    per_client_delay,
     round_delay,
     total_delay,
     computation_energy,
@@ -17,6 +18,7 @@ from repro.wireless.comm import (
 __all__ = [
     "ChannelModel", "rayleigh_gains", "SystemParams",
     "uplink_rate", "downlink_rate",
-    "computation_delay", "communication_delay", "round_delay", "total_delay",
+    "computation_delay", "communication_delay", "per_client_delay",
+    "round_delay", "total_delay",
     "computation_energy", "upload_energy", "round_energy", "total_energy",
 ]

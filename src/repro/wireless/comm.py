@@ -119,13 +119,27 @@ def communication_delay(
     return (1.0 - lam) * sp.grad_bits / r_up + sp.grad_bits / r_down
 
 
+def per_client_delay(
+    lam: np.ndarray, p: np.ndarray, f: np.ndarray,
+    h_up: np.ndarray, h_down: np.ndarray, sp: SystemParams,
+) -> np.ndarray:
+    """tau_n + tau^_n per client [N] — the quantity eq. (12) maxes over.
+
+    Exposed so the straggler fault model (core/faults.py) judges each
+    selected client's scheduled delay against the same round deadline
+    `round_delay` reports — exclusion couples to the paper's T constraint.
+    """
+    return (computation_delay(lam, f, sp)
+            + communication_delay(lam, p, h_up, h_down, sp))
+
+
 def round_delay(
     a: np.ndarray, lam: np.ndarray, p: np.ndarray, f: np.ndarray,
     h_up: np.ndarray, h_down: np.ndarray, sp: SystemParams,
 ) -> float:
     """max_n a_n (tau_n + tau^_n): the per-round straggler latency."""
-    per = computation_delay(lam, f, sp) + communication_delay(lam, p, h_up, h_down, sp)
-    gated = np.asarray(a, dtype=np.float64) * per
+    gated = np.asarray(a, dtype=np.float64) * per_client_delay(
+        lam, p, f, h_up, h_down, sp)
     return float(gated.max()) if gated.size else 0.0
 
 

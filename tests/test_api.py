@@ -320,6 +320,43 @@ def test_resume_restores_rng_and_counters(tmp_path):
         [m.cumulative_energy for m in res_a.history]
 
 
+def test_resume_skips_truncated_checkpoint(tmp_path):
+    """Crash-safety satellite: a truncated latest checkpoint (torn copy /
+    pre-atomic write) is detected and resume falls back to the previous
+    INTACT step — still reproducing the uninterrupted run bit-for-bit."""
+    import glob
+
+    from repro.checkpoint import CheckpointCorruptError
+
+    ckpt = str(tmp_path / "ckpt")
+    base = small_spec("mlp-edge")
+    spec = dataclasses.replace(
+        base, run=dataclasses.replace(base.run, checkpoint_dir=ckpt,
+                                      checkpoint_every=3))
+    res_a = Experiment(spec).run()
+
+    # truncate the newest checkpoint npz (round 9)
+    latest = sorted(glob.glob(f"{ckpt}/ckpt_*.npz"))[-1]
+    assert "00000009" in latest
+    with open(latest, "rb") as f:
+        head = f.read(64)
+    with open(latest, "wb") as f:
+        f.write(head)
+
+    # asking for the corrupt step explicitly surfaces the corruption
+    with pytest.raises(CheckpointCorruptError, match="truncated"):
+        resume_from_checkpoint(ckpt, step=9)
+
+    # default resume lands on round 6, the newest intact step (and, being
+    # checkpointed itself, atomically re-writes an intact round 9)
+    res_b = resume_from_checkpoint(ckpt)
+    assert res_b.summary["resumed_from"] == 6
+    assert [m.train_loss for m in res_b.history] == \
+        [m.train_loss for m in res_a.history]
+    res_c = resume_from_checkpoint(ckpt)          # the repair took
+    assert res_c.summary["resumed_from"] == 9
+
+
 # ---------------------------------------------------------------------------
 # RunResult JSONL
 # ---------------------------------------------------------------------------

@@ -140,3 +140,61 @@ def test_manager_keeps_latest_k(tmp_path):
     np.testing.assert_allclose(np.asarray(restored["w"]), 4.0)
     files = [f for f in os.listdir(tmp_path) if f.endswith(".npz")]
     assert len(files) == 2
+
+
+def _truncate(path, keep_bytes=40):
+    with open(path, "rb") as f:
+        head = f.read(keep_bytes)
+    with open(path, "wb") as f:
+        f.write(head)
+
+
+def test_truncated_checkpoint_detected_and_skipped(tmp_path):
+    from repro.checkpoint import CheckpointCorruptError, verify_checkpoint
+
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    tree = {"w": jnp.zeros((8,))}
+    for s in (1, 2, 3):
+        mgr.save(s, jax.tree.map(lambda x: x + s, tree))
+    # simulate a kill mid-write of the newest npz (torn copy: the atomic
+    # rename means this can't happen through save itself)
+    _truncate(mgr._name(3) + ".npz")
+    with pytest.raises(CheckpointCorruptError, match="truncated or corrupt"):
+        verify_checkpoint(mgr._name(3))
+    # an explicitly requested corrupt step raises — no silent fallback
+    with pytest.raises(CheckpointCorruptError):
+        mgr.restore(tree, step=3)
+    # latest-by-default falls back to the previous INTACT step
+    assert mgr.latest_intact_step() == 2
+    restored, meta = mgr.restore(tree)
+    assert meta["step"] == 2
+    np.testing.assert_allclose(np.asarray(restored["w"]), 2.0)
+
+
+def test_truncated_metadata_detected(tmp_path):
+    from repro.checkpoint import CheckpointCorruptError
+
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"w": jnp.zeros((4,))}
+    mgr.save(1, tree)
+    mgr.save(2, tree)
+    _truncate(mgr.meta_path(2), keep_bytes=10)
+    with pytest.raises(CheckpointCorruptError, match="not valid JSON"):
+        load_checkpoint(mgr._name(2), tree)
+    assert mgr.latest_intact_step() == 1
+    _, meta = mgr.restore(tree)
+    assert meta["step"] == 1
+
+
+def test_all_checkpoints_corrupt_raises(tmp_path):
+    from repro.checkpoint import CheckpointCorruptError
+
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"w": jnp.zeros((4,))}
+    mgr.save(1, tree)
+    _truncate(mgr._name(1) + ".npz")
+    assert mgr.latest_intact_step() is None
+    with pytest.raises(CheckpointCorruptError):
+        mgr.restore(tree)
+    with pytest.raises(FileNotFoundError):
+        CheckpointManager(str(tmp_path / "empty")).restore(tree)

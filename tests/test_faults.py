@@ -1,0 +1,375 @@
+"""Fault injection + graceful degradation (core/faults.py, DESIGN.md §10).
+
+Differential coverage mirrors tests/test_scenario_axes.py: every fault
+model is bitwise-equal between backend="packed" (shards pinned to 1) and
+backend="reference" — the single-device bit-for-bit contract — and between
+rounds_per_dispatch=1 and =4 block dispatch under the DEFAULT shard count
+(the forced 4-device CI leg runs this file on the mesh). Degradation
+semantics get direct tests: an all-dropped round leaves the params bitwise
+unchanged and counts as skipped, NaN-poisoned uploads are quarantined by
+the engine guard (finite trajectory), and fault_model=None stays a bitwise
+no-op vs the pre-fault engine (test_golden pins that separately). Plus
+unit coverage for draw determinism / population invariance, the registry
+factories, spec round-tripping, counter surfacing through RunResult, and
+bit-for-bit checkpoint resume of a faulted run including its counters.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (
+    FAULT_MODELS, DataSpec, Experiment, ExperimentSpec, ModelSpec, RunSpec,
+    SchemeSpec, SweepSpec, WirelessSpec, override_field, run_sweep,
+)
+from repro.core import (
+    ClientData, ClientDropout, CorruptUpload, FaultDraw, FederatedTrainer,
+    MixedFaults, StragglerTimeout,
+)
+from repro.models import make_loss_fn
+from repro.wireless import ChannelModel, SystemParams
+
+from _trainer_pair import assert_trainers_bitwise, make_schedule
+
+N, ROUNDS, BATCH = 4, 6, 4
+
+
+def tiny_trainer_inputs():
+    rng = np.random.default_rng(0)
+    clients = [ClientData(rng.normal(size=(12, 4, 4, 1)).astype(np.float32),
+                          rng.integers(0, 3, size=12).astype(np.int32))
+               for _ in range(N)]
+
+    def apply_fn(p, x):
+        return x.reshape(x.shape[0], -1) @ p["w"]
+
+    params = {"w": jnp.asarray(rng.normal(size=(16, 3)).astype(np.float32))}
+    return clients, params, make_loss_fn(apply_fn)
+
+
+def run_backend_pair(fault_model=None, rounds=ROUNDS):
+    """Both backends over the same tiny problem with the SAME fault model;
+    packed pinned to one shard (the bit-for-bit contract)."""
+    clients, params, loss_fn = tiny_trainer_inputs()
+    sched = make_schedule(np.ones((rounds, N)), 0.3)
+    sp = SystemParams.table1(N)
+    ch = ChannelModel(N)
+    out = {}
+    for backend in ("reference", "packed"):
+        kw = {"shards": 1} if backend == "packed" else {}
+        tr = FederatedTrainer(loss_fn, params, clients, eta=0.1,
+                              batch_size=BATCH, seed=0, backend=backend,
+                              fault_model=fault_model, **kw)
+        out[backend] = (tr, tr.run(sched, sp, ch.uplink, ch.downlink))
+    return out
+
+
+def fault_spec(*, backend="packed", shards=None, rpd=1,
+               fault_model="none", fault_kwargs=None, **run_kw):
+    return ExperimentSpec(
+        data=DataSpec(dataset="synthetic-mnist", n_clients=N, sigma=5.0,
+                      n_train=160, n_test=60, seed=0),
+        model=ModelSpec(name="mlp-edge"),
+        wireless=WirelessSpec(e0=1e6, t0=1e6, seed=0,
+                              fault_model=fault_model,
+                              fault_kwargs=fault_kwargs or {}),
+        scheme=SchemeSpec(name="proposed", rounds=ROUNDS, eta=0.1,
+                          batch=BATCH, ao={"outer_iters": 1}),
+        run=RunSpec(seed=0, eval_every=3, backend=backend, shards=shards,
+                    rounds_per_dispatch=rpd, **run_kw))
+
+
+# ---------------------------------------------------------------------------
+# Draw protocol units
+# ---------------------------------------------------------------------------
+
+def test_draw_determinism_and_population_invariance():
+    m = ClientDropout(rate=0.5, seed=3)
+    all_ids = np.arange(8)
+    a = m.draw(5, 8, all_ids)
+    assert np.array_equal(a.upload_ok, m.draw(5, 8, all_ids).upload_ok)
+    # a client's fate is a function of (seed, round, id) — indexing the
+    # population draw, NOT a function of which other clients are selected
+    sub = m.draw(5, 8, np.array([2, 6]))
+    assert np.array_equal(sub.upload_ok, a.upload_ok[[2, 6]])
+    # round and seed both move the draw
+    assert not np.array_equal(a.upload_ok, m.draw(6, 8, all_ids).upload_ok)
+    assert not np.array_equal(
+        a.upload_ok, ClientDropout(rate=0.5, seed=4).draw(5, 8, all_ids).upload_ok)
+    # rate bounds: 0 never drops, 1 always drops
+    assert ClientDropout(rate=0.0).draw(0, 8, all_ids).upload_ok.all()
+    assert not ClientDropout(rate=1.0).draw(0, 8, all_ids).upload_ok.any()
+    assert ClientDropout(rate=1.0).draw(0, 8, all_ids).n_faulted == 8
+    with pytest.raises(ValueError, match="rate"):
+        ClientDropout(rate=1.5)
+
+
+def test_straggler_deadline_semantics():
+    m = StragglerTimeout(tolerance=1.0, sigma=0.8, seed=1)
+    sel = np.arange(6)
+    # no wireless context -> nobody straggles
+    assert m.draw(0, 6, sel).upload_ok.all()
+    # uniform delays: deadline == each delay, so a client faults iff its
+    # drawn slowdown exceeds the tolerance — scale-invariant in the delay
+    d = np.full(6, 2.5)
+    a = m.draw(0, 6, sel, delays=d, deadline=2.5)
+    b = m.draw(0, 6, sel, delays=10 * d, deadline=25.0)
+    assert np.array_equal(a.upload_ok, b.upload_ok)
+    # a huge tolerance admits everyone; a tiny one excludes everyone
+    wide = StragglerTimeout(tolerance=1e9, sigma=0.8, seed=1)
+    assert wide.draw(0, 6, sel, delays=d, deadline=2.5).upload_ok.all()
+    tight = StragglerTimeout(tolerance=1e-9, sigma=0.8, seed=1)
+    assert not tight.draw(0, 6, sel, delays=d, deadline=2.5).upload_ok.any()
+    with pytest.raises(ValueError, match="tolerance"):
+        StragglerTimeout(tolerance=0.0)
+
+
+def test_corrupt_draw_modes():
+    sel = np.arange(16)
+    nan = CorruptUpload(rate=0.5, mode="nan", seed=2).draw(1, 16, sel)
+    assert nan.upload_ok.all()                    # uploads DO arrive
+    assert np.isnan(nan.corrupt).any() and not np.isnan(nan.corrupt).all()
+    assert nan.corrupt.dtype == np.float32
+    sc = CorruptUpload(rate=0.5, mode="scale", scale=7.0, seed=2).draw(1, 16, sel)
+    # same (seed, round, kind) stream: identical hit set, different payload
+    assert np.array_equal(np.isnan(nan.corrupt), sc.corrupt == 7.0)
+    assert ((sc.corrupt == 1.0) | (sc.corrupt == 7.0)).all()
+    clean = CorruptUpload(rate=0.0).draw(1, 16, sel)
+    assert (clean.corrupt == 1.0).all()
+    with pytest.raises(ValueError, match="mode"):
+        CorruptUpload(mode="wat")
+
+
+def test_mixed_composes_independent_streams():
+    sel = np.arange(12)
+    mix = MixedFaults(dropout_rate=0.4, corrupt_rate=0.4, seed=9)
+    d = mix.draw(3, 12, sel)
+    # each kind reproduces its standalone model's draw at the same key
+    assert np.array_equal(
+        d.upload_ok, ClientDropout(0.4, seed=9).draw(3, 12, sel).upload_ok)
+    assert np.array_equal(
+        np.isnan(d.corrupt),
+        np.isnan(CorruptUpload(0.4, seed=9).draw(3, 12, sel).corrupt))
+    # inactive knobs contribute nothing
+    off = MixedFaults(seed=9).draw(3, 12, sel)
+    assert off.upload_ok.all() and off.corrupt is None
+
+
+def test_registry_factories_and_spec_roundtrip():
+    assert FAULT_MODELS.get("none")(WirelessSpec()) is None
+    w = WirelessSpec(seed=9, fault_model="dropout",
+                     fault_kwargs={"rate": 0.2})
+    fm = FAULT_MODELS.get(w.fault_model)(w)
+    assert isinstance(fm, ClientDropout)
+    assert fm.rate == 0.2 and fm.seed == 9        # seed defaults from spec
+    w2 = WirelessSpec(fault_model="corrupt",
+                      fault_kwargs={"rate": 0.1, "seed": 3})
+    assert FAULT_MODELS.get(w2.fault_model)(w2).seed == 3
+    assert isinstance(
+        FAULT_MODELS.get("straggler")(WirelessSpec(
+            fault_model="straggler")), StragglerTimeout)
+    assert isinstance(
+        FAULT_MODELS.get("mixed")(WirelessSpec(fault_model="mixed")),
+        MixedFaults)
+    with pytest.raises(KeyError, match="fault model"):
+        FAULT_MODELS.get("wat")
+    spec = fault_spec(fault_model="mixed",
+                      fault_kwargs={"dropout_rate": 0.1, "seed": 4})
+    assert ExperimentSpec.from_json(spec.to_json()) == spec
+
+
+# ---------------------------------------------------------------------------
+# Differential: packed vs reference, bitwise (single-device contract)
+# ---------------------------------------------------------------------------
+
+FAULT_MODELS_UNDER_TEST = [
+    ClientDropout(rate=0.3, seed=5),
+    StragglerTimeout(tolerance=1.0, sigma=0.8, seed=5),
+    CorruptUpload(rate=0.4, mode="scale", scale=10.0, seed=5),
+    CorruptUpload(rate=0.4, mode="nan", seed=5),
+    MixedFaults(dropout_rate=0.25, corrupt_rate=0.25, seed=5),
+]
+
+
+@pytest.mark.parametrize(
+    "fm", FAULT_MODELS_UNDER_TEST,
+    ids=["dropout", "straggler", "corrupt_scale", "corrupt_nan", "mixed"])
+def test_fault_packed_vs_reference_bitwise(fm):
+    out = run_backend_pair(fault_model=fm)
+    (tr_ref, hist_ref), (tr_pk, hist_pk) = out["reference"], out["packed"]
+    # NaN-tolerant equality: an all-dropped round's train_loss is nan on
+    # both sides
+    np.testing.assert_array_equal(
+        np.asarray([m.train_loss for m in hist_ref]),
+        np.asarray([m.train_loss for m in hist_pk]))
+    assert [(m.n_faulted, m.n_quarantined) for m in hist_ref] == \
+        [(m.n_faulted, m.n_quarantined) for m in hist_pk]
+    assert tr_ref.fault_counters == tr_pk.fault_counters
+    assert_trainers_bitwise(tr_ref, tr_pk)
+    # the model actually bit (seeds chosen so): finite scale-corruption
+    # reaches the aggregate without tripping any counter, so for it we
+    # check trajectory divergence from the clean run instead
+    if isinstance(fm, CorruptUpload) and fm.mode == "scale":
+        clean = run_backend_pair(fault_model=None)
+        assert [m.train_loss for m in hist_pk] != \
+            [m.train_loss for m in clean["packed"][1]]
+    else:
+        assert sum(tr_pk.fault_counters.values()) > 0
+    # and the params stayed finite through it
+    assert all(bool(jnp.isfinite(p).all())
+               for p in jax.tree_util.tree_leaves(tr_pk.params))
+
+
+def test_fault_rate_zero_is_bitwise_noop():
+    clean = run_backend_pair(fault_model=None)
+    zero = run_backend_pair(fault_model=ClientDropout(rate=0.0, seed=5))
+    assert [m.train_loss for m in clean["packed"][1]] == \
+        [m.train_loss for m in zero["packed"][1]]
+    assert_trainers_bitwise(clean["packed"][0], zero["packed"][0])
+    assert zero["packed"][0].fault_counters == \
+        {"n_dropped": 0, "n_quarantined": 0, "n_skipped_rounds": 0}
+    # ... and an active model is genuinely a different trajectory
+    faulted = run_backend_pair(fault_model=ClientDropout(rate=0.3, seed=5))
+    assert [m.train_loss for m in clean["packed"][1]] != \
+        [m.train_loss for m in faulted["packed"][1]]
+
+
+# ---------------------------------------------------------------------------
+# Degradation semantics
+# ---------------------------------------------------------------------------
+
+def test_all_dropped_round_skips_update_bitwise():
+    """rate=1.0: every round loses every client — the engine must skip the
+    update (params and global grad bitwise unchanged) instead of dividing
+    by zero survivors, and every round counts as skipped."""
+    clients, params, loss_fn = tiny_trainer_inputs()
+    sched = make_schedule(np.ones((ROUNDS, N)), 0.3)
+    sp = SystemParams.table1(N)
+    ch = ChannelModel(N)
+    for backend, kw in (("reference", {}), ("packed", {"shards": 1})):
+        tr = FederatedTrainer(loss_fn, params, clients, eta=0.1,
+                              batch_size=BATCH, seed=0, backend=backend,
+                              fault_model=ClientDropout(rate=1.0), **kw)
+        before = [np.asarray(p).copy()
+                  for p in jax.tree_util.tree_leaves(tr.params)]
+        hist = tr.run(sched, sp, ch.uplink, ch.downlink)
+        for a, b in zip(before, jax.tree_util.tree_leaves(tr.params)):
+            assert np.array_equal(a, np.asarray(b)), backend
+        assert tr.fault_counters["n_skipped_rounds"] == ROUNDS
+        assert tr.fault_counters["n_dropped"] == ROUNDS * N
+        assert all(np.isnan(m.train_loss) for m in hist)
+        assert all(m.n_faulted == N for m in hist)
+
+
+def test_nan_uploads_quarantined_and_counted():
+    """mode="nan" at a rate that never wipes a whole round: the guard
+    drops exactly the poisoned uploads, the trajectory stays finite, and
+    the per-round quarantine counts match the draw."""
+    fm = CorruptUpload(rate=0.3, mode="nan", seed=11)
+    out = run_backend_pair(fault_model=fm)
+    tr, hist = out["packed"]
+    expected = [int(np.isnan(fm.draw(s, N, np.arange(N)).corrupt).sum())
+                for s in range(ROUNDS)]
+    assert sum(expected) > 0                      # the seed really poisons
+    assert [m.n_quarantined for m in hist] == expected
+    assert tr.fault_counters["n_quarantined"] == sum(expected)
+    assert all(np.isfinite(m.train_loss) for m in hist)
+    assert all(bool(jnp.isfinite(p).all())
+               for p in jax.tree_util.tree_leaves(tr.params))
+    assert_trainers_bitwise(out["reference"][0], tr)
+
+
+# ---------------------------------------------------------------------------
+# API path: block dispatch, counters in RunResult, resume, sweep axis
+# ---------------------------------------------------------------------------
+
+def test_fault_block_dispatch_bitwise():
+    """rpd=1 vs rpd=4 under the DEFAULT shard count with the chaos model
+    active — the fault masks ride the stacked block operands bitwise."""
+    kwargs = {"dropout_rate": 0.25, "corrupt_rate": 0.25, "seed": 7}
+    results = {}
+    for rpd in (1, 4):
+        spec = fault_spec(rpd=rpd, fault_model="mixed", fault_kwargs=kwargs)
+        run = Experiment(spec).build()
+        results[rpd] = (run, run.run())
+    (run1, res1), (run4, res4) = results[1], results[4]
+    assert run4.trainer.n_block_dispatches > 0
+    np.testing.assert_array_equal(
+        np.asarray([m.train_loss for m in res1.history]),
+        np.asarray([m.train_loss for m in res4.history]))
+    assert res1.summary["faults"] == res4.summary["faults"]
+    for a, b in zip(jax.tree_util.tree_leaves(run1.trainer.params),
+                    jax.tree_util.tree_leaves(run4.trainer.params)):
+        assert bool(jnp.all(a == b))
+
+
+def test_report_renders_fault_column(tmp_path):
+    report = pytest.importorskip("benchmarks.report")
+    res = Experiment(fault_spec(fault_model="dropout",
+                                fault_kwargs={"rate": 0.4})).run()
+    p = res.to_jsonl(str(tmp_path / "run.jsonl"))
+    table = report.runs_table([p])
+    assert "faults (drop/quar/skip)" in table
+    f = res.summary["faults"]
+    assert (f"{f['n_dropped']}/{f['n_quarantined']}"
+            f"/{f['n_skipped_rounds']}") in table
+    clean = Experiment(fault_spec()).run()
+    p2 = clean.to_jsonl(str(tmp_path / "clean.jsonl"))
+    assert "| — |" in report.runs_table([p2])
+
+
+def test_counters_surface_in_summary():
+    res = Experiment(fault_spec(fault_model="dropout",
+                                fault_kwargs={"rate": 0.4})).run()
+    f = res.summary["faults"]
+    assert set(f) == {"n_dropped", "n_quarantined", "n_skipped_rounds"}
+    assert f["n_dropped"] == sum(m.n_faulted for m in res.history) > 0
+    # a clean run keeps the summary exactly as before the fault layer
+    assert "faults" not in Experiment(fault_spec()).run().summary
+
+
+@pytest.mark.parametrize("rpd", [1, 4])
+def test_fault_resume_bitwise_with_counters(tmp_path, rpd):
+    """Checkpoint/resume mid-chaos: the resumed trajectory AND the fault
+    counters match the uninterrupted run's (draws are round-keyed, and the
+    checkpoint carries the counter totals)."""
+    kwargs = {"dropout_rate": 0.3, "corrupt_rate": 0.3, "seed": 7}
+    base = fault_spec(rpd=rpd, fault_model="mixed", fault_kwargs=kwargs)
+    res_a = Experiment(base).run()
+
+    ckpt = str(tmp_path / f"ckpt_rpd{rpd}")
+    spec = dataclasses.replace(
+        base, run=dataclasses.replace(base.run, checkpoint_dir=ckpt,
+                                      checkpoint_every=3))
+    Experiment(spec).run()                        # writes checkpoints
+    run_b = Experiment(spec).build()
+    res_b = run_b.resume(ckpt, step=3)
+    assert res_b.summary["resumed_from"] == 3
+    np.testing.assert_array_equal(
+        np.asarray([m.train_loss for m in res_a.history]),
+        np.asarray([m.train_loss for m in res_b.history]))
+    assert [(m.n_faulted, m.n_quarantined) for m in res_a.history] == \
+        [(m.n_faulted, m.n_quarantined) for m in res_b.history]
+    assert res_b.summary["faults"] == res_a.summary["faults"]
+
+
+def test_fault_kwargs_sweepable():
+    # dotted descent INTO the kwargs dict (a dict leaf, not a dataclass)
+    spec = fault_spec(fault_model="dropout", fault_kwargs={"rate": 0.1})
+    s2 = override_field(spec, "wireless.fault_kwargs.rate", 0.5)
+    assert s2.wireless.fault_kwargs == {"rate": 0.5}
+    assert spec.wireless.fault_kwargs == {"rate": 0.1}      # no aliasing
+    s3 = override_field(spec, "wireless.fault_kwargs.seed", 9)  # new key ok
+    assert s3.wireless.fault_kwargs == {"rate": 0.1, "seed": 9}
+    # and the axis composes with run_sweep: same env, different trajectory
+    sw = SweepSpec(base=fault_spec(),
+                   grid={"wireless.fault_model": ["none", "dropout"],
+                         "wireless.fault_kwargs.rate": [0.4]})
+    res = run_sweep(sw)
+    assert res.n_env_builds == 1                 # faults are trainer-level
+    a, b = res.results
+    assert [m.train_loss for m in a.history] != \
+        [m.train_loss for m in b.history]
+    assert "faults" not in a.summary and b.summary["faults"]["n_dropped"] > 0

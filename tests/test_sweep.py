@@ -306,3 +306,94 @@ def test_build_trainer_reuse_rejects_mismatch():
         spec, scheme=dataclasses.replace(spec.scheme, eta=0.2))
     with pytest.raises(ValueError, match="scheme.eta"):
         Experiment(other).build(env=run.env, trainer=run.trainer)
+
+
+# ---------------------------------------------------------------------------
+# Cell failure isolation (the robustness satellite): one crashing cell must
+# not abandon the rest of the matrix
+# ---------------------------------------------------------------------------
+
+from repro.api import Callback  # noqa: E402
+
+
+class FlakyOnce(Callback):
+    """Raises on the first round it ever sees, then behaves — a transient
+    failure --max-retries should absorb."""
+
+    def __init__(self):
+        self.fired = False
+
+    def on_round_end(self, m, trainer):
+        if not self.fired:
+            self.fired = True
+            raise RuntimeError("transient glitch")
+
+
+def test_sweep_cell_failure_isolated(tmp_path):
+    d = str(tmp_path / "runs")
+    # model axis outermost: cells 0-1 are valid, cells 2-3 hit an unknown
+    # registry key at build time
+    sw = SweepSpec(base=base_spec(), seeds=[0, 1],
+                   grid={"model.name": ["mlp-edge", "wat"]})
+    res = run_sweep(sw, sink=JsonlDirSink(d))
+    assert len(res.results) == 4                  # positions preserved
+    assert res.results[0] is not None and res.results[1] is not None
+    assert res.results[2] is None and res.results[3] is None
+    assert [e["name"] for e in res.errors] == \
+        [res.cells[2].name, res.cells[3].name]
+    assert all("KeyError" in e["error"] and "wat" in e["error"]
+               for e in res.errors)
+    assert all("Traceback" in e["traceback"] for e in res.errors)
+    # summary_rows silently covers only the completed cells
+    assert len(res.summary_rows()) == 2
+    # the index records both outcomes, in matrix order
+    with open(os.path.join(d, "sweep.jsonl")) as f:
+        index = [json.loads(line) for line in f]
+    assert [r["kind"] for r in index] == \
+        ["sweep_run", "sweep_run", "sweep_error", "sweep_error"]
+    assert index[2]["name"] == res.cells[2].name
+    assert "wat" in index[2]["error"] and "Traceback" in index[2]["traceback"]
+    assert index[2]["spec"]["model"]["name"] == "wat"
+
+
+def test_sweep_max_retries_absorbs_transient_failure():
+    sw = SweepSpec(base=base_spec(), seeds=[0, 1])
+    oracle = run_sweep(sw)
+
+    # without retries the glitched first cell is recorded, second still runs
+    res0 = run_sweep(sw, callbacks=[FlakyOnce()])
+    assert res0.results[0] is None and res0.results[1] is not None
+    assert len(res0.errors) == 1 and "transient glitch" in res0.errors[0]["error"]
+
+    # with one retry the glitch is absorbed; the retried cell's trainer was
+    # evicted mid-round, so the rebuild must reproduce the clean run exactly
+    res1 = run_sweep(sw, callbacks=[FlakyOnce()], max_retries=1)
+    assert res1.errors == [] and all(r is not None for r in res1.results)
+    assert res1.n_trainer_builds == 2             # fresh build after eviction
+    for a, b in zip(oracle.results, res1.results):
+        assert [m.train_loss for m in a.history] == \
+            [m.train_loss for m in b.history]
+
+
+def test_sweep_keyboard_interrupt_still_aborts():
+    class Interrupt(Callback):
+        def on_round_end(self, m, trainer):
+            raise KeyboardInterrupt
+
+    with pytest.raises(KeyboardInterrupt):
+        run_sweep(SweepSpec(base=base_spec()), callbacks=[Interrupt()],
+                  max_retries=5)
+
+
+def test_cli_sweep_failed_cell_exits_nonzero(tmp_path, capsys):
+    spec_path = base_spec().save(str(tmp_path / "base.json"))
+    out_dir = str(tmp_path / "runs")
+    rc = cli.main(["sweep", spec_path, "--grid", "model.name=mlp-edge,wat",
+                   "--out-dir", out_dir, "--max-retries", "1"])
+    assert rc == 1
+    cap = capsys.readouterr()
+    assert "FAILED" in cap.err and "wat" in cap.err
+    assert "1 cell(s) failed" in cap.err
+    # the surviving cell's artifacts are still on disk next to the record
+    files = os.listdir(out_dir)
+    assert "sweep.jsonl" in files and len(files) == 2
