@@ -79,8 +79,8 @@ def runs_table(paths) -> str:
     """Markdown summary of RunResult JSONL exports, one row per run."""
     out = ["| run | dataset | model | scheme | rounds | final acc @ round | "
            "E used [J] | T used [s] | theta | feasible | "
-           "faults (drop/quar/skip) |",
-           "|---|---|---|---|---|---|---|---|---|---|---|"]
+           "faults (drop/quar/skip) | aggregation |",
+           "|---|---|---|---|---|---|---|---|---|---|---|---|"]
     for path, r in _parseable_runs(paths):
         s = r.summary
         spec = r.spec or {}
@@ -97,6 +97,13 @@ def runs_table(paths) -> str:
         faults = ("—" if not f else
                   f"{f.get('n_dropped', 0)}/{f.get('n_quarantined', 0)}"
                   f"/{f.get('n_skipped_rounds', 0)}")
+        # robust-aggregation counters ride the summary only when a
+        # non-mean aggregator was active (core/aggregators.py)
+        a = s.get("aggregation")
+        agg = ("—" if not a else
+               a.get("aggregator", "?") + " " + " ".join(
+                   f"{k}={v}" for k, v in sorted(a.items())
+                   if k != "aggregator"))
         out.append(
             f"| {name} "
             f"| {spec.get('data', {}).get('dataset', '?')} "
@@ -109,7 +116,7 @@ def runs_table(paths) -> str:
             f"| {num('cumulative_delay', 0.0):.2f} "
             f"| {num('theta'):.3f} "
             f"| {s.get('feasible', '?')} "
-            f"| {faults} |")
+            f"| {faults} | {agg} |")
     return "\n".join(out)
 
 

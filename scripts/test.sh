@@ -93,10 +93,13 @@ EOF
     return "$ok"
 }
 
-# Chaos smoke: the cli_smoke spec with the mixed fault model active
-# (dropouts + NaN-corrupt uploads), run -> resume from the mid-run
-# checkpoint -> assert the degradation counters surfaced in the exported
-# JSONL. Same error discipline as cli_smoke.
+# Chaos smoke: the cli_smoke spec under a byzantine upload attack
+# (ScaledMalicious, exactly 2 of 6 attackers per round) defended by the
+# trimmed-mean robust aggregator, run -> resume from the mid-run
+# checkpoint -> assert both the fault counters and the aggregation
+# counters surfaced in the exported JSONL. `fixed_selection` keeps every
+# client in every round so the trim statistic is nonzero. Same error
+# discipline as cli_smoke.
 chaos_smoke() {
     local work ok=0
     work="$(mktemp -d)"
@@ -106,11 +109,13 @@ chaos_smoke() {
            "n_train": 240, "n_test": 60, "seed": 0},
   "model": {"name": "mlp-edge"},
   "wireless": {"e0": 1000000.0, "t0": 1000000.0, "seed": 0,
-               "fault_model": "mixed",
-               "fault_kwargs": {"dropout_rate": 0.3, "corrupt_rate": 0.3,
-                                "corrupt_mode": "nan", "seed": 7}},
-  "scheme": {"name": "proposed", "rounds": 4, "eta": 0.1, "batch": 8,
-             "ao": {"outer_iters": 1}},
+               "fault_model": "scaled_malicious",
+               "fault_kwargs": {"rate": 0.34, "scale": -10.0,
+                                "exact": true, "seed": 7}},
+  "scheme": {"name": "fixed_selection", "rounds": 4, "eta": 0.1, "batch": 8,
+             "ao": {"outer_iters": 1},
+             "aggregator": "trimmed_mean",
+             "aggregator_kwargs": {"beta": 0.34}},
   "run": {"seed": 0, "eval_every": 2, "checkpoint_every": 2,
           "rounds_per_dispatch": 2}
 }
@@ -121,10 +126,12 @@ EOF
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
         python -m repro.api.cli resume "$work/ckpt" \
         --out "$work/resumed.jsonl" || ok=1
-    grep '"faults"' "$work/run.jsonl" >/dev/null \
-        || { echo "chaos smoke: no faults block in run.jsonl"; ok=1; }
-    grep '"n_dropped"' "$work/resumed.jsonl" >/dev/null \
-        || { echo "chaos smoke: no counters in resumed.jsonl"; ok=1; }
+    grep '"n_corrupt_finite"' "$work/run.jsonl" >/dev/null \
+        || { echo "chaos smoke: no fault counters in run.jsonl"; ok=1; }
+    grep '"aggregation"' "$work/run.jsonl" >/dev/null \
+        || { echo "chaos smoke: no aggregation block in run.jsonl"; ok=1; }
+    grep '"n_trimmed"' "$work/resumed.jsonl" >/dev/null \
+        || { echo "chaos smoke: no aggregation counters in resumed.jsonl"; ok=1; }
     rm -rf "$work"
     return "$ok"
 }
@@ -142,7 +149,7 @@ cli_smoke || status=$?
 echo "== sweep-CLI smoke leg: 2 seeds x 2 schemes, streamed JSONL (1 device) =="
 sweep_smoke || status=$?
 
-echo "== chaos smoke leg: mixed faults, run + resume + counters (1 device) =="
+echo "== chaos smoke leg: byzantine attack + robust aggregator (1 device) =="
 chaos_smoke || status=$?
 
 echo "== sharded smoke leg: round/block engines + API under 4 forced host devices =="
@@ -158,7 +165,7 @@ XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=4" \
     python -m pytest -x -q ${MARKER[@]+"${MARKER[@]}"} \
         tests/test_round_engine.py tests/test_block_engine.py \
         tests/test_api.py tests/test_sweep.py tests/test_scenario_axes.py \
-        tests/test_faults.py \
+        tests/test_faults.py tests/test_aggregators.py \
     || status=$?
 
 echo "== CLI smoke leg: spec run + checkpoint resume (4 forced devices) =="
@@ -175,7 +182,7 @@ echo "== sweep-CLI smoke leg: streamed sweep (4 forced devices) =="
     sweep_smoke
 ) || status=$?
 
-echo "== chaos smoke leg: mixed faults, run + resume (4 forced devices) =="
+echo "== chaos smoke leg: byzantine attack + robust aggregator (4 forced devices) =="
 (
     export XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=4"
     export REPRO_ROUND_SHARDS=

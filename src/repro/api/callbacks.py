@@ -91,8 +91,9 @@ def save_trainer_state(
         "history": [metrics_to_dict(h) for h in history],
         # counters accumulate only over EXECUTED rounds, so a resumed run
         # must start from the checkpointed totals to match an
-        # uninterrupted run's (tests/test_faults.py)
+        # uninterrupted run's (tests/test_faults.py, test_aggregators.py)
         "fault_counters": dict(getattr(trainer, "fault_counters", {})),
+        "agg_counters": dict(getattr(trainer, "agg_counters", {})),
     }
     return manager.save(int(m.round), tree, extra=extra)
 
@@ -113,6 +114,8 @@ def restore_trainer_state(
         trainer.rng.bit_generator.state = extra["rng_state"]
     if extra.get("fault_counters"):
         trainer.fault_counters = dict(extra["fault_counters"])
+    if extra.get("agg_counters"):
+        trainer.agg_counters = dict(extra["agg_counters"])
     return extra
 
 

@@ -3,10 +3,12 @@
     PYTHONPATH=src python -m repro.api.cli run spec.json \
         [--out run.jsonl] [--checkpoint-dir DIR] [--checkpoint-every N]
     PYTHONPATH=src python -m repro.api.cli resume DIR [--step N] [--out ...]
-    PYTHONPATH=src python -m repro.api.cli validate spec.json
+    PYTHONPATH=src python -m repro.api.cli validate spec.json \
+        [--checkpoints DIR]
     PYTHONPATH=src python -m repro.api.cli sweep sweep.json --out-dir DIR \
         [--seeds 0,1,2] [--schemes proposed,no_gen] \
-        [--grid data.sigma=0.5,5.0] [--expand-only]
+        [--grid data.sigma=0.5,5.0] [--expand-only] \
+        [--max-retries N --retry-backoff S] [--cell-timeout S]
 
 `run` executes a spec end-to-end (data -> phi -> P1 -> federated training)
 and optionally exports the RunResult as JSON-lines. `resume` rebuilds the
@@ -32,6 +34,7 @@ from repro.api.experiment import (
 from repro.api.registry import DATASETS, MODELS, SCHEMES
 from repro.api.spec import ExperimentSpec
 from repro.api.sweep import JsonlDirSink, SweepSpec, run_sweep
+from repro.core.aggregators import make_aggregator
 
 
 def _print_result(res: RunResult) -> None:
@@ -77,12 +80,44 @@ def _cmd_resume(args) -> int:
 
 
 def _cmd_validate(args) -> int:
-    spec = ExperimentSpec.from_file(args.spec)
-    DATASETS.get(spec.data.dataset)
-    MODELS.get(spec.model.name)
-    SCHEMES.get(spec.scheme.name)
-    print(spec.to_json())
-    return 0
+    rc = 0
+    if args.spec is not None:
+        spec = ExperimentSpec.from_file(args.spec)
+        DATASETS.get(spec.data.dataset)
+        MODELS.get(spec.model.name)
+        SCHEMES.get(spec.scheme.name)
+        make_aggregator(spec.scheme.aggregator,
+                        **spec.scheme.aggregator_kwargs)
+        print(spec.to_json())
+    if args.checkpoints is not None:
+        rc = max(rc, _validate_checkpoints(args.checkpoints))
+    if args.spec is None and args.checkpoints is None:
+        raise SystemExit("validate: pass a spec file, --checkpoints DIR, "
+                         "or both")
+    return rc
+
+
+def _validate_checkpoints(directory: str) -> int:
+    """Run verify_checkpoint over every step in a checkpoint directory;
+    print one line per step and return 1 when any step is corrupt (so CI
+    and pre-resume probes can gate on the exit code)."""
+    from repro.checkpoint import CheckpointManager
+    from repro.checkpoint.io import CheckpointCorruptError, verify_checkpoint
+    manager = CheckpointManager(directory)
+    steps = manager._steps()
+    if not steps:
+        print(f"{directory}: no checkpoints found", file=sys.stderr)
+        return 1
+    n_bad = 0
+    for s in steps:
+        try:
+            verify_checkpoint(manager._name(s))
+            print(f"step {s:8d}  intact")
+        except CheckpointCorruptError as e:
+            n_bad += 1
+            print(f"step {s:8d}  CORRUPT: {e}")
+    print(f"{directory}: {len(steps) - n_bad}/{len(steps)} step(s) intact")
+    return 1 if n_bad else 0
 
 
 def _parse_values(raw: str) -> list:
@@ -124,7 +159,9 @@ def _cmd_sweep(args) -> int:
         return 0
     sink = JsonlDirSink(args.out_dir) if args.out_dir else None
     res = run_sweep(sweep, sink=sink, log=print,
-                    max_retries=args.max_retries)
+                    max_retries=args.max_retries,
+                    retry_backoff=args.retry_backoff,
+                    cell_timeout=args.cell_timeout)
     n_ok = sum(r is not None for r in res.results)
     print(f"done: {n_ok}/{len(res.results)} runs; environments built "
           f"{res.n_env_builds}, trainers built {res.n_trainer_builds} "
@@ -165,8 +202,14 @@ def main(argv: list[str] | None = None) -> int:
     ps.set_defaults(fn=_cmd_resume)
 
     pv = sub.add_parser("validate",
-                        help="parse a spec + resolve registry keys, no run")
-    pv.add_argument("spec")
+                        help="parse a spec + resolve registry keys, no run; "
+                             "optionally verify a checkpoint directory")
+    pv.add_argument("spec", nargs="?", default=None,
+                    help="ExperimentSpec JSON file (optional with "
+                         "--checkpoints)")
+    pv.add_argument("--checkpoints", metavar="DIR",
+                    help="run verify_checkpoint over every step under DIR; "
+                         "exit nonzero when any step is corrupt")
     pv.set_defaults(fn=_cmd_validate)
 
     pw = sub.add_parser(
@@ -185,6 +228,13 @@ def main(argv: list[str] | None = None) -> int:
     pw.add_argument("--max-retries", type=int, default=0,
                     help="retry a failing cell up to N times before "
                          "recording the failure and moving on (default 0)")
+    pw.add_argument("--retry-backoff", type=float, default=0.5,
+                    help="base seconds for the jittered exponential "
+                         "backoff between retry attempts (default 0.5)")
+    pw.add_argument("--cell-timeout", type=float, default=None,
+                    help="per-cell wall-clock deadline in seconds; a cell "
+                         "past it is recorded as a timeout (not retried) "
+                         "and the sweep moves on")
     pw.set_defaults(fn=_cmd_sweep)
 
     args = p.parse_args(argv)

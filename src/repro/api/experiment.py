@@ -39,6 +39,7 @@ from repro.core import (
     BoundConstants, ClientData, FederatedTrainer, RoundMetrics, phis,
     solve_p1,
 )
+from repro.core.aggregators import make_aggregator
 from repro.core.optimizer_ao import Schedule
 from repro.data import partition_by_dirichlet
 from repro.models import make_eval_fn, make_loss_fn
@@ -125,7 +126,8 @@ class RunResult:
     def build(cls, spec: ExperimentSpec, schedule: Schedule,
               history: list[RoundMetrics], *,
               resumed_from: int | None = None,
-              faults: dict | None = None) -> "RunResult":
+              faults: dict | None = None,
+              aggregation: dict | None = None) -> "RunResult":
         evals = [(m.test_accuracy, m.round) for m in history
                  if m.test_accuracy is not None]
         acc, acc_round = evals[-1] if evals else (float("nan"), -1)
@@ -148,6 +150,11 @@ class RunResult:
             # stays byte-identical to pre-fault-layer outputs (the golden
             # test compares the whole dict)
             summary["faults"] = dict(faults)
+        if aggregation:
+            # present only under a robust (non-mean) aggregator, by the
+            # same golden-stability argument: clean mean summaries stay
+            # byte-identical
+            summary["aggregation"] = dict(aggregation)
         return cls(spec=spec.to_dict(), summary=summary, history=history,
                    schedule=schedule)
 
@@ -245,9 +252,15 @@ class Run:
             callbacks=cbs, start_round=start_round)
         fc = dict(self.trainer.fault_counters)
         include = self.trainer.fault_model is not None or any(fc.values())
+        agg = None
+        if self.trainer.aggregator is not None:
+            agg = {"aggregator": self.trainer.aggregator.name,
+                   **{k: int(v)
+                      for k, v in self.trainer.agg_counters.items()}}
         return RunResult.build(self.spec, self.schedule, prefix + history,
                                resumed_from=resumed_from,
-                               faults=fc if include else None)
+                               faults=fc if include else None,
+                               aggregation=agg)
 
 
 class Experiment:
@@ -314,12 +327,19 @@ class Experiment:
         noise = CHANNEL_NOISE.get(spec.wireless.noise_model)(spec.wireless)
         fault = FAULT_MODELS.get(spec.wireless.fault_model)(spec.wireless)
         select = DATA_SELECTION.get(sc.data_selection)(sc)
+        # robust aggregation (core/aggregators.py): resolved here, like the
+        # other string axes; None ("mean") keeps the builtin path
+        aggregator = make_aggregator(sc.aggregator, **sc.aggregator_kwargs)
+        agg_key = (aggregator.spec_key if aggregator is not None else "mean")
         params = env.init_fn(jax.random.key(spec.run.seed))
         if trainer is not None:
             bad = [name for name, a, b in (
                 ("scheme.eta", trainer.eta, sc.eta),
                 ("scheme.batch", trainer.batch_size, sc.batch),
                 ("run.backend", trainer.backend, spec.run.backend),
+                # the aggregator is traced into every round graph — a
+                # different reducer means a different engine, not a reset
+                ("scheme.aggregator", trainer.aggregator_key, agg_key),
             ) if a != b]
             if bad:
                 raise ValueError(
@@ -334,7 +354,8 @@ class Experiment:
                 eta=sc.eta, batch_size=sc.batch, seed=spec.run.seed,
                 backend=spec.run.backend, shards=spec.run.shards,
                 rounds_per_dispatch=spec.run.rounds_per_dispatch,
-                channel_noise=noise, fault_model=fault)
+                channel_noise=noise, fault_model=fault,
+                aggregator=aggregator)
         return Run(spec, env, schedule, trainer)
 
     def run(self, **kw) -> RunResult:

@@ -259,3 +259,9 @@ register_fault_model("dropout", _fault_factory("ClientDropout"))
 register_fault_model("straggler", _fault_factory("StragglerTimeout"))
 register_fault_model("corrupt", _fault_factory("CorruptUpload"))
 register_fault_model("mixed", _fault_factory("MixedFaults"))
+# adversarial (byzantine) upload models — the attack side of the robust
+# aggregation axis (SchemeSpec.aggregator / core/aggregators.py); same
+# FaultModel protocol and (seed, round, kind) draw invariance
+register_fault_model("sign_flip", _fault_factory("SignFlip"))
+register_fault_model("scaled_malicious", _fault_factory("ScaledMalicious"))
+register_fault_model("gaussian_poison", _fault_factory("GaussianPoison"))

@@ -124,7 +124,16 @@ class SchemeSpec(_SpecBase):
     data-selection policy (repro.api.registry DATA_SELECTION; "none",
     "threshold", "fine_grained" — Albaseer-style sample curation applied
     once per run, see core/selection.py) with `data_selection_kwargs`
-    reaching its factory (e.g. {"keep_frac": 0.8})."""
+    reaching its factory (e.g. {"keep_frac": 0.8}).
+
+    `aggregator` picks the server-side reduction of the per-client
+    gradient stack (core/aggregators.py AGGREGATORS; "mean" = the paper's
+    weighted mean and the bitwise-identical default, "coord_median" /
+    "trimmed_mean" / "norm_clip" / "multi_krum" = the Byzantine-robust
+    reducers) with `aggregator_kwargs` reaching its factory (e.g.
+    {"beta": 0.2}). Sweepable like every other axis — attacker fraction x
+    aggregator is a two-axis `cli sweep` (benchmarks/robust_aggregation.py
+    runs exactly that grid)."""
 
     name: str = "proposed"             # registry key
     rounds: int = 60                   # S+1 (schedule length)
@@ -134,6 +143,8 @@ class SchemeSpec(_SpecBase):
     bound: dict = dataclasses.field(default_factory=dict)
     data_selection: str = "none"       # registry key (DATA_SELECTION)
     data_selection_kwargs: dict = dataclasses.field(default_factory=dict)
+    aggregator: str = "mean"           # registry key (core AGGREGATORS)
+    aggregator_kwargs: dict = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass

@@ -45,10 +45,13 @@ import dataclasses
 import itertools
 import json
 import os
+import random
 import re
+import time
 import traceback
 from typing import Any, Callable, Sequence
 
+from repro.api.callbacks import Callback
 from repro.api.experiment import (
     Environment, Experiment, RunResult, build_environment, _json_finite,
 )
@@ -231,9 +234,11 @@ class RunSink:
         raise NotImplementedError
 
     def write_error(self, name: str, spec, exc: BaseException,
-                    tb: str) -> None:
-        """Called when a cell fails permanently (after retries). Default:
-        ignore — sinks that persist (JsonlDirSink) record the failure."""
+                    tb: str, *, kind: str = "error") -> None:
+        """Called when a cell fails permanently (after retries). `kind` is
+        "error" for an exception and "timeout" for a cell that blew its
+        wall-clock deadline (run_sweep cell_timeout). Default: ignore —
+        sinks that persist (JsonlDirSink) record the failure."""
 
     def close(self) -> None:
         pass
@@ -265,11 +270,11 @@ class JsonlDirSink(RunSink):
         self._index.flush()
 
     def write_error(self, name: str, spec, exc: BaseException,
-                    tb: str) -> None:
+                    tb: str, *, kind: str = "error") -> None:
         # flushed immediately, like sweep_run records: a tailing consumer
         # (or a post-mortem) sees the failure the moment the cell dies
         self._index.write(json.dumps(_json_finite(
-            {"kind": "sweep_error", "name": name,
+            {"kind": "sweep_error", "error_kind": kind, "name": name,
              "spec": spec.to_dict() if hasattr(spec, "to_dict") else spec,
              "error": f"{type(exc).__name__}: {exc}",
              "traceback": tb}), allow_nan=False) + "\n")
@@ -283,6 +288,36 @@ class JsonlDirSink(RunSink):
 # ---------------------------------------------------------------------------
 # Execution: env + trainer reuse across the matrix
 # ---------------------------------------------------------------------------
+
+class CellTimeout(RuntimeError):
+    """A sweep cell exceeded its wall-clock deadline (run_sweep
+    cell_timeout). Deliberately NOT retried: a deterministic cell that
+    times out once will time out again, and re-running it just doubles
+    the wasted wall-clock."""
+
+
+class _DeadlineCallback(Callback):
+    """Cooperative per-cell deadline: raises CellTimeout at the next
+    materialization point past the deadline. Cooperative because the
+    device-resident engines pipeline whole blocks — the check fires at
+    round/block boundaries, so a cell can overshoot by at most one
+    compiled block, never hang detection mid-sweep."""
+
+    def __init__(self, seconds: float):
+        self.deadline = time.monotonic() + float(seconds)
+        self.seconds = float(seconds)
+
+    def _check(self) -> None:
+        if time.monotonic() > self.deadline:
+            raise CellTimeout(
+                f"sweep cell exceeded its {self.seconds:g}s wall-clock "
+                f"deadline")
+
+    def on_round_end(self, m, trainer) -> None:
+        self._check()
+
+    def on_block_end(self, start: int, n_rounds: int, trainer) -> None:
+        self._check()
 
 def _env_key(spec: ExperimentSpec) -> str:
     """Runs sharing this key may share one Environment: the data / model
@@ -304,7 +339,8 @@ def _trainer_key(spec: ExperimentSpec) -> str:
     sc, r = spec.scheme, spec.run
     return json.dumps([sc.eta, sc.batch, r.backend, r.shards,
                        r.rounds_per_dispatch, sc.data_selection,
-                       sc.data_selection_kwargs], sort_keys=True)
+                       sc.data_selection_kwargs, sc.aggregator,
+                       sc.aggregator_kwargs], sort_keys=True)
 
 
 @dataclasses.dataclass
@@ -312,9 +348,9 @@ class SweepResult:
     """Outcome of `run_sweep`: results in matrix order + reuse accounting
     (the env/trainer build counters the acceptance tests assert on).
     A failed cell holds None at its matrix position (so indices line up
-    with `cells`) and an error record — {"name", "error", "traceback"} —
-    in `errors`; a sweep with any error should exit nonzero (the CLI
-    does)."""
+    with `cells`) and an error record — {"name", "kind", "error",
+    "traceback"} with kind "error" or "timeout" — in `errors`; a sweep
+    with any error should exit nonzero (the CLI does)."""
 
     cells: list[SweepCell]
     results: list[RunResult | None]
@@ -329,7 +365,9 @@ class SweepResult:
 
 def run_sweep(sweep: SweepSpec, *, sink: RunSink | None = None,
               log: Callable[[str], None] | None = None,
-              callbacks: Sequence = (), max_retries: int = 0) -> SweepResult:
+              callbacks: Sequence = (), max_retries: int = 0,
+              retry_backoff: float = 0.5,
+              cell_timeout: float | None = None) -> SweepResult:
     """Execute the full matrix, streaming each RunResult to `sink` as it
     finishes. Runs execute in matrix order; environments and trainers are
     pooled by `_env_key` / `_trainer_key`, which preserves bit-for-bit
@@ -338,11 +376,19 @@ def run_sweep(sweep: SweepSpec, *, sink: RunSink | None = None,
     (careful with stateful hooks — one instance sees all cells).
 
     Cell failures are ISOLATED: a raising cell is retried up to
-    `max_retries` times (for transient failures), then recorded — in the
-    sink's index via `write_error` and in `SweepResult.errors` — and the
-    rest of the matrix still runs. A failed cell's pooled trainer is
-    evicted (the exception may have left it mid-round), so retries and
-    later cells build fresh. KeyboardInterrupt still aborts the sweep."""
+    `max_retries` times (for transient failures), sleeping
+    `retry_backoff * 2**attempt`, jittered, between attempts so retries
+    against a shared resource (filesystem sink, device under contention)
+    decorrelate; then recorded — in the sink's index via `write_error`
+    and in `SweepResult.errors` — and the rest of the matrix still runs.
+    A failed cell's pooled trainer is evicted (the exception may have
+    left it mid-round), so retries and later cells build fresh.
+
+    `cell_timeout` (seconds) bounds each cell's wall clock via a
+    cooperative deadline checked at round/block materialization points; a
+    cell past its deadline raises CellTimeout, is NOT retried
+    (deterministic cells time out deterministically), and is recorded
+    with kind="timeout". KeyboardInterrupt still aborts the sweep."""
     cells = sweep.expand()
     envs: dict[str, Environment] = {}
     trainers: dict[str, Any] = {}
@@ -354,8 +400,17 @@ def run_sweep(sweep: SweepSpec, *, sink: RunSink | None = None,
             ek = _env_key(cell.spec)
             tk = ek + "\x00" + _trainer_key(cell.spec)
             res = last_exc = last_tb = None
+            kind = "error"
             for attempt in range(int(max_retries) + 1):
+                if attempt:
+                    # exponential backoff, jittered to [0.5, 1.5)x
+                    delay = (float(retry_backoff) * 2.0 ** (attempt - 1)
+                             * (0.5 + random.random()))
+                    time.sleep(delay)
                 trainer = trainers.get(tk)
+                cbs = list(callbacks)
+                if cell_timeout is not None:
+                    cbs.append(_DeadlineCallback(cell_timeout))
                 try:
                     env = envs.get(ek)
                     if env is None:
@@ -366,23 +421,31 @@ def run_sweep(sweep: SweepSpec, *, sink: RunSink | None = None,
                     if trainer is None:
                         trainers[tk] = run.trainer
                         n_trainer += 1
-                    res = run.run(callbacks=callbacks)
+                    res = run.run(callbacks=cbs)
+                    break
+                except CellTimeout as exc:
+                    trainers.pop(tk, None)
+                    last_exc, last_tb = exc, traceback.format_exc()
+                    kind = "timeout"
+                    if log is not None:
+                        log(f"[{cell.name}] timed out: {exc}")
                     break
                 except Exception as exc:
                     trainers.pop(tk, None)
                     last_exc, last_tb = exc, traceback.format_exc()
+                    kind = "error"
                     if log is not None:
                         log(f"[{cell.name}] attempt {attempt + 1} failed: "
                             f"{type(exc).__name__}: {exc}")
             results.append(res)
             if res is None:
-                errors.append({"name": cell.name,
+                errors.append({"name": cell.name, "kind": kind,
                                "error": (f"{type(last_exc).__name__}: "
                                          f"{last_exc}"),
                                "traceback": last_tb})
                 if sink is not None:
                     sink.write_error(cell.name, cell.spec, last_exc,
-                                     last_tb)
+                                     last_tb, kind=kind)
                 continue
             if sink is not None:
                 sink.write(cell.name, res)

@@ -33,8 +33,18 @@ from repro.core.faults import (
     CorruptUpload,
     FaultDraw,
     FaultModel,
+    GaussianPoison,
     MixedFaults,
+    ScaledMalicious,
+    SignFlip,
     StragglerTimeout,
+)
+from repro.core.aggregators import (
+    AGGREGATORS,
+    Aggregator,
+    aggregator_names,
+    make_aggregator,
+    register_aggregator,
 )
 
 __all__ = [
@@ -48,5 +58,8 @@ __all__ = [
     "ParamPack", "ClientStore", "RoundEngine", "kth_smallest_threshold",
     "ClientData", "FederatedTrainer", "RoundMetrics",
     "FaultDraw", "FaultModel", "ClientDropout", "StragglerTimeout",
-    "CorruptUpload", "MixedFaults",
+    "CorruptUpload", "MixedFaults", "SignFlip", "ScaledMalicious",
+    "GaussianPoison",
+    "AGGREGATORS", "Aggregator", "aggregator_names", "make_aggregator",
+    "register_aggregator",
 ]

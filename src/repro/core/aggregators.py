@@ -1,0 +1,181 @@
+"""Byzantine-robust aggregation registry (DESIGN.md §11).
+
+The server-side reduction of the per-client gradient stack is a pluggable
+axis: `SchemeSpec.aggregator` / `aggregator_kwargs` name an entry of the
+`AGGREGATORS` registry below, `make_aggregator` instantiates it, and both
+backends thread the instance through their aggregation tails —
+`RoundEngine._aggregate_update` (packed, traced into every round graph)
+and `FederatedTrainer._reference_round` (eager mirror over the same
+bucket-padded stack). "mean" is the default and maps to ``None``: the
+engines keep today's weighted-mean path with its traces untouched, so a
+mean run stays bitwise identical to the pre-registry code (the committed
+golden trajectory is the sensor).
+
+Every robust reducer is **weight-aware**: the [C] effective weights
+(0 = client-axis padding, host-dropped upload, or quarantined non-finite
+client) exclude a lane from ranks, norms, and distance scores entirely,
+and the survivor renormalization folds through the reducer's own mean
+(kernels/ops.packed_robust_aggregate holds the math + the bitwise
+contract; `reduce` returns ``(ghat, stat)`` with ghat pre-normalized for
+an inv=1.0 fenced update).
+
+This module must stay importable from core without touching repro.api
+(api.registry imports core — a registry dependency here would cycle), so
+the registry is a plain dict + functions rather than api.registry.Registry.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Callable
+
+from repro.kernels import ops
+
+# name -> factory(**kwargs) -> Aggregator | None (None = builtin mean path)
+AGGREGATORS: dict[str, Callable] = {}
+
+
+def register_aggregator(name: str, factory: Callable | None = None,
+                        *, override: bool = False):
+    """Register an aggregator factory (usable as a decorator). The factory
+    is called with the spec's `aggregator_kwargs` and returns an
+    `Aggregator` instance — or None for the builtin mean path."""
+    def _register(fn):
+        if not override and name in AGGREGATORS:
+            raise KeyError(f"aggregator {name!r} already registered "
+                           f"(pass override=True to replace)")
+        AGGREGATORS[name] = fn
+        return fn
+    return _register(factory) if factory is not None else _register
+
+
+def aggregator_names() -> list[str]:
+    return sorted(AGGREGATORS)
+
+
+def make_aggregator(name: str, **kwargs):
+    """Instantiate a registered aggregator; returns None for "mean" (the
+    engines' builtin weighted-mean path). Raises KeyError with the known
+    names on an unknown aggregator, TypeError/ValueError on bad kwargs."""
+    factory = AGGREGATORS.get(name)
+    if factory is None:
+        raise KeyError(f"unknown aggregator {name!r}; registered: "
+                       f"{aggregator_names()}")
+    return factory(**kwargs)
+
+
+@dataclasses.dataclass(frozen=True)
+class Aggregator:
+    """Base: a named, hashable robust reducer.
+
+    `reduce(grads, cweights)` takes the packed [C, R, 128] per-client
+    gradient stack (corruption factors / poison already applied) and the
+    [C] effective validity weights, and returns ``(ghat, stat)`` — the
+    survivor-normalized robust aggregate [R, 128] fp32 plus an int32
+    per-round diagnostic count, accumulated by the trainer into the
+    `stat_field` counter of ``RunResult.summary["aggregation"]``.
+
+    `impl` picks the kernel backend for the rank-sort stage ("pallas" on
+    TPU / "xla" mirror — kernels/ops semantics); distance- and norm-based
+    reducers are pure jnp either way.
+    """
+    impl: str = "auto"
+    name = "?"            # class attrs: registry key + counter routing
+    stat_field = "n_excluded"
+
+    @property
+    def spec_key(self) -> str:
+        """Canonical identity string — the trainer-reuse / sweep pooling
+        key (api/experiment.py, api/sweep.py)."""
+        return json.dumps([self.name, dataclasses.asdict(self)],
+                          sort_keys=True)
+
+    def reduce(self, grads, cweights):
+        raise NotImplementedError
+
+
+@register_aggregator("mean")
+def _mean(**kwargs):
+    if kwargs:
+        raise TypeError(f"mean takes no kwargs, got {sorted(kwargs)}")
+    return None
+
+
+@dataclasses.dataclass(frozen=True)
+class CoordMedian(Aggregator):
+    """Coordinate-wise median over valid clients (rank sort per lane)."""
+    name = "coord_median"
+
+    def reduce(self, grads, cweights):
+        return ops.packed_robust_aggregate(grads, cweights,
+                                           kind="coord_median",
+                                           impl=self.impl)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrimmedMean(Aggregator):
+    """Per-coordinate beta-trimmed mean: drop the floor(beta*n) smallest
+    and largest values, mean the middle. Breakdown point beta: any f <
+    floor(beta*n) arbitrarily-scaled attackers land in the trimmed tails
+    (tests/test_aggregators.py property test)."""
+    beta: float = 0.1
+    name = "trimmed_mean"
+    stat_field = "n_trimmed"
+
+    def __post_init__(self):
+        if not 0.0 <= float(self.beta) < 0.5:
+            raise ValueError(
+                f"trimmed_mean beta must be in [0, 0.5), got {self.beta}")
+
+    def reduce(self, grads, cweights):
+        return ops.packed_robust_aggregate(grads, cweights,
+                                           kind="trimmed_mean",
+                                           beta=float(self.beta),
+                                           impl=self.impl)
+
+
+@dataclasses.dataclass(frozen=True)
+class NormClip(Aggregator):
+    """Mean of norm-clipped uploads: client c scales by min(1,
+    tau/||g_c||). tau=None (or <= 0) adapts per round to the median of
+    the valid clients' norms — scale attacks clip down to honest
+    magnitude without tuning a threshold."""
+    tau: float | None = None
+    name = "norm_clip"
+    stat_field = "n_clipped"
+
+    def reduce(self, grads, cweights):
+        return ops.packed_robust_aggregate(
+            grads, cweights, kind="norm_clip",
+            tau=None if self.tau is None else float(self.tau),
+            impl=self.impl)
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiKrum(Aggregator):
+    """Multi-Krum (Blanchard et al.): score each valid client by the sum
+    of its n-f-2 smallest squared distances to the others, keep the m
+    (default n-f) lowest-scoring clients, mean them. f is the assumed
+    attacker budget; outliers — far from every honest cluster — score
+    high and are excluded."""
+    f: int = 1
+    m: int | None = None
+
+    name = "multi_krum"
+
+    def __post_init__(self):
+        if int(self.f) < 0:
+            raise ValueError(f"multi_krum f must be >= 0, got {self.f}")
+        if self.m is not None and int(self.m) < 1:
+            raise ValueError(f"multi_krum m must be >= 1, got {self.m}")
+
+    def reduce(self, grads, cweights):
+        return ops.packed_robust_aggregate(
+            grads, cweights, kind="multi_krum", f=int(self.f),
+            m=None if self.m is None else int(self.m), impl=self.impl)
+
+
+register_aggregator("coord_median", CoordMedian)
+register_aggregator("trimmed_mean", TrimmedMean)
+register_aggregator("norm_clip", NormClip)
+register_aggregator("multi_krum", MultiKrum)

@@ -18,6 +18,19 @@ registry-resolved axis (repro.api.registry FAULT_MODELS, spec field
   * corrupt   — the upload arrives but is scaled or NaN-poisoned
     (deep-fade / decode-failure model).
 
+Adversarial (byzantine) models — PR 7 — reuse the same draw machinery but
+model a *deliberate* attacker rather than channel damage, pairing with the
+robust aggregators in core/aggregators.py:
+
+  * sign_flip        — byzantine clients upload ``-scale * g`` (gradient
+    ascent; rides the multiplicative `corrupt` operand);
+  * scaled_malicious — byzantine clients upload ``+scale * g`` (magnitude
+    attack, same operand);
+  * gaussian_poison  — byzantine clients upload ``g + sigma * z`` with
+    z ~ N(0, I) over the packed buffer (additive; carried by the draw's
+    lazy ``poison`` callable so clean rounds never materialize a
+    model-sized array).
+
 Draw protocol
 -------------
 ``draw(round_index, n_clients, selected, ...)`` returns a `FaultDraw` for
@@ -39,12 +52,13 @@ round skips the update entirely (core/round_engine.py, kernels/ops.py).
 from __future__ import annotations
 
 import dataclasses
+import typing
 
 import numpy as np
 
 # Distinct rng streams per fault kind so a mixed model's dropout draw never
 # correlates with its corruption draw at the same (seed, round).
-_DROPOUT, _STRAGGLER, _CORRUPT = 1, 2, 3
+_DROPOUT, _STRAGGLER, _CORRUPT, _BYZANTINE = 1, 2, 3, 4
 
 
 def _round_rng(seed: int, round_index: int, kind: int) -> np.random.Generator:
@@ -65,10 +79,19 @@ class FaultDraw:
     corrupt   : [C_sel] float32 or None — per-client gradient scale factor
         (1.0 = clean; NaN = poisoned). Applied to uploads that DO arrive;
         non-finite results are then caught by the engine's isfinite guard.
+    poison    : callable or None — lazy additive upload poison:
+        ``poison(shape, valid) -> float32 [C_sel, *shape]`` with zeros for
+        clean clients, drawn per flagged client from an rng keyed
+        ``(seed, round, _BYZANTINE, client_id)`` and masked by the packed
+        buffer's `valid` lanes (so padding lanes stay exactly 0.0 and the
+        engine's zero-padding invariants hold). Lazy because it is the one
+        model-sized fault operand: a draw with no byzantine client returns
+        ``poison=None`` and the round never materializes the array.
     """
 
     upload_ok: np.ndarray
     corrupt: np.ndarray | None = None
+    poison: "typing.Callable | None" = None
 
     @property
     def n_faulted(self) -> int:
@@ -201,3 +224,145 @@ class MixedFaults(FaultModel):
                                     self.corrupt_scale, self.seed).draw(
                 round_index, n_clients, sel).corrupt
         return FaultDraw(upload_ok=ok, corrupt=corrupt)
+
+
+# -- adversarial (byzantine) models ------------------------------------------
+#
+# Same draw protocol as the channel faults — a population-sized flag array
+# keyed (seed, round, _BYZANTINE), indexed by the selected ids — so the
+# byzantine roster at round s is a pure function of (seed, s, client id),
+# invariant to selection size, dispatch grouping, and resume. The engine
+# never learns who is byzantine; the defense is the robust aggregator
+# (core/aggregators.py), which must bound the damage from weights alone.
+
+
+def _byzantine_flags(seed: int, round_index: int, n_clients: int,
+                     selected: np.ndarray, rate: float,
+                     exact: bool = False) -> np.ndarray:
+    """Population-level byzantine roster for one round. ``exact=False``
+    flags each client independently with probability ``rate`` (a Bernoulli
+    draw whose count fluctuates — at rate 0.3 over 10 clients it exceeds
+    n/2, every reducer's breakdown point, in ~15% of rounds). ``exact=True``
+    flags the ``round(rate * n_clients)`` clients with the smallest uniform
+    draws instead: the attacker COUNT is exact every round (the standard
+    f-of-n Byzantine threat model a robust aggregator is specified
+    against) while the membership still rotates per round. Both modes are
+    pure functions of (seed, round, client id), so they stay selection-,
+    dispatch-, and resume-invariant."""
+    u = _round_rng(seed, round_index, _BYZANTINE).random(n_clients)
+    if exact:
+        k = int(round(rate * n_clients))
+        if k <= 0:
+            flags = np.zeros(n_clients, bool)
+        elif k >= n_clients:
+            flags = np.ones(n_clients, bool)
+        else:
+            flags = u <= np.partition(u, k - 1)[k - 1]
+    else:
+        flags = u < rate
+    return flags[np.asarray(selected, int)]
+
+
+@dataclasses.dataclass(frozen=True)
+class SignFlip(FaultModel):
+    """Byzantine clients upload ``-scale * g`` — gradient ascent on the
+    global objective. Rides the multiplicative `corrupt` operand (a
+    ``1.0 * g`` multiply is exact, so clean clients are bitwise
+    unaffected); scale=1.0 is the classic sign-flipping attack.
+    ``exact=True`` pins the attacker count to round(rate * n) per round
+    (see `_byzantine_flags`)."""
+
+    rate: float = 0.1
+    scale: float = 1.0
+    seed: int = 0
+    exact: bool = False
+
+    def __post_init__(self):
+        if not 0.0 <= self.rate <= 1.0:
+            raise ValueError(f"byzantine rate must be in [0, 1], "
+                             f"got {self.rate}")
+
+    def draw(self, round_index, n_clients, selected, *, delays=None,
+             deadline=None) -> FaultDraw:
+        flags = _byzantine_flags(self.seed, round_index, n_clients,
+                                 selected, self.rate, self.exact)
+        cf = np.ones(len(flags), np.float32)
+        cf[flags] = np.float32(-self.scale)
+        return FaultDraw(upload_ok=self._all_ok(len(flags)), corrupt=cf)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaledMalicious(FaultModel):
+    """Byzantine clients upload ``+scale * g`` — a magnitude attack that
+    keeps the honest direction but dominates the mean (the canonical
+    finite corruption the isfinite quarantine cannot catch). The robust
+    reducers' breakdown-point property test runs against this model.
+    ``exact=True`` pins the attacker count to round(rate * n) per round
+    (see `_byzantine_flags`)."""
+
+    rate: float = 0.1
+    scale: float = 10.0
+    seed: int = 0
+    exact: bool = False
+
+    def __post_init__(self):
+        if not 0.0 <= self.rate <= 1.0:
+            raise ValueError(f"byzantine rate must be in [0, 1], "
+                             f"got {self.rate}")
+
+    def draw(self, round_index, n_clients, selected, *, delays=None,
+             deadline=None) -> FaultDraw:
+        flags = _byzantine_flags(self.seed, round_index, n_clients,
+                                 selected, self.rate, self.exact)
+        cf = np.ones(len(flags), np.float32)
+        cf[flags] = np.float32(self.scale)
+        return FaultDraw(upload_ok=self._all_ok(len(flags)), corrupt=cf)
+
+
+@dataclasses.dataclass(frozen=True)
+class GaussianPoison(FaultModel):
+    """Byzantine clients upload ``g + sigma * z``, z ~ N(0, I) over the
+    packed buffer — additive noise poisoning. The per-client noise is
+    drawn from an rng keyed ``(seed, round, _BYZANTINE, client_id)`` —
+    client-id keyed so the draw stays selection- and dispatch-invariant —
+    and returned through the draw's lazy ``poison`` callable (the engine
+    materializes the [C_sel, R, L] stack only on rounds with a flagged
+    client). Clean rows are exact zeros and padding lanes are masked out,
+    so unflagged clients and the packed-buffer invariants are untouched."""
+
+    rate: float = 0.1
+    sigma: float = 1.0
+    seed: int = 0
+    exact: bool = False
+
+    def __post_init__(self):
+        if not 0.0 <= self.rate <= 1.0:
+            raise ValueError(f"byzantine rate must be in [0, 1], "
+                             f"got {self.rate}")
+        if self.sigma < 0.0:
+            raise ValueError(f"sigma must be >= 0, got {self.sigma}")
+
+    def draw(self, round_index, n_clients, selected, *, delays=None,
+             deadline=None) -> FaultDraw:
+        sel = np.asarray(selected, int)
+        flags = _byzantine_flags(self.seed, round_index, n_clients,
+                                 sel, self.rate, self.exact)
+        ok = self._all_ok(len(sel))
+        if not flags.any():
+            return FaultDraw(upload_ok=ok)
+        seed, sigma, rnd = self.seed, float(self.sigma), int(round_index)
+
+        def poison(shape, valid):
+            out = np.zeros((len(sel),) + tuple(shape), np.float32)
+            mask = np.asarray(valid, np.float32)
+            for j in np.flatnonzero(flags):
+                rng = np.random.default_rng(np.random.SeedSequence(
+                    [int(seed) & 0xFFFFFFFF, rnd, _BYZANTINE, int(sel[j])]))
+                out[j] = (sigma * rng.standard_normal(shape)
+                          ).astype(np.float32) * mask
+            return out
+
+        # the trainer's corrupt-but-finite counter reads the roster off
+        # the callable (the draw itself stays lazy)
+        poison.flags = flags
+        return FaultDraw(upload_ok=ok, poison=poison)

@@ -65,7 +65,7 @@ from repro.core import pruning
 from repro.core.client_store import ClientStore
 from repro.core.optimizer_ao import Schedule
 from repro.core.packing import LANES, ParamPack
-from repro.core.round_engine import RoundEngine
+from repro.core.round_engine import RoundEngine, bucket_capacity
 from repro.wireless.comm import SystemParams, per_client_delay, round_energy
 
 PyTree = Any
@@ -119,6 +119,10 @@ class RoundMetrics:
     # the engine's isfinite guard quarantined
     n_faulted: int = 0
     n_quarantined: int = 0
+    # robust-aggregation accounting (core/aggregators.py): clients the
+    # active robust reducer trimmed / clipped / excluded this round (the
+    # aggregator's `stat_field` names which); always 0 on the mean path
+    n_agg_adjusted: int = 0
 
 
 class FederatedTrainer:
@@ -142,6 +146,7 @@ class FederatedTrainer:
         rounds_per_dispatch: int | str = "auto",
         channel_noise=None,
         fault_model=None,
+        aggregator=None,
     ):
         if backend not in ("packed", "reference"):
             raise ValueError(f"unknown backend {backend!r}")
@@ -193,7 +198,17 @@ class FederatedTrainer:
         # RNG, so resumed totals match an uninterrupted run).
         self.fault_model = fault_model
         self.fault_counters = {"n_dropped": 0, "n_quarantined": 0,
-                               "n_skipped_rounds": 0}
+                               "n_skipped_rounds": 0, "n_corrupt_finite": 0}
+        # Byzantine-robust aggregation (core/aggregators.py): an engine
+        # construction constant, like eta — it changes every round graph,
+        # so swapping reducers means a new trainer (Experiment.build /
+        # the sweep pool key both fold `aggregator_key` in). None keeps
+        # the builtin weighted-mean path byte-identical.
+        self.aggregator = aggregator
+        self.aggregator_key = (aggregator.spec_key
+                               if aggregator is not None else "mean")
+        self.agg_counters = ({aggregator.stat_field: 0}
+                             if aggregator is not None else {})
         # lifecycle hooks for the current run() (repro.api.Callback
         # protocol); held on the instance so _exec_block can fire
         # on_block_end without threading them through every call
@@ -207,7 +222,8 @@ class FederatedTrainer:
                                       kernel_impl=kernel_impl, donate=True,
                                       weighted_loss_fn=self._weighted_loss,
                                       shards=shards,
-                                      max_clients=len(self.clients))
+                                      max_clients=len(self.clients),
+                                      aggregator=aggregator)
             self._w, self._v = self.engine.init_buffers(params)
             # pytree views of the packed buffers, memoized on buffer
             # identity so repeated property reads (eval_fn, the ragged
@@ -270,7 +286,9 @@ class FederatedTrainer:
         self.channel_noise = channel_noise
         self.fault_model = fault_model
         self.fault_counters = {"n_dropped": 0, "n_quarantined": 0,
-                               "n_skipped_rounds": 0}
+                               "n_skipped_rounds": 0, "n_corrupt_finite": 0}
+        self.agg_counters = ({self.aggregator.stat_field: 0}
+                             if self.aggregator is not None else {})
         self.n_fallback_rounds = 0
         self.n_batch_uploads = 0
         self.n_block_dispatches = 0
@@ -310,6 +328,19 @@ class FederatedTrainer:
         a pure gather of the packed draw, so per-coordinate values are
         identical to what the packed engine adds."""
         return self._noise_layout().unpack(jnp.asarray(self._noise_packed(s)))
+
+    def _poison_stack(self, fault) -> np.ndarray | None:
+        """Materialize a fault draw's lazy additive poison in the packed
+        [C_sel, R, 128] layout (padding lanes masked to 0.0), shared by
+        both backends — the reference unpacks the identical rows, so
+        per-coordinate poison values match the packed engine's exactly
+        (the GaussianPoison analog of `_noise_packed`)."""
+        if fault is None or getattr(fault, "poison", None) is None:
+            return None
+        pack = self._noise_layout()
+        if self._noise_valid is None:
+            self._noise_valid = pack.valid_mask()
+        return fault.poison((pack.rows, LANES), self._noise_valid)
 
     # -- round primitives ---------------------------------------------------
 
@@ -406,11 +437,19 @@ class FederatedTrainer:
         quarantined host-side. `server_step` over the survivors then
         renormalizes by their count (and early-returns when none survive),
         which is the semantics the packed guard reproduces on device.
-        Returns (per-client losses, surviving upload count)."""
+        With a robust ``aggregator`` the round instead routes through
+        `_reference_robust_round` — the eager mirror of the engine's
+        robust reduce over the same bucket-padded packed stack.
+        Returns (per-client losses, surviving upload count, agg stat —
+        None on the mean path)."""
+        if self.aggregator is not None:
+            return self._reference_robust_round(selected, lam_s, batches,
+                                                s=s, fault=fault)
         grads, losses = [], []
         ok = (np.asarray(fault.upload_ok, bool) if fault is not None
               else np.ones(len(selected), bool))
         cf = fault.corrupt if fault is not None else None
+        po = self._poison_stack(fault)
         for j, (n, batch) in enumerate(zip(selected, batches)):
             g, _, loss = self.client_update(n, float(lam_s[n]), batch=batch)
             losses.append(loss)
@@ -419,13 +458,75 @@ class FederatedTrainer:
             if cf is not None:
                 g = jax.tree.map(
                     lambda t, c=np.float32(cf[j]): t * c, g)
+            if po is not None:
+                # applied to EVERY arriving upload (zeros for clean
+                # clients), mirroring the engine's stack-wide add — the
+                # `g + 0.0` normalization of -0.0 then matches bitwise
+                pz = self._noise_layout().unpack(jnp.asarray(po[j]))
+                g = jax.tree.map(lambda t, z: t + z, g, pz)
             if all(bool(jnp.all(jnp.isfinite(leaf)))
                    for leaf in jax.tree_util.tree_leaves(g)):
                 grads.append(g)
         self.server_step(
             grads,
             noise=self._noise_tree(s) if self.channel_noise else None)
-        return losses, len(grads)
+        return losses, len(grads), None
+
+    def _reference_robust_round(self, selected: list[int], lam_s: np.ndarray,
+                                batches: list, s: int = 0, fault=None):
+        """Eager robust round — the reference oracle for a non-mean
+        aggregator, mirroring the packed engine op for op over the SAME
+        bucket-padded [C_b, R, 128] stack (DESIGN.md §11):
+
+        every selected client's masked gradient is packed at its
+        selected-order position (packing is a pure scatter, so the rows are
+        bitwise the engine's), faults apply as ``cf * g + poison``, the
+        effective weight is ``arrived & finite`` (the eager isfinite
+        quarantine), padding rows are zero with weight 0 — the reducers
+        are weight-aware and bucket-capacity invariant, so zero padding
+        and the engine's replicated-batch padding give identical bits.
+        The SAME `Aggregator.reduce` then runs eagerly, and the update is
+        the eager form of the engine's fenced inv=1.0 tail: ``ghat (+
+        noise)`` becomes the broadcast v and ``w - eta*v`` the step (the
+        separate eager multiply rounds exactly like the fence). A round
+        with no survivors skips the update (server_step's empty-grads
+        early return)."""
+        pack = self._noise_layout()
+        ok = (np.asarray(fault.upload_ok, bool) if fault is not None
+              else np.ones(len(selected), bool))
+        cf = fault.corrupt if fault is not None else None
+        po = self._poison_stack(fault)
+        losses, gps, cws = [], [], []
+        for j, (n, batch) in enumerate(zip(selected, batches)):
+            g, _, loss = self.client_update(n, float(lam_s[n]), batch=batch)
+            losses.append(loss)
+            gp = pack.pack(g)
+            if cf is not None:
+                gp = gp * jnp.float32(cf[j])
+            if po is not None:
+                gp = gp + jnp.asarray(po[j])
+            fin = bool(jnp.all(jnp.isfinite(gp)))
+            gps.append(gp)
+            cws.append(1.0 if (ok[j] and fin) else 0.0)
+        c_b = bucket_capacity(len(selected),
+                              max_clients=len(self.clients))
+        zero = jnp.zeros((pack.rows, LANES), jnp.float32)
+        gps += [zero] * (c_b - len(selected))
+        cws += [0.0] * (c_b - len(selected))
+        stack = jnp.stack(gps)
+        cw = jnp.asarray(np.asarray(cws, np.float32))
+        ghat, ast = self.aggregator.reduce(stack, cw)
+        n_ok = int(np.asarray(cws).sum())
+        if n_ok > 0:
+            g = pack.unpack(ghat)
+            if self.channel_noise:
+                g = jax.tree.map(lambda t, nz: t + nz, g,
+                                 self._noise_tree(s))
+            self.global_grad = g
+            self.params = jax.tree.map(
+                lambda w, gg: w - self.eta * gg.astype(w.dtype),
+                self.params, g)
+        return losses, n_ok, ast
 
     def _round(self, selected: list[int], lam_s: np.ndarray, s: int = 0,
                fault=None):
@@ -440,10 +541,11 @@ class FederatedTrainer:
         packed path (the engine buckets the client axis); the reference
         fallback only fires for custom losses without a weighted form.
 
-        Returns (losses, n_ok): n_ok is the surviving weighted-upload
+        Returns (losses, n_ok, ast): n_ok is the surviving weighted-upload
         count — a lazy device scalar on the packed path (the engine's
         `last_n_ok`), an int on the reference path — materialized with the
-        losses to drive the fault counters."""
+        losses to drive the fault counters; ast is the robust aggregator's
+        per-round diagnostic count (None on the mean path)."""
         batches = [self._sample_batch(self.clients[n]) for n in selected]
         stackable = len({b[0].shape for b in batches}) <= 1
         if self.backend != "packed" or not stackable:
@@ -464,8 +566,11 @@ class FederatedTrainer:
             noise=self._noise_packed(s) if self.channel_noise else None,
             upload_weights=(fault.upload_ok.astype(np.float32)
                             if fault is not None else None),
-            corrupt=fault.corrupt if fault is not None else None)
-        return losses, self.engine.last_n_ok
+            corrupt=fault.corrupt if fault is not None else None,
+            poison=self._poison_stack(fault))
+        ast = (self.engine.last_agg_stat if self.aggregator is not None
+               else None)
+        return losses, self.engine.last_n_ok, ast
 
     # -- block execution ----------------------------------------------------
 
@@ -556,9 +661,19 @@ class FederatedTrainer:
         # (ones = clean defaults, exact no-ops on device) whenever a fault
         # model is active — one upload per block, zero per-round H2D
         fault_on = self.fault_model is not None
+        pos = None
         if fault_on:
             fw = np.ones((n_rounds, c_max), np.float32)
             cfa = np.ones((n_rounds, c_max), np.float32)
+            # the additive-poison stack is built lazily: zero until some
+            # round in the block actually flagged a byzantine client, so
+            # clean blocks never allocate the [K, C, R, L] operand
+            if any(infos[start + k][6] is not None
+                   and infos[start + k][6].poison is not None
+                   for k in range(n_rounds)):
+                pack = self._noise_layout()
+                pos = np.zeros((n_rounds, c_max, pack.rows, LANES),
+                               np.float32)
         any_ragged = False
         for k, sel in enumerate(sels):
             lam_s = infos[start + k][1]
@@ -569,6 +684,8 @@ class FederatedTrainer:
                                                   np.float32)
                     if fault.corrupt is not None:
                         cfa[k, :len(sel)] = fault.corrupt
+                    if pos is not None and fault.poison is not None:
+                        pos[k, :len(sel)] = self._poison_stack(fault)
             for j, n in enumerate(sel):
                 draw = self._draw_indices(self.clients[n])
                 m = len(draw)
@@ -594,11 +711,14 @@ class FederatedTrainer:
             self._w, self._v, store, cids, idxs, lams, counts,
             sample_weights=sw if any_ragged else None, noises=noises,
             upload_weights=fw if fault_on else None,
-            corrupt=cfa if fault_on else None)
+            corrupt=cfa if fault_on else None, poisons=pos)
         n_oks = self.engine.last_n_ok        # [K] lazy survivor counts
+        asts = (self.engine.last_agg_stat    # [K] lazy reducer diagnostics
+                if self.aggregator is not None else None)
         self.n_block_dispatches += 1
         for k in range(n_rounds):
-            out[start + k] = (losses[k, : int(counts[k])], n_oks[k])
+            out[start + k] = (losses[k, : int(counts[k])], n_oks[k],
+                              asts[k] if asts is not None else None)
         # fires right after the dispatch returns: the block's losses are
         # still lazy device arrays, so hooks here never force a sync
         for cb in self._callbacks:
@@ -670,11 +790,13 @@ class FederatedTrainer:
         self._callbacks = callbacks
         history: list[RoundMetrics] = []
         # rounds whose train_loss / survivor count are still unmaterialized
-        # device values: (metrics, losses, n_ok, upload mask)
-        pending: list[tuple[RoundMetrics, Any, Any, Any]] = []
+        # device values: (metrics, losses, n_ok, fault draw, agg stat)
+        pending: list[tuple[RoundMetrics, Any, Any, Any, Any]] = []
 
         def materialize():
-            for m, losses, n_ok, mask in pending:
+            for m, losses, n_ok, fault, ast in pending:
+                mask = (np.asarray(fault.upload_ok, bool)
+                        if fault is not None else None)
                 if losses is not None:
                     # float64 mean over the synced fp32 values — identical
                     # to the old eager np.mean over a list of floats;
@@ -689,11 +811,37 @@ class FederatedTrainer:
                 m.n_faulted = n_sel - n_up
                 if n_ok is not None:
                     ok = int(n_ok)
+                    # on the robust path the quarantine count folds the
+                    # reducer's survivor arithmetic the same way: n_ok is
+                    # still "weighted clients whose upload stayed finite"
                     m.n_quarantined = max(0, n_up - ok)
                     if n_sel and ok == 0:
                         self.fault_counters["n_skipped_rounds"] += 1
                 self.fault_counters["n_dropped"] += m.n_faulted
                 self.fault_counters["n_quarantined"] += m.n_quarantined
+                # corrupt-but-FINITE arrivals: damage the isfinite guard
+                # cannot see (satellite of the quarantine's documented
+                # blind spot) — counted host-side from the draw so reports
+                # stop under-counting corruption. `.get` keeps restores of
+                # pre-PR-7 checkpoints (no such key) working.
+                if fault is not None:
+                    ncf = 0
+                    arrived = (mask if mask is not None
+                               else np.ones(n_sel, bool))
+                    if fault.corrupt is not None:
+                        cfv = np.asarray(fault.corrupt, np.float64)
+                        ncf += int((arrived & np.isfinite(cfv)
+                                    & (cfv != 1.0)).sum())
+                    flags = getattr(fault.poison, "flags", None)
+                    if flags is not None:
+                        ncf += int((arrived & np.asarray(flags, bool)).sum())
+                    self.fault_counters["n_corrupt_finite"] = (
+                        self.fault_counters.get("n_corrupt_finite", 0) + ncf)
+                if ast is not None and self.aggregator is not None:
+                    m.n_agg_adjusted = int(ast)
+                    sf = self.aggregator.stat_field
+                    self.agg_counters[sf] = (self.agg_counters.get(sf, 0)
+                                             + m.n_agg_adjusted)
                 for cb in callbacks:
                     cb.on_round_end(m, self)
             pending.clear()
@@ -762,12 +910,12 @@ class FederatedTrainer:
                 if s in blocks:
                     self._exec_block(s, blocks[s], infos, block_losses)
                 if s in block_losses:
-                    losses, n_ok = block_losses.pop(s)
+                    losses, n_ok, ast = block_losses.pop(s)
                 elif selected:
-                    losses, n_ok = self._round(selected, lam_s, s=s,
-                                               fault=fault)
+                    losses, n_ok, ast = self._round(selected, lam_s, s=s,
+                                                    fault=fault)
                 else:
-                    losses = n_ok = None
+                    losses = n_ok = ast = None
                 m = RoundMetrics(
                     round=s,
                     train_loss=float("nan"),
@@ -777,9 +925,7 @@ class FederatedTrainer:
                     delay=d, energy=e,
                     cumulative_delay=cum_t, cumulative_energy=cum_e,
                 )
-                pending.append((m, losses, n_ok,
-                                np.asarray(fault.upload_ok, bool)
-                                if fault is not None else None))
+                pending.append((m, losses, n_ok, fault, ast))
                 is_eval = (eval_fn is not None
                            and (s % eval_every == 0 or s == n_rounds - 1))
                 if is_eval or s in ckpt_rounds:

@@ -183,6 +183,22 @@ def kth_smallest_threshold(q: jnp.ndarray, prunable: jnp.ndarray,
                      -jnp.asarray(jnp.inf, jnp.float32))
 
 
+def bucket_capacity(n_clients: int, *, shards: int = 1, bucket: bool = True,
+                    max_clients: int | None = None) -> int:
+    """Padded client-axis size for a round selecting `n_clients` — the one
+    bucketing formula, shared by `RoundEngine.bucket_size` and the eager
+    reference robust reducer (core/federated.py pads its client stack to
+    the same capacity so packed-vs-reference stays bitwise comparable on
+    rank-based aggregators)."""
+    per = -(-int(n_clients) // shards)
+    if bucket:
+        p2 = 1 << (per - 1).bit_length()
+        if max_clients is not None:
+            p2 = min(p2, max(per, -(-int(max_clients) // shards)))
+        per = p2
+    return per * shards
+
+
 def _resolve_shards(shards: int | None) -> int:
     """Data-shard count for the client axis: explicit arg, then the
     REPRO_ROUND_SHARDS env override (CPU tests under
@@ -217,13 +233,19 @@ class RoundEngine:
         passes len(clients)). Caps the bucket ladder so full participation
         never pads past the population (e.g. C=20 of 20 buckets to 20, not
         32 — padding clients cost real gradient FLOPs).
+    aggregator : optional core/aggregators.Aggregator — a Byzantine-robust
+        reducer slotted in place of the weighted mean behind the same
+        FMA-fenced update tail. None (the default) keeps the builtin mean
+        path with byte-identical traces. A construction-time constant,
+        like eta: it changes every round graph, so swapping it means a new
+        engine (FederatedTrainer / Experiment.build handle pooling).
     """
 
     def __init__(self, loss_fn: Callable, pack: ParamPack, *, eta: float,
                  client_axis: str = "auto", kernel_impl: str = "auto",
                  donate: bool = False, weighted_loss_fn: Callable | None = None,
                  shards: int | None = None, bucket: bool = True,
-                 max_clients: int | None = None):
+                 max_clients: int | None = None, aggregator=None):
         if client_axis not in ("auto", "unroll", "scan", "vmap"):
             raise ValueError(f"unknown client_axis {client_axis!r}")
         self.pack = pack
@@ -232,6 +254,7 @@ class RoundEngine:
         self.kernel_impl = kernel_impl
         self.bucket = bool(bucket)
         self.max_clients = int(max_clients) if max_clients else None
+        self.aggregator = aggregator
         self.shards = _resolve_shards(shards)
         self.prunable = jnp.asarray(pack.prunable_mask())
         # compile accounting: one increment per (re)trace of a step impl —
@@ -287,6 +310,10 @@ class RoundEngine:
         # the isfinite guard; the trainer materializes it lazily alongside
         # the losses to drive the n_quarantined / n_skipped_rounds counters
         self.last_n_ok = None
+        # robust-aggregation diagnostic of the most recent dispatch
+        # ([] scalar / [K] int32; constant 0 on the mean path) — clients
+        # trimmed / clipped / excluded, same lazy materialization contract
+        self.last_agg_stat = None
         if self.mesh is None:
             round_shared, round_multi = self._round_shared, self._round_multi
             self._step_shared = jax.jit(self._shared_impl,
@@ -387,14 +414,19 @@ class RoundEngine:
         _, (losses, grads) = jax.lax.scan(body, 0.0, (masks, xs, ys, sw))
         return losses, grads
 
-    def _aggregate_update(self, w, v, grads, cw, inv, noise, cf=None):
+    def _aggregate_update(self, w, v, grads, cw, inv, noise, cf=None,
+                          poison=None):
         """Weighted aggregate + FedSGD tail, with graceful degradation and
         an optional noisy aggregation channel.
 
         `cf` (optional [C] per-client corruption factors, 1.0 = clean)
         scales each client's masked gradient before aggregation — the
         corrupt-upload fault axis (core/faults.py); a `1.0 * g` multiply
-        is exact, so clean clients are bitwise unaffected.
+        is exact, so clean clients are bitwise unaffected. `poison`
+        (optional [C, R, L] additive upload poison, zero = clean) is added
+        after scaling — the GaussianPoison attack; note a clean client's
+        `g + 0.0` normalizes -0.0 coordinates to +0.0, which the eager
+        reference applies identically, so parity holds.
 
         The always-on non-finite guard (ops.packed_client_quarantine) then
         zeroes the weight of any client whose summed gradient went
@@ -403,6 +435,13 @@ class RoundEngine:
         so the default path stays bit-for-bit (tests/test_golden.py is the
         sensor). When NO client survives, `alive` selects the carried
         (w, v) — the round's update is skipped entirely, params unchanged.
+
+        With a robust `aggregator` the quarantined weights feed
+        `Aggregator.reduce` over the full stack instead of the weighted
+        mean: the reducer emits a survivor-normalized aggregate plus its
+        diagnostic count, applied through the same FMA-fenced tail with
+        inv=1.0 (`ghat * 1.0` is exact, so the fence sequence is the
+        bit-parity anchor on this path too).
 
         When `noise` (packed [R, L], zero on padding lanes) is traced in,
         the update consumes mean(g) + noise — the server never sees the
@@ -413,12 +452,20 @@ class RoundEngine:
         reference sequence)."""
         if cf is not None:
             grads = grads * cf.astype(jnp.float32)[:, None, None]
+        if poison is not None:
+            grads = grads + poison.astype(jnp.float32)
         cw_eff, inv_eff, n_ok, alive = ops.packed_client_quarantine(
             grads, cw, inv)
-        if noise is None:
+        if self.aggregator is not None:
+            ghat, ast = self.aggregator.reduce(grads, cw_eff)
+            w2, g, step = ops.packed_apply_mean_update(
+                w, ghat, jnp.float32(1.0), self.eta, noise=noise)
+        elif noise is None:
+            ast = jnp.int32(0)
             w2, g, step = ops.packed_fedsgd_update_weighted(
                 w, grads, cw_eff, inv_eff, self.eta, impl=self.kernel_impl)
         else:
+            ast = jnp.int32(0)
             gsum = ops.packed_weighted_grad_sum(grads, cw_eff)
             w2, g, step = ops.packed_apply_mean_update(w, gsum, inv_eff,
                                                        self.eta, noise=noise)
@@ -426,10 +473,10 @@ class RoundEngine:
         # (the reference server_step's empty-grads early return)
         w2 = jnp.where(alive, w2, w)
         g = jnp.where(alive, g, v)
-        return w2, g, step, n_ok
+        return w2, g, step, n_ok, ast
 
     def _round_shared(self, w, v, xs, ys, sw, cw, inv, k, noise=None,
-                      cf=None):
+                      cf=None, poison=None):
         """One shared-lambda round, given device batches — the single body
         traced by both the per-round jit and the block scan, so the two
         paths compile the identical round math (bit-for-bit contract)."""
@@ -440,21 +487,21 @@ class RoundEngine:
         pruned = w * mask
         losses, grads = self._grads_shared(pruned, mask, xs, ys, sw)
         # step stays an output of the jitted graph: see the weighted update
-        w2, g, step, n_ok = self._aggregate_update(w, v, grads, cw, inv,
-                                                   noise, cf)
-        return w2, g, losses, thr, step, n_ok
+        w2, g, step, n_ok, ast = self._aggregate_update(
+            w, v, grads, cw, inv, noise, cf, poison)
+        return w2, g, losses, thr, step, n_ok, ast
 
     def _round_multi(self, w, v, xs, ys, sw, cw, inv, ks, noise=None,
-                     cf=None):
+                     cf=None, poison=None):
         """One per-client-lambda round (see _round_shared)."""
         q = (w * v) ** 2
         thr = kth_smallest_threshold(q, self.prunable, ks)      # [C]
         _, masks = ops.packed_importance_masks(w, v, self.prunable, thr,
                                                impl=self.kernel_impl)
         losses, grads = self._grads_multi(w, masks, xs, ys, sw)
-        w2, g, step, n_ok = self._aggregate_update(w, v, grads, cw, inv,
-                                                   noise, cf)
-        return w2, g, losses, thr, step, n_ok
+        w2, g, step, n_ok, ast = self._aggregate_update(
+            w, v, grads, cw, inv, noise, cf, poison)
+        return w2, g, losses, thr, step, n_ok, ast
 
     def _shared_impl(self, w, v, xs, ys, sw, cw, inv, k):
         self.n_traces += 1
@@ -467,7 +514,7 @@ class RoundEngine:
     # -- block scaffold: lax.scan over the round axis -----------------------
 
     def _make_block_impl(self, round_fn, noisy: bool = False,
-                         faulted: bool = False):
+                         faulted: bool = False, poisoned: bool = False):
         """K rounds per dispatch around any of the four per-round bodies:
         the scan carries (w, v) and consumes [K]-leading stacked schedule
         arrays; batches are gathered ON DEVICE from the ClientStore
@@ -483,7 +530,10 @@ class RoundEngine:
         schedule operands the same way: host-drawn 0/1 fault weights `fw`
         (multiplied into the counts-derived client weights — an exact 0/1
         product, so dropped clients ride the padding-client path) and
-        per-client corruption factors `cf` (1.0 = clean, exact)."""
+        per-client corruption factors `cf` (1.0 = clean, exact). With
+        ``poisoned`` a [K, C, R, L] additive upload-poison stack joins them
+        (zeros = clean) — the one block operand whose size scales with the
+        model; still a single per-block upload, never per-round."""
 
         def impl(w, v, dx, dy, cids, idxs, sw, counts, inv, ks, *rest):
             self.n_traces += 1
@@ -499,32 +549,47 @@ class RoundEngine:
                 cw = cw * fw
             else:
                 cf = None
+            if poisoned:
+                po, rest = rest[0], rest[1:]
+            else:
+                po = None
 
             def body(carry, inp):
                 w, v = carry
                 cid, ix, sw_k, cw_k, inv_k, k = inp[:6]
+                nxt = 6
+                cf_k = None
+                if faulted:
+                    cf_k, nxt = inp[nxt], nxt + 1
+                po_k = inp[nxt] if poisoned else None
                 xs = dx[cid[:, None], ix]
                 ys = dy[cid[:, None], ix]
-                w2, g, losses, thr, _, n_ok = round_fn(
+                w2, g, losses, thr, _, n_ok, ast = round_fn(
                     w, v, xs, ys, sw_k, cw_k, inv_k, k,
                     noise=inp[-1] if noisy else None,
-                    cf=inp[6] if faulted else None)
-                return (w2, g), (losses, thr, n_ok)
+                    cf=cf_k, poison=po_k)
+                return (w2, g), (losses, thr, n_ok, ast)
 
             xss = ((cids, idxs, sw, cw, inv, ks)
-                   + ((cf,) if faulted else ()) + rest)
-            (w2, v2), (losses, thrs, n_oks) = jax.lax.scan(body, (w, v), xss)
-            return w2, v2, losses, thrs, n_oks
+                   + ((cf,) if faulted else ())
+                   + ((po,) if poisoned else ()) + rest)
+            (w2, v2), (losses, thrs, n_oks, asts) = jax.lax.scan(
+                body, (w, v), xss)
+            return w2, v2, losses, thrs, n_oks, asts
 
         return impl
 
-    def _fault_entry(self, kind: str, noisy: bool) -> Callable:
+    def _fault_entry(self, kind: str, noisy: bool,
+                     poisoned: bool = False) -> Callable:
         """Lazily built jit entry points for rounds with fault operands:
-        per-round corrupt steps take an extra [C] `cf`; block fault steps
-        take [K, C] `fw` + `cf` stacks (wired by _make_block_impl). Cached
-        per (kind, noisy) so fault runs stay on the same trace-count
+        per-round corrupt steps take an extra [C] `cf` (plus a [C, R, L]
+        `poison` stack when an additive attack is active — poisoned rounds
+        always carry both, ones/zeros-filled defaults being exact no-ops);
+        block fault steps take [K, C] `fw` + `cf` stacks and optionally a
+        [K, C, R, L] poison stack (wired by _make_block_impl). Cached per
+        (kind, noisy, poisoned) so fault runs stay on the same trace-count
         ladder as fault-free ones, one extra family per mode used."""
-        key = (kind, noisy)
+        key = (kind, noisy, poisoned)
         fn = self._fault_steps.get(key)
         if fn is not None:
             return fn
@@ -535,7 +600,18 @@ class RoundEngine:
             round_fn = (self._round_shared_sharded if shared
                         else self._round_multi_sharded)
         if kind.startswith("blk"):
-            impl = self._make_block_impl(round_fn, noisy=noisy, faulted=True)
+            impl = self._make_block_impl(round_fn, noisy=noisy, faulted=True,
+                                         poisoned=poisoned)
+        elif poisoned and noisy:
+            def impl(w, v, xs, ys, sw, cw, inv, k, cf, po, noise,
+                     _fn=round_fn):
+                self.n_traces += 1
+                return _fn(w, v, xs, ys, sw, cw, inv, k, noise=noise, cf=cf,
+                           poison=po)
+        elif poisoned:
+            def impl(w, v, xs, ys, sw, cw, inv, k, cf, po, _fn=round_fn):
+                self.n_traces += 1
+                return _fn(w, v, xs, ys, sw, cw, inv, k, cf=cf, poison=po)
         elif noisy:
             def impl(w, v, xs, ys, sw, cw, inv, k, cf, noise, _fn=round_fn):
                 self.n_traces += 1
@@ -558,21 +634,61 @@ class RoundEngine:
     # (w, v) never need resharding between rounds.
 
     @staticmethod
-    def _guarded_partial(losses, grads, cw, cf):
+    def _guarded_partial(losses, grads, cw, cf, poison=None):
         """Shard-local half of the non-finite guard + the round's single
-        collective. Corruption factors (if any) scale the local gradients,
-        the isfinite flags zero the weight of any client whose summed
+        collective. Corruption factors (if any) scale the local gradients
+        (additive poison joins after, like the single-device tail), the
+        isfinite flags zero the weight of any client whose summed
         gradient went non-finite, and ONE tuple psum combines the weighted
         partial gradient sums with the [2] (weighted, surviving) counts —
         the per-round collective count stays at one."""
         if cf is not None:
             grads = grads * cf.astype(jnp.float32)[:, None, None]
+        if poison is not None:
+            grads = grads + poison.astype(jnp.float32)
         fin = jnp.isfinite(grads).all(axis=(1, 2)).astype(jnp.float32)
         cwe = cw * fin                       # exact: fin is 0.0/1.0
         gsum = ops.packed_weighted_grad_sum(grads, cwe)
         cnt = jnp.stack([cw.sum(), cwe.sum()])
         gsum, cnt = jax.lax.psum((gsum, cnt), "data")
         return losses, gsum, cnt
+
+    @staticmethod
+    def _robust_partial(losses, grads, cw, cf, poison=None):
+        """Shard-local half of the ROBUST sharded round: rank- and
+        distance-based reducers need every client's gradient, not a
+        partial sum, so the round's single collective becomes one tuple
+        `all_gather` of the (post-fault, quarantine-weighted) local stacks
+        along the client axis — replacing the mean path's psum, still
+        exactly one collective per round. Tiled gathering over the evenly
+        sharded axis reconstructs the single-device [C_b, R, L] stack in
+        original client order, and the reducers are bucket-capacity
+        invariant, so the sharded robust trajectory is bitwise identical
+        to the unsharded one (stronger than the mean path, whose psum
+        reassociates the sum — DESIGN.md §11)."""
+        if cf is not None:
+            grads = grads * cf.astype(jnp.float32)[:, None, None]
+        if poison is not None:
+            grads = grads + poison.astype(jnp.float32)
+        fin = jnp.isfinite(grads).all(axis=(1, 2)).astype(jnp.float32)
+        cwe = cw * fin                       # exact: fin is 0.0/1.0
+        ga, cwea = jax.lax.all_gather((grads, cwe), "data", axis=0,
+                                      tiled=True)
+        return losses, ga, cwea
+
+    def _robust_tail(self, w, v, grads, cw_eff, noise):
+        """Replicated robust tail: reduce the gathered full stack with the
+        engine's aggregator and apply the same FMA-fenced inv=1.0 update
+        as the single-device robust branch (bitwise-identical inputs ->
+        bitwise-identical round)."""
+        ghat, ast = self.aggregator.reduce(grads, cw_eff)
+        n_ok = cw_eff.sum()
+        w2, g, step = ops.packed_apply_mean_update(
+            w, ghat, jnp.float32(1.0), self.eta, noise=noise)
+        alive = n_ok > 0.0
+        w2 = jnp.where(alive, w2, w)
+        g = jnp.where(alive, g, v)
+        return w2, g, step, n_ok.astype(jnp.int32), ast
 
     def _guarded_tail(self, w, v, gsum, cnt, inv, noise):
         """Replicated guard tail for the sharded bodies: renormalize the
@@ -592,72 +708,90 @@ class RoundEngine:
         return w2, g, step, n_ok.astype(jnp.int32)
 
     def _round_shared_sharded(self, w, v, xs, ys, sw, cw, inv, k, noise=None,
-                              cf=None):
+                              cf=None, poison=None):
         """Mesh variant of _round_shared: threshold / mask / FedSGD update
         replicated OUTSIDE the shard_map region (the shard_map replication
         checker has no rule for the `while` ops inside the threshold
         search and the FMA fence), per-shard gradient scan + the round's
-        single psum inside. Traced by both the per-round jit and the block
-        scan, like its single-device sibling. `noise` (replicated) joins
-        the replicated update tail — the collective count is unchanged.
-        `cf` (per-client corruption factors) shards with the client axis."""
+        single collective inside (the mean path's psum, or the robust
+        path's all_gather when an aggregator is set — the reducers need
+        the full client stack). Traced by both the per-round jit and the
+        block scan, like its single-device sibling. `noise` (replicated)
+        joins the replicated update tail — the collective count is
+        unchanged. `cf` / `poison` (per-client fault operands) shard with
+        the client axis."""
         q = (w * v) ** 2
         thr = kth_smallest_threshold(q, self.prunable, k)
         _, mask = ops.packed_importance_mask(w, v, self.prunable, thr,
                                              impl=self.kernel_impl)
         pruned = w * mask
 
-        if cf is None:
-            def body(pruned, mask, xs, ys, sw, cw):
-                losses, grads = self._grads_shared(pruned, mask, xs, ys, sw)
-                return self._guarded_partial(losses, grads, cw, None)
+        robust = self.aggregator is not None
+        partial = self._robust_partial if robust else self._guarded_partial
 
-            losses, gsum, cnt = shard_map(
-                body, mesh=self.mesh,
-                in_specs=(P(), P(), P("data"), P("data"), P("data"),
-                          P("data")),
-                out_specs=(P("data"), P(), P()))(pruned, mask, xs, ys, sw, cw)
+        def body(pruned, mask, xs, ys, sw, cw, *extra):
+            losses, grads = self._grads_shared(pruned, mask, xs, ys, sw)
+            return partial(losses, grads, cw,
+                           extra[0] if cf is not None else None,
+                           extra[-1] if poison is not None else None)
+
+        specs = (P(), P(), P("data"), P("data"), P("data"), P("data"))
+        args = (pruned, mask, xs, ys, sw, cw)
+        if cf is not None:
+            specs, args = specs + (P("data"),), args + (cf,)
+        if poison is not None:
+            specs, args = specs + (P("data"),), args + (poison,)
+        # the robust tail reduces the all_gather'd full stack identically
+        # on every shard — genuinely replicated, but the static replication
+        # checker has no rule for gather-then-reduce (unlike psum), so the
+        # check is disabled on that path only
+        losses, a, b = shard_map(
+            body, mesh=self.mesh, in_specs=specs,
+            out_specs=(P("data"), P(), P()), check_rep=not robust)(*args)
+        if robust:
+            w2, g, step, n_ok, ast = self._robust_tail(w, v, a, b, noise)
         else:
-            def body(pruned, mask, xs, ys, sw, cw, cf_):
-                losses, grads = self._grads_shared(pruned, mask, xs, ys, sw)
-                return self._guarded_partial(losses, grads, cw, cf_)
-
-            losses, gsum, cnt = shard_map(
-                body, mesh=self.mesh,
-                in_specs=(P(), P(), P("data"), P("data"), P("data"),
-                          P("data"), P("data")),
-                out_specs=(P("data"), P(), P()))(pruned, mask, xs, ys, sw,
-                                                 cw, cf)
-        w2, g, step, n_ok = self._guarded_tail(w, v, gsum, cnt, inv, noise)
-        return w2, g, losses, thr, step, n_ok
+            w2, g, step, n_ok = self._guarded_tail(w, v, a, b, inv, noise)
+            ast = jnp.int32(0)
+        return w2, g, losses, thr, step, n_ok, ast
 
     def _round_multi_sharded(self, w, v, xs, ys, sw, cw, inv, ks, noise=None,
-                             cf=None):
+                             cf=None, poison=None):
         """Mesh variant of _round_multi (see _round_shared_sharded)."""
         q = (w * v) ** 2
         thr = kth_smallest_threshold(q, self.prunable, ks)      # [C]
 
-        def mk_body(with_cf):
-            def body(w_, v_, pr, thr_, xs_, ys_, sw_, cw_, *cf_):
-                # per-shard masks from the local thresholds: the batched
-                # kernel reads the replicated (w, v) once, local masks only
-                _, masks = ops.packed_importance_masks(w_, v_, pr, thr_,
-                                                       impl=self.kernel_impl)
-                losses, grads = self._grads_multi(w_, masks, xs_, ys_, sw_)
-                return self._guarded_partial(losses, grads, cw_,
-                                             cf_[0] if with_cf else None)
-            return body
+        robust = self.aggregator is not None
+        partial = self._robust_partial if robust else self._guarded_partial
+
+        def body(w_, v_, pr, thr_, xs_, ys_, sw_, cw_, *extra):
+            # per-shard masks from the local thresholds: the batched
+            # kernel reads the replicated (w, v) once, local masks only
+            _, masks = ops.packed_importance_masks(w_, v_, pr, thr_,
+                                                   impl=self.kernel_impl)
+            losses, grads = self._grads_multi(w_, masks, xs_, ys_, sw_)
+            return partial(losses, grads, cw_,
+                           extra[0] if cf is not None else None,
+                           extra[-1] if poison is not None else None)
 
         specs = (P(), P(), P(), P("data"), P("data"), P("data"),
                  P("data"), P("data"))
         args = (w, v, self.prunable, thr, xs, ys, sw, cw)
         if cf is not None:
             specs, args = specs + (P("data"),), args + (cf,)
-        losses, gsum, cnt = shard_map(
-            mk_body(cf is not None), mesh=self.mesh, in_specs=specs,
-            out_specs=(P("data"), P(), P()))(*args)
-        w2, g, step, n_ok = self._guarded_tail(w, v, gsum, cnt, inv, noise)
-        return w2, g, losses, thr, step, n_ok
+        if poison is not None:
+            specs, args = specs + (P("data"),), args + (poison,)
+        # see _round_shared_sharded: robust outputs are replicated by
+        # construction (gather-then-reduce), invisible to the static check
+        losses, a, b = shard_map(
+            body, mesh=self.mesh, in_specs=specs,
+            out_specs=(P("data"), P(), P()), check_rep=not robust)(*args)
+        if robust:
+            w2, g, step, n_ok, ast = self._robust_tail(w, v, a, b, noise)
+        else:
+            w2, g, step, n_ok = self._guarded_tail(w, v, a, b, inv, noise)
+            ast = jnp.int32(0)
+        return w2, g, losses, thr, step, n_ok, ast
 
     def _shared_sharded_impl(self, w, v, xs, ys, sw, cw, inv, k):
         self.n_traces += 1
@@ -675,20 +809,17 @@ class RoundEngine:
         population when known (padding clients cost real gradient FLOPs, so
         full participation must not pad past the roster). A training run
         compiles at most log2(C_max)+1 step traces per lambda family."""
-        per = -(-int(n_clients) // self.shards)
-        if self.bucket:
-            p2 = 1 << (per - 1).bit_length()
-            if self.max_clients is not None:
-                p2 = min(p2, max(per, -(-self.max_clients // self.shards)))
-            per = p2
-        return per * self.shards
+        return bucket_capacity(n_clients, shards=self.shards,
+                               bucket=self.bucket,
+                               max_clients=self.max_clients)
 
     def init_buffers(self, params: PyTree) -> tuple[jnp.ndarray, jnp.ndarray]:
         w = self.pack.pack(params)
         return w, jnp.zeros_like(w)
 
     def round_step(self, w, v, xs, ys, lams, sample_weights=None,
-                   noise=None, upload_weights=None, corrupt=None):
+                   noise=None, upload_weights=None, corrupt=None,
+                   poison=None):
         """One full round. xs: [C, B, ...], ys: [C, B], lams: [C] host-side
         pruning ratios for the selected clients; sample_weights: optional
         [C, B] 0/1 per-sample weights (ragged clients padded to B);
@@ -702,6 +833,10 @@ class RoundEngine:
         corrupt: optional [C] per-client gradient factors (1.0 = clean,
         NaN = poisoned) — a traced operand, routed through the lazily
         built fault entry points.
+        poison: optional [C, R, L] additive upload poison (zeros = clean
+        client) — the GaussianPoison byzantine axis; it rides the same
+        fault entries (a poisoned round always carries a `cf` operand
+        too, ones-filled when no multiplicative fault fired).
         Returns (w', v', losses [C], threshold, step) — all device arrays;
         nothing is synced to host (`last_n_ok` additionally holds the
         round's lazy survivor count). `step` is the applied update eta*v'
@@ -758,18 +893,32 @@ class RoundEngine:
             cw = jnp.asarray(cw_host)
             surv = float(np.asarray(uw, np.float64).sum())
             inv = np.float32(1.0 / surv) if surv > 0 else np.float32(0.0)
+        po = None
+        if poison is not None:
+            po = jnp.asarray(poison, jnp.float32)
+            if po.shape[0] != n_clients:
+                raise ValueError(
+                    f"poison leading dim {po.shape[0]} != {n_clients}")
+            if pad:
+                # padding clients stay clean: additive identity is 0
+                po = jnp.concatenate(
+                    [po, jnp.zeros((pad,) + po.shape[1:], jnp.float32)])
         cf = None
-        if corrupt is not None:
+        if corrupt is not None or po is not None:
             cf_host = np.ones(c_b, np.float32)   # padding clients clean
-            cf_host[:n_clients] = np.asarray(corrupt, np.float32)
+            if corrupt is not None:
+                cf_host[:n_clients] = np.asarray(corrupt, np.float32)
             cf = jnp.asarray(cf_host)
+        fargs = () if cf is None else (
+            (cf,) + (() if po is None else (po,)))
 
         nz = () if noise is None else (jnp.asarray(noise),)
         if np.all(ks == ks[0]):
             k_dev = jnp.asarray(ks[0], jnp.int32)
             if cf is not None:
-                out = self._fault_entry("shared", noise is not None)(
-                    w, v, xs, ys, sw, cw, inv, k_dev, cf, *nz)
+                out = self._fault_entry("shared", noise is not None,
+                                        po is not None)(
+                    w, v, xs, ys, sw, cw, inv, k_dev, *fargs, *nz)
             else:
                 out = (self._step_shared(w, v, xs, ys, sw, cw, inv, k_dev)
                        if noise is None else
@@ -780,15 +929,17 @@ class RoundEngine:
                 [ks, np.full(pad, ks[-1], np.int32)]) if pad else ks
             ks_dev = jnp.asarray(ks_b)
             if cf is not None:
-                out = self._fault_entry("multi", noise is not None)(
-                    w, v, xs, ys, sw, cw, inv, ks_dev, cf, *nz)
+                out = self._fault_entry("multi", noise is not None,
+                                        po is not None)(
+                    w, v, xs, ys, sw, cw, inv, ks_dev, *fargs, *nz)
             else:
                 out = (self._step_multi(w, v, xs, ys, sw, cw, inv, ks_dev)
                        if noise is None else
                        self._step_multi_nz(w, v, xs, ys, sw, cw, inv, ks_dev,
                                            *nz))
-        w2, g, losses, thr, step, n_ok = out
+        w2, g, losses, thr, step, n_ok, ast = out
         self.last_n_ok = n_ok
+        self.last_agg_stat = ast
         if pad:
             losses = losses[:n_clients]
             if thr.ndim:                      # per-client thresholds
@@ -797,7 +948,7 @@ class RoundEngine:
 
     def block_step(self, w, v, store, cids, idxs, lams, counts,
                    sample_weights=None, noises=None, upload_weights=None,
-                   corrupt=None):
+                   corrupt=None, poisons=None):
         """K rounds in ONE jitted dispatch (`lax.scan` over the round axis).
 
         store : ClientStore — device-resident [C_all, N_max, ...] data.
@@ -822,10 +973,16 @@ class RoundEngine:
             the zero-per-round-H2D property is preserved — and multiply
             into the counts-derived client weights on device.
         corrupt : [K, C] per-client gradient factors or None (1.0 =
-            clean). Either fault operand routes the block through the
-            lazily built fault entry, which always consumes BOTH stacks
-            (ones-filled defaults are exact no-ops), so a fault run uses
-            one entry per (shape bucket) regardless of which kinds fired.
+            clean). Any fault operand routes the block through the
+            lazily built fault entry, which always consumes BOTH [K, C]
+            stacks (ones-filled defaults are exact no-ops), so a fault run
+            uses one entry per (shape bucket) regardless of which kinds
+            fired.
+        poisons : [K, C, R, L] additive upload poison or None (zeros =
+            clean) — the byzantine GaussianPoison axis. The one block
+            operand whose size scales with the model; still ONE upload per
+            block, never per round, so the zero-per-round-H2D property
+            holds.
 
         Returns (w', v', losses [K, C_b], thresholds [K] or [K, C_b]) —
         all device arrays, nothing synced; `losses[k, counts[k]:]` belongs
@@ -875,7 +1032,20 @@ class RoundEngine:
         else:
             sw = jnp.asarray(pad_cols(
                 np.asarray(sample_weights, np.float32)))
-        faulted = upload_weights is not None or corrupt is not None
+        po = None
+        if poisons is not None:
+            po = np.asarray(poisons, np.float32)
+            if po.shape[:2] != (n_rounds, c_max):
+                raise ValueError(
+                    f"poisons leading dims {po.shape[:2]} != "
+                    f"({n_rounds}, {c_max})")
+            if pad:
+                # padding clients stay clean: additive identity is 0
+                po = np.concatenate(
+                    [po, np.zeros((n_rounds, pad) + po.shape[2:],
+                                  np.float32)], axis=1)
+        faulted = (upload_weights is not None or corrupt is not None
+                   or po is not None)
         if faulted:
             # per-round survivor counts drive the host mean scalars; the
             # float64 1/n -> float32 cast gives the identical value to the
@@ -913,11 +1083,11 @@ class RoundEngine:
         ks_dev = jnp.asarray(ks[:, 0]) if shared else jnp.asarray(ks)
         if faulted:
             fn = self._fault_entry("blk_shared" if shared else "blk_multi",
-                                   noises is not None)
+                                   noises is not None, po is not None)
             out = fn(w, v, store.x, store.y, jnp.asarray(cids),
                      jnp.asarray(idxs), sw, counts_dev, inv, ks_dev,
                      jnp.asarray(pad_ones(uw)), jnp.asarray(pad_ones(cfa)),
-                     *nz)
+                     *(() if po is None else (jnp.asarray(po),)), *nz)
         elif shared:
             fn = self._blk_shared if noises is None else self._blk_shared_nz
             out = fn(w, v, store.x, store.y, jnp.asarray(cids),
@@ -926,6 +1096,7 @@ class RoundEngine:
             fn = self._blk_multi if noises is None else self._blk_multi_nz
             out = fn(w, v, store.x, store.y, jnp.asarray(cids),
                      jnp.asarray(idxs), sw, counts_dev, inv, ks_dev, *nz)
-        w2, v2, losses, thrs, n_oks = out
+        w2, v2, losses, thrs, n_oks, asts = out
         self.last_n_ok = n_oks
+        self.last_agg_stat = asts
         return w2, v2, losses, thrs

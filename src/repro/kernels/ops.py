@@ -222,7 +222,17 @@ def packed_client_quarantine(grads, cweights, inv):
       carries (w, v) unchanged through the round (params untouched).
 
     Zero-weight clients (client-axis padding, host-dropped faults) are
-    excluded from both counts by construction (their cw is already 0)."""
+    excluded from both counts by construction (their cw is already 0).
+
+    Contract — the guard detects NON-FINITE uploads only. A *finite*
+    corrupted or adversarial upload (`CorruptUpload(mode="scale")`,
+    `SignFlip`, `ScaledMalicious` — core/faults.py) passes unflagged BY
+    DESIGN: finiteness is the only property checkable without a model of
+    honest gradients, so the quarantine is a crash barrier, not a defense.
+    Bounding finite adversaries is the robust aggregators' job
+    (core/aggregators.py / packed_robust_aggregate); reporting keeps the
+    two failure classes distinct (`summary["faults"]["n_quarantined"]` vs
+    `n_corrupt_finite` — core/federated.py)."""
     cw = cweights.astype(jnp.float32)
     fin = jnp.isfinite(grads).all(axis=(1, 2))
     cw_eff = cw * fin.astype(jnp.float32)
@@ -250,6 +260,179 @@ def packed_weighted_grad_sum(grads, cweights):
         acc = jnp.where(cw[c] > 0.0,          # order as the reference
                         acc + cw[c] * grads[c].astype(jnp.float32), acc)
     return acc
+
+
+_INT32_MAX = 2**31 - 1
+
+
+def _order_keys(x):
+    """Monotone int32 total-order keys for fp32 values: ``b ^ ((b >> 31) &
+    0x7fffffff)`` on the bit pattern (an involution) maps IEEE-754 floats
+    to integers that compare like the values, negatives included — the
+    same bit-pattern machinery the PR-1 k-th-smallest threshold search
+    uses, here driving client-axis rank selection. -0.0 orders strictly
+    below +0.0 (distinct keys), so ties always carry identical bits and
+    any sort — stable, unstable, or a sort network — produces the same
+    per-rank values."""
+    b = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.int32)
+    return b ^ ((b >> 31) & jnp.int32(0x7FFFFFFF))
+
+
+def packed_client_rank_sort(grads, cweights, *, impl="auto"):
+    """Per-coordinate rank sort along the client axis of a [C, R, 128]
+    gradient stack; zero-weight (padding / quarantined) clients are keyed
+    to INT32_MAX so every rank < n_valid holds a real value and ranks >=
+    n_valid hold don't-cares the weight-aware reducers never read. "pallas"
+    runs the odd-even transposition-network kernel
+    (pruning_mask.client_rank_sort); "xla" a stable `lax.sort` on the same
+    keys — both emit bitwise-identical per-rank values (ties share bit
+    patterns). Valid lanes cannot collide with the sentinel: a key of
+    INT32_MAX is a NaN bit pattern, and non-finite clients are quarantined
+    to weight 0 before rank selection."""
+    if _resolve_impl(impl) == "pallas":
+        return _pm.client_rank_sort(
+            grads, cweights, block_rows=_packed_block_rows(grads.shape[1]))
+    g = grads.astype(jnp.float32)
+    key = _order_keys(g)
+    invalid = ~(cweights.astype(jnp.float32) > 0.0)
+    key = jnp.where(invalid[:, None, None], jnp.int32(_INT32_MAX), key)
+    _, sv = jax.lax.sort((key, g), dimension=0, num_keys=1, is_stable=True)
+    return sv
+
+
+def _sorted_median(sorted_vals, nn):
+    """Midpoint of ranks (nn-1)//2 and nn//2 of a rank-sorted stack — the
+    median over the nn valid lanes ((a+a)*0.5 is exact for odd counts, so
+    odd-count medians are the rank value bit-for-bit)."""
+    lo = jax.lax.dynamic_index_in_dim(sorted_vals, (nn - 1) // 2, axis=0,
+                                      keepdims=False)
+    hi = jax.lax.dynamic_index_in_dim(sorted_vals, nn // 2, axis=0,
+                                      keepdims=False)
+    return (lo + hi) * 0.5
+
+
+def packed_robust_aggregate(grads, cweights, *, kind, impl="auto",
+                            beta=0.1, tau=None, f=1, m=None):
+    """Weight-aware Byzantine-robust reduction of a packed gradient stack.
+
+    grads: [C, R, 128] stacked per-client masked gradients; cweights: [C]
+    effective validity weights — 0 marks client-axis padding, host-dropped
+    uploads, AND quarantined (non-finite) clients, exactly the `cw_eff`
+    ops.packed_client_quarantine emits. Returns ``(ghat, stat)``: the
+    robust aggregate [R, 128] fp32 (already survivor-normalized — the
+    caller applies it with inv=1.0 through the FMA-fenced update tail) and
+    an int32 diagnostic count (clients trimmed / clipped / excluded this
+    round, 0 for an all-faulted round).
+
+    Weight-aware contract: zero-weight lanes are excluded from ranks,
+    norms, and distance scores — their (garbage) values cannot influence
+    any output bit — and every mean renormalizes over the lanes that
+    actually contributed. All client-axis reductions are ordered
+    where-accumulates (or monolithic dots) over the valid prefix, so the
+    result is invariant to the bucket capacity C and bitwise identical
+    between the packed graph, the eager reference backend, and the
+    all-gather sharded path (DESIGN.md §11).
+
+    Kinds (core/aggregators.py wraps these as registry entries):
+      * "coord_median"     — coordinate-wise median over valid lanes via
+        rank sort (Pallas sort network on TPU, stable lax.sort mirror
+        elsewhere — `packed_client_rank_sort`).
+      * "trimmed_mean"     — drop the floor(beta*n) smallest and largest
+        values per coordinate, mean the middle; beta in [0, 0.5).
+      * "norm_clip"        — scale client c by min(1, tau/||g_c||); tau
+        None/0 = adaptive median-of-norms over valid clients.
+      * "multi_krum"       — Blanchard-style selection: per-client score =
+        sum of its n-f-2 smallest squared distances to other valid
+        clients (one Gram matmul, invalid pairs +inf), keep the m
+        lowest-scoring clients (default n-f), mean them.
+    """
+    g = grads.astype(jnp.float32)
+    cw = cweights.astype(jnp.float32)
+    valid = cw > 0.0
+    n = valid.astype(jnp.int32).sum()
+    nn = jnp.maximum(n, 1)
+    c_b = g.shape[0]
+    if kind == "coord_median":
+        sv = packed_client_rank_sort(g, cw, impl=impl)
+        ghat = _sorted_median(sv, nn)
+        # clients outside the (one- or two-element) median window
+        stat = jnp.maximum(n - 2 + (n & 1), 0)
+    elif kind == "trimmed_mean":
+        if not 0.0 <= beta < 0.5:
+            raise ValueError(f"trimmed_mean beta must be in [0, 0.5), "
+                             f"got {beta}")
+        sv = packed_client_rank_sort(g, cw, impl=impl)
+        t = jnp.floor(jnp.float32(beta)
+                      * nn.astype(jnp.float32)).astype(jnp.int32)
+        keep = jnp.maximum(nn - 2 * t, 1)
+        acc = jnp.zeros(g.shape[1:], jnp.float32)
+        for c in range(c_b):                 # static unroll: rank order
+            acc = jnp.where((c >= t) & (c < nn - t), acc + sv[c], acc)
+        ghat = acc * (1.0 / keep.astype(jnp.float32))
+        stat = jnp.minimum(2 * t, n)
+    elif kind == "norm_clip":
+        # per-client L2 norms as monolithic dots (deterministic reduction
+        # order for a given [C, R, L] shape on every backend)
+        sq = jnp.einsum("crl,crl->c", g, g)
+        norms = jnp.sqrt(sq)
+        if tau is None or float(tau) <= 0.0:
+            key = jnp.where(valid, _order_keys(norms),
+                            jnp.int32(_INT32_MAX))
+            _, sn = jax.lax.sort((key, norms), dimension=0, num_keys=1,
+                                 is_stable=True)
+            lo = jax.lax.dynamic_index_in_dim(sn, (nn - 1) // 2, axis=0,
+                                              keepdims=False)
+            hi = jax.lax.dynamic_index_in_dim(sn, nn // 2, axis=0,
+                                              keepdims=False)
+            tau_t = (lo + hi) * 0.5
+        else:
+            tau_t = jnp.float32(tau)
+        # a quarantined client's NaN norm fails both compares: factor 1.0,
+        # and its weight is already 0 in the sum
+        clipped = valid & (norms > tau_t)
+        factor = jnp.where(norms > tau_t, tau_t / norms, jnp.float32(1.0))
+        gsum = packed_weighted_grad_sum(g * factor[:, None, None], cw)
+        ghat = gsum * (1.0 / nn.astype(jnp.float32))
+        stat = clipped.astype(jnp.int32).sum()
+    elif kind == "multi_krum":
+        if int(f) < 0:
+            raise ValueError(f"multi_krum f must be >= 0, got {f}")
+        if m is not None and int(m) < 1:
+            raise ValueError(f"multi_krum m must be >= 1, got {m}")
+        gm = g.reshape(c_b, -1)
+        gram = gm @ gm.T                     # one dot: all pairwise inners
+        sq = jnp.diagonal(gram)
+        # 2*gram is exact (x2 never rounds), so the expression cannot be
+        # perturbed by FMA contraction of the subtract
+        d2 = sq[:, None] + sq[None, :] - 2.0 * gram
+        inf = jnp.float32(jnp.inf)
+        pair_ok = valid[:, None] & valid[None, :] \
+            & ~jnp.eye(c_b, dtype=bool)
+        sd = jnp.sort(jnp.where(pair_ok, d2, inf), axis=1)
+        # each valid row has n-1 finite entries, and k_nb <= n-2, so no
+        # +inf sentinel can reach a valid client's score
+        k_nb = jnp.clip(n - jnp.int32(int(f)) - 2, 1, max(c_b - 1, 1))
+        score = jnp.zeros((c_b,), jnp.float32)
+        for j in range(c_b):                 # static unroll: rank order
+            score = jnp.where(j < k_nb, score + sd[:, j], score)
+        score = jnp.where(valid, score, inf)
+        # valid clients first even on tied +inf scores (the sentinel is
+        # strictly above the +inf key), stable on remaining ties
+        skey = jnp.where(valid, _order_keys(score), jnp.int32(_INT32_MAX))
+        m_sel = jnp.clip(
+            n - jnp.int32(int(f)) if m is None else jnp.int32(int(m)),
+            1, nn)
+        _, order = jax.lax.sort(
+            (skey, jnp.arange(c_b, dtype=jnp.int32)), dimension=0,
+            num_keys=1, is_stable=True)
+        sel = jnp.zeros((c_b,), jnp.float32).at[order].set(
+            (jnp.arange(c_b) < m_sel).astype(jnp.float32))
+        gsum = packed_weighted_grad_sum(g, sel * cw)
+        ghat = gsum * (1.0 / m_sel.astype(jnp.float32))
+        stat = jnp.maximum(n - m_sel, 0)
+    else:
+        raise ValueError(f"unknown robust aggregate kind {kind!r}")
+    return ghat, stat.astype(jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("impl",))

@@ -225,6 +225,71 @@ def fedsgd_aggregate_weighted(w, grads, cweights, inv, eta, *,
     )(w, grads, cw, scal)
 
 
+def _client_rank_sort_kernel(g_ref, cw_ref, o_ref):
+    """Per-coordinate client-axis sort for the robust reducers.
+
+    Loads the [C, br, c] gradient block, maps each lane to the monotone
+    int32 total-order key of its fp32 bits (the PR-1 bit-pattern trick:
+    ``b ^ ((b >> 31) & 0x7fffffff)`` orders like the float value), replaces
+    every zero-weight client's keys with INT32_MAX so padding / quarantined
+    lanes sort strictly after all real values (valid lanes can never reach
+    the sentinel — non-finite uploads are quarantined to weight 0 first),
+    and runs an odd-even transposition network over the STATIC client axis
+    — C compare-exchange passes of lane-parallel selects, no data-dependent
+    control flow. Rank r of the output holds the r-th smallest valid value
+    per coordinate; ranks >= n_valid hold don't-care values the weight-
+    aware reducers never read. Ties carry identical bit patterns, so the
+    network's output is bitwise equal to a stable sort's."""
+    n_clients = g_ref.shape[0]
+    sentinel = jnp.int32(2**31 - 1)
+    vals, keys = [], []
+    for i in range(n_clients):
+        v = g_ref[i].astype(jnp.float32)
+        b = jax.lax.bitcast_convert_type(v, jnp.int32)
+        k = b ^ ((b >> 31) & jnp.int32(0x7FFFFFFF))
+        vals.append(v)
+        keys.append(jnp.where(cw_ref[i] > 0.0, k, sentinel))
+    for p in range(n_clients):
+        for i in range(p % 2, n_clients - 1, 2):
+            ki, kj, vi, vj = keys[i], keys[i + 1], vals[i], vals[i + 1]
+            swap = ki > kj
+            keys[i] = jnp.where(swap, kj, ki)
+            keys[i + 1] = jnp.where(swap, ki, kj)
+            vals[i] = jnp.where(swap, vj, vi)
+            vals[i + 1] = jnp.where(swap, vi, vj)
+    for i in range(n_clients):
+        o_ref[i] = vals[i]
+
+
+def client_rank_sort(grads, cweights, *, block_rows: int = 256,
+                     interpret: bool | None = None):
+    """Client-axis rank sort on packed gradient stacks.
+
+    grads: [C, R, 128*k] stacked per-client gradients; cweights: [C]
+    validity weights (0 = padding / quarantined). Returns the [C, R, 128*k]
+    fp32 stack sorted per coordinate along the client axis, zero-weight
+    clients last — the shared first stage of `coord_median` and
+    `trimmed_mean` (kernels/ops.packed_robust_aggregate)."""
+    c_clients, r, c = grads.shape
+    if c % LANES:
+        raise ValueError(f"last dim must be a multiple of {LANES}")
+    br = min(block_rows, r)
+    if r % br:
+        raise ValueError(f"rows {r} must divide block {br}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    cw = jnp.asarray(cweights, jnp.float32)
+    gspec = pl.BlockSpec((c_clients, br, c), lambda i: (0, i, 0))
+    return pl.pallas_call(
+        _client_rank_sort_kernel,
+        grid=(r // br,),
+        in_specs=[gspec, pl.BlockSpec(memory_space=pl.MemorySpace.ANY)],
+        out_specs=gspec,
+        out_shape=jax.ShapeDtypeStruct((c_clients, r, c), jnp.float32),
+        interpret=interpret,
+    )(grads, cw)
+
+
 def _exponent_histogram_kernel(q_ref, pr_ref, hist_ref, acc_ref):
     """256-bin histogram over the exponent byte of non-negative fp32 q.
 

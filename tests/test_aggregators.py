@@ -1,0 +1,581 @@
+"""Byzantine-robust aggregation (core/aggregators.py, DESIGN.md §11).
+
+Coverage mirrors tests/test_faults.py's shape: unit tests for the
+registry / validation / attack-draw protocol, reducer-level weight-aware
+correctness against float64 numpy oracles (padding + quarantined lanes
+excluded bitwise), the bucket-capacity invariance that underwrites both
+the reference backend's zero-padded stack and the sharded all-gather
+path, kernel parity (Pallas interpret sort network vs the stable lax.sort
+mirror), a breakdown-point property test per reducer, and the
+differential contracts: every aggregator bitwise between backend="packed"
+(shards=1) and backend="reference" with and without an active attack,
+rpd=1 vs rpd=4 block dispatch, counter surfacing through RunResult, and
+bit-for-bit checkpoint resume with the aggregation counters. The
+slow-tier efficacy test runs benchmarks/robust_aggregation.py's grid at
+quickstart scale and asserts the defense actually defends.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (
+    DataSpec, Experiment, ExperimentSpec, ModelSpec, RunSpec, SchemeSpec,
+    SweepSpec, WirelessSpec, override_field, run_sweep,
+)
+from repro.core import (
+    AGGREGATORS, ClientData, FederatedTrainer, GaussianPoison,
+    ScaledMalicious, SignFlip, aggregator_names, make_aggregator,
+    register_aggregator,
+)
+from repro.core.aggregators import CoordMedian, MultiKrum, NormClip, TrimmedMean
+from repro.kernels import ops
+from repro.models import make_loss_fn
+from repro.wireless import ChannelModel, SystemParams
+
+from _trainer_pair import assert_trainers_bitwise, make_schedule
+
+N, ROUNDS, BATCH = 4, 6, 4
+
+AGG_CASES = [
+    ("coord_median", {}),
+    ("trimmed_mean", {"beta": 0.3}),
+    ("norm_clip", {}),
+    ("norm_clip", {"tau": 0.05}),
+    ("multi_krum", {"f": 1}),
+]
+AGG_IDS = ["coord_median", "trimmed_mean", "norm_clip_adaptive",
+           "norm_clip_fixed", "multi_krum"]
+
+
+def tiny_trainer_inputs():
+    rng = np.random.default_rng(0)
+    clients = [ClientData(rng.normal(size=(12, 4, 4, 1)).astype(np.float32),
+                          rng.integers(0, 3, size=12).astype(np.int32))
+               for _ in range(N)]
+
+    def apply_fn(p, x):
+        return x.reshape(x.shape[0], -1) @ p["w"]
+
+    params = {"w": jnp.asarray(rng.normal(size=(16, 3)).astype(np.float32))}
+    return clients, params, make_loss_fn(apply_fn)
+
+
+def run_backend_pair(aggregator=None, fault_model=None, rounds=ROUNDS):
+    """Both backends, full participation every round, the SAME aggregator
+    and fault model; packed pinned to one shard (bit-for-bit contract)."""
+    clients, params, loss_fn = tiny_trainer_inputs()
+    sched = make_schedule(np.ones((rounds, N)), 0.3)
+    sp = SystemParams.table1(N)
+    ch = ChannelModel(N)
+    out = {}
+    for backend in ("reference", "packed"):
+        kw = {"shards": 1} if backend == "packed" else {}
+        tr = FederatedTrainer(loss_fn, params, clients, eta=0.1,
+                              batch_size=BATCH, seed=0, backend=backend,
+                              fault_model=fault_model,
+                              aggregator=aggregator, **kw)
+        out[backend] = (tr, tr.run(sched, sp, ch.uplink, ch.downlink))
+    return out
+
+
+def agg_spec(*, aggregator="mean", aggregator_kwargs=None, backend="packed",
+             shards=None, rpd=1, fault_model="none", fault_kwargs=None,
+             **run_kw):
+    return ExperimentSpec(
+        data=DataSpec(dataset="synthetic-mnist", n_clients=N, sigma=5.0,
+                      n_train=160, n_test=60, seed=0),
+        model=ModelSpec(name="mlp-edge"),
+        wireless=WirelessSpec(e0=1e6, t0=1e6, seed=0,
+                              fault_model=fault_model,
+                              fault_kwargs=fault_kwargs or {}),
+        scheme=SchemeSpec(name="fixed_selection", rounds=ROUNDS, eta=0.1,
+                          batch=BATCH, ao={"outer_iters": 1},
+                          aggregator=aggregator,
+                          aggregator_kwargs=aggregator_kwargs or {}),
+        run=RunSpec(seed=0, eval_every=3, backend=backend, shards=shards,
+                    rounds_per_dispatch=rpd, **run_kw))
+
+
+# ---------------------------------------------------------------------------
+# Registry + validation
+# ---------------------------------------------------------------------------
+
+def test_registry_and_validation():
+    assert make_aggregator("mean") is None        # builtin mean path
+    assert set(aggregator_names()) >= {
+        "mean", "coord_median", "trimmed_mean", "norm_clip", "multi_krum"}
+    with pytest.raises(TypeError, match="mean takes no kwargs"):
+        make_aggregator("mean", beta=0.1)
+    with pytest.raises(KeyError, match="registered"):
+        make_aggregator("wat")
+    with pytest.raises(ValueError, match="beta"):
+        make_aggregator("trimmed_mean", beta=0.5)
+    with pytest.raises(ValueError, match="f must be"):
+        make_aggregator("multi_krum", f=-1)
+    with pytest.raises(ValueError, match="m must be"):
+        make_aggregator("multi_krum", m=0)
+    with pytest.raises(KeyError, match="already registered"):
+        register_aggregator("mean", lambda **kw: None)
+    # override=True replaces; restore the original afterwards
+    orig = AGGREGATORS["mean"]
+    try:
+        marker = object()
+        register_aggregator("mean", lambda **kw: marker, override=True)
+        assert make_aggregator("mean") is marker
+    finally:
+        AGGREGATORS["mean"] = orig
+    # instances are frozen + hashable with a canonical identity key
+    a, b = make_aggregator("trimmed_mean", beta=0.2), TrimmedMean(beta=0.2)
+    assert a == b and a.spec_key == b.spec_key
+    assert a.spec_key != TrimmedMean(beta=0.3).spec_key
+    assert TrimmedMean().stat_field == "n_trimmed"
+    assert NormClip().stat_field == "n_clipped"
+    assert CoordMedian().stat_field == "n_excluded"
+    assert MultiKrum().stat_field == "n_excluded"
+
+
+def test_spec_roundtrip_and_sweepable():
+    spec = agg_spec(aggregator="trimmed_mean",
+                    aggregator_kwargs={"beta": 0.2})
+    assert ExperimentSpec.from_json(spec.to_json()) == spec
+    s2 = override_field(spec, "scheme.aggregator_kwargs.beta", 0.4)
+    assert s2.scheme.aggregator_kwargs == {"beta": 0.4}
+    assert spec.scheme.aggregator_kwargs == {"beta": 0.2}   # no aliasing
+    s3 = override_field(spec, "scheme.aggregator", "coord_median")
+    assert s3.scheme.aggregator == "coord_median"
+
+
+# ---------------------------------------------------------------------------
+# Attack draw protocol
+# ---------------------------------------------------------------------------
+
+def test_byzantine_draw_determinism_and_population_invariance():
+    all_ids = np.arange(8)
+    for cls, field in ((SignFlip, "corrupt"), (ScaledMalicious, "corrupt")):
+        m = cls(rate=0.5, seed=3)
+        a = m.draw(5, 8, all_ids)
+        assert a.upload_ok.all()                  # uploads DO arrive
+        np.testing.assert_array_equal(a.corrupt, m.draw(5, 8, all_ids).corrupt)
+        sub = m.draw(5, 8, np.array([2, 6]))
+        np.testing.assert_array_equal(sub.corrupt, a.corrupt[[2, 6]])
+        assert not np.array_equal(a.corrupt, m.draw(6, 8, all_ids).corrupt)
+        with pytest.raises(ValueError, match="rate"):
+            cls(rate=1.5)
+    # the two multiplicative attacks share the flag stream at one key:
+    # same hit set, different payloads
+    sf = SignFlip(rate=0.5, scale=2.0, seed=3).draw(5, 8, all_ids)
+    sm = ScaledMalicious(rate=0.5, scale=7.0, seed=3).draw(5, 8, all_ids)
+    np.testing.assert_array_equal(sf.corrupt == -2.0, sm.corrupt == 7.0)
+    assert ((sf.corrupt == 1.0) | (sf.corrupt == -2.0)).all()
+
+
+def test_byzantine_exact_mode_pins_attacker_count():
+    """exact=True: round(rate * n) attackers EVERY round (the f-of-n
+    threat model), membership rotating, selection-invariance intact."""
+    m = ScaledMalicious(rate=0.3, scale=10.0, seed=0, exact=True)
+    all_ids = np.arange(10)
+    rosters = []
+    for r in range(30):
+        d = m.draw(r, 10, all_ids)
+        hit = d.corrupt == 10.0
+        assert int(hit.sum()) == 3, r
+        rosters.append(tuple(np.flatnonzero(hit)))
+        sub = m.draw(r, 10, np.array([0, 4, 9]))
+        np.testing.assert_array_equal(sub.corrupt, d.corrupt[[0, 4, 9]])
+    assert len(set(rosters)) > 1                  # membership rotates
+    # degenerate fractions clamp cleanly
+    z = ScaledMalicious(rate=0.01, exact=True).draw(0, 10, all_ids)
+    assert (z.corrupt == 1.0).all()               # round(.1) = 0 attackers
+    full = ScaledMalicious(rate=0.99, exact=True).draw(0, 10, all_ids)
+    assert (full.corrupt != 1.0).all()            # round(9.9) = everyone
+    # exact mode rides the poison model identically
+    gp = GaussianPoison(rate=0.3, sigma=0.5, seed=0, exact=True)
+    assert int(np.asarray(gp.draw(2, 10, all_ids).poison.flags).sum()) == 3
+
+
+def test_gaussian_poison_draw_protocol():
+    m = GaussianPoison(rate=0.6, sigma=0.5, seed=4)
+    all_ids = np.arange(8)
+    d = m.draw(2, 8, all_ids)
+    assert d.upload_ok.all() and d.corrupt is None
+    assert d.poison is not None
+    flags = np.asarray(d.poison.flags, bool)
+    assert flags.any() and not flags.all()        # the seed really poisons
+    valid = np.zeros((3, 128), np.float32)
+    valid[:, :100] = 1.0
+    stack = d.poison((3, 128), valid)
+    assert stack.shape == (8, 3, 128) and stack.dtype == np.float32
+    # clean rows exactly zero; flagged rows nonzero only on valid lanes
+    assert not stack[~flags].any()
+    assert all(stack[i].any() for i in np.flatnonzero(flags))
+    np.testing.assert_array_equal(stack * valid, stack)
+    # per-client keying: a sub-selection reproduces the same rows
+    sub = m.draw(2, 8, np.array([1, 5]))
+    np.testing.assert_array_equal(sub.poison.flags, flags[[1, 5]])
+    if flags[[1, 5]].any():
+        np.testing.assert_array_equal(sub.poison((3, 128), valid),
+                                      stack[[1, 5]])
+    # rate=0 draws clean (no poison callable at all)
+    assert GaussianPoison(rate=0.0).draw(2, 8, all_ids).poison is None
+    with pytest.raises(ValueError, match="sigma"):
+        GaussianPoison(sigma=-1.0)
+
+
+# ---------------------------------------------------------------------------
+# Reducer-level correctness: float64 numpy oracles + weight-aware ranks
+# ---------------------------------------------------------------------------
+
+def np_oracle(kind, g, cw, *, beta=0.1, f=1, m=None, tau=None):
+    """Float64 oracle over the VALID rows only — the semantics the
+    weight-aware packed reducers must match."""
+    g = np.asarray(g, np.float64)
+    gv = g[np.asarray(cw) > 0]
+    n = gv.shape[0]
+    if kind == "coord_median":
+        return np.median(gv, axis=0)
+    if kind == "trimmed_mean":
+        t = int(np.floor(beta * n))
+        sv = np.sort(gv, axis=0)
+        return sv[t:n - t].mean(axis=0)
+    if kind == "norm_clip":
+        norms = np.linalg.norm(gv.reshape(n, -1), axis=1)
+        tau_v = float(np.median(norms)) if tau is None else float(tau)
+        fac = np.minimum(1.0, tau_v / norms)
+        return (gv * fac[:, None, None]).mean(axis=0)
+    if kind == "multi_krum":
+        d2 = ((gv.reshape(n, 1, -1) - gv.reshape(1, n, -1)) ** 2).sum(-1)
+        np.fill_diagonal(d2, np.inf)
+        k = min(max(n - f - 2, 1), n - 1)
+        scores = np.sort(d2, axis=1)[:, :k].sum(axis=1)
+        msel = max(1, min(n - f if m is None else m, n))
+        keep = np.argsort(scores, kind="stable")[:msel]
+        return gv[keep].mean(axis=0)
+    raise ValueError(kind)
+
+
+def garbage_stack(c=8, r=4, n_valid=5, seed=0):
+    """[c, r, 128] stack whose invalid rows hold adversarial garbage
+    (NaN / inf / huge) that must not influence any output bit."""
+    rng = np.random.default_rng(seed)
+    g = rng.normal(size=(c, r, 128)).astype(np.float32)
+    cw = np.zeros(c, np.float32)
+    cw[:n_valid] = 1.0
+    g[n_valid] = np.nan
+    if n_valid + 1 < c:
+        g[n_valid + 1] = np.inf
+    if n_valid + 2 < c:
+        g[n_valid + 2] = 1e30
+    return jnp.asarray(g), jnp.asarray(cw)
+
+
+@pytest.mark.parametrize("name,kwargs", AGG_CASES, ids=AGG_IDS)
+def test_reducer_matches_numpy_oracle(name, kwargs):
+    g, cw = garbage_stack()
+    agg = make_aggregator(name, **kwargs)
+    ghat, stat = agg.reduce(g, cw)
+    oracle = np_oracle(name, g, cw, **kwargs)
+    np.testing.assert_allclose(np.asarray(ghat, np.float64), oracle,
+                               rtol=2e-5, atol=1e-7)
+    assert int(stat) >= 0
+    assert bool(jnp.isfinite(ghat).all())         # garbage never leaks
+
+
+@pytest.mark.parametrize("name,kwargs", AGG_CASES, ids=AGG_IDS)
+def test_reducer_bucket_capacity_invariance_bitwise(name, kwargs):
+    """The designed contract: zero-weight lanes (garbage values included)
+    change NO output bit, so a compact stack of the valid rows and any
+    zero-padded / garbage-padded bucket agree exactly — what lets the
+    reference backend zero-pad and the sharded path all-gather."""
+    g, cw = garbage_stack()
+    agg = make_aggregator(name, **kwargs)
+    ghat_b, stat_b = agg.reduce(g, cw)
+    nv = int(np.asarray(cw).sum())
+    ghat_c, stat_c = agg.reduce(g[:nv], jnp.ones(nv, jnp.float32))
+    np.testing.assert_array_equal(np.asarray(ghat_b), np.asarray(ghat_c))
+    assert int(stat_b) == int(stat_c)
+    # ... and permuting which lanes are invalid doesn't matter either
+    perm = np.array([5, 0, 6, 1, 7, 2, 3, 4])
+    ghat_p, stat_p = agg.reduce(jnp.asarray(np.asarray(g)[perm]),
+                                jnp.asarray(np.asarray(cw)[perm]))
+    np.testing.assert_array_equal(np.asarray(ghat_b), np.asarray(ghat_p))
+    assert int(stat_b) == int(stat_p)
+
+
+def test_reducer_stat_counts():
+    g, cw = garbage_stack(n_valid=6)              # 6 valid lanes
+    _, st = make_aggregator("trimmed_mean", beta=0.34).reduce(g, cw)
+    assert int(st) == 4                           # floor(.34*6)=2 per tail
+    _, st = make_aggregator("coord_median").reduce(g, cw)
+    assert int(st) == 4                           # 6 valid, 2-lane window
+    _, st = make_aggregator("multi_krum", f=2).reduce(g, cw)
+    assert int(st) == 2                           # keep m = n - f = 4
+    _, st = make_aggregator("norm_clip", tau=1e9).reduce(g, cw)
+    assert int(st) == 0                           # nobody over a huge tau
+    _, st = make_aggregator("norm_clip", tau=1e-9).reduce(g, cw)
+    assert int(st) == 6                           # everyone over a tiny tau
+
+
+def test_rank_sort_pallas_vs_xla_bitwise():
+    g, cw = garbage_stack(c=8, r=4, n_valid=5)
+    a = ops.packed_client_rank_sort(g, cw, impl="pallas")
+    b = ops.packed_client_rank_sort(g, cw, impl="xla")
+    nv = int(np.asarray(cw).sum())
+    np.testing.assert_array_equal(np.asarray(a)[:nv], np.asarray(b)[:nv])
+    # the valid prefix is genuinely sorted per coordinate
+    av = np.asarray(a)[:nv]
+    assert (np.diff(av, axis=0) >= 0).all()
+    # sorted reducers agree bitwise across kernel impls too
+    for name, kwargs in (("coord_median", {}), ("trimmed_mean",
+                                                {"beta": 0.3})):
+        gp, sp_ = make_aggregator(name, impl="pallas", **kwargs).reduce(g, cw)
+        gx, sx = make_aggregator(name, impl="xla", **kwargs).reduce(g, cw)
+        np.testing.assert_array_equal(np.asarray(gp), np.asarray(gx))
+        assert int(sp_) == int(sx)
+
+
+@pytest.mark.parametrize("name,kwargs", AGG_CASES, ids=AGG_IDS)
+def test_reducer_degenerate_counts(name, kwargs):
+    """n=1 and n=0 never divide by zero or read a sentinel lane."""
+    g, cw = garbage_stack(n_valid=1)
+    agg = make_aggregator(name, **kwargs)
+    ghat, _ = agg.reduce(g, cw)
+    if kwargs.get("tau") is not None:
+        # a fixed tau legitimately clips even a lone gradient
+        np.testing.assert_allclose(np.asarray(ghat),
+                                   np_oracle(name, g, cw, **kwargs),
+                                   rtol=2e-5, atol=1e-7)
+    else:
+        np.testing.assert_array_equal(np.asarray(ghat), np.asarray(g[0]))
+    ghat0, _ = agg.reduce(g, jnp.zeros_like(cw))
+    assert bool(jnp.isfinite(ghat0).all())        # caller gates on alive
+
+
+# ---------------------------------------------------------------------------
+# Breakdown point: f attackers below the tolerance cannot move the output
+# outside the honest envelope, while the mean is dominated
+# ---------------------------------------------------------------------------
+
+def test_breakdown_point_property():
+    rng = np.random.default_rng(7)
+    honest = rng.normal(size=(7, 3, 128)).astype(np.float32)
+    attack = np.full((3, 3, 128), 1e6, np.float32)  # f=3 colluders
+    g = jnp.asarray(np.concatenate([honest, attack]))
+    cw = jnp.ones(10, jnp.float32)
+    hmax = np.abs(honest).max()
+    for agg in (TrimmedMean(beta=0.35),           # floor(.35*10)=3 >= f
+                CoordMedian(),                     # f=3 < n/2
+                MultiKrum(f=3)):
+        ghat, stat = agg.reduce(g, cw)
+        assert float(jnp.abs(ghat).max()) <= hmax + 1e-6, type(agg).__name__
+        assert int(stat) > 0
+    # norm_clip bounds the damage to tau = median norm (it cannot remove
+    # the attackers, only shrink them to honest magnitude)
+    ghat, stat = NormClip().reduce(g, cw)
+    med = float(np.median(np.linalg.norm(
+        np.concatenate([honest, attack]).reshape(10, -1), axis=1)))
+    assert float(jnp.linalg.norm(ghat.ravel())) <= med + 1e-3
+    # adaptive tau = median norm clips the attackers AND any honest client
+    # above the median, so the count is at least f
+    assert int(stat) >= 3
+    # the undefended mean IS dominated — the property is non-vacuous
+    mean = np.concatenate([honest, attack]).mean(axis=0)
+    assert np.abs(mean).max() > 1e4
+
+
+# ---------------------------------------------------------------------------
+# Differential: packed vs reference, block dispatch, sharding
+# ---------------------------------------------------------------------------
+
+ATTACKS = [None, ScaledMalicious(rate=0.4, scale=10.0, seed=5),
+           SignFlip(rate=0.4, scale=2.0, seed=5),
+           GaussianPoison(rate=0.4, sigma=0.5, seed=5)]
+ATTACK_IDS = ["clean", "scaled_malicious", "sign_flip", "gaussian_poison"]
+
+
+@pytest.mark.parametrize("fm", ATTACKS, ids=ATTACK_IDS)
+@pytest.mark.parametrize("name,kwargs", AGG_CASES, ids=AGG_IDS)
+def test_aggregator_packed_vs_reference_bitwise(name, kwargs, fm):
+    agg = make_aggregator(name, **kwargs)
+    out = run_backend_pair(aggregator=agg, fault_model=fm)
+    (tr_ref, hist_ref), (tr_pk, hist_pk) = out["reference"], out["packed"]
+    np.testing.assert_array_equal(
+        np.asarray([m.train_loss for m in hist_ref]),
+        np.asarray([m.train_loss for m in hist_pk]))
+    assert [m.n_agg_adjusted for m in hist_ref] == \
+        [m.n_agg_adjusted for m in hist_pk]
+    assert tr_ref.agg_counters == tr_pk.agg_counters
+    assert tr_ref.fault_counters == tr_pk.fault_counters
+    assert_trainers_bitwise(tr_ref, tr_pk)
+    assert all(bool(jnp.isfinite(p).all())
+               for p in jax.tree_util.tree_leaves(tr_pk.params))
+
+
+def test_mean_aggregator_is_bitwise_noop():
+    """aggregator="mean" resolves to None and keeps the engine's default
+    weighted-mean path — bitwise the pre-registry trajectory (the
+    committed golden is the cross-session sensor; this is the in-session
+    one)."""
+    base = run_backend_pair(aggregator=None)
+    mean = run_backend_pair(aggregator=make_aggregator("mean"))
+    assert [m.train_loss for m in base["packed"][1]] == \
+        [m.train_loss for m in mean["packed"][1]]
+    assert_trainers_bitwise(base["packed"][0], mean["packed"][0])
+    tr = mean["packed"][0]
+    assert tr.aggregator is None and tr.agg_counters == {}
+    # ... and a robust aggregator is genuinely a different trajectory
+    med = run_backend_pair(aggregator=CoordMedian())
+    assert [m.train_loss for m in base["packed"][1]] != \
+        [m.train_loss for m in med["packed"][1]]
+
+
+@pytest.mark.parametrize("name,kwargs",
+                         [("trimmed_mean", {"beta": 0.3}),
+                          ("multi_krum", {"f": 1})],
+                         ids=["trimmed_mean", "multi_krum"])
+def test_aggregator_block_dispatch_bitwise(name, kwargs):
+    """rpd=1 vs rpd=4 under the DEFAULT shard count with an active attack:
+    the robust reduction rides the [K,...] block-scan operands bitwise."""
+    results = {}
+    for rpd in (1, 4):
+        spec = agg_spec(aggregator=name, aggregator_kwargs=kwargs, rpd=rpd,
+                        fault_model="scaled_malicious",
+                        fault_kwargs={"rate": 0.4, "scale": 10.0, "seed": 5})
+        run = Experiment(spec).build()
+        results[rpd] = (run, run.run())
+    (run1, res1), (run4, res4) = results[1], results[4]
+    assert run4.trainer.n_block_dispatches > 0
+    np.testing.assert_array_equal(
+        np.asarray([m.train_loss for m in res1.history]),
+        np.asarray([m.train_loss for m in res4.history]))
+    assert res1.summary["aggregation"] == res4.summary["aggregation"]
+    assert [m.n_agg_adjusted for m in res1.history] == \
+        [m.n_agg_adjusted for m in res4.history]
+    for a, b in zip(jax.tree_util.tree_leaves(run1.trainer.params),
+                    jax.tree_util.tree_leaves(run4.trainer.params)):
+        assert bool(jnp.all(a == b))
+
+
+@pytest.mark.skipif(len(jax.devices()) == 1,
+                    reason="needs >1 device for a sharded client axis")
+@pytest.mark.parametrize("name,kwargs",
+                         [("coord_median", {}), ("multi_krum", {"f": 1})],
+                         ids=["coord_median", "multi_krum"])
+def test_aggregator_sharded_vs_single_shard_bitwise(name, kwargs):
+    """The all-gather path: shards=n_dev must match shards=1 bitwise —
+    the gathered stack reduces identically on every shard."""
+    agg = make_aggregator(name, **kwargs)
+    fm = ScaledMalicious(rate=0.4, scale=10.0, seed=5)
+    clients, params, loss_fn = tiny_trainer_inputs()
+    sched = make_schedule(np.ones((ROUNDS, N)), 0.3)
+    sp = SystemParams.table1(N)
+    ch = ChannelModel(N)
+    out = {}
+    for shards in (1, len(jax.devices())):
+        tr = FederatedTrainer(loss_fn, params, clients, eta=0.1,
+                              batch_size=BATCH, seed=0, backend="packed",
+                              shards=shards, fault_model=fm, aggregator=agg)
+        out[shards] = (tr, tr.run(sched, sp, ch.uplink, ch.downlink))
+    (tr1, h1), (trn, hn) = out[1], out[len(jax.devices())]
+    np.testing.assert_array_equal(
+        np.asarray([m.train_loss for m in h1]),
+        np.asarray([m.train_loss for m in hn]))
+    assert tr1.agg_counters == trn.agg_counters
+    assert_trainers_bitwise(tr1, trn)
+
+
+# ---------------------------------------------------------------------------
+# API path: summary counters, resume, sweep pooling, report column
+# ---------------------------------------------------------------------------
+
+def test_counters_surface_in_summary_and_report(tmp_path):
+    res = Experiment(agg_spec(
+        aggregator="trimmed_mean", aggregator_kwargs={"beta": 0.3},
+        fault_model="scaled_malicious",
+        fault_kwargs={"rate": 0.4, "scale": 10.0, "seed": 5})).run()
+    a = res.summary["aggregation"]
+    assert a["aggregator"] == "trimmed_mean"
+    assert a["n_trimmed"] == sum(m.n_agg_adjusted for m in res.history) > 0
+    f = res.summary["faults"]
+    assert f["n_corrupt_finite"] > 0 and f["n_quarantined"] == 0
+    # a mean run keeps the summary exactly as before this layer
+    assert "aggregation" not in Experiment(agg_spec()).run().summary
+    report = pytest.importorskip("benchmarks.report")
+    p = res.to_jsonl(str(tmp_path / "run.jsonl"))
+    table = report.runs_table([p])
+    assert "aggregation" in table
+    assert f"trimmed_mean n_trimmed={a['n_trimmed']}" in table
+
+
+@pytest.mark.parametrize("rpd", [1, 4])
+def test_aggregator_resume_bitwise_with_counters(tmp_path, rpd):
+    """Checkpoint/resume mid-attack: trajectory AND aggregation counters
+    match the uninterrupted run (attack draws are round-keyed; the
+    checkpoint carries the counter totals)."""
+    base = agg_spec(aggregator="trimmed_mean",
+                    aggregator_kwargs={"beta": 0.3}, rpd=rpd,
+                    fault_model="scaled_malicious",
+                    fault_kwargs={"rate": 0.4, "scale": 10.0, "seed": 5})
+    res_a = Experiment(base).run()
+    assert res_a.summary["aggregation"]["n_trimmed"] > 0
+
+    ckpt = str(tmp_path / f"ckpt_rpd{rpd}")
+    spec = dataclasses.replace(
+        base, run=dataclasses.replace(base.run, checkpoint_dir=ckpt,
+                                      checkpoint_every=3))
+    Experiment(spec).run()                        # writes checkpoints
+    run_b = Experiment(spec).build()
+    res_b = run_b.resume(ckpt, step=3)
+    assert res_b.summary["resumed_from"] == 3
+    np.testing.assert_array_equal(
+        np.asarray([m.train_loss for m in res_a.history]),
+        np.asarray([m.train_loss for m in res_b.history]))
+    assert res_b.summary["aggregation"] == res_a.summary["aggregation"]
+    assert res_b.summary["faults"] == res_a.summary["faults"]
+
+
+def test_aggregator_pools_trainers_in_sweep():
+    """The aggregator is engine-construction state: sweeping it must NOT
+    reuse one trainer across different aggregators (the trainer key keeps
+    them apart), while same-aggregator seeds still pool."""
+    sw = SweepSpec(base=agg_spec(), seeds=[0, 1],
+                   grid={"scheme.aggregator": ["mean", "coord_median"]})
+    res = run_sweep(sw)
+    assert not res.errors
+    assert res.n_env_builds == 1                  # aggregator is trainer-level
+    assert res.n_trainer_builds == 2              # one per aggregator
+    a0, a1, b0, b1 = res.results
+    assert [m.train_loss for m in a0.history] != \
+        [m.train_loss for m in b0.history]
+    # seed pooling within an aggregator stayed bit-for-bit: the pooled
+    # seed-1 cell equals a cold standalone seed-1 run
+    cold = Experiment(override_field(
+        agg_spec(aggregator="coord_median"), "run.seed", 1)).run()
+    np.testing.assert_array_equal(
+        np.asarray([m.train_loss for m in b1.history]),
+        np.asarray([m.train_loss for m in cold.history]))
+
+
+# ---------------------------------------------------------------------------
+# Slow tier: defense efficacy at quickstart scale (the acceptance probe)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_defense_efficacy_quickstart_scale():
+    """30% ScaledMalicious at quickstart scale: trimmed_mean and
+    coord_median hold within 2 points of the clean-mean accuracy while the
+    undefended mean clearly degrades (benchmarks/robust_aggregation.py
+    records the same grid as a committed artifact)."""
+    from benchmarks.robust_aggregation import ExpConfig, run_grid
+    rows = run_grid(ExpConfig(), rates=(0.0, 0.3),
+                    aggregators=[("mean", {}), ("coord_median", {}),
+                                 ("trimmed_mean", {"beta": 0.35})])
+    acc = {(r["attack_rate"], r["aggregator"]): r["final_accuracy"]
+           for r in rows}
+    clean = acc[(0.0, "mean")]
+    assert clean > 0.3                            # the task is learnable
+    assert acc[(0.3, "mean")] < clean - 0.05      # attack really bites
+    for name in ("coord_median", "trimmed_mean"):
+        assert acc[(0.3, name)] >= clean - 0.02, (name, acc)

@@ -229,7 +229,8 @@ def test_fault_rate_zero_is_bitwise_noop():
         [m.train_loss for m in zero["packed"][1]]
     assert_trainers_bitwise(clean["packed"][0], zero["packed"][0])
     assert zero["packed"][0].fault_counters == \
-        {"n_dropped": 0, "n_quarantined": 0, "n_skipped_rounds": 0}
+        {"n_dropped": 0, "n_quarantined": 0, "n_skipped_rounds": 0,
+         "n_corrupt_finite": 0}
     # ... and an active model is genuinely a different trajectory
     faulted = run_backend_pair(fault_model=ClientDropout(rate=0.3, seed=5))
     assert [m.train_loss for m in clean["packed"][1]] != \
@@ -324,7 +325,8 @@ def test_counters_surface_in_summary():
     res = Experiment(fault_spec(fault_model="dropout",
                                 fault_kwargs={"rate": 0.4})).run()
     f = res.summary["faults"]
-    assert set(f) == {"n_dropped", "n_quarantined", "n_skipped_rounds"}
+    assert set(f) == {"n_dropped", "n_quarantined", "n_skipped_rounds",
+                      "n_corrupt_finite"}
     assert f["n_dropped"] == sum(m.n_faulted for m in res.history) > 0
     # a clean run keeps the summary exactly as before the fault layer
     assert "faults" not in Experiment(fault_spec()).run().summary

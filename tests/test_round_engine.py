@@ -317,10 +317,11 @@ def test_packed_losses_stay_on_device(env):
     clients, params, loss_fn = env
     tr = FederatedTrainer(loss_fn, params, clients, eta=0.1, batch_size=8,
                           seed=0, backend="packed", shards=1)
-    losses, n_ok = tr._round([0, 1, 2], np.full(3, 0.2))
+    losses, n_ok, ast = tr._round([0, 1, 2], np.full(3, 0.2))
     assert isinstance(losses, jax.Array)
     assert losses.shape == (3,)
     assert isinstance(n_ok, jax.Array)    # survivor count stays lazy too
+    assert ast is None                    # no robust aggregator active
     sp = SystemParams.table1(3)
     ch = ChannelModel(3)
     hist = tr.run(make_schedule(np.ones((3, 3)), 0.2), sp, ch.uplink, ch.downlink)
