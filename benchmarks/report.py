@@ -75,12 +75,44 @@ def _parseable_runs(paths) -> list:
     return out
 
 
-def runs_table(paths) -> str:
-    """Markdown summary of RunResult JSONL exports, one row per run."""
-    out = ["| run | dataset | model | scheme | rounds | final acc @ round | "
-           "E used [J] | T used [s] | theta | feasible | "
-           "faults (drop/quar/skip) | aggregation |",
-           "|---|---|---|---|---|---|---|---|---|---|---|---|"]
+def load_sweep_errors(paths) -> list[dict]:
+    """`sweep_error` records from any sweep index files among `paths`
+    (JsonlDirSink appends one per permanently failed cell, with
+    error_kind "error" or "timeout"). Non-index files contribute nothing;
+    unparsable lines are skipped, mirroring RunResult.from_jsonl's
+    forward-compatible ingestion."""
+    out = []
+    for path in sorted(paths):
+        try:
+            with open(path) as f:
+                for line in f:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        rec = json.loads(line)
+                    except json.JSONDecodeError:
+                        continue
+                    if isinstance(rec, dict) and \
+                            rec.get("kind") == "sweep_error":
+                        out.append(rec)
+        except OSError:
+            continue
+    return out
+
+
+def runs_table(paths, errors=None) -> str:
+    """Markdown summary of RunResult JSONL exports, one row per run.
+    FAILED/TIMEOUT cells (sweep_error records from a sweep index among
+    `paths`, or passed via `errors=`) render as rows too — a partial
+    sweep is visible in the report instead of silently shrinking it."""
+    if errors is None:
+        errors = load_sweep_errors(paths)
+    out = ["| run | dataset | model | scheme | status | rounds | "
+           "final acc @ round | E used [J] | T used [s] | theta | feasible "
+           "| faults (drop/quar/skip) | aggregation |",
+           "|---|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    rows = []
     for path, r in _parseable_runs(paths):
         s = r.summary
         spec = r.spec or {}
@@ -104,11 +136,12 @@ def runs_table(paths) -> str:
                a.get("aggregator", "?") + " " + " ".join(
                    f"{k}={v}" for k, v in sorted(a.items())
                    if k != "aggregator"))
-        out.append(
+        rows.append((name,
             f"| {name} "
             f"| {spec.get('data', {}).get('dataset', '?')} "
             f"| {spec.get('model', {}).get('name', '?')} "
             f"| {spec.get('scheme', {}).get('name', '?')} "
+            f"| ok "
             f"| {s.get('rounds_run', len(r.history))} "
             f"| {num('final_accuracy'):.3f} @ "
             f"{num('final_accuracy_round', -1)} "
@@ -116,7 +149,23 @@ def runs_table(paths) -> str:
             f"| {num('cumulative_delay', 0.0):.2f} "
             f"| {num('theta'):.3f} "
             f"| {s.get('feasible', '?')} "
-            f"| {faults} | {agg} |")
+            f"| {faults} | {agg} |"))
+    for rec in errors:
+        name = rec.get("name", "?")
+        spec = rec.get("spec") or {}
+        status = ("TIMEOUT" if rec.get("error_kind") == "timeout"
+                  else "FAILED")
+        err = (rec.get("error") or "").split("\n")[0]
+        rows.append((name,
+            f"| {name} "
+            f"| {spec.get('data', {}).get('dataset', '?')} "
+            f"| {spec.get('model', {}).get('name', '?')} "
+            f"| {spec.get('scheme', {}).get('name', '?')} "
+            f"| {status}: {err} "
+            f"| — | — | — | — | — | — | — | — |"))
+    # failed cells sort into matrix position (names share the NNN_ index
+    # prefix), not into a separate trailing block
+    out.extend(row for _, row in sorted(rows))
     return "\n".join(out)
 
 
@@ -142,16 +191,42 @@ def _mean_std(values) -> tuple[float, float, int]:
     return mean, std, n
 
 
-def aggregate_runs(paths) -> list[dict]:
+def aggregate_runs(paths, errors=None) -> list[dict]:
     """Group RunResult exports by seed-stripped spec and summarize each
     group with per-seed variance: final_accuracy / energy / delay as
     (mean, std, n) instead of a bare scalar. Groups of one pass through
-    (std 0, n 1) so the caller can render a uniform table."""
+    (std 0, n 1) so the caller can render a uniform table. sweep_error
+    records (auto-loaded from index files among `paths` when `errors` is
+    None) count into their scenario's `n_failed` so a partial sweep's
+    aggregates say how many seeds are missing."""
+    if errors is None:
+        errors = load_sweep_errors(paths)
+    failed: dict[str, int] = {}
+    for rec in errors:
+        key = _seedless_key(rec.get("spec") or {})
+        failed[key] = failed.get(key, 0) + 1
     groups: dict[str, list] = {}
     for path, r in _parseable_runs(paths):
         groups.setdefault(_seedless_key(r.spec), []).append((path, r))
     rows = []
-    for key in sorted(groups):
+    for key in sorted(set(groups) | set(failed)):
+        if key not in groups:
+            # every seed of this scenario failed: synthesize a row from
+            # the error record so the scenario still shows up
+            rec = next(e for e in errors
+                       if _seedless_key(e.get("spec") or {}) == key)
+            spec = rec.get("spec") or {}
+            nan3 = (float("nan"), float("nan"), 0)
+            rows.append({
+                "group": rec.get("name", "?"),
+                "dataset": spec.get("data", {}).get("dataset", "?"),
+                "model": spec.get("model", {}).get("name", "?"),
+                "scheme": spec.get("scheme", {}).get("name", "?"),
+                "n": 0, "n_failed": failed[key],
+                "final_accuracy": nan3, "cumulative_energy": nan3,
+                "cumulative_delay": nan3,
+            })
+            continue
         runs = groups[key]
         spec = runs[0][1].spec or {}
         names = [os.path.splitext(os.path.basename(p))[0] for p, _ in runs]
@@ -167,6 +242,7 @@ def aggregate_runs(paths) -> list[dict]:
             "model": spec.get("model", {}).get("name", "?"),
             "scheme": spec.get("scheme", {}).get("name", "?"),
             "n": len(runs),
+            "n_failed": failed.get(key, 0),
         }
         for field in ("final_accuracy", "cumulative_energy",
                       "cumulative_delay"):
@@ -181,9 +257,9 @@ def sweep_table(paths=None, *, rows=None) -> str:
     `rows=` (an `aggregate_runs` result) to render without re-parsing."""
     if rows is None:
         rows = aggregate_runs(paths)
-    out = ["| scenario | dataset | model | scheme | n | "
+    out = ["| scenario | dataset | model | scheme | n | failed | "
            "final acc (mean ± std) | E used [J] | T used [s] |",
-           "|---|---|---|---|---|---|---|---|"]
+           "|---|---|---|---|---|---|---|---|---|"]
 
     def ms(t, digits):
         mean, std, n = t
@@ -192,9 +268,10 @@ def sweep_table(paths=None, *, rows=None) -> str:
         return f"{mean:.{digits}f} ± {std:.{digits}f}"
 
     for row in rows:
+        nf = row.get("n_failed", 0)
         out.append(
             f"| {row['group']} | {row['dataset']} | {row['model']} "
-            f"| {row['scheme']} | {row['n']} "
+            f"| {row['scheme']} | {row['n']} | {nf if nf else '—'} "
             f"| {ms(row['final_accuracy'], 3)} "
             f"| {ms(row['cumulative_energy'], 2)} "
             f"| {ms(row['cumulative_delay'], 2)} |")
@@ -212,11 +289,16 @@ def main(argv=None):
     print(roofline_md())
     run_paths = glob.glob(args.runs)
     if run_paths:
+        errors = load_sweep_errors(run_paths)
         print(f"\n\n## §Runs — {len(run_paths)} RunResult export(s) "
-              f"({args.runs})\n")
-        print(runs_table(run_paths))
-        rows = aggregate_runs(run_paths)
-        if any(row["n"] > 1 for row in rows):
+              f"({args.runs})"
+              + (f", {len(errors)} FAILED/TIMEOUT cell(s)" if errors
+                 else "") + "\n")
+        print(runs_table(run_paths, errors))
+        rows = aggregate_runs(run_paths, errors)
+        # failures force the aggregated section too: that is where the
+        # per-scenario failed counts live
+        if any(row["n"] > 1 or row.get("n_failed") for row in rows):
             print("\n\n## §Runs, seed-aggregated — mean ± std over "
                   "seed-only repetitions\n")
             print(sweep_table(rows=rows))

@@ -4,10 +4,11 @@
 
 Default is the fast profile (reduced sigmas/budgets/rounds) so the whole
 suite completes on one CPU core; --full reproduces the paper-scale sweeps.
---smoke is the CI profile: only the round-engine harness, tiny config, with
-its report diffed against the committed BENCH_round_engine.json (the
-cross-PR compare mode) so perf regressions surface without running the
-whole suite. Output: ``name,us_per_call,derived`` CSV per harness.
+--smoke is the CI profile: the round-engine harness plus the sweep-service
+scaling probe, tiny configs, with reports diffed against the committed
+BENCH_round_engine.json / BENCH_sweep_scaling.json (the cross-PR compare
+mode) so perf regressions surface without running the whole suite.
+Output: ``name,us_per_call,derived`` CSV per harness.
 """
 from __future__ import annotations
 
@@ -26,7 +27,7 @@ def main() -> None:
                          "committed BENCH_round_engine.json")
     ap.add_argument("--only", default=None,
                     help="comma list: fig3,...,fig8,theory,selection,"
-                         "roofline,round_engine")
+                         "roofline,round_engine,sweep_scaling")
     args = ap.parse_args()
     fast = not args.full
 
@@ -90,13 +91,24 @@ def main() -> None:
             print("FAILED: speedup regression vs committed report:",
                   regressed)
             sys.exit(1)
+        # sweep-service gates: parity is checked inside main() (it raises
+        # on a bitwise violation); the speedup ratio only fails on a
+        # structural collapse vs the committed baseline
+        from benchmarks import sweep_scaling
+        sc = sweep_scaling.main(
+            fast=True,
+            compare=os.path.join(root, "BENCH_sweep_scaling.json"))
+        if sc.get("compare", {}).get("regressed_floor"):
+            print("FAILED: sweep-service worker-pool speedup collapsed vs "
+                  "committed BENCH_sweep_scaling.json")
+            sys.exit(1)
         return
 
     from benchmarks import (fig3_generalization_statement, fig4_accuracy_vs_sigma,
                             fig5_loss_vs_time, fig6_loss_vs_energy,
                             fig7_accuracy_vs_delay, fig8_accuracy_vs_energy,
                             roofline, round_engine, selection_ablation,
-                            theory_validation)
+                            sweep_scaling, theory_validation)
     suite = {
         "fig3": fig3_generalization_statement.main,
         "fig4": fig4_accuracy_vs_sigma.main,
@@ -108,6 +120,7 @@ def main() -> None:
         "selection": selection_ablation.main,
         "roofline": roofline.main,
         "round_engine": round_engine.main,
+        "sweep_scaling": sweep_scaling.main,
     }
     only = set(args.only.split(",")) if args.only else set(suite)
     failures = []

@@ -1,0 +1,174 @@
+"""Sweep-service scaling probe: wall-clock for a seed x scheme matrix at
+1 worker vs N, plus the bitwise worker-invariance gate (DESIGN.md §12).
+
+Runs the same 4-seed x 4-scheme matrix (synthetic-mnist, quickstart
+scale) through `run_sweep` serially and with a worker pool, after an
+untimed warm-up pass that charges all XLA compilation up front (the
+per-process trace cache would otherwise gift the second timed sweep the
+first one's compiles and fake the speedup). Records wall-clock, the
+speedup ratio, and — the part that is a hard regression gate —
+whether the per-run JSONL files of the two timed sweeps are BYTE
+IDENTICAL: `workers=N` must change scheduling only, never results.
+
+On the CPU boxes this repo benches on, all cells share one XLA device
+and the GIL (the CI box exposes a single core), so a pool cannot beat
+the serial loop — the speedup ratio here documents the pool's overhead
+(per-worker trainer builds + contention), and on a 1-core box it sits
+below 1.0 by design. The committed BENCH_sweep_scaling.json compare
+therefore mirrors BENCH_round_engine.json's discipline: speedup deltas
+WARN (load-sensitive on a cgroup-throttled box) and only a structural
+collapse — speedup halving vs the committed baseline — or a parity
+violation fails hard.
+
+    PYTHONPATH=src python -m benchmarks.sweep_scaling \
+        [--out BENCH_sweep_scaling.json] [--compare BENCH_sweep_scaling.json]
+        [--workers N] [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import tempfile
+import time
+
+import jax
+
+from repro.api import (
+    DataSpec, ExperimentSpec, JsonlDirSink, ModelSpec, RunSpec, SchemeSpec,
+    SweepSpec, WirelessSpec, run_sweep,
+)
+
+SCHEMES = ["proposed", "no_gen", "fixed_pruning", "fixed_selection"]
+SEEDS = [0, 1, 2, 3]
+
+# speedup falling below this fraction of the committed baseline is a
+# structural regression (a worker pool that serializes harder than it
+# did — e.g. a new lock around device dispatch), not load noise; an
+# absolute floor would be wrong here because the achievable ratio is a
+# property of the box's core count, not the code
+FLOOR_FRAC = 0.5
+
+
+def _matrix(fast: bool) -> SweepSpec:
+    rounds = 4 if fast else 12
+    base = ExperimentSpec(
+        data=DataSpec(dataset="synthetic-mnist", n_clients=5, sigma=5.0,
+                      n_train=200, n_test=60, seed=0),
+        model=ModelSpec(name="mlp-edge"),
+        wireless=WirelessSpec(e0=1e6, t0=1e6, seed=0),
+        scheme=SchemeSpec(name="proposed", rounds=rounds, eta=0.1, batch=8,
+                          ao={"outer_iters": 1}),
+        # shards=1 keeps the cells collective-free so the pool really runs
+        # parallel on multi-device hosts too — with auto shards the
+        # collective-safety gate would serialize the workers=N pass and
+        # this probe would measure the gate, not the pool
+        run=RunSpec(seed=0, eval_every=2, shards=1))
+    return SweepSpec(base=base, seeds=list(SEEDS), schemes=list(SCHEMES))
+
+
+def _run_file_bytes(directory: str) -> dict[str, bytes]:
+    out = {}
+    for p in sorted(glob.glob(os.path.join(directory, "0*.jsonl"))):
+        with open(p, "rb") as f:
+            out[os.path.basename(p)] = f.read()
+    return out
+
+
+def _timed_sweep(sweep: SweepSpec, directory: str, workers: int) -> dict:
+    t0 = time.perf_counter()
+    res = run_sweep(sweep, sink=JsonlDirSink(directory), workers=workers)
+    wall = time.perf_counter() - t0
+    assert not res.errors, res.errors
+    return {"wall_s": round(wall, 3),
+            "n_env_builds": res.n_env_builds,
+            "n_trainer_builds": res.n_trainer_builds}
+
+
+def main(fast: bool = True, out_path: str | None = None,
+         compare: str | None = None, workers: int = 4) -> dict:
+    sweep = _matrix(fast)
+    n_cells = len(sweep.expand())
+    with tempfile.TemporaryDirectory() as tmp:
+        # untimed warm-up: compile every scheme family's traces once so
+        # both timed passes run warm (the trace cache is per-process)
+        print(f"warmup: {n_cells} cells ...", flush=True)
+        run_sweep(sweep, sink=JsonlDirSink(os.path.join(tmp, "warm")))
+        d1 = os.path.join(tmp, "w1")
+        dn = os.path.join(tmp, f"w{workers}")
+        per_workers = {
+            "1": _timed_sweep(sweep, d1, 1),
+            str(workers): _timed_sweep(sweep, dn, workers),
+        }
+        parity = _run_file_bytes(d1) == _run_file_bytes(dn)
+    speedup = per_workers["1"]["wall_s"] / per_workers[str(workers)]["wall_s"]
+    report = {
+        "kind": "sweep_scaling",
+        "meta": {"backend": jax.default_backend(),
+                 "n_devices": jax.device_count(),
+                 "cpu_count": os.cpu_count(),
+                 "matrix": f"{len(SEEDS)} seeds x {len(SCHEMES)} schemes",
+                 "rounds": sweep.base.scheme.rounds,
+                 "profile": "fast" if fast else "full"},
+        "n_cells": n_cells,
+        "workers": workers,
+        "per_workers": per_workers,
+        "speedup": round(speedup, 3),
+        "parity_bitwise": parity,
+    }
+    for w, r in per_workers.items():
+        print(f"sweep_scaling/workers{w},{r['wall_s'] * 1e6:.0f},"
+              f"trainers_built={r['n_trainer_builds']}")
+    print(f"sweep_scaling/speedup,{speedup:.3f},"
+          f"parity_bitwise={parity}")
+    if not parity:
+        raise AssertionError(
+            "workers>1 changed per-run record bytes — the worker pool "
+            "violated the bitwise invariance contract (DESIGN.md §12)")
+    if compare is not None:
+        if not os.path.exists(compare):
+            print(f"WARNING: --compare baseline {compare!r} not found; "
+                  f"skipping regression check")
+        else:
+            with open(compare) as f:
+                prev = json.load(f)
+            report["compare"] = _compare(prev, report)
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=2)
+            f.write("\n")
+        print(f"wrote {out_path}")
+    return report
+
+
+def _compare(prev: dict, cur: dict) -> dict:
+    """Speedup-ratio regression check against a committed report. The
+    delta WARNS only (wall clocks on the throttled 2-core box move with
+    load); `regressed_floor` is the hard signal run.py gates on."""
+    prev_s, cur_s = prev.get("speedup"), cur["speedup"]
+    out = {"prev_speedup": prev_s, "cur_speedup": cur_s,
+           "regressed_floor": bool(prev_s) and cur_s < FLOOR_FRAC * prev_s}
+    if prev_s:
+        out["delta"] = round(cur_s - prev_s, 3)
+        if out["regressed_floor"]:
+            print(f"FAILED: speedup {cur_s:.3f} is less than {FLOOR_FRAC} "
+                  f"of the committed {prev_s:.3f} — the worker pool is "
+                  f"serializing harder than it did at the baseline")
+        elif cur_s < 0.9 * prev_s:
+            print(f"WARNING: sweep-scaling speedup {cur_s:.3f} below "
+                  f"committed {prev_s:.3f} (throttle-sensitive, not gated)")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--compare", default=None)
+    ap.add_argument("--workers", type=int, default=4)
+    a = ap.parse_args()
+    rep = main(fast=not a.full, out_path=a.out, compare=a.compare,
+               workers=a.workers)
+    if rep.get("compare", {}).get("regressed_floor"):
+        raise SystemExit(1)

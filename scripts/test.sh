@@ -1,10 +1,11 @@
 #!/usr/bin/env bash
 # Test/CI entrypoint: install declared deps (best effort — offline containers
 # fall back to tests/_hypothesis_stub.py via tests/conftest.py), then run the
-# tier-1 suite + the experiment-API CLI smoke + the sweep-CLI smoke, then the
-# sharded smoke leg (round/block-engine + API + sweep/axes tests and the same
-# CLI smokes on a forced 4-device host mesh, exercising the shard_map client
-# axis on CPU).
+# tier-1 suite + the experiment-API CLI smoke + the sweep-CLI smoke + the
+# sweep-resume chaos smoke (SIGTERM a --workers 2 sweep mid-matrix, then
+# --resume it), then the sharded smoke leg (round/block-engine + API +
+# sweep/service/axes tests and the same CLI smokes on a forced 4-device host
+# mesh, exercising the shard_map client axis on CPU).
 #
 # Tiering (pytest.ini): the default run selects tier-1 only (-m "not slow");
 # pass --all as the FIRST argument to include slow-marked tests. Remaining
@@ -136,6 +137,63 @@ EOF
     return "$ok"
 }
 
+# Sweep-resume chaos smoke: a 2x2 matrix run with --workers 2 is
+# SIGTERMed as soon as the service has durable state (a mid-cell
+# checkpoint dir or a completed per-run file), then relaunched with
+# --resume. The resume must report its skip/ran split, and the final
+# sink directory must hold all 4 per-run files with every cell named in
+# the sweep.jsonl index (as sweep_run or sweep_skip). Same error
+# discipline as cli_smoke. checkpoint_every=1 makes mid-cell state
+# appear within one round, so the kill lands mid-matrix rather than
+# racing the whole sweep.
+sweep_resume_smoke() {
+    local work ok=0 pid i n f name
+    work="$(mktemp -d)"
+    cat > "$work/spec.json" <<'EOF'
+{
+  "data": {"dataset": "synthetic-mnist", "n_clients": 6, "sigma": 5.0,
+           "n_train": 240, "n_test": 60, "seed": 0},
+  "model": {"name": "mlp-edge"},
+  "wireless": {"e0": 1000000.0, "t0": 1000000.0, "seed": 0},
+  "scheme": {"name": "proposed", "rounds": 4, "eta": 0.1, "batch": 8,
+             "ao": {"outer_iters": 1}},
+  "run": {"seed": 0, "eval_every": 2, "checkpoint_every": 1}
+}
+EOF
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m repro.api.cli sweep "$work/spec.json" \
+        --seeds 0,1 --schemes proposed,no_gen \
+        --out-dir "$work/runs" --workers 2 >/dev/null 2>&1 &
+    pid=$!
+    for i in $(seq 1 600); do
+        if [[ -d "$work/runs/ckpt" ]] \
+            || ls "$work"/runs/0*.jsonl >/dev/null 2>&1; then
+            break
+        fi
+        kill -0 "$pid" 2>/dev/null || break
+        sleep 0.1
+    done
+    kill -TERM "$pid" 2>/dev/null || true
+    wait "$pid" 2>/dev/null || true
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m repro.api.cli sweep "$work/spec.json" \
+        --seeds 0,1 --schemes proposed,no_gen \
+        --out-dir "$work/runs" --workers 2 --resume \
+        > "$work/resume.out" || ok=1
+    grep "resume: skipped" "$work/resume.out" >/dev/null \
+        || { echo "sweep-resume smoke: no resume skip/ran summary"; ok=1; }
+    n="$(ls "$work"/runs/0*.jsonl 2>/dev/null | wc -l)"
+    [[ "$n" -eq 4 ]] \
+        || { echo "sweep-resume smoke: expected 4 run files, got $n"; ok=1; }
+    for f in "$work"/runs/0*.jsonl; do
+        name="$(basename "$f" .jsonl)"
+        grep -F "\"name\": \"$name\"" "$work/runs/sweep.jsonl" >/dev/null \
+            || { echo "sweep-resume smoke: $name missing from index"; ok=1; }
+    done
+    rm -rf "$work"
+    return "$ok"
+}
+
 # run all legs even if an earlier one fails (the seed ships with
 # known-failing arch/serving suites); exit non-zero if any leg failed
 status=0
@@ -152,6 +210,9 @@ sweep_smoke || status=$?
 echo "== chaos smoke leg: byzantine attack + robust aggregator (1 device) =="
 chaos_smoke || status=$?
 
+echo "== sweep-resume chaos leg: SIGTERM mid-matrix + --resume (1 device) =="
+sweep_resume_smoke || status=$?
+
 echo "== sharded smoke leg: round/block engines + API under 4 forced host devices =="
 # forced flag goes LAST: XLA takes the final occurrence of a duplicated
 # flag, so an inherited force-count must not override the leg's; an
@@ -164,7 +225,8 @@ XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=4" \
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m pytest -x -q ${MARKER[@]+"${MARKER[@]}"} \
         tests/test_round_engine.py tests/test_block_engine.py \
-        tests/test_api.py tests/test_sweep.py tests/test_scenario_axes.py \
+        tests/test_api.py tests/test_sweep.py tests/test_sweep_service.py \
+        tests/test_scenario_axes.py \
         tests/test_faults.py tests/test_aggregators.py \
     || status=$?
 
@@ -187,6 +249,13 @@ echo "== chaos smoke leg: byzantine attack + robust aggregator (4 forced devices
     export XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=4"
     export REPRO_ROUND_SHARDS=
     chaos_smoke
+) || status=$?
+
+echo "== sweep-resume chaos leg: SIGTERM mid-matrix + --resume (4 forced devices) =="
+(
+    export XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=4"
+    export REPRO_ROUND_SHARDS=
+    sweep_resume_smoke
 ) || status=$?
 
 exit $status

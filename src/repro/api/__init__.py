@@ -16,16 +16,17 @@ from repro.api.registry import (
     register_dataset, register_fault_model, register_model, register_scheme,
 )
 from repro.api.callbacks import (
-    Callback, CheckpointCallback, load_run_state, restore_trainer_state,
-    save_trainer_state,
+    Callback, CheckpointCallback, StopOnEvent, load_run_state,
+    restore_trainer_state, save_trainer_state,
 )
 from repro.api.experiment import (
     Environment, Experiment, Run, RunResult, build_environment,
     resume_from_checkpoint,
 )
 from repro.api.sweep import (
-    JsonlDirSink, RunSink, SweepCell, SweepResult, SweepSpec,
-    override_field, run_sweep,
+    CellTimeout, JsonlDirSink, RunSink, SweepCell, SweepInterrupted,
+    SweepResult, SweepSpec, load_manifest, override_field, run_sweep,
+    spec_hash, verify_cell_run, write_manifest,
 )
 
 __all__ = [
@@ -36,10 +37,11 @@ __all__ = [
     "register_model", "register_dataset", "register_scheme",
     "register_data_selection", "register_channel_noise",
     "register_fault_model",
-    "Callback", "CheckpointCallback",
+    "Callback", "CheckpointCallback", "StopOnEvent",
     "save_trainer_state", "restore_trainer_state", "load_run_state",
     "Environment", "build_environment", "Experiment", "Run", "RunResult",
     "resume_from_checkpoint",
     "SweepSpec", "SweepCell", "SweepResult", "RunSink", "JsonlDirSink",
-    "run_sweep", "override_field",
+    "run_sweep", "override_field", "CellTimeout", "SweepInterrupted",
+    "spec_hash", "write_manifest", "load_manifest", "verify_cell_run",
 ]

@@ -61,6 +61,30 @@ class Callback:
         pass
 
 
+class StopOnEvent(Callback):
+    """Cooperative interrupt: raise `exc_type` at the next materialization
+    point once `event` (a threading.Event) is set. The sweep service arms
+    one per cell with its process-wide interrupt event, so SIGTERM /
+    Ctrl-C stops every worker at a round/block boundary — never mid-
+    dispatch — leaving the last checkpoint intact for bit-for-bit resume.
+    Fires at the same points as the deadline callback: cooperative
+    because the device-resident engines pipeline whole blocks."""
+
+    def __init__(self, event, exc_type=KeyboardInterrupt):
+        self.event = event
+        self.exc_type = exc_type
+
+    def _check(self) -> None:
+        if self.event.is_set():
+            raise self.exc_type
+
+    def on_round_end(self, m: RoundMetrics, trainer) -> None:
+        self._check()
+
+    def on_block_end(self, start: int, n_rounds: int, trainer) -> None:
+        self._check()
+
+
 def metrics_to_dict(m: RoundMetrics) -> dict:
     return dataclasses.asdict(m)
 

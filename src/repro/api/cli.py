@@ -8,7 +8,8 @@
     PYTHONPATH=src python -m repro.api.cli sweep sweep.json --out-dir DIR \
         [--seeds 0,1,2] [--schemes proposed,no_gen] \
         [--grid data.sigma=0.5,5.0] [--expand-only] \
-        [--max-retries N --retry-backoff S] [--cell-timeout S]
+        [--max-retries N --retry-backoff S] [--cell-timeout S] \
+        [--workers N] [--resume]
 
 `run` executes a spec end-to-end (data -> phi -> P1 -> federated training)
 and optionally exports the RunResult as JSON-lines. `resume` rebuilds the
@@ -157,15 +158,31 @@ def _cmd_sweep(args) -> int:
         for c in cells:
             print(f"  {c.name}")
         return 0
+    if args.resume and not args.out_dir:
+        raise SystemExit("sweep --resume requires --out-dir (the sink "
+                         "directory holds the manifest and prior results)")
     sink = JsonlDirSink(args.out_dir) if args.out_dir else None
-    res = run_sweep(sweep, sink=sink, log=print,
-                    max_retries=args.max_retries,
-                    retry_backoff=args.retry_backoff,
-                    cell_timeout=args.cell_timeout)
+    try:
+        res = run_sweep(sweep, sink=sink, log=print,
+                        max_retries=args.max_retries,
+                        retry_backoff=args.retry_backoff,
+                        cell_timeout=args.cell_timeout,
+                        workers=args.workers, resume=args.resume)
+    except KeyboardInterrupt:
+        print("sweep interrupted — completed cells are preserved; "
+              "relaunch with --resume to continue", file=sys.stderr)
+        return 130
     n_ok = sum(r is not None for r in res.results)
+    n_ran = n_ok - res.n_skipped
+    if args.resume:
+        print(f"resume: skipped {res.n_skipped} verified cell(s), "
+              f"ran {len(res.results) - res.n_skipped}")
     print(f"done: {n_ok}/{len(res.results)} runs; environments built "
           f"{res.n_env_builds}, trainers built {res.n_trainer_builds} "
-          f"(reused across {n_ok - res.n_trainer_builds} runs)")
+          f"(reused across {n_ran - res.n_trainer_builds} runs)")
+    if res.n_worker_crashes:
+        print(f"{res.n_worker_crashes} worker(s) crashed; their cells "
+              f"were requeued and completed elsewhere", file=sys.stderr)
     if sink is not None:
         print(f"wrote {len(sink.paths)} run files + index under "
               f"{sink.directory}")
@@ -235,6 +252,16 @@ def main(argv: list[str] | None = None) -> int:
                     help="per-cell wall-clock deadline in seconds; a cell "
                          "past it is recorded as a timeout (not retried) "
                          "and the sweep moves on")
+    pw.add_argument("--workers", type=int, default=1,
+                    help="run up to N independent cells concurrently "
+                         "(default 1 = serial; per-run records are "
+                         "bitwise identical for any N)")
+    pw.add_argument("--resume", action="store_true",
+                    help="skip cells whose per-run JSONL in --out-dir "
+                         "verifies against the recorded sweep manifest; "
+                         "re-run missing/corrupt/failed cells and continue "
+                         "interrupted ones from their newest intact "
+                         "checkpoint")
     pw.set_defaults(fn=_cmd_sweep)
 
     args = p.parse_args(argv)

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import os
 from typing import Any, Callable, Sequence
 
 import jax
@@ -209,12 +210,19 @@ class Run:
         self.schedule = schedule
         self.trainer = trainer
 
-    def run(self, *, callbacks: Sequence[Callback] = ()) -> RunResult:
-        return self._execute(start_round=0, prefix=[], callbacks=callbacks)
+    def run(self, *, callbacks: Sequence[Callback] = (),
+            checkpoint_dir: str | None = None) -> RunResult:
+        """Execute from round 0. `checkpoint_dir=` overrides where
+        periodic checkpoints land WITHOUT touching the spec — the sweep
+        service uses it so exported per-run headers (which embed the
+        spec) stay byte-identical across sink directories."""
+        return self._execute(start_round=0, prefix=[], callbacks=callbacks,
+                             checkpoint_dir=checkpoint_dir)
 
     def resume(self, directory: str | None = None, *,
                step: int | None = None,
-               callbacks: Sequence[Callback] = ()) -> RunResult:
+               callbacks: Sequence[Callback] = (),
+               checkpoint_dir: str | None = None) -> RunResult:
         directory = directory or self.spec.run.checkpoint_dir
         if not directory:
             raise ValueError("no checkpoint directory: pass resume(dir) or "
@@ -225,21 +233,49 @@ class Run:
         prefix = [metrics_from_dict(d) for d in extra.get("history", [])]
         return self._execute(start_round=start, prefix=prefix,
                              callbacks=callbacks,
-                             resumed_from=int(extra["round"]))
+                             resumed_from=int(extra["round"]),
+                             checkpoint_dir=checkpoint_dir)
+
+    def run_or_resume(self, directory: str | None = None, *,
+                      callbacks: Sequence[Callback] = ()) -> RunResult:
+        """Elastic entry point: `run()` when `directory` holds no intact
+        checkpoint, otherwise `resume()` from its newest intact step
+        (CheckpointManager.latest_intact_step — torn steps from a kill
+        mid-write are skipped). Either way further checkpoints land in
+        `directory`, and the result's summary has `resumed_from`
+        normalized to None, so an interrupted-then-resumed run exports
+        byte-identical JSONL to an uninterrupted one — the contract the
+        sweep service's `--resume` is built on."""
+        directory = directory or self.spec.run.checkpoint_dir
+        if not directory:
+            raise ValueError("no checkpoint directory: pass "
+                             "run_or_resume(dir) or set "
+                             "spec.run.checkpoint_dir")
+        step = None
+        if os.path.isdir(directory):
+            step = CheckpointManager(directory).latest_intact_step()
+        if step is None:
+            return self.run(callbacks=callbacks, checkpoint_dir=directory)
+        res = self.resume(directory, step=step, callbacks=callbacks,
+                          checkpoint_dir=directory)
+        res.summary["resumed_from"] = None
+        return res
 
     def _execute(self, *, start_round: int, prefix: list[RoundMetrics],
                  callbacks: Sequence[Callback],
-                 resumed_from: int | None = None) -> RunResult:
+                 resumed_from: int | None = None,
+                 checkpoint_dir: str | None = None) -> RunResult:
         rs = self.spec.run
+        ckpt_dir = checkpoint_dir or rs.checkpoint_dir
         cbs: list[Callback] = []
-        if rs.checkpoint_dir:
+        if ckpt_dir:
             # a directory alone is an explicit request to checkpoint:
             # default the cadence to the eval cadence rather than
             # silently writing nothing. The checkpointer goes FIRST so a
             # user hook that raises at the same round (e.g. a kill in
             # tests) observes the saved state.
             cbs.append(CheckpointCallback(
-                rs.checkpoint_dir, rs.checkpoint_every or rs.eval_every,
+                ckpt_dir, rs.checkpoint_every or rs.eval_every,
                 spec=self.spec.to_dict(), history=prefix))
         cbs.extend(callbacks)
         history = self.trainer.run(

@@ -1,4 +1,4 @@
-"""Multi-seed sweep engine over ExperimentSpec templates (DESIGN.md §9).
+"""Multi-seed sweep engine over ExperimentSpec templates (DESIGN.md §9, §12).
 
 The paper's claims are statistical — Figs. 4-8 are means over seeds and
 over scenario knobs (sigma, budgets, heterogeneity) — so the unit of
@@ -35,27 +35,52 @@ sink AS RUNS FINISH (one per-run JSONL file plus an appended, flushed
 index record), so long sweeps are observable and interruptible without
 losing completed cells.
 
-CLI: `python -m repro.api.cli sweep sweep.json --out-dir DIR`
-(`benchmarks/report.py --runs 'DIR/*.jsonl'` aggregates mean±std over the
-seed axis).
+Execution is an elastic service (DESIGN.md §12):
+
+  * `workers=N` runs independent cells concurrently on a thread pool.
+    Environments are shared across workers (one build per `_env_key`,
+    guarded by per-key locks); trainer pools are worker-LOCAL, so a
+    pooled trainer is never driven from two threads. Per-run records are
+    bitwise independent of N (each cell's trajectory depends only on its
+    own spec); only sink *index order* and the trainer-build count vary.
+  * `resume=True` verifies previously completed cells in the sink
+    directory against the `sweep_manifest.json` spec hashes, skips the
+    intact ones, re-runs missing/corrupt/failed cells, and picks up
+    interrupted cells from their newest intact checkpoint
+    (`<dir>/ckpt/<cell>/`, written when the base spec sets
+    run.checkpoint_every) — bitwise equal to an uninterrupted run.
+  * SIGTERM / KeyboardInterrupt stop every worker cooperatively at the
+    next round/block boundary, flush a `sweep_interrupted` index record,
+    and re-raise KeyboardInterrupt, so a killed sweep is always
+    resumable.
+
+CLI: `python -m repro.api.cli sweep sweep.json --out-dir DIR
+[--workers N] [--resume]` (`benchmarks/report.py --runs 'DIR/*.jsonl'`
+aggregates mean±std over the seed axis and renders FAILED/TIMEOUT cells).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import hashlib
 import itertools
 import json
 import os
 import random
 import re
+import signal
+import threading
 import time
 import traceback
 from typing import Any, Callable, Sequence
 
-from repro.api.callbacks import Callback
+from repro.api.callbacks import Callback, StopOnEvent
 from repro.api.experiment import (
     Environment, Experiment, RunResult, build_environment, _json_finite,
 )
 from repro.api.spec import ExperimentSpec, SpecError, _SpecBase
+from repro.checkpoint import CheckpointManager
+from repro.checkpoint.io import atomic_write_text
 
 
 # ---------------------------------------------------------------------------
@@ -222,13 +247,88 @@ class SweepSpec(_SpecBase):
 
 
 # ---------------------------------------------------------------------------
+# Manifest + per-cell verification (the elastic-resume protocol)
+# ---------------------------------------------------------------------------
+
+MANIFEST_NAME = "sweep_manifest.json"
+
+
+def spec_hash(spec) -> str:
+    """Canonical content hash of an ExperimentSpec (or its dict form):
+    sha256 over the sorted-key JSON. Stable across a JSON round-trip —
+    floats reparse to the same float, so a cell hashed at expansion time
+    matches the spec read back from its per-run JSONL header."""
+    d = spec.to_dict() if hasattr(spec, "to_dict") else spec
+    return hashlib.sha256(
+        json.dumps(d, sort_keys=True).encode()).hexdigest()
+
+
+def write_manifest(directory: str, cells: Sequence[SweepCell]) -> str:
+    """Atomically record the expanded matrix — (index, name, spec hash)
+    per cell — as `<directory>/sweep_manifest.json` BEFORE execution
+    starts, so a later `--resume` can verify it is continuing the same
+    sweep and check each completed cell's output against its hash."""
+    payload = {
+        "kind": "sweep_manifest",
+        "n_cells": len(cells),
+        "cells": [{"index": c.index, "name": c.name,
+                   "spec_hash": spec_hash(c.spec)} for c in cells],
+    }
+    path = os.path.join(directory, MANIFEST_NAME)
+    atomic_write_text(path, json.dumps(payload, indent=2) + "\n")
+    return path
+
+
+def load_manifest(directory: str) -> dict | None:
+    """The recorded manifest, or None when the directory has none (or an
+    unreadable one — a torn manifest means nothing can be verified, which
+    resume treats the same as absent)."""
+    path = os.path.join(directory, MANIFEST_NAME)
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+
+
+def verify_cell_run(path: str, expected_hash: str) -> RunResult | None:
+    """Parse a cell's per-run JSONL and verify it is the COMPLETE output
+    of the expected spec: header present, spec hash matches the manifest,
+    and the round history is as long as the summary claims (a truncated
+    file fails that). Returns the parsed RunResult, or None when the file
+    is missing/corrupt/mismatched — the caller re-runs the cell."""
+    try:
+        res = RunResult.from_jsonl(path)
+    except (OSError, ValueError, TypeError, KeyError):
+        return None
+    if not res.spec or not res.summary:
+        return None
+    if spec_hash(res.spec) != expected_hash:
+        return None
+    if res.summary.get("rounds_run") != len(res.history):
+        return None
+    return res
+
+
+# ---------------------------------------------------------------------------
 # Streaming sinks
 # ---------------------------------------------------------------------------
 
 class RunSink:
     """Streaming consumer of finished runs: `write(name, result)` is
     called AS EACH RUN FINISHES (never post-sweep), `close()` once after
-    the last run. Subclass for custom streaming (DBs, sockets, ...)."""
+    the last run. Subclass for custom streaming (DBs, sockets, ...).
+
+    The elastic service adds lifecycle hooks, all optional: `begin` fires
+    once before execution with the full matrix, `write_skipped` when
+    resume verifies a previously completed cell, `write_interrupted` when
+    the sweep is stopped by SIGTERM/KeyboardInterrupt, and `resume_scan`
+    returns previously completed results to skip. Sinks are context
+    managers (`close` on exit) and must tolerate a second `close`."""
+
+    def begin(self, cells: Sequence[SweepCell], *,
+              resume: bool = False) -> None:
+        """Called once with the expanded matrix before any cell runs."""
 
     def write(self, name: str, result: RunResult) -> None:
         raise NotImplementedError
@@ -240,8 +340,27 @@ class RunSink:
         wall-clock deadline (run_sweep cell_timeout). Default: ignore —
         sinks that persist (JsonlDirSink) record the failure."""
 
+    def write_skipped(self, name: str, result: RunResult) -> None:
+        """Called (in matrix order, before execution) for each cell that
+        resume verified as already complete. Default: ignore."""
+
+    def write_interrupted(self, exc: BaseException) -> None:
+        """Called once when the sweep is interrupted, before close()."""
+
+    def resume_scan(self, cells: Sequence[SweepCell]) -> dict[int, RunResult]:
+        """{cell index: verified RunResult} for cells this sink already
+        holds complete output for. Default: nothing to skip."""
+        return {}
+
     def close(self) -> None:
         pass
+
+    def __enter__(self) -> "RunSink":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
 
 
 class JsonlDirSink(RunSink):
@@ -251,42 +370,117 @@ class JsonlDirSink(RunSink):
     record appended AND FLUSHED to `<dir>/sweep.jsonl`, so a running sweep
     can be tailed and a killed one keeps every completed cell.
     `benchmarks/report.py --runs '<dir>/*.jsonl'` ingests the per-run
-    files (the index's `sweep_run` records are skipped on ingest)."""
+    files (the index's `sweep_run` records are skipped on ingest).
+
+    Concurrency + interruption guarantees (DESIGN.md §12): index appends
+    are serialized under a lock and written as one flushed line each, so
+    N workers never interleave bytes mid-record and a kill loses at most
+    the record being written; per-run files are per-cell (unique names),
+    so they never contend. `begin` records the matrix manifest atomically
+    (write_manifest) and truncates the index for a FRESH sweep but
+    appends for a resumed one — a rejected resume therefore never
+    destroys the old index. `close` is idempotent."""
 
     def __init__(self, directory: str, *, index_name: str = "sweep.jsonl"):
         os.makedirs(directory, exist_ok=True)
         self.directory = directory
         self.paths: list[str] = []
         self.index_path = os.path.join(directory, index_name)
-        self._index = open(self.index_path, "w")
+        self._index = None          # opened lazily, on the first append
+        self._mode = "w"
+        self._lock = threading.Lock()
+        self._closed = False
+
+    def begin(self, cells: Sequence[SweepCell], *,
+              resume: bool = False) -> None:
+        self._mode = "a" if resume else "w"
+        write_manifest(self.directory, cells)
+
+    def resume_scan(self, cells: Sequence[SweepCell]) -> dict[int, RunResult]:
+        """Verify previously completed cells against the recorded
+        manifest: {index: RunResult} for every cell whose per-run JSONL
+        is intact and hash-matched (verify_cell_run). Raises SpecError
+        when the directory holds a DIFFERENT sweep's manifest — resuming
+        would silently mix two matrices' results. A directory without a
+        manifest (or with a torn one) verifies nothing."""
+        manifest = load_manifest(self.directory)
+        if manifest is None:
+            return {}
+        recorded = {c.get("index"): c for c in manifest.get("cells", [])}
+        expected = {c.index: {"index": c.index, "name": c.name,
+                              "spec_hash": spec_hash(c.spec)} for c in cells}
+        if recorded != expected:
+            raise SpecError(
+                f"resume: {self.directory!r} holds the manifest of a "
+                f"different sweep matrix ({len(recorded)} cell(s) recorded "
+                f"vs {len(expected)} expanded); refusing to mix results — "
+                f"use a fresh --out-dir or drop --resume to overwrite")
+        done: dict[int, RunResult] = {}
+        for c in cells:
+            path = os.path.join(self.directory, f"{c.name}.jsonl")
+            if not os.path.exists(path):
+                continue
+            res = verify_cell_run(path, expected[c.index]["spec_hash"])
+            if res is not None:
+                done[c.index] = res
+        return done
+
+    def _append(self, record: dict) -> None:
+        line = json.dumps(_json_finite(record), allow_nan=False) + "\n"
+        with self._lock:
+            if self._closed:
+                raise ValueError(f"sink {self.directory!r} is closed")
+            if self._index is None:
+                self._index = open(self.index_path, self._mode)
+            # one write() of a full line + flush: concurrent workers
+            # never interleave bytes, and a tailing consumer (or a kill)
+            # always sees whole records
+            self._index.write(line)
+            self._index.flush()
 
     def write(self, name: str, result: RunResult) -> None:
         path = os.path.join(self.directory, f"{name}.jsonl")
         result.to_jsonl(path)
-        self.paths.append(path)
-        self._index.write(json.dumps(_json_finite(
-            {"kind": "sweep_run", "name": name, "spec": result.spec,
-             "summary": result.summary}), allow_nan=False) + "\n")
-        self._index.flush()
+        self._append({"kind": "sweep_run", "name": name,
+                      "spec": result.spec, "summary": result.summary})
+        with self._lock:
+            self.paths.append(path)
 
     def write_error(self, name: str, spec, exc: BaseException,
                     tb: str, *, kind: str = "error") -> None:
         # flushed immediately, like sweep_run records: a tailing consumer
         # (or a post-mortem) sees the failure the moment the cell dies
-        self._index.write(json.dumps(_json_finite(
+        self._append(
             {"kind": "sweep_error", "error_kind": kind, "name": name,
              "spec": spec.to_dict() if hasattr(spec, "to_dict") else spec,
              "error": f"{type(exc).__name__}: {exc}",
-             "traceback": tb}), allow_nan=False) + "\n")
-        self._index.flush()
+             "traceback": tb})
+
+    def write_skipped(self, name: str, result: RunResult) -> None:
+        # the per-run file already exists (it is what was verified); the
+        # index records the skip so a resumed sweep's index still names
+        # every cell of the matrix
+        self._append({"kind": "sweep_skip", "name": name,
+                      "spec": result.spec, "summary": result.summary})
+        with self._lock:
+            self.paths.append(os.path.join(self.directory, f"{name}.jsonl"))
+
+    def write_interrupted(self, exc: BaseException) -> None:
+        self._append({"kind": "sweep_interrupted",
+                      "error": f"{type(exc).__name__}: {exc}"})
 
     def close(self) -> None:
-        if not self._index.closed:
-            self._index.close()
+        with self._lock:
+            self._closed = True
+            if self._index is not None and not self._index.closed:
+                try:
+                    self._index.flush()
+                finally:
+                    self._index.close()
 
 
 # ---------------------------------------------------------------------------
-# Execution: env + trainer reuse across the matrix
+# Execution: an elastic service with env/trainer reuse across the matrix
 # ---------------------------------------------------------------------------
 
 class CellTimeout(RuntimeError):
@@ -294,6 +488,13 @@ class CellTimeout(RuntimeError):
     cell_timeout). Deliberately NOT retried: a deterministic cell that
     times out once will time out again, and re-running it just doubles
     the wasted wall-clock."""
+
+
+class SweepInterrupted(BaseException):
+    """The sweep was stopped by SIGTERM / KeyboardInterrupt. A
+    BaseException (like KeyboardInterrupt itself) so the per-cell
+    `except Exception` retry machinery can never absorb it — an
+    interrupt always stops the whole matrix, never burns retries."""
 
 
 class _DeadlineCallback(Callback):
@@ -318,6 +519,7 @@ class _DeadlineCallback(Callback):
 
     def on_block_end(self, start: int, n_rounds: int, trainer) -> None:
         self._check()
+
 
 def _env_key(spec: ExperimentSpec) -> str:
     """Runs sharing this key may share one Environment: the data / model
@@ -350,30 +552,322 @@ class SweepResult:
     A failed cell holds None at its matrix position (so indices line up
     with `cells`) and an error record — {"name", "kind", "error",
     "traceback"} with kind "error" or "timeout" — in `errors`; a sweep
-    with any error should exit nonzero (the CLI does)."""
+    with any error should exit nonzero (the CLI does). `n_skipped` counts
+    cells resume verified and did not re-run (their parsed RunResults sit
+    in `results`); `n_worker_crashes` counts workers lost to exceptions
+    OUTSIDE the per-cell retry machinery (their in-flight cells were
+    requeued on surviving workers)."""
 
     cells: list[SweepCell]
     results: list[RunResult | None]
     n_env_builds: int
     n_trainer_builds: int
     errors: list[dict] = dataclasses.field(default_factory=list)
+    n_skipped: int = 0
+    n_worker_crashes: int = 0
 
     def summary_rows(self) -> list[dict]:
         return [{"name": c.name, **r.summary}
                 for c, r in zip(self.cells, self.results) if r is not None]
 
 
+class _CellRunner:
+    """Shared execution state for one run_sweep call: the pending-cell
+    queue, the cross-worker environment cache, per-worker trainer pools,
+    and lock-serialized sink/log access. One instance is driven either
+    serially (workers=1 — today's loop, bit-and-behavior identical) or by
+    N daemon worker threads (run_parallel)."""
+
+    def __init__(self, cells: Sequence[SweepCell], *, sink, log, callbacks,
+                 max_retries: int, retry_backoff: float,
+                 cell_timeout: float | None, interrupt: threading.Event,
+                 skipped: dict[int, RunResult]):
+        self.cells = list(cells)
+        self.sink = sink
+        self.log = log
+        self.callbacks = list(callbacks)
+        self.max_retries = int(max_retries)
+        self.retry_backoff = float(retry_backoff)
+        self.cell_timeout = cell_timeout
+        self.interrupt = interrupt
+        self.skipped = dict(skipped)
+        self.results: list[RunResult | None] = [None] * len(self.cells)
+        self.errors: dict[int, dict] = {}
+        self.n_env = 0
+        self.n_trainer = 0
+        self.n_worker_crashes = 0
+        self.n_done = 0
+        self.queue = collections.deque(
+            i for i in range(len(self.cells)) if i not in self.skipped)
+        self._qlock = threading.Lock()
+        # serializes sink + log + counter access: custom RunSinks need no
+        # thread safety of their own (JsonlDirSink has its own lock too,
+        # for direct use), and progress lines never interleave
+        self._io = threading.Lock()
+        self.envs: dict[str, Environment] = {}
+        self._env_locks: dict[str, threading.Lock] = {}
+        self._env_master = threading.Lock()
+
+    # -- shared environment cache ------------------------------------------
+
+    def _get_env(self, ek: str, spec: ExperimentSpec) -> Environment:
+        """One build per env key, even under N workers: a per-key lock
+        makes the second worker of a family wait for (then reuse) the
+        first one's build instead of duplicating it."""
+        with self._env_master:
+            lock = self._env_locks.setdefault(ek, threading.Lock())
+        with lock:
+            env = self.envs.get(ek)
+            if env is None:
+                env = build_environment(spec)
+                self.envs[ek] = env
+                with self._io:
+                    self.n_env += 1
+            return env
+
+    # -- queue --------------------------------------------------------------
+
+    def _next(self) -> int | None:
+        if self.interrupt.is_set():
+            return None
+        with self._qlock:
+            return self.queue.popleft() if self.queue else None
+
+    def _requeue(self, idx: int) -> None:
+        with self._qlock:
+            self.queue.appendleft(idx)
+
+    # -- per-cell checkpointing (mid-cell elastic resume) -------------------
+
+    def _ckpt_dir(self, cell: SweepCell) -> str | None:
+        """The service-managed checkpoint directory for a cell —
+        `<sink dir>/ckpt/<cell name>` — active only when the sink is
+        directory-backed and the cell's spec opts into checkpointing
+        (run.checkpoint_every set) without naming its own directory. The
+        cell SPEC is never mutated: the path rides the checkpoint_dir=
+        override of Run.run/run_or_resume, so per-run JSONL headers stay
+        byte-identical across sink directories and standalone runs."""
+        d = getattr(self.sink, "directory", None)
+        rs = cell.spec.run
+        if not d or rs.checkpoint_dir or not rs.checkpoint_every:
+            return None
+        return os.path.join(d, "ckpt", cell.name)
+
+    # -- execution ----------------------------------------------------------
+
+    def record_skip(self, idx: int) -> None:
+        cell, res = self.cells[idx], self.skipped[idx]
+        self.results[idx] = res
+        with self._io:
+            self.n_done += 1
+            if self.sink is not None:
+                self.sink.write_skipped(cell.name, res)
+            if self.log is not None:
+                self.log(f"[{cell.name}] verified complete — "
+                         f"skipped (resume)")
+
+    def run_cell(self, idx: int, trainers: dict) -> None:
+        """Execute one cell with the retry/backoff/timeout machinery,
+        record the outcome, and maintain the caller's (worker-local)
+        trainer pool. Raises SweepInterrupted when the sweep is being
+        stopped; lets sink failures escape (the worker loop treats those
+        as worker crashes and requeues the cell)."""
+        cell = self.cells[idx]
+        ek = _env_key(cell.spec)
+        tk = ek + "\x00" + _trainer_key(cell.spec)
+        ckpt_dir = self._ckpt_dir(cell)
+        res = last_exc = last_tb = None
+        kind = "error"
+        for attempt in range(self.max_retries + 1):
+            if self.interrupt.is_set():
+                raise SweepInterrupted
+            if attempt:
+                # exponential backoff, jittered to [0.5, 1.5)x
+                delay = (self.retry_backoff * 2.0 ** (attempt - 1)
+                         * (0.5 + random.random()))
+                time.sleep(delay)
+            trainer = trainers.get(tk)
+            cbs = list(self.callbacks)
+            cbs.append(StopOnEvent(self.interrupt, SweepInterrupted))
+            if self.cell_timeout is not None:
+                cbs.append(_DeadlineCallback(self.cell_timeout))
+            try:
+                env = self._get_env(ek, cell.spec)
+                run = Experiment(cell.spec).build(env=env, trainer=trainer)
+                if trainer is None:
+                    trainers[tk] = run.trainer
+                    with self._io:
+                        self.n_trainer += 1
+                if ckpt_dir is not None:
+                    res = run.run_or_resume(ckpt_dir, callbacks=cbs)
+                else:
+                    res = run.run(callbacks=cbs)
+                break
+            except CellTimeout as exc:
+                trainers.pop(tk, None)
+                last_exc, last_tb = exc, traceback.format_exc()
+                kind = "timeout"
+                self._log(f"[{cell.name}] timed out: {exc}")
+                break
+            except SweepInterrupted:
+                trainers.pop(tk, None)     # stopped mid-round: state torn
+                raise
+            except Exception as exc:
+                trainers.pop(tk, None)
+                last_exc, last_tb = exc, traceback.format_exc()
+                kind = "error"
+                self._log(f"[{cell.name}] attempt {attempt + 1} failed: "
+                          f"{type(exc).__name__}: {exc}")
+        if res is None:
+            self.errors[idx] = {"name": cell.name, "kind": kind,
+                                "error": (f"{type(last_exc).__name__}: "
+                                          f"{last_exc}"),
+                                "traceback": last_tb}
+            with self._io:
+                if self.sink is not None:
+                    self.sink.write_error(cell.name, cell.spec, last_exc,
+                                          last_tb, kind=kind)
+            return
+        self.results[idx] = res
+        if ckpt_dir is not None and os.path.isdir(ckpt_dir):
+            # the result is about to be durable in the sink; the cell's
+            # resume checkpoints are dead weight (and would shadow a later
+            # sweep's same-named cell). Best-effort: a racing cleanup must
+            # not fail the cell.
+            try:
+                CheckpointManager(ckpt_dir).clear()
+            except OSError:
+                pass
+        with self._io:
+            # sink first: if the write dies (worker crash, cell requeued
+            # and re-run), the done counter hasn't ticked for it yet
+            if self.sink is not None:
+                self.sink.write(cell.name, res)
+            self.n_done += 1
+            if self.log is not None:
+                s = res.summary
+                self.log(f"[{self.n_done}/{len(self.cells)}] {cell.name}: "
+                         f"{s['rounds_run']} rounds, acc "
+                         f"{s['final_accuracy']:.3f}")
+
+    def _log(self, msg: str) -> None:
+        if self.log is not None:
+            with self._io:
+                self.log(msg)
+
+    def run_serial(self) -> None:
+        """Drain the queue in the calling thread (workers=1, and the
+        leftover fallback when every worker thread crashed). Exceptions
+        escape to the caller — exactly the pre-elastic behavior."""
+        trainers: dict = {}
+        while True:
+            idx = self._next()
+            if idx is None:
+                return
+            self.run_cell(idx, trainers)
+
+    def _worker_main(self) -> None:
+        trainers: dict = {}
+        while not self.interrupt.is_set():
+            idx = self._next()
+            if idx is None:
+                return
+            try:
+                self.run_cell(idx, trainers)
+            except SweepInterrupted:
+                return           # in-flight cell stays un-recorded: resumable
+            except BaseException as exc:
+                # a failure OUTSIDE the per-cell machinery (e.g. the sink
+                # died mid-write): this worker is done — its pooled
+                # trainers go with it — but the matrix is not: the
+                # in-flight cell is requeued for a surviving worker (or
+                # the serial fallback)
+                with self._io:
+                    self.n_worker_crashes += 1
+                    if self.log is not None:
+                        self.log(f"worker crashed on "
+                                 f"[{self.cells[idx].name}] "
+                                 f"({type(exc).__name__}: {exc}); requeued")
+                self._requeue(idx)
+                return
+
+    def run_parallel(self, workers: int) -> None:
+        """Drive the queue with `workers` daemon threads; on return the
+        queue is empty or the sweep was interrupted. Cells left behind by
+        crashed workers are drained serially in the calling thread (same
+        guarantees as workers=1)."""
+        with self._qlock:
+            n = min(int(workers), len(self.queue))
+        threads = [threading.Thread(target=self._worker_main, daemon=True,
+                                    name=f"sweep-worker-{i}")
+                   for i in range(n)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            while t.is_alive():
+                try:
+                    t.join()
+                except KeyboardInterrupt:
+                    # Ctrl-C in the main thread: stop cooperatively, keep
+                    # joining so no worker outlives the sweep
+                    self.interrupt.set()
+        self.run_serial()
+
+
+def _collective_safe(cells: Sequence[SweepCell]) -> bool:
+    """True when thread-parallel cell dispatch cannot deadlock. Concurrent
+    launches of jitted programs that contain COLLECTIVES over the same
+    devices have no cross-thread ordering: two in-flight shard_map psums
+    can interleave their per-device programs so the rendezvous never
+    completes (observed wedging the forced-4-device CPU leg with
+    workers=2 — every thread futex-parked at ~0 CPU). Collective-free
+    programs (shards == 1, or the eager reference backend) dispatch
+    concurrently fine, so the gate resolves each cell's shard count
+    exactly the way its RoundEngine would."""
+    from repro.core.round_engine import resolve_shards
+    for cell in cells:
+        r = cell.spec.run
+        if r.backend == "packed" and resolve_shards(r.shards) > 1:
+            return False
+    return True
+
+
+def _install_sigterm(interrupt: threading.Event):
+    """Install a SIGTERM -> cooperative-stop handler (main thread only —
+    Python forbids signal.signal elsewhere, and library callers running
+    run_sweep in a thread keep their own handling). Returns the previous
+    handler to restore, or None when not installed."""
+    if threading.current_thread() is not threading.main_thread():
+        return None
+    try:
+        return signal.signal(signal.SIGTERM,
+                             lambda signum, frame: interrupt.set())
+    except ValueError:
+        return None
+
+
 def run_sweep(sweep: SweepSpec, *, sink: RunSink | None = None,
               log: Callable[[str], None] | None = None,
               callbacks: Sequence = (), max_retries: int = 0,
               retry_backoff: float = 0.5,
-              cell_timeout: float | None = None) -> SweepResult:
+              cell_timeout: float | None = None,
+              workers: int = 1, resume: bool = False) -> SweepResult:
     """Execute the full matrix, streaming each RunResult to `sink` as it
-    finishes. Runs execute in matrix order; environments and trainers are
-    pooled by `_env_key` / `_trainer_key`, which preserves bit-for-bit
-    equality with standalone runs (reset re-derives every piece of run
-    state from the cell's own spec). `callbacks` are passed to every run
-    (careful with stateful hooks — one instance sees all cells).
+    finishes. With `workers=1` (default) cells run serially in matrix
+    order — today's behavior, bit-for-bit; `workers=N` runs independent
+    cells concurrently (worker-local trainer pools + a shared per-key-
+    locked environment cache), which changes no per-run record bits, only
+    index completion order and the trainer-build count. When any cell's
+    engine would shard_map over more than one device, `workers` caps to 1
+    with a log note — concurrent dispatch of collective programs over a
+    shared mesh has no cross-thread ordering and can deadlock
+    (`_collective_safe`); true multi-device cell parallelism needs
+    disjoint mesh slices (ROADMAP follow-up). Environments and
+    trainers are pooled by `_env_key` / `_trainer_key`, which preserves
+    bit-for-bit equality with standalone runs (reset re-derives every
+    piece of run state from the cell's own spec). `callbacks` are passed
+    to every run (careful with stateful hooks — one instance sees all
+    cells, possibly from several threads).
 
     Cell failures are ISOLATED: a raising cell is retried up to
     `max_retries` times (for transient failures), sleeping
@@ -382,80 +876,79 @@ def run_sweep(sweep: SweepSpec, *, sink: RunSink | None = None,
     decorrelate; then recorded — in the sink's index via `write_error`
     and in `SweepResult.errors` — and the rest of the matrix still runs.
     A failed cell's pooled trainer is evicted (the exception may have
-    left it mid-round), so retries and later cells build fresh.
+    left it mid-round), so retries and later cells build fresh. A crash
+    OUTSIDE the cell machinery (e.g. a dying sink) costs one worker: its
+    in-flight cell is requeued on the survivors (serially in the main
+    thread when none survive, where the failure then surfaces).
 
     `cell_timeout` (seconds) bounds each cell's wall clock via a
     cooperative deadline checked at round/block materialization points; a
     cell past its deadline raises CellTimeout, is NOT retried
     (deterministic cells time out deterministically), and is recorded
-    with kind="timeout". KeyboardInterrupt still aborts the sweep."""
+    with kind="timeout".
+
+    `resume=True` asks the sink for previously completed cells
+    (`resume_scan` — JsonlDirSink verifies per-run files against the
+    sweep_manifest.json spec hashes), emits `write_skipped` for them in
+    matrix order, and re-runs only the rest; cells that checkpointed
+    mid-run (spec run.checkpoint_every + a directory sink) continue from
+    their newest intact step. SIGTERM and KeyboardInterrupt stop all
+    workers at the next materialization point, write a
+    `sweep_interrupted` sink record, close the sink, and re-raise
+    KeyboardInterrupt — a killed sweep is always resumable."""
     cells = sweep.expand()
-    envs: dict[str, Environment] = {}
-    trainers: dict[str, Any] = {}
-    n_env = n_trainer = 0
-    results: list[RunResult | None] = []
-    errors: list[dict] = []
+    workers = int(workers)
+    if workers > 1 and not _collective_safe(cells):
+        if log is not None:
+            log("sweep: engine shard_maps over >1 device — cell workers "
+                "serialized (concurrent collective dispatch can deadlock); "
+                "running with workers=1")
+        workers = 1
+    skipped: dict[int, RunResult] = {}
+    if resume and sink is not None:
+        skipped = sink.resume_scan(cells)
+    if sink is not None:
+        # after resume_scan: a rejected resume (manifest mismatch) must
+        # not have overwritten the old manifest or truncated the index
+        sink.begin(cells, resume=resume)
+    interrupt = threading.Event()
+    runner = _CellRunner(cells, sink=sink, log=log, callbacks=callbacks,
+                         max_retries=max_retries,
+                         retry_backoff=retry_backoff,
+                         cell_timeout=cell_timeout, interrupt=interrupt,
+                         skipped=skipped)
+    prev_handler = _install_sigterm(interrupt)
+    interrupted = False
     try:
-        for cell in cells:
-            ek = _env_key(cell.spec)
-            tk = ek + "\x00" + _trainer_key(cell.spec)
-            res = last_exc = last_tb = None
-            kind = "error"
-            for attempt in range(int(max_retries) + 1):
-                if attempt:
-                    # exponential backoff, jittered to [0.5, 1.5)x
-                    delay = (float(retry_backoff) * 2.0 ** (attempt - 1)
-                             * (0.5 + random.random()))
-                    time.sleep(delay)
-                trainer = trainers.get(tk)
-                cbs = list(callbacks)
-                if cell_timeout is not None:
-                    cbs.append(_DeadlineCallback(cell_timeout))
-                try:
-                    env = envs.get(ek)
-                    if env is None:
-                        env = envs[ek] = build_environment(cell.spec)
-                        n_env += 1
-                    run = Experiment(cell.spec).build(env=env,
-                                                      trainer=trainer)
-                    if trainer is None:
-                        trainers[tk] = run.trainer
-                        n_trainer += 1
-                    res = run.run(callbacks=cbs)
-                    break
-                except CellTimeout as exc:
-                    trainers.pop(tk, None)
-                    last_exc, last_tb = exc, traceback.format_exc()
-                    kind = "timeout"
-                    if log is not None:
-                        log(f"[{cell.name}] timed out: {exc}")
-                    break
-                except Exception as exc:
-                    trainers.pop(tk, None)
-                    last_exc, last_tb = exc, traceback.format_exc()
-                    kind = "error"
-                    if log is not None:
-                        log(f"[{cell.name}] attempt {attempt + 1} failed: "
-                            f"{type(exc).__name__}: {exc}")
-            results.append(res)
-            if res is None:
-                errors.append({"name": cell.name, "kind": kind,
-                               "error": (f"{type(last_exc).__name__}: "
-                                         f"{last_exc}"),
-                               "traceback": last_tb})
-                if sink is not None:
-                    sink.write_error(cell.name, cell.spec, last_exc,
-                                     last_tb, kind=kind)
-                continue
-            if sink is not None:
-                sink.write(cell.name, res)
-            if log is not None:
-                s = res.summary
-                log(f"[{len(results)}/{len(cells)}] {cell.name}: "
-                    f"{s['rounds_run']} rounds, acc "
-                    f"{s['final_accuracy']:.3f}")
+        try:
+            for idx in sorted(skipped):
+                runner.record_skip(idx)
+            if workers <= 1:
+                runner.run_serial()
+            else:
+                runner.run_parallel(workers)
+        except (KeyboardInterrupt, SweepInterrupted):
+            interrupted = True
+            interrupt.set()
+        interrupted = interrupted or interrupt.is_set()
     finally:
-        if sink is not None:
-            sink.close()
-    return SweepResult(cells=cells, results=results, n_env_builds=n_env,
-                       n_trainer_builds=n_trainer, errors=errors)
+        if prev_handler is not None:
+            signal.signal(signal.SIGTERM, prev_handler)
+        try:
+            if interrupted and sink is not None:
+                sink.write_interrupted(
+                    KeyboardInterrupt("sweep interrupted"))
+        finally:
+            if sink is not None:
+                sink.close()
+    if interrupted:
+        raise KeyboardInterrupt(
+            "sweep interrupted — completed cells are preserved in the "
+            "sink; relaunch with resume to continue")
+    return SweepResult(cells=cells, results=runner.results,
+                       n_env_builds=runner.n_env,
+                       n_trainer_builds=runner.n_trainer,
+                       errors=[runner.errors[i]
+                               for i in sorted(runner.errors)],
+                       n_skipped=len(skipped),
+                       n_worker_crashes=runner.n_worker_crashes)

@@ -43,7 +43,11 @@ def _path_dict(tree: PyTree) -> dict[str, np.ndarray]:
     return out
 
 
-def _atomic_write_text(path: str, text: str) -> None:
+def atomic_write_text(path: str, text: str) -> None:
+    """Write `text` to `path` via mkstemp + os.replace in the target
+    directory: the file is either fully present under its final name or
+    absent, never torn. Shared by checkpoint metadata and the sweep
+    service's manifest (repro.api.sweep.write_manifest)."""
     d = os.path.dirname(os.path.abspath(path)) or "."
     fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
     try:
@@ -53,6 +57,9 @@ def _atomic_write_text(path: str, text: str) -> None:
     finally:
         if os.path.exists(tmp):
             os.unlink(tmp)
+
+
+_atomic_write_text = atomic_write_text  # original (private) name
 
 
 def save_checkpoint(
@@ -213,6 +220,18 @@ class CheckpointManager:
             except CheckpointCorruptError as e:
                 last_err = e  # fall back to the previous intact step
         raise last_err
+
+    def clear(self) -> None:
+        """Delete every checkpoint step (npz + metadata) under this
+        manager's prefix. The sweep service calls this once a cell's
+        final result is durable in the sink: its mid-cell resume
+        checkpoints are dead weight, and a stale step would shadow a
+        later sweep's same-named cell."""
+        for s in self._steps():
+            for suffix in (".npz", ".meta.json"):
+                p = self._name(s) + suffix
+                if os.path.exists(p):
+                    os.unlink(p)
 
     def _steps(self) -> list[int]:
         out = []

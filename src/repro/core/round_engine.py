@@ -199,16 +199,22 @@ def bucket_capacity(n_clients: int, *, shards: int = 1, bucket: bool = True,
     return per * shards
 
 
-def _resolve_shards(shards: int | None) -> int:
+def resolve_shards(shards: int | None) -> int:
     """Data-shard count for the client axis: explicit arg, then the
     REPRO_ROUND_SHARDS env override (CPU tests under
-    --xla_force_host_platform_device_count), then every local device."""
+    --xla_force_host_platform_device_count), then every local device.
+    Public so callers that must know whether an engine will shard_map
+    (e.g. the sweep service's collective-safety gate) resolve it the
+    same way the engine will."""
     if shards is not None:
         return max(1, int(shards))         # explicit: let mesh build fail loud
     env = os.environ.get("REPRO_ROUND_SHARDS")
     if env:
         return min(max(1, int(env)), len(jax.devices()))
     return len(jax.devices())
+
+
+_resolve_shards = resolve_shards
 
 
 class RoundEngine:
@@ -255,7 +261,7 @@ class RoundEngine:
         self.bucket = bool(bucket)
         self.max_clients = int(max_clients) if max_clients else None
         self.aggregator = aggregator
-        self.shards = _resolve_shards(shards)
+        self.shards = resolve_shards(shards)
         self.prunable = jnp.asarray(pack.prunable_mask())
         # compile accounting: one increment per (re)trace of a step impl —
         # bucketing bounds this by the number of distinct bucket sizes per

@@ -283,9 +283,12 @@ def test_cli_sweep_end_to_end(tmp_path, capsys):
     assert "sweep matrix: 2 run(s)" in out
     assert "environments built 1" in out
     files = sorted(os.listdir(out_dir))
-    assert len([f for f in files if f != "sweep.jsonl"]) == 2
+    run_files = [f for f in files
+                 if f not in ("sweep.jsonl", "sweep_manifest.json")]
+    assert len(run_files) == 2
     assert "sweep.jsonl" in files
-    r = RunResult.from_jsonl(os.path.join(out_dir, files[0]))
+    assert "sweep_manifest.json" in files  # elastic-resume manifest (§12)
+    r = RunResult.from_jsonl(os.path.join(out_dir, run_files[0]))
     assert r.summary["rounds_run"] == ROUNDS
 
 
@@ -396,4 +399,5 @@ def test_cli_sweep_failed_cell_exits_nonzero(tmp_path, capsys):
     assert "1 cell(s) failed" in cap.err
     # the surviving cell's artifacts are still on disk next to the record
     files = os.listdir(out_dir)
-    assert "sweep.jsonl" in files and len(files) == 2
+    assert "sweep.jsonl" in files and "sweep_manifest.json" in files
+    assert len(files) == 3
