@@ -1,0 +1,191 @@
+"""Fleet-scale cohort-streaming probe: populations 1e2 -> 1e5 through the
+packed engine with the streamed client store (DESIGN.md §13).
+
+For each population the harness builds a `synthetic-fleet` roster (lazy,
+host-side), runs the same short `random_k` schedule with
+``client_store="streamed"``, and records rounds/sec, H2D bytes, peak
+device-resident cohort bytes, and prefetch-stall seconds. At the resident
+scales (replicated store <= a few hundred MB) it ALSO runs the replicated
+oracle and asserts the streamed trajectory is BITWISE identical — the
+cohort store's core contract, checked here at every bench run, not just in
+tests.
+
+The headline structural claim — peak device bytes track the COHORT (the
+clients the schedule actually touches per block), not the population — is
+the compare gate: `peak_cohort_bytes` must stay FLAT (within
+``PEAK_FLAT_FACTOR``) across the whole population ladder, and must not
+grow past the committed baseline's peak by more than the same factor.
+Wall-clock (rounds/sec) deltas WARN only, as everywhere else in this
+bench suite (the CI box is cgroup-throttled).
+
+1e6 clients is the documented full-scale point (--full): the roster stays
+lazy (O(population) scalars), the phi pass is the only O(population) work
+per build, and per-block device cost is unchanged — the fast ladder's
+flat-peak gate is what makes that extrapolation sound.
+
+    PYTHONPATH=src python -m benchmarks.fleet_scaling \
+        [--out BENCH_fleet_scaling.json] [--compare BENCH_fleet_scaling.json]
+        [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.api import (
+    DataSpec, Experiment, ExperimentSpec, ModelSpec, RunSpec, SchemeSpec,
+    WirelessSpec,
+)
+
+POPULATIONS_FAST = [100, 1_000, 10_000, 100_000]
+POPULATIONS_FULL = [100, 1_000, 10_000, 100_000, 1_000_000]
+# replicated-oracle parity legs: populations whose full ClientStore is
+# small enough to build alongside the streamed run
+PARITY_MAX_POP = 1_000
+ROUNDS, K, RPD = 8, 8, 4
+# peak cohort bytes may wiggle with bucket-ladder rounding across
+# populations, but must never scale with the population; 4x covers one
+# pow2 bucket step plus n_max jitter from the per-client count draw
+PEAK_FLAT_FACTOR = 4.0
+
+
+def _spec(population: int, mode: str) -> ExperimentSpec:
+    return ExperimentSpec(
+        # ~2 samples/client keeps per-cohort n_max flat across the ladder,
+        # so the probe isolates how cost scales with POPULATION
+        data=DataSpec(dataset="synthetic-fleet", n_clients=population,
+                      n_train=2 * population, n_test=64, seed=7),
+        model=ModelSpec(name="mlp-edge", kwargs={"hidden": 16}),
+        wireless=WirelessSpec(e0=1e6, t0=1e6, seed=0),
+        scheme=SchemeSpec(name="random_k", rounds=ROUNDS, batch=4,
+                          ao={"k": K, "seed": 1}),
+        run=RunSpec(seed=2, evaluate=False, stop_on_budget=False,
+                    rounds_per_dispatch=RPD, client_store=mode))
+
+
+def _records(res) -> list:
+    return [(m.round, repr(m.train_loss), tuple(int(i) for i in m.selected))
+            for m in res.history]
+
+
+def _run_population(population: int) -> dict:
+    t0 = time.perf_counter()
+    run = Experiment(_spec(population, "streamed")).build()
+    build_s = time.perf_counter() - t0
+    est = run.trainer.store_nbytes()     # replicated store this AVOIDS
+    t0 = time.perf_counter()
+    res = run.run()
+    wall = time.perf_counter() - t0
+    fleet = res.summary["fleet"]
+    row = {
+        "population": population,
+        "env_build_s": round(build_s, 3),
+        "train_wall_s": round(wall, 3),
+        "rounds_per_s": round(ROUNDS / wall, 2),
+        "replicated_store_bytes": int(est),
+        "h2d_bytes": int(fleet["h2d_bytes"]),
+        "peak_cohort_bytes": int(fleet["peak_cohort_bytes"]),
+        "prefetch_stall_s": round(float(fleet["prefetch_stall_s"]), 4),
+        "n_cohort_swaps": int(fleet["n_cohort_swaps"]),
+    }
+    if population <= PARITY_MAX_POP:
+        oracle = Experiment(_spec(population, "replicated")).build().run()
+        row["parity_bitwise"] = _records(oracle) == _records(res)
+        if not row["parity_bitwise"]:
+            raise AssertionError(
+                f"streamed trajectory diverged from the replicated oracle "
+                f"at population {population} — the cohort store broke the "
+                f"bitwise contract")
+    return row
+
+
+def main(fast: bool = True, out_path: str | None = None,
+         compare: str | None = None) -> dict:
+    pops = POPULATIONS_FAST if fast else POPULATIONS_FULL
+    rows = []
+    for pop in pops:
+        rows.append(_run_population(pop))
+        r = rows[-1]
+        print(f"fleet_scaling/pop{pop},{r['train_wall_s'] * 1e6:.0f},"
+              f"rounds_per_s={r['rounds_per_s']} "
+              f"peak_cohort_bytes={r['peak_cohort_bytes']} "
+              f"h2d_bytes={r['h2d_bytes']} "
+              f"stall_s={r['prefetch_stall_s']}", flush=True)
+    peaks = [r["peak_cohort_bytes"] for r in rows]
+    flat = max(peaks) <= PEAK_FLAT_FACTOR * min(peaks)
+    report = {
+        "kind": "fleet_scaling",
+        "meta": {"backend": jax.default_backend(),
+                 "n_devices": jax.device_count(),
+                 "cpu_count": os.cpu_count(),
+                 "rounds": ROUNDS, "k": K, "rounds_per_dispatch": RPD,
+                 "profile": "fast" if fast else "full"},
+        "rows": rows,
+        "peak_flat": flat,
+        "peak_spread": round(max(peaks) / min(peaks), 3),
+    }
+    print(f"fleet_scaling/peak_flat,{report['peak_spread']:.3f},"
+          f"flat={flat}")
+    if not flat:
+        raise AssertionError(
+            f"peak cohort bytes spread {report['peak_spread']:.2f}x across "
+            f"populations {pops[0]}..{pops[-1]} — device residency is "
+            f"scaling with the population, not the cohort")
+    if compare is not None:
+        if not os.path.exists(compare):
+            print(f"WARNING: --compare baseline {compare!r} not found; "
+                  f"skipping regression check")
+        else:
+            with open(compare) as f:
+                prev = json.load(f)
+            report["compare"] = _compare(prev, report)
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=2)
+            f.write("\n")
+        print(f"wrote {out_path}")
+    return report
+
+
+def _compare(prev: dict, cur: dict) -> dict:
+    """Regression check against a committed report. Peak device bytes are
+    the HARD gate (structural: a peak that grew past the flat factor means
+    cohort residency regressed toward population residency); rounds/sec
+    deltas WARN only (wall clocks on the throttled CI box move with
+    load)."""
+    prev_rows = {r["population"]: r for r in prev.get("rows", [])}
+    peak_regressed, slow = [], []
+    for r in cur["rows"]:
+        p = prev_rows.get(r["population"])
+        if p is None:
+            continue
+        if r["peak_cohort_bytes"] > PEAK_FLAT_FACTOR * p["peak_cohort_bytes"]:
+            peak_regressed.append(r["population"])
+        if r["rounds_per_s"] < 0.5 * p["rounds_per_s"]:
+            slow.append(r["population"])
+    out = {"n_overlap": len(set(prev_rows) & {r["population"]
+                                              for r in cur["rows"]}),
+           "peak_regressed": peak_regressed}
+    if peak_regressed:
+        print("FAILED: peak cohort bytes regressed vs committed baseline "
+              "at populations", peak_regressed)
+    if slow:
+        print("WARNING: rounds/sec below half the committed baseline at "
+              "populations", slow, "(throttle-sensitive, not gated)")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--compare", default=None)
+    a = ap.parse_args()
+    rep = main(fast=not a.full, out_path=a.out, compare=a.compare)
+    if rep.get("compare", {}).get("peak_regressed"):
+        raise SystemExit(1)

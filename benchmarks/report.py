@@ -110,8 +110,9 @@ def runs_table(paths, errors=None) -> str:
         errors = load_sweep_errors(paths)
     out = ["| run | dataset | model | scheme | status | rounds | "
            "final acc @ round | E used [J] | T used [s] | theta | feasible "
-           "| faults (drop/quar/skip) | aggregation |",
-           "|---|---|---|---|---|---|---|---|---|---|---|---|---|"]
+           "| faults (drop/quar/skip) | aggregation "
+           "| fleet (swaps/H2D MB/stall s) |",
+           "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|"]
     rows = []
     for path, r in _parseable_runs(paths):
         s = r.summary
@@ -136,6 +137,13 @@ def runs_table(paths, errors=None) -> str:
                a.get("aggregator", "?") + " " + " ".join(
                    f"{k}={v}" for k, v in sorted(a.items())
                    if k != "aggregator"))
+        # cohort-streaming counters ride the summary only when the run
+        # actually streamed (core/cohort_store.py)
+        fl = s.get("fleet")
+        fleet = ("—" if not fl else
+                 f"{fl.get('n_cohort_swaps', 0)}"
+                 f"/{fl.get('h2d_bytes', 0) / 2**20:.1f}"
+                 f"/{fl.get('prefetch_stall_s', 0.0):.3f}")
         rows.append((name,
             f"| {name} "
             f"| {spec.get('data', {}).get('dataset', '?')} "
@@ -149,7 +157,7 @@ def runs_table(paths, errors=None) -> str:
             f"| {num('cumulative_delay', 0.0):.2f} "
             f"| {num('theta'):.3f} "
             f"| {s.get('feasible', '?')} "
-            f"| {faults} | {agg} |"))
+            f"| {faults} | {agg} | {fleet} |"))
     for rec in errors:
         name = rec.get("name", "?")
         spec = rec.get("spec") or {}
@@ -162,7 +170,7 @@ def runs_table(paths, errors=None) -> str:
             f"| {spec.get('model', {}).get('name', '?')} "
             f"| {spec.get('scheme', {}).get('name', '?')} "
             f"| {status}: {err} "
-            f"| — | — | — | — | — | — | — | — |"))
+            f"| — | — | — | — | — | — | — | — | — |"))
     # failed cells sort into matrix position (names share the NNN_ index
     # prefix), not into a separate trailing block
     out.extend(row for _, row in sorted(rows))

@@ -4,9 +4,10 @@
 
 Default is the fast profile (reduced sigmas/budgets/rounds) so the whole
 suite completes on one CPU core; --full reproduces the paper-scale sweeps.
---smoke is the CI profile: the round-engine harness plus the sweep-service
-scaling probe, tiny configs, with reports diffed against the committed
-BENCH_round_engine.json / BENCH_sweep_scaling.json (the cross-PR compare
+--smoke is the CI profile: the round-engine harness, the sweep-service
+scaling probe, and the fleet-streaming probe, tiny configs, with reports
+diffed against the committed BENCH_round_engine.json /
+BENCH_sweep_scaling.json / BENCH_fleet_scaling.json (the cross-PR compare
 mode) so perf regressions surface without running the whole suite.
 Output: ``name,us_per_call,derived`` CSV per harness.
 """
@@ -27,7 +28,7 @@ def main() -> None:
                          "committed BENCH_round_engine.json")
     ap.add_argument("--only", default=None,
                     help="comma list: fig3,...,fig8,theory,selection,"
-                         "roofline,round_engine,sweep_scaling")
+                         "roofline,round_engine,sweep_scaling,fleet_scaling")
     args = ap.parse_args()
     fast = not args.full
 
@@ -102,13 +103,28 @@ def main() -> None:
             print("FAILED: sweep-service worker-pool speedup collapsed vs "
                   "committed BENCH_sweep_scaling.json")
             sys.exit(1)
+        # fleet-streaming gates: streamed-vs-replicated parity and the
+        # flat-peak invariant are checked inside main() (it raises on
+        # either violation); the compare adds the committed-baseline peak
+        # gate — peak device bytes growing past the flat factor is a HARD
+        # failure (cohort residency regressing toward population
+        # residency), wall-clock deltas warn inside _compare only
+        from benchmarks import fleet_scaling
+        fs = fleet_scaling.main(
+            fast=True,
+            compare=os.path.join(root, "BENCH_fleet_scaling.json"))
+        if fs.get("compare", {}).get("peak_regressed"):
+            print("FAILED: fleet-streaming peak device bytes regressed vs "
+                  "committed BENCH_fleet_scaling.json")
+            sys.exit(1)
         return
 
     from benchmarks import (fig3_generalization_statement, fig4_accuracy_vs_sigma,
                             fig5_loss_vs_time, fig6_loss_vs_energy,
                             fig7_accuracy_vs_delay, fig8_accuracy_vs_energy,
-                            roofline, round_engine, selection_ablation,
-                            sweep_scaling, theory_validation)
+                            fleet_scaling, roofline, round_engine,
+                            selection_ablation, sweep_scaling,
+                            theory_validation)
     suite = {
         "fig3": fig3_generalization_statement.main,
         "fig4": fig4_accuracy_vs_sigma.main,
@@ -121,6 +137,7 @@ def main() -> None:
         "roofline": roofline.main,
         "round_engine": round_engine.main,
         "sweep_scaling": sweep_scaling.main,
+        "fleet_scaling": fleet_scaling.main,
     }
     only = set(args.only.split(",")) if args.only else set(suite)
     failures = []

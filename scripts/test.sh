@@ -3,9 +3,10 @@
 # fall back to tests/_hypothesis_stub.py via tests/conftest.py), then run the
 # tier-1 suite + the experiment-API CLI smoke + the sweep-CLI smoke + the
 # sweep-resume chaos smoke (SIGTERM a --workers 2 sweep mid-matrix, then
-# --resume it), then the sharded smoke leg (round/block-engine + API +
-# sweep/service/axes tests and the same CLI smokes on a forced 4-device host
-# mesh, exercising the shard_map client axis on CPU).
+# --resume it) + the fleet smoke (1000-client streamed cohort store vs the
+# replicated oracle, bitwise), then the sharded smoke leg (round/block-engine
+# + API + sweep/service/axes/fleet tests and the same CLI smokes on a forced
+# 4-device host mesh, exercising the shard_map client axis on CPU).
 #
 # Tiering (pytest.ini): the default run selects tier-1 only (-m "not slow");
 # pass --all as the FIRST argument to include slow-marked tests. Remaining
@@ -194,6 +195,75 @@ EOF
     return "$ok"
 }
 
+# Fleet smoke: a 1000-client synthetic-fleet population through the
+# streamed cohort store (`random_k` scheme — the paper solvers are O(N)
+# per client and fleet-infeasible), run twice: streamed and with the
+# replicated-store oracle. The per-round records of the two exports must
+# be BYTE IDENTICAL (streaming moves data, never results), the streamed
+# summary must carry the fleet counters, and a mid-sweep SIGTERM +
+# --resume with streaming on must finish the matrix (the cohort schedule
+# is selection-pure, so the resumed leg replays it bit-for-bit). Same
+# error discipline as cli_smoke.
+fleet_smoke() {
+    local work ok=0 pid i n
+    work="$(mktemp -d)"
+    cat > "$work/streamed.json" <<'EOF'
+{
+  "data": {"dataset": "synthetic-fleet", "n_clients": 1000,
+           "n_train": 8000, "n_test": 64, "seed": 5},
+  "model": {"name": "mlp-edge", "kwargs": {"hidden": 16}},
+  "wireless": {"e0": 1000000.0, "t0": 1000000.0, "seed": 0},
+  "scheme": {"name": "random_k", "rounds": 6, "eta": 0.1, "batch": 8,
+             "ao": {"k": 6, "seed": 1}},
+  "run": {"seed": 2, "eval_every": 3, "stop_on_budget": false,
+          "rounds_per_dispatch": 3, "client_store": "streamed",
+          "checkpoint_every": 2}
+}
+EOF
+    sed 's/"streamed"/"replicated"/' "$work/streamed.json" \
+        > "$work/replicated.json"
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m repro.api.cli run "$work/streamed.json" \
+        --out "$work/streamed.jsonl" || ok=1
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m repro.api.cli run "$work/replicated.json" \
+        --out "$work/replicated.jsonl" || ok=1
+    grep '"fleet"' "$work/streamed.jsonl" >/dev/null \
+        || { echo "fleet smoke: no fleet counters in streamed export"; ok=1; }
+    grep '"fleet"' "$work/replicated.jsonl" >/dev/null \
+        && { echo "fleet smoke: fleet counters leaked into replicated export"; ok=1; }
+    grep '"kind": "round"' "$work/streamed.jsonl" > "$work/s.rounds" || ok=1
+    grep '"kind": "round"' "$work/replicated.jsonl" > "$work/r.rounds" || ok=1
+    cmp -s "$work/s.rounds" "$work/r.rounds" \
+        || { echo "fleet smoke: streamed round records diverged from the replicated oracle"; ok=1; }
+    # mid-sweep SIGTERM + --resume with streaming on (2 seeds x 1 scheme)
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m repro.api.cli sweep "$work/streamed.json" \
+        --seeds 0,1 --out-dir "$work/runs" >/dev/null 2>&1 &
+    pid=$!
+    for i in $(seq 1 600); do
+        if [[ -d "$work/runs/ckpt" ]] \
+            || ls "$work"/runs/0*.jsonl >/dev/null 2>&1; then
+            break
+        fi
+        kill -0 "$pid" 2>/dev/null || break
+        sleep 0.1
+    done
+    kill -TERM "$pid" 2>/dev/null || true
+    wait "$pid" 2>/dev/null || true
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m repro.api.cli sweep "$work/streamed.json" \
+        --seeds 0,1 --out-dir "$work/runs" --resume \
+        > "$work/resume.out" || ok=1
+    grep "resume: skipped" "$work/resume.out" >/dev/null \
+        || { echo "fleet smoke: no resume skip/ran summary"; ok=1; }
+    n="$(ls "$work"/runs/0*.jsonl 2>/dev/null | wc -l)"
+    [[ "$n" -eq 2 ]] \
+        || { echo "fleet smoke: expected 2 run files, got $n"; ok=1; }
+    rm -rf "$work"
+    return "$ok"
+}
+
 # run all legs even if an earlier one fails (the seed ships with
 # known-failing arch/serving suites); exit non-zero if any leg failed
 status=0
@@ -213,6 +283,9 @@ chaos_smoke || status=$?
 echo "== sweep-resume chaos leg: SIGTERM mid-matrix + --resume (1 device) =="
 sweep_resume_smoke || status=$?
 
+echo "== fleet smoke leg: streamed cohorts vs replicated oracle (1 device) =="
+fleet_smoke || status=$?
+
 echo "== sharded smoke leg: round/block engines + API under 4 forced host devices =="
 # forced flag goes LAST: XLA takes the final occurrence of a duplicated
 # flag, so an inherited force-count must not override the leg's; an
@@ -228,6 +301,7 @@ XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=4" \
         tests/test_api.py tests/test_sweep.py tests/test_sweep_service.py \
         tests/test_scenario_axes.py \
         tests/test_faults.py tests/test_aggregators.py \
+        tests/test_fleet.py \
     || status=$?
 
 echo "== CLI smoke leg: spec run + checkpoint resume (4 forced devices) =="
@@ -256,6 +330,13 @@ echo "== sweep-resume chaos leg: SIGTERM mid-matrix + --resume (4 forced devices
     export XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=4"
     export REPRO_ROUND_SHARDS=
     sweep_resume_smoke
+) || status=$?
+
+echo "== fleet smoke leg: streamed cohorts vs replicated oracle (4 forced devices) =="
+(
+    export XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=4"
+    export REPRO_ROUND_SHARDS=
+    fleet_smoke
 ) || status=$?
 
 exit $status

@@ -53,7 +53,7 @@ class Environment:
 
     spec: ExperimentSpec
     dataset: Any                      # SyntheticImageDataset-like
-    clients: list[ClientData]
+    clients: Sequence                 # list[ClientData], or a lazy roster
     phi: np.ndarray                   # [N] generalization statements (Lemma 1)
     sp: SystemParams
     ch: ChannelModel
@@ -72,14 +72,23 @@ def build_environment(spec: ExperimentSpec) -> Environment:
     build_environment.n_builds += 1
     d = spec.data
     dataset = DATASETS.get(d.dataset)(d)
-    parts = partition_by_dirichlet(dataset.y_train, d.n_clients, d.sigma,
-                                   rng=np.random.default_rng(d.seed))
-    clients = [ClientData(dataset.x_train[i], dataset.y_train[i])
-               for i in parts]
     nc = int(dataset.num_classes)
     test_hist = np.bincount(dataset.y_test, minlength=nc).astype(float)
-    phi = phis(np.stack([c.label_histogram(nc) for c in clients]),
-               test_hist[None])
+    roster = getattr(dataset, "roster", None)
+    if roster is not None:
+        # fleet-scale virtual population (data/fleet.py): the roster IS the
+        # client sequence (lazy, host-side) and already non-IID per client,
+        # so the Dirichlet partition is skipped; phi comes from the
+        # labels-only histogram pass — O(population) ints, no image data
+        clients: Sequence = roster
+        phi = phis(roster.label_histograms(), test_hist[None])
+    else:
+        parts = partition_by_dirichlet(dataset.y_train, d.n_clients, d.sigma,
+                                       rng=np.random.default_rng(d.seed))
+        clients = [ClientData(dataset.x_train[i], dataset.y_train[i])
+                   for i in parts]
+        phi = phis(np.stack([c.label_histogram(nc) for c in clients]),
+                   test_hist[None])
     table = spec.wireless.table
     if table == "auto":
         table = "mnist" if "mnist" in d.dataset else "cifar10"
@@ -128,7 +137,8 @@ class RunResult:
               history: list[RoundMetrics], *,
               resumed_from: int | None = None,
               faults: dict | None = None,
-              aggregation: dict | None = None) -> "RunResult":
+              aggregation: dict | None = None,
+              fleet: dict | None = None) -> "RunResult":
         evals = [(m.test_accuracy, m.round) for m in history
                  if m.test_accuracy is not None]
         acc, acc_round = evals[-1] if evals else (float("nan"), -1)
@@ -156,6 +166,13 @@ class RunResult:
             # same golden-stability argument: clean mean summaries stay
             # byte-identical
             summary["aggregation"] = dict(aggregation)
+        if fleet:
+            # present only when cohort streaming was active this run
+            # (same only-when-active contract as faults/aggregation, so
+            # replicated-store summaries stay byte-identical); note the
+            # stall-seconds counter is wall-clock and NOT byte-stable —
+            # parity tests compare round records, never summary bytes
+            summary["fleet"] = dict(fleet)
         return cls(spec=spec.to_dict(), summary=summary, history=history,
                    schedule=schedule)
 
@@ -293,10 +310,12 @@ class Run:
             agg = {"aggregator": self.trainer.aggregator.name,
                    **{k: int(v)
                       for k, v in self.trainer.agg_counters.items()}}
+        fleet = (dict(self.trainer.fleet_counters)
+                 if getattr(self.trainer, "streaming", False) else None)
         return RunResult.build(self.spec, self.schedule, prefix + history,
                                resumed_from=resumed_from,
                                faults=fc if include else None,
-                               aggregation=agg)
+                               aggregation=agg, fleet=fleet)
 
 
 class Experiment:
@@ -357,9 +376,17 @@ class Experiment:
         consts = BoundConstants(rounds_S=sc.rounds - 1, batch_Z=sc.batch,
                                 eta=sc.eta, **sc.bound)
         ao = SCHEMES.get(sc.name)(sc)
-        schedule = solve_p1(env.phi, spec.wireless.e0, spec.wireless.t0,
-                            env.ch.uplink, env.ch.downlink, env.sp, consts,
-                            ao)
+        if callable(ao):
+            # a scheme factory may return a solver callable instead of an
+            # AOConfig (e.g. `random_k`): it replaces Algorithm 1 outright
+            # — the paper schemes all run O(N) per-client host solves in
+            # the (P2)-(P4) subproblems, infeasible at fleet scale
+            schedule = ao(env.phi, spec.wireless.e0, spec.wireless.t0,
+                          env.ch.uplink, env.ch.downlink, env.sp, consts)
+        else:
+            schedule = solve_p1(env.phi, spec.wireless.e0, spec.wireless.t0,
+                                env.ch.uplink, env.ch.downlink, env.sp,
+                                consts, ao)
         noise = CHANNEL_NOISE.get(spec.wireless.noise_model)(spec.wireless)
         fault = FAULT_MODELS.get(spec.wireless.fault_model)(spec.wireless)
         select = DATA_SELECTION.get(sc.data_selection)(sc)
@@ -376,6 +403,10 @@ class Experiment:
                 # the aggregator is traced into every round graph — a
                 # different reducer means a different engine, not a reset
                 ("scheme.aggregator", trainer.aggregator_key, agg_key),
+                # the store mode decides replicated-vs-streamed wiring at
+                # run(); pooling across modes would silently flip it
+                ("run.client_store", trainer.client_store,
+                 spec.run.client_store),
             ) if a != b]
             if bad:
                 raise ValueError(
@@ -383,6 +414,12 @@ class Experiment:
             trainer.reset(params, spec.run.seed, channel_noise=noise,
                           fault_model=fault)
         else:
+            if select is not None and hasattr(env.clients, "store_nbytes"):
+                raise ValueError(
+                    "data-selection policies materialize every client's "
+                    "samples and cannot run over a lazy fleet roster "
+                    f"(population {len(env.clients)}); use "
+                    "scheme.data_selection='none' with fleet datasets")
             clients = select(env.clients) if select is not None \
                 else env.clients
             trainer = FederatedTrainer(
@@ -391,7 +428,12 @@ class Experiment:
                 backend=spec.run.backend, shards=spec.run.shards,
                 rounds_per_dispatch=spec.run.rounds_per_dispatch,
                 channel_noise=noise, fault_model=fault,
-                aggregator=aggregator)
+                aggregator=aggregator,
+                client_store=spec.run.client_store,
+                device_mem_budget=spec.run.device_mem_budget)
+            # spec-time OOM guard: fail at build (with the actionable
+            # StoreBudgetError) rather than mid-run at the first dispatch
+            trainer.check_store_budget()
         return Run(spec, env, schedule, trainer)
 
     def run(self, **kw) -> RunResult:

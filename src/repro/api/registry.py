@@ -145,6 +145,22 @@ for _name in ("synthetic-mnist", "synthetic-cifar10"):
     register_dataset(_name, _make_synthetic(_name))
 
 
+def _make_fleet_dataset(name: str):
+    """Fleet-scale virtual rosters (data/fleet.py): DataSpec.n_clients IS
+    the population (1e2..1e6); clients generate lazily on first touch, so
+    building the dataset costs O(population) scalars, not samples."""
+    def factory(spec: DataSpec):
+        from repro.data.fleet import make_fleet
+        return make_fleet(name, population=spec.n_clients,
+                          n_train=spec.n_train, n_test=spec.n_test,
+                          sigma=spec.sigma, noise=spec.noise, seed=spec.seed)
+    return factory
+
+
+for _name in ("synthetic-fleet", "synthetic-fleet-cifar"):
+    register_dataset(_name, _make_fleet_dataset(_name))
+
+
 # ---------------------------------------------------------------------------
 # Seed schemes: the paper's Sec.-V comparisons. `_PAPER_BASE` is the
 # benchmark default (paper (P5) prefix-sweep selection, mean-coupled phi —
@@ -171,6 +187,24 @@ register_scheme("fixed_pruning", _scheme(fix_lambda=0.0, **_PAPER_BASE))
 register_scheme("fixed_selection", _scheme(fix_selection=True, **_PAPER_BASE))
 register_scheme("fixed_power", _scheme(fix_power=0.5, **_PAPER_BASE))
 register_scheme("fixed_clock", _scheme(fix_freq=True, **_PAPER_BASE))
+
+
+@register_scheme("random_k")
+def _random_k(spec: SchemeSpec):
+    """Fleet-scale baseline scheme: the factory returns a CALLABLE solver
+    (not an AOConfig) — Experiment.build dispatches on that and skips
+    Algorithm 1, whose subproblems run per-client host solves and are
+    infeasible at 1e5+ clients. SchemeSpec.ao carries the knobs:
+    {"k": clients per round, "lam": fixed pruning ratio, "seed": draw}."""
+    from repro.core.optimizer_ao import solve_random
+    k = int(spec.ao.get("k", 8))
+    lam = float(spec.ao.get("lam", 0.0))
+    seed = int(spec.ao.get("seed", 0))
+
+    def solve(phi, e0, t0, h_up, h_down, sp, consts):
+        return solve_random(phi, e0, t0, h_up, h_down, sp, consts,
+                            k=k, lam=lam, seed=seed)
+    return solve
 
 
 # ---------------------------------------------------------------------------

@@ -149,7 +149,15 @@ class SchemeSpec(_SpecBase):
 
 @dataclasses.dataclass
 class RunSpec(_SpecBase):
-    """Execution policy: backends, eval cadence, checkpointing."""
+    """Execution policy: backends, eval cadence, checkpointing.
+
+    `client_store` picks how client data reaches the device on the block
+    path: "replicated" = the PR-3 full on-device ClientStore, "streamed" =
+    per-block cohort prefetch for fleet-scale populations
+    (core/cohort_store.py), "auto" (default) = replicated while the
+    estimated store footprint fits `device_mem_budget` (bytes; None = the
+    REPRO_DEVICE_MEM_BUDGET env or 1 GiB), streamed beyond it. Streaming
+    moves data only — trajectories are bitwise the replicated ones."""
 
     seed: int = 0                      # trainer batch rng + model init key
     eval_every: int = 10
@@ -158,6 +166,8 @@ class RunSpec(_SpecBase):
     backend: str = "packed"            # FederatedTrainer backend
     rounds_per_dispatch: int | str = "auto"
     shards: int | None = None          # client-axis shard count (None = auto)
+    client_store: str = "auto"         # "auto" | "replicated" | "streamed"
+    device_mem_budget: int | None = None   # bytes; None = env or 1 GiB
     checkpoint_dir: str | None = None
     # rounds between checkpoints; None with a checkpoint_dir set falls
     # back to the eval cadence (a dir alone is a request to checkpoint)

@@ -23,9 +23,12 @@ from repro.core.pruning import (
     actual_ratio,
     pruning_distortion,
 )
-from repro.core.optimizer_ao import AOConfig, Schedule, solve_p1
+from repro.core.optimizer_ao import AOConfig, Schedule, solve_p1, solve_random
 from repro.core.packing import ParamPack
-from repro.core.client_store import ClientStore
+from repro.core.client_store import (
+    ClientStore, StoreBudgetError, estimated_store_nbytes,
+)
+from repro.core.cohort_store import CohortStore, fleet_counters_zero
 from repro.core.round_engine import RoundEngine, kth_smallest_threshold
 from repro.core.federated import ClientData, FederatedTrainer, RoundMetrics
 from repro.core.faults import (
@@ -54,8 +57,10 @@ __all__ = [
     "BoundConstants", "theta", "theta_decomposition", "round_term",
     "PruneSpec", "taylor_importance", "exact_importance", "build_masks",
     "apply_masks", "global_threshold", "actual_ratio", "pruning_distortion",
-    "AOConfig", "Schedule", "solve_p1",
-    "ParamPack", "ClientStore", "RoundEngine", "kth_smallest_threshold",
+    "AOConfig", "Schedule", "solve_p1", "solve_random",
+    "ParamPack", "ClientStore", "StoreBudgetError", "estimated_store_nbytes",
+    "CohortStore", "fleet_counters_zero",
+    "RoundEngine", "kth_smallest_threshold",
     "ClientData", "FederatedTrainer", "RoundMetrics",
     "FaultDraw", "FaultModel", "ClientDropout", "StragglerTimeout",
     "CorruptUpload", "MixedFaults", "SignFlip", "ScaledMalicious",

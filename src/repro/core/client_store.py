@@ -35,6 +35,59 @@ import jax.numpy as jnp
 import numpy as np
 
 
+class StoreBudgetError(RuntimeError):
+    """A replicated ClientStore would blow the device-memory budget.
+
+    Raised by `FederatedTrainer` / `Experiment.build` *before* the H2D
+    transfer so the failure is actionable instead of an opaque device OOM."""
+
+    def __init__(self, population: int, nbytes: int, budget: int):
+        self.population = int(population)
+        self.nbytes = int(nbytes)
+        self.budget = int(budget)
+        super().__init__(
+            f"replicated ClientStore for {population} clients needs "
+            f"~{nbytes / 2**20:.1f} MiB on every device, over the "
+            f"{budget / 2**20:.1f} MiB device-memory budget. Use "
+            f'client_store="streamed" (cohort streaming, RunSpec.client_store'
+            f" / FederatedTrainer(client_store=...)) or raise the budget "
+            f"(device_mem_budget / REPRO_DEVICE_MEM_BUDGET)."
+        )
+
+
+def _client_counts(clients: Sequence) -> np.ndarray:
+    counts = getattr(clients, "counts", None)
+    if counts is None:
+        counts = [len(c) for c in clients]
+    return np.asarray(counts, np.int64)
+
+
+def _canonical_itemsize(dtype: np.dtype) -> int:
+    """Bytes per element after jnp.asarray canonicalization (64-bit dtypes
+    narrow to 32-bit unless jax_enable_x64 is set)."""
+    dtype = np.dtype(dtype)
+    if dtype.itemsize == 8 and not jax.config.jax_enable_x64:
+        return 4
+    return dtype.itemsize
+
+
+def estimated_store_nbytes(clients: Sequence) -> int:
+    """Device bytes a replicated ClientStore for `clients` would occupy,
+    WITHOUT materializing the population: uses ``clients.store_nbytes()``
+    when the sequence offers it (FleetRoster), else per-client counts plus
+    one materialized client for shapes/dtypes."""
+    sizer = getattr(clients, "store_nbytes", None)
+    if callable(sizer):
+        return int(sizer())
+    counts = _client_counts(clients)
+    n_max = int(counts.max())
+    c0 = clients[0]
+    x0 = np.asarray(c0.x)
+    per_sample = (int(np.prod(x0.shape[1:])) * _canonical_itemsize(x0.dtype)
+                  + _canonical_itemsize(np.asarray(c0.y).dtype))
+    return len(counts) * n_max * per_sample
+
+
 @dataclasses.dataclass(frozen=True)
 class ClientStore:
     """Padded on-device datasets: x [C, N_max, ...], y [C, N_max]."""
@@ -50,15 +103,17 @@ class ClientStore:
         `jnp.asarray` canonicalization as the per-round upload path
         (float64 -> float32, int64 -> int32 under default jax config), so
         gathered batches are bitwise what the host would have uploaded."""
-        counts = np.asarray([len(c) for c in clients], np.int64)
+        counts = _client_counts(clients)
         n_max = int(counts.max())
         x0 = np.asarray(clients[0].x)
         y0 = np.asarray(clients[0].y)
-        x = np.zeros((len(clients), n_max) + x0.shape[1:], x0.dtype)
-        y = np.zeros((len(clients), n_max), y0.dtype)
-        for i, c in enumerate(clients):
-            x[i, : counts[i]] = c.x
-            y[i, : counts[i]] = c.y
+        x = np.zeros((len(counts), n_max) + x0.shape[1:], x0.dtype)
+        y = np.zeros((len(counts), n_max), y0.dtype)
+        # vectorized pack: one row-major boolean scatter per field fills each
+        # client's prefix exactly like the per-client copy loop would
+        mask = np.arange(n_max)[None, :] < counts[:, None]
+        x[mask] = np.concatenate([np.asarray(c.x, x0.dtype) for c in clients])
+        y[mask] = np.concatenate([np.asarray(c.y, y0.dtype) for c in clients])
         return cls(x=jnp.asarray(x), y=jnp.asarray(y), counts=counts)
 
     @property

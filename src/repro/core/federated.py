@@ -54,6 +54,7 @@ the reference fallback (`n_fallback_rounds` counts them).
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Any, Callable, Sequence
 
@@ -62,7 +63,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import pruning
-from repro.core.client_store import ClientStore
+from repro.core.client_store import (ClientStore, StoreBudgetError,
+                                     estimated_store_nbytes)
+from repro.core.cohort_store import CohortStore, fleet_counters_zero
 from repro.core.optimizer_ao import Schedule
 from repro.core.packing import LANES, ParamPack
 from repro.core.round_engine import RoundEngine, bucket_capacity
@@ -88,6 +91,15 @@ def _resolve_rounds_per_dispatch(rpd) -> int:
     if r < 1:
         raise ValueError(f"rounds_per_dispatch must be >= 1, got {rpd!r}")
     return r
+
+
+def _default_device_budget() -> int:
+    """Device-memory budget the "auto" client-store policy keys on:
+    REPRO_DEVICE_MEM_BUDGET (bytes) when set, else a conservative 1 GiB —
+    small enough that fleet-scale rosters stream, large enough that every
+    edge-scale config in the repo keeps today's replicated store."""
+    env = os.environ.get("REPRO_DEVICE_MEM_BUDGET")
+    return int(env) if env else 1 << 30
 
 
 @dataclasses.dataclass
@@ -147,11 +159,18 @@ class FederatedTrainer:
         channel_noise=None,
         fault_model=None,
         aggregator=None,
+        client_store: str = "auto",
+        device_mem_budget: int | None = None,
     ):
         if backend not in ("packed", "reference"):
             raise ValueError(f"unknown backend {backend!r}")
+        if client_store not in ("auto", "replicated", "streamed"):
+            raise ValueError(f"unknown client_store {client_store!r}")
         self.loss_fn = loss_fn
-        self.clients = list(clients)
+        # sequences that publish per-client `counts` (FleetRoster) stay
+        # lazy — list()-ing a 1e5-client roster would materialize the fleet
+        self.clients = (clients if getattr(clients, "counts", None)
+                        is not None else list(clients))
         self.eta = float(eta)
         self.batch_size = int(batch_size)
         self.rng = np.random.default_rng(seed)
@@ -181,6 +200,20 @@ class FederatedTrainer:
         self._store: ClientStore | None = None
         self.n_batch_uploads = 0
         self.n_block_dispatches = 0
+        # Fleet-scale client-store policy (core/cohort_store.py):
+        # "replicated" keeps the PR-3 full ClientStore, "streamed" moves
+        # per-block cohorts with double-buffered prefetch, "auto" picks by
+        # the estimated replicated footprint vs the device-memory budget.
+        # Streaming only moves data — the RNG/index protocol is untouched —
+        # so streamed trajectories are bitwise the replicated ones.
+        self.client_store = client_store
+        self.device_mem_budget = (int(device_mem_budget)
+                                  if device_mem_budget
+                                  else _default_device_budget())
+        self._store_nbytes: int | None = None
+        self._cohorts: CohortStore | None = None
+        self.streaming = False
+        self.fleet_counters = fleet_counters_zero()
         # Noisy aggregation channel (wireless/channel.GaussianAggregateNoise
         # protocol: sample_packed(round, shape, valid)). Noise is drawn on
         # host keyed by the ROUND INDEX only, in the packed [R, 128] layout
@@ -293,6 +326,11 @@ class FederatedTrainer:
         self.n_batch_uploads = 0
         self.n_block_dispatches = 0
         self._callbacks = ()
+        # zero the fleet counters IN PLACE: a run's CohortStore accumulates
+        # into this dict by reference
+        self.fleet_counters.update(fleet_counters_zero())
+        self.streaming = False
+        self._cohorts = None
         if self.backend == "packed":
             self._w, self._v = self.engine.init_buffers(params)
             self._w_view = self._v_view = None
@@ -344,15 +382,26 @@ class FederatedTrainer:
 
     # -- round primitives ---------------------------------------------------
 
-    def _draw_indices(self, client: ClientData) -> np.ndarray:
+    def _draw_indices(self, count: int) -> np.ndarray:
         """THE batch-index draw — one `choice` call per (round, selected
         client), shared by the per-round path (which gathers on host) and
         the block path (which ships the indices to the on-device gather).
         Keeping the call in one place is what pins both paths to the same
-        RNG stream, which the bit-for-bit contract depends on."""
+        RNG stream, which the bit-for-bit contract depends on. Takes the
+        client's sample COUNT, not the client: the block path over a fleet
+        roster draws indices without ever materializing the client's data
+        (the cohort prefetcher does that, off-thread)."""
+        count = int(count)
         return self.rng.choice(
-            len(client), size=min(self.batch_size, len(client)),
-            replace=len(client) < self.batch_size)
+            count, size=min(self.batch_size, count),
+            replace=count < self.batch_size)
+
+    def _client_len(self, n: int) -> int:
+        """Sample count of client n without materializing it: rosters
+        publish a host-resident `counts` array; plain client lists fall
+        back to len()."""
+        counts = getattr(self.clients, "counts", None)
+        return int(counts[n]) if counts is not None else len(self.clients[n])
 
     def _sample_batch(
         self, client: ClientData,
@@ -364,7 +413,7 @@ class FederatedTrainer:
         with repeated samples carrying weight 0, so every client's batch is
         stackable and the round stays on the packed path. The RNG stream is
         identical to the unpadded draw (one `choice` call either way)."""
-        idx = self._draw_indices(client)
+        idx = self._draw_indices(len(client))
         x, y = client.x[idx], client.y[idx]
         n = len(idx)
         if n < self.batch_size and self._weighted_loss is not None:
@@ -574,11 +623,39 @@ class FederatedTrainer:
 
     # -- block execution ----------------------------------------------------
 
+    def store_nbytes(self) -> int:
+        """Estimated device footprint of a REPLICATED ClientStore for this
+        trainer's clients (cached; never materializes a roster)."""
+        if self._store_nbytes is None:
+            self._store_nbytes = estimated_store_nbytes(self.clients)
+        return self._store_nbytes
+
+    def store_mode(self) -> str:
+        """The resolved client-store policy: "replicated" or "streamed"
+        ("auto" keys on the estimated footprint vs device_mem_budget)."""
+        if self.client_store != "auto":
+            return self.client_store
+        return ("replicated" if self.store_nbytes() <= self.device_mem_budget
+                else "streamed")
+
+    def check_store_budget(self) -> None:
+        """OOM guard: raise the actionable StoreBudgetError when block
+        execution would build a replicated store over the device-memory
+        budget (an explicit client_store="replicated" on a fleet-scale
+        roster — "auto" streams instead). Called by Experiment.build at
+        spec time and by _ensure_store right before the H2D transfer."""
+        if (self.backend == "packed" and self.rounds_per_dispatch > 1
+                and self.store_mode() == "replicated"
+                and self.store_nbytes() > self.device_mem_budget):
+            raise StoreBudgetError(len(self.clients), self.store_nbytes(),
+                                   self.device_mem_budget)
+
     def _ensure_store(self) -> ClientStore:
         """Build (once) the device-resident dataset store the block path
         gathers batches from; replicated over the engine's mesh when the
         client axis is sharded, so shards never re-transfer the data."""
         if self._store is None:
+            self.check_store_budget()
             store = ClientStore.build(self.clients)
             if self.engine is not None and self.engine.mesh is not None:
                 store = store.replicated(self.engine.mesh)
@@ -593,7 +670,7 @@ class FederatedTrainer:
         the per-round path, which handles them exactly as before)."""
         if not selected:
             return None
-        lens = [min(self.batch_size, len(self.clients[n])) for n in selected]
+        lens = [min(self.batch_size, self._client_len(n)) for n in selected]
         if self._weighted_loss is not None:
             blen = self.batch_size       # ragged clients pad to batch_size
         elif len(set(lens)) == 1:
@@ -641,6 +718,23 @@ class FederatedTrainer:
             i = j
         return blocks
 
+    def _block_cids(self, start: int, n_rounds: int,
+                    infos) -> tuple[np.ndarray, np.ndarray]:
+        """The block's stacked GLOBAL client ids [K, c_max] (trainer
+        padding included — rows pad by replicating the round's last real
+        client, exactly what _exec_block executes) plus per-round real
+        counts [K]. Selection-pure — consumes NO RNG — so the cohort store
+        can plan every block's cohort before execution starts, which is
+        what makes prefetch schedules (and resume) deterministic."""
+        sels = [infos[start + k][0] for k in range(n_rounds)]
+        counts = np.asarray([len(s) for s in sels], np.int64)
+        c_max = int(counts.max())
+        cids = np.empty((n_rounds, c_max), np.int32)
+        for k, sel in enumerate(sels):
+            cids[k, :len(sel)] = sel
+            cids[k, len(sel):] = sel[-1]
+        return cids, counts
+
     def _exec_block(self, start: int, n_rounds: int, infos,
                     out: dict) -> None:
         """Run rounds [start, start+n_rounds) as one engine.block_step
@@ -650,10 +744,9 @@ class FederatedTrainer:
         path's _sample_batch would make, so the batch sequence is
         bit-for-bit the reference one."""
         sels = [infos[start + k][0] for k in range(n_rounds)]
-        counts = np.asarray([len(s) for s in sels], np.int64)
+        cids, counts = self._block_cids(start, n_rounds, infos)
         c_max = int(counts.max())
         blen = self._block_key(sels[0], infos[start][1])[2]
-        cids = np.empty((n_rounds, c_max), np.int32)
         idxs = np.empty((n_rounds, c_max, blen), np.int32)
         sw = np.ones((n_rounds, c_max, blen), np.float32)
         lams = np.empty((n_rounds, c_max), np.float64)
@@ -687,9 +780,8 @@ class FederatedTrainer:
                     if pos is not None and fault.poison is not None:
                         pos[k, :len(sel)] = self._poison_stack(fault)
             for j, n in enumerate(sel):
-                draw = self._draw_indices(self.clients[n])
+                draw = self._draw_indices(self._client_len(n))
                 m = len(draw)
-                cids[k, j] = n
                 lams[k, j] = lam_s[n]
                 if m < blen:             # ragged: repeat last drawn sample
                     idxs[k, j, :m] = draw           # with weight 0, exactly
@@ -699,11 +791,18 @@ class FederatedTrainer:
                 else:
                     idxs[k, j] = draw
             c_k = len(sel)               # pad rows to c_max by replicating
-            cids[k, c_k:] = sel[-1]      # the round's last real client
-            idxs[k, c_k:] = idxs[k, c_k - 1]
-            sw[k, c_k:] = sw[k, c_k - 1]
-            lams[k, c_k:] = lam_s[sel[-1]]
-        store = self._ensure_store()
+            idxs[k, c_k:] = idxs[k, c_k - 1]     # the round's last client
+            sw[k, c_k:] = sw[k, c_k - 1]         # (cids padded identically
+            lams[k, c_k:] = lam_s[sel[-1]]       # by _block_cids)
+        if self._cohorts is not None:
+            # streamed path: this block's prefetched cohort stands in for
+            # the full store; global ids remap to cohort-local rows (the
+            # index DRAWS above are layout-independent, so the RNG stream
+            # — and the bitwise contract — is untouched)
+            store = self._cohorts.acquire(start)
+            cids = store.remap(cids)
+        else:
+            store = self._ensure_store()
         noises = (np.stack([self._noise_packed(start + k)
                             for k in range(n_rounds)])
                   if self.channel_noise else None)
@@ -901,6 +1000,25 @@ class FederatedTrainer:
                                        self.rounds_per_dispatch,
                                        first_round=start_round)
 
+        self.streaming = False
+        self._cohorts = None
+        if blocks and self.store_mode() == "streamed":
+            # cohort plans are a pure function of the block partition
+            # (selection-only, no RNG), so a resumed run — same infos, same
+            # first_round — replays the identical cohort schedule bit for
+            # bit; prefetch of the first two cohorts starts here, before
+            # any round executes
+            self._cohorts = CohortStore(
+                self.clients, mesh=self.engine.mesh,
+                shards=self.engine.shards,
+                bucket_size=self.engine.bucket_size,
+                max_clients=len(self.clients),
+                counters=self.fleet_counters)
+            self._cohorts.schedule(
+                [(st, *self._block_cids(st, blocks[st], infos))
+                 for st in sorted(blocks)])
+            self.streaming = True
+
         block_losses: dict[int, Any] = {}
         try:
             for s, (selected, lam_s, d, e, cum_t, cum_e,
@@ -940,6 +1058,11 @@ class FederatedTrainer:
             materialize()
         finally:
             # a raising hook (e.g. a simulated kill after a checkpoint)
-            # must not leave stale callback refs on the long-lived trainer
+            # must not leave stale callback refs on the long-lived trainer;
+            # the cohort store's prefetch threads and device buffers go
+            # with it (self.streaming stays set for result surfacing)
             self._callbacks = ()
+            if self._cohorts is not None:
+                self._cohorts.close()
+                self._cohorts = None
         return history

@@ -53,6 +53,43 @@ class AOConfig:
     phi_coupling: str = "sum"         # "sum" (Thm-1 literal) | "mean"
 
 
+def solve_random(
+    phi: np.ndarray,
+    e0: float,
+    t0: float,
+    h_up: np.ndarray,
+    h_down: np.ndarray,
+    sp: SystemParams,
+    c: BoundConstants,
+    *,
+    k: int,
+    lam: float = 0.0,
+    seed: int = 0,
+) -> Schedule:
+    """Fleet-scale baseline: k clients uniformly at random per round, fixed
+    pruning ratio, max power/clock. Every step is a vectorized [S+1, N]
+    draw/broadcast, so it stays O(N) where Algorithm 1's subproblems run
+    per-client scalar solves — the scheme that makes 1e5+ populations
+    schedulable (registry name "random_k")."""
+    n = len(phi)
+    n_rounds = c.rounds_S + 1
+    k = max(1, min(int(k), n))
+    rng = np.random.default_rng(seed & 0xFFFFFFFF)
+    a = np.zeros((n_rounds, n))
+    for s in range(n_rounds):
+        a[s, rng.choice(n, size=k, replace=False)] = 1.0
+    lam_arr = np.full((n_rounds, n), float(lam))
+    p = np.broadcast_to(np.asarray(sp.p_max, float), (n_rounds, n)).copy()
+    f = np.broadcast_to(np.asarray(sp.f_max, float), (n_rounds, n)).copy()
+    th = theta(a, lam_arr, phi, c)
+    e_tot = total_energy(a, lam_arr, p, f, h_up, h_down, sp)
+    t_tot = total_delay(a, lam_arr, p, f, h_up, h_down, sp)
+    feas = e_tot <= e0 * (1 + 1e-4) and t_tot <= t0 * (1 + 1e-4)
+    return Schedule(a, lam_arr, p, f, th, e_tot, t_tot, feas,
+                    history=[{"iter": 0, "theta": th, "energy": e_tot,
+                              "delay": t_tot, "feasible": feas}])
+
+
 def solve_p1(
     phi: np.ndarray,
     e0: float,

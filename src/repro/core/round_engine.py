@@ -520,7 +520,8 @@ class RoundEngine:
     # -- block scaffold: lax.scan over the round axis -----------------------
 
     def _make_block_impl(self, round_fn, noisy: bool = False,
-                         faulted: bool = False, poisoned: bool = False):
+                         faulted: bool = False, poisoned: bool = False,
+                         sharded_store: bool = False):
         """K rounds per dispatch around any of the four per-round bodies:
         the scan carries (w, v) and consumes [K]-leading stacked schedule
         arrays; batches are gathered ON DEVICE from the ClientStore
@@ -539,7 +540,14 @@ class RoundEngine:
         per-client corruption factors `cf` (1.0 = clean, exact). With
         ``poisoned`` a [K, C, R, L] additive upload-poison stack joins them
         (zeros = clean) — the one block operand whose size scales with the
-        model; still a single per-block upload, never per-round."""
+        model; still a single per-block upload, never per-round. With
+        ``sharded_store`` (streamed cohorts on a mesh, core/cohort_store.py)
+        the store buffers are sharded over the data axis instead of
+        replicated and `cid` carries shard-LOCAL row ids, so the batch
+        gather runs inside its own collective-free shard_map
+        (`_gather_sharded`) — each device reads only its own clients' rows
+        and the sharded round bodies consume the already-data-sharded
+        batches unchanged."""
 
         def impl(w, v, dx, dy, cids, idxs, sw, counts, inv, ks, *rest):
             self.n_traces += 1
@@ -568,8 +576,11 @@ class RoundEngine:
                 if faulted:
                     cf_k, nxt = inp[nxt], nxt + 1
                 po_k = inp[nxt] if poisoned else None
-                xs = dx[cid[:, None], ix]
-                ys = dy[cid[:, None], ix]
+                if sharded_store:
+                    xs, ys = self._gather_sharded(dx, dy, cid, ix)
+                else:
+                    xs = dx[cid[:, None], ix]
+                    ys = dy[cid[:, None], ix]
                 w2, g, losses, thr, _, n_ok, ast = round_fn(
                     w, v, xs, ys, sw_k, cw_k, inv_k, k,
                     noise=inp[-1] if noisy else None,
@@ -628,6 +639,39 @@ class RoundEngine:
                 return _fn(w, v, xs, ys, sw, cw, inv, k, cf=cf)
         fn = jax.jit(impl, donate_argnums=self._donate_args)
         self._fault_steps[key] = fn
+        return fn
+
+    def _gather_sharded(self, dx, dy, cid, ix):
+        """Batch gather from a data-sharded cohort store: each shard fancy-
+        indexes its OWN [rows_per_shard, N_max, ...] block with its shard-
+        local ids/indices — no collective, and the outputs come back
+        sharded P("data") along the client axis, exactly the layout the
+        sharded round bodies' in_specs expect."""
+        def gather(d, e, c, i):
+            return d[c[:, None], i], e[c[:, None], i]
+        return shard_map(gather, mesh=self.mesh,
+                         in_specs=(P("data"), P("data"), P("data"),
+                                   P("data")),
+                         out_specs=(P("data"), P("data")))(dx, dy, cid, ix)
+
+    def _stream_entry(self, shared: bool, noisy: bool,
+                      faulted: bool = False,
+                      poisoned: bool = False) -> Callable:
+        """Lazily built jit entries for blocks over a SHARDED cohort store
+        (streamed fleet path on a mesh): the same block scaffold around the
+        same sharded round bodies, with the store gather swapped for the
+        shard-local one. Cached beside the fault entries so streamed runs
+        pay one extra trace family per mode used, same ladder as before."""
+        key = ("stream", shared, noisy, faulted, poisoned)
+        fn = self._fault_steps.get(key)
+        if fn is None:
+            round_fn = (self._round_shared_sharded if shared
+                        else self._round_multi_sharded)
+            impl = self._make_block_impl(round_fn, noisy=noisy,
+                                         faulted=faulted, poisoned=poisoned,
+                                         sharded_store=True)
+            fn = jax.jit(impl, donate_argnums=self._donate_args)
+            self._fault_steps[key] = fn
         return fn
 
     # -- sharded bodies: client axis over the mesh data axis ----------------
@@ -1087,13 +1131,25 @@ class RoundEngine:
         shared = bool((ks == ks[:, :1]).all())
         nz = () if noises is None else (jnp.asarray(noises),)
         ks_dev = jnp.asarray(ks[:, 0]) if shared else jnp.asarray(ks)
+        # a data-sharded cohort store (streamed fleet path) swaps the
+        # replicated-store gather for the shard-local one; the round bodies
+        # and operand layout are otherwise identical
+        streamed = self.mesh is not None and bool(
+            getattr(store, "sharded", False))
         if faulted:
-            fn = self._fault_entry("blk_shared" if shared else "blk_multi",
-                                   noises is not None, po is not None)
+            fn = (self._stream_entry(shared, noises is not None, True,
+                                     po is not None) if streamed
+                  else self._fault_entry(
+                      "blk_shared" if shared else "blk_multi",
+                      noises is not None, po is not None))
             out = fn(w, v, store.x, store.y, jnp.asarray(cids),
                      jnp.asarray(idxs), sw, counts_dev, inv, ks_dev,
                      jnp.asarray(pad_ones(uw)), jnp.asarray(pad_ones(cfa)),
                      *(() if po is None else (jnp.asarray(po),)), *nz)
+        elif streamed:
+            fn = self._stream_entry(shared, noises is not None)
+            out = fn(w, v, store.x, store.y, jnp.asarray(cids),
+                     jnp.asarray(idxs), sw, counts_dev, inv, ks_dev, *nz)
         elif shared:
             fn = self._blk_shared if noises is None else self._blk_shared_nz
             out = fn(w, v, store.x, store.y, jnp.asarray(cids),

@@ -2,8 +2,10 @@
 from repro.data.dirichlet import dirichlet_label_proportions, partition_by_dirichlet
 from repro.data.synthetic import SyntheticImageDataset, make_dataset
 from repro.data.loader import batches
+from repro.data.fleet import FleetDataset, FleetRoster, make_fleet
 
 __all__ = [
     "dirichlet_label_proportions", "partition_by_dirichlet",
     "SyntheticImageDataset", "make_dataset", "batches",
+    "FleetDataset", "FleetRoster", "make_fleet",
 ]

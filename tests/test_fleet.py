@@ -1,0 +1,288 @@
+"""Fleet-scale cohort streaming (DESIGN.md §13).
+
+Covers: the frozen per-client draw protocol (labels-only replay bitwise
+equal to full generation), roster laziness/sizing, cohort build + remap
+equivalence against a replicated ClientStore on randomized populations and
+ragged sample counts (hypothesis, stub-compatible offline), trainer-level
+streamed-vs-replicated bitwise parity through the experiment API (history
+records AND final params — streamed summaries carry wall-clock counters so
+summary bytes are deliberately NOT compared), kill/resume with streaming
+active, the client-store budget policy (auto-mode resolution and the
+actionable StoreBudgetError), and the `summary["fleet"]` only-when-active
+contract. Under a forced-multi-device run (scripts/test.sh sets
+XLA_FLAGS=--xla_force_host_platform_device_count=4) the same parity tests
+exercise the sharded cohort path — client rows partitioned over the data
+axis instead of replicated.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.api import (
+    DataSpec, Experiment, ExperimentSpec, ModelSpec, RunSpec, SchemeSpec,
+    WirelessSpec,
+)
+from repro.api.callbacks import Callback
+from repro.core import (
+    ClientStore, CohortStore, FederatedTrainer, StoreBudgetError,
+    estimated_store_nbytes, solve_random,
+)
+from repro.data import make_fleet
+
+POP, ROUNDS, BATCH = 24, 6, 8
+
+
+def fleet_spec(mode: str = "auto", *, population: int = POP,
+               rounds: int = ROUNDS, k: int = 5, **run_kw) -> ExperimentSpec:
+    return ExperimentSpec(
+        data=DataSpec(dataset="synthetic-fleet", n_clients=population,
+                      n_train=24 * population, n_test=64, seed=5),
+        model=ModelSpec(name="mlp-edge", kwargs={"hidden": 16}),
+        wireless=WirelessSpec(e0=1e6, t0=1e6, seed=0),
+        scheme=SchemeSpec(name="random_k", rounds=rounds, batch=BATCH,
+                          ao={"k": k, "seed": 1}),
+        run=RunSpec(seed=2, eval_every=3, stop_on_budget=False,
+                    client_store=mode, **run_kw))
+
+
+def history_records(res):
+    """The bitwise parity payload: every numeric field of every round,
+    via repr so float equality is exact — but never the summary (streamed
+    summaries carry wall-clock stall counters)."""
+    return [(m.round, repr(m.train_loss), tuple(int(i) for i in m.selected),
+             repr(m.energy), repr(m.delay), repr(m.cumulative_energy),
+             repr(m.cumulative_delay), repr(m.test_loss),
+             repr(m.test_accuracy)) for m in res.history]
+
+
+def params_equal(a, b) -> bool:
+    return all(bool(jnp.all(x == y)) for x, y in
+               zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# Roster: frozen draw protocol, laziness, sizing
+# ---------------------------------------------------------------------------
+
+def test_roster_labels_replay_bitwise():
+    ds = make_fleet(population=30, n_train=600, n_test=32, seed=3)
+    r = ds.roster
+    assert len(r) == 30 and len(r.counts) == 30
+    for cid in (0, 7, 29):
+        c = r[cid]
+        assert len(c) == int(r.counts[cid])
+        # labels-only replay draws the same stream prefix as generation
+        assert np.array_equal(r.client_labels(cid), c.y)
+    # sizing never materializes data, and matches the generic estimator
+    assert r.store_nbytes() == estimated_store_nbytes(r)
+    hists = r.label_histograms()
+    assert hists.shape == (30, r.n_classes)
+    assert np.array_equal(hists[7],
+                          np.bincount(r[7].y, minlength=r.n_classes))
+
+
+def test_roster_deterministic_and_cached():
+    a = make_fleet(population=12, n_train=240, n_test=16, seed=9).roster
+    b = make_fleet(population=12, n_train=240, n_test=16, seed=9).roster
+    assert np.array_equal(a.counts, b.counts)
+    assert np.array_equal(a[4].x, b[4].x) and np.array_equal(a[4].y, b[4].y)
+    assert a[4] is a[4]                    # LRU hit returns the same object
+
+
+def test_fleet_dataset_has_no_dense_train_split():
+    ds = make_fleet(population=8, n_train=80, n_test=16, seed=0)
+    with pytest.raises(AttributeError, match="virtual"):
+        ds.x_train
+    with pytest.raises(AttributeError, match="virtual"):
+        ds.y_train
+
+
+# ---------------------------------------------------------------------------
+# Property-based: cohort rows are byte-copies of replicated-store rows
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=6, max_value=40),
+       st.integers(min_value=1, max_value=5),
+       st.integers(min_value=0, max_value=1000))
+def test_cohort_rows_match_replicated_store(population, k_rounds, seed):
+    ds = make_fleet(population=population, n_train=8 * population,
+                    n_test=8, seed=seed % 17)
+    roster = ds.roster
+    rng = np.random.default_rng(seed)
+    # a trainer-shaped block plan: per-round selections, rows padded by
+    # replicating the round's last real client (exactly _block_cids)
+    c_real = [int(rng.integers(1, population + 1)) for _ in range(k_rounds)]
+    c_max = max(c_real)
+    cids = np.empty((k_rounds, c_max), np.int32)
+    for k, c in enumerate(c_real):
+        sel = np.sort(rng.choice(population, size=c, replace=False))
+        cids[k, :c] = sel
+        cids[k, c:] = sel[-1]
+    store = CohortStore(roster, max_clients=population)
+    store.schedule([(0, cids, np.asarray(c_real))])
+    cohort = store.acquire(0)
+    local = cohort.remap(cids)
+    xs = np.asarray(cohort.x)
+    ys = np.asarray(cohort.y)
+    for k in range(k_rounds):
+        for j in range(c_max):
+            gid, lid = int(cids[k, j]), int(local[k, j])
+            c = roster[gid]
+            n = len(c)
+            assert cohort.counts[lid] == n
+            assert np.array_equal(xs[lid, :n], c.x)     # byte-copy rows
+            assert np.array_equal(ys[lid, :n], c.y)
+    # peak device bytes track the cohort, not the population
+    rep = ClientStore.build(list(roster))
+    assert cohort.nbytes <= int(rep.x.nbytes + rep.y.nbytes)
+    assert store.counters["h2d_bytes"] == cohort.nbytes
+    assert store.counters["n_cohort_swaps"] == 1
+    store.close()
+
+
+def test_vectorized_client_store_build_matches_rows():
+    roster = make_fleet(population=10, n_train=150, n_test=8, seed=4).roster
+    store = ClientStore.build(list(roster))
+    for cid in range(10):
+        c = roster[cid]
+        n = len(c)
+        assert np.array_equal(np.asarray(store.x)[cid, :n], c.x)
+        assert np.array_equal(np.asarray(store.y)[cid, :n], c.y)
+        assert not np.asarray(store.x)[cid, n:].any()   # zero padding rows
+
+
+# ---------------------------------------------------------------------------
+# Trainer-level parity: streamed bitwise equal to replicated
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rpd", [2, 4])
+def test_streamed_parity_bitwise(rpd):
+    run_rep = Experiment(
+        fleet_spec("replicated", rounds_per_dispatch=rpd)).build()
+    res_rep = run_rep.run()
+    run_str = Experiment(
+        fleet_spec("streamed", rounds_per_dispatch=rpd)).build()
+    res_str = run_str.run()
+    assert res_rep.summary["rounds_run"] == ROUNDS
+    assert history_records(res_rep) == history_records(res_str)
+    assert params_equal(run_rep.trainer.params, run_str.trainer.params)
+    # observability: counters only where streaming was active
+    assert "fleet" not in res_rep.summary
+    fleet = res_str.summary["fleet"]
+    assert fleet["n_cohort_swaps"] >= 1
+    assert fleet["h2d_bytes"] > 0 and fleet["peak_cohort_bytes"] > 0
+    # at most two cohorts (current + prefetching) ever device-resident,
+    # so with >= 2 swaps the peak is bounded by the total H2D traffic
+    if fleet["n_cohort_swaps"] >= 2:
+        assert fleet["peak_cohort_bytes"] <= fleet["h2d_bytes"]
+
+
+def test_streamed_parity_with_faults_and_eval():
+    def with_faults(mode):
+        s = fleet_spec(mode, rounds_per_dispatch=3)
+        return dataclasses.replace(s, wireless=dataclasses.replace(
+            s.wireless, fault_model="dropout", fault_kwargs={"rate": 0.3}))
+    res_rep = Experiment(with_faults("replicated")).build().run()
+    res_str = Experiment(with_faults("streamed")).build().run()
+    assert history_records(res_rep) == history_records(res_str)
+    assert res_rep.summary["faults"] == res_str.summary["faults"]
+
+
+# ---------------------------------------------------------------------------
+# Kill / resume with streaming on: bit-for-bit continuation
+# ---------------------------------------------------------------------------
+
+class KillAt(Callback):
+    def __init__(self, round_, every):
+        self.round_ = round_
+        self.checkpoint_every = every
+
+    def on_checkpoint(self, m, trainer):
+        if m.round == self.round_:
+            raise RuntimeError("simulated mid-run kill")
+
+
+def test_streamed_kill_resume_bitwise(tmp_path):
+    base = fleet_spec("streamed", rounds_per_dispatch=2)
+    res_a = Experiment(base).build().run()    # uninterrupted oracle
+
+    ckpt = str(tmp_path / "ckpt")
+    spec = dataclasses.replace(base, run=dataclasses.replace(
+        base.run, checkpoint_dir=ckpt, checkpoint_every=2))
+    with pytest.raises(RuntimeError, match="simulated"):
+        Experiment(spec).build().run(callbacks=[KillAt(2, 2)])
+    res_b = Experiment(spec).build().resume(ckpt)
+    assert res_b.summary["resumed_from"] == 2
+    assert history_records(res_a) == history_records(res_b)
+    # the resumed leg streams too — same cohort schedule, fewer swaps
+    assert res_b.summary["fleet"]["n_cohort_swaps"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# Budget policy: auto resolution + the actionable OOM guard
+# ---------------------------------------------------------------------------
+
+def test_auto_mode_resolves_on_budget():
+    run = Experiment(fleet_spec("auto", rounds_per_dispatch=2)).build()
+    tr = run.trainer
+    assert tr.store_mode() == "replicated"    # tiny roster fits 1 GiB
+    tr2 = Experiment(fleet_spec(
+        "auto", rounds_per_dispatch=2,
+        device_mem_budget=1024)).build().trainer
+    assert tr2.store_mode() == "streamed"     # forced under a 1 KiB budget
+    res = Experiment(fleet_spec(
+        "auto", rounds_per_dispatch=2,
+        device_mem_budget=1024)).build().run()
+    assert "fleet" in res.summary             # auto actually streamed
+
+
+def test_store_budget_error_is_actionable():
+    with pytest.raises(StoreBudgetError) as ei:
+        Experiment(fleet_spec("replicated", rounds_per_dispatch=2,
+                              device_mem_budget=1024)).build()
+    msg = str(ei.value)
+    assert str(POP) in msg                    # names the population
+    assert "client_store" in msg and "streamed" in msg
+    assert "REPRO_DEVICE_MEM_BUDGET" in msg
+
+
+def test_trainer_rejects_unknown_store_mode():
+    roster = make_fleet(population=4, n_train=40, n_test=8, seed=0).roster
+    with pytest.raises(ValueError, match="client_store"):
+        FederatedTrainer(lambda p, x, y: 0.0, {"w": jnp.zeros(3)}, roster,
+                         eta=0.1, batch_size=4, client_store="sometimes")
+
+
+def test_data_selection_rejected_on_roster():
+    spec = fleet_spec("streamed", rounds_per_dispatch=2)
+    spec = dataclasses.replace(spec, scheme=dataclasses.replace(
+        spec.scheme, data_selection="threshold"))
+    with pytest.raises(ValueError, match="roster"):
+        Experiment(spec).build()
+
+
+# ---------------------------------------------------------------------------
+# random_k: the fleet-feasible baseline scheme
+# ---------------------------------------------------------------------------
+
+def test_solve_random_schedule_shape_and_determinism():
+    n, s = 50, 7
+    phi = np.full(n, 0.1)
+    from repro.core import BoundConstants
+    from repro.wireless import ChannelModel, SystemParams
+    sp = SystemParams.table1(n)
+    ch = ChannelModel(n, seed=0)
+    consts = BoundConstants(rounds_S=s, batch_Z=BATCH, eta=0.1)
+    a = solve_random(phi, 1e6, 1e6, ch.uplink, ch.downlink, sp, consts,
+                     k=5, seed=3)
+    b = solve_random(phi, 1e6, 1e6, ch.uplink, ch.downlink, sp, consts,
+                     k=5, seed=3)
+    assert a.a.shape == (s + 1, n)
+    assert (a.a.sum(axis=1) == 5).all()
+    assert np.array_equal(a.a, b.a) and a.feasible
