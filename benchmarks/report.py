@@ -119,31 +119,43 @@ def runs_table(paths, errors=None) -> str:
         spec = r.spec or {}
         name = os.path.splitext(os.path.basename(path))[0]
 
-        def num(key, default=float("nan")):
-            # strict-JSON exports write nan as null -> json None
-            v = s.get(key)
-            return default if v is None else v
+        def num(key, fmt, default=None):
+            # strict-JSON exports write nan as null -> json None; a run
+            # without the field at all (no-eval runs, older exports, a
+            # torn file missing its summary record) renders an em-dash
+            # instead of leaking "nan" into the table
+            v = s.get(key, default)
+            if v is None or not isinstance(v, (int, float)) \
+                    or (isinstance(v, float) and math.isnan(v)):
+                return "—"
+            return format(v, fmt)
 
         # degradation counters ride the summary only when a fault model
-        # was active (or something was actually quarantined)
+        # was active (or something was actually quarantined); the
+        # isinstance guards keep a mixed-vintage directory (sections
+        # absent, null, or reshaped by older writers) from crashing the
+        # whole report
         f = s.get("faults")
-        faults = ("—" if not f else
+        faults = ("—" if not isinstance(f, dict) or not f else
                   f"{f.get('n_dropped', 0)}/{f.get('n_quarantined', 0)}"
                   f"/{f.get('n_skipped_rounds', 0)}")
         # robust-aggregation counters ride the summary only when a
         # non-mean aggregator was active (core/aggregators.py)
         a = s.get("aggregation")
-        agg = ("—" if not a else
+        agg = ("—" if not isinstance(a, dict) or not a else
                a.get("aggregator", "?") + " " + " ".join(
                    f"{k}={v}" for k, v in sorted(a.items())
                    if k != "aggregator"))
         # cohort-streaming counters ride the summary only when the run
         # actually streamed (core/cohort_store.py)
         fl = s.get("fleet")
-        fleet = ("—" if not fl else
+        fleet = ("—" if not isinstance(fl, dict) or not fl else
                  f"{fl.get('n_cohort_swaps', 0)}"
                  f"/{fl.get('h2d_bytes', 0) / 2**20:.1f}"
                  f"/{fl.get('prefetch_stall_s', 0.0):.3f}")
+        acc = num("final_accuracy", ".3f")
+        if acc != "—":
+            acc = f"{acc} @ {s.get('final_accuracy_round', -1)}"
         rows.append((name,
             f"| {name} "
             f"| {spec.get('data', {}).get('dataset', '?')} "
@@ -151,11 +163,10 @@ def runs_table(paths, errors=None) -> str:
             f"| {spec.get('scheme', {}).get('name', '?')} "
             f"| ok "
             f"| {s.get('rounds_run', len(r.history))} "
-            f"| {num('final_accuracy'):.3f} @ "
-            f"{num('final_accuracy_round', -1)} "
-            f"| {num('cumulative_energy', 0.0):.2f} "
-            f"| {num('cumulative_delay', 0.0):.2f} "
-            f"| {num('theta'):.3f} "
+            f"| {acc} "
+            f"| {num('cumulative_energy', '.2f', 0.0)} "
+            f"| {num('cumulative_delay', '.2f', 0.0)} "
+            f"| {num('theta', '.3f')} "
             f"| {s.get('feasible', '?')} "
             f"| {faults} | {agg} | {fleet} |"))
     for rec in errors:

@@ -20,8 +20,10 @@ from repro.api import (  # noqa: E402
     WirelessSpec,
 )
 
-OUT = os.path.join(os.path.dirname(__file__), "..", "tests", "golden",
-                   "run_mlp_edge.jsonl")
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "..", "tests",
+                          "golden")
+OUT = os.path.join(GOLDEN_DIR, "run_mlp_edge.jsonl")
+OUT_FEDPROX = os.path.join(GOLDEN_DIR, "run_mlp_edge_fedprox.jsonl")
 
 # Small enough to run in seconds, rich enough to touch selection, pruning,
 # aggregation, eval, and the budget ledger. shards=1 pins the single-device
@@ -36,14 +38,30 @@ GOLDEN_SPEC = ExperimentSpec(
                       ao={"outer_iters": 1}),
     run=RunSpec(seed=0, eval_every=3, shards=1, rounds_per_dispatch=2))
 
+# The local-epoch fixture: FedProx with E=3 (pads to the pow2 step bucket
+# of 4, so the padded-step no-op gating is inside the pinned trajectory)
+# over the same tiny federation. tests/test_golden.py re-runs it through
+# the packed rpd=2 block path AND the eager reference backend.
+GOLDEN_FEDPROX_SPEC = ExperimentSpec(
+    data=DataSpec(dataset="synthetic-mnist", n_clients=6, sigma=5.0,
+                  n_train=240, n_test=60, seed=0),
+    model=ModelSpec(name="mlp-edge"),
+    wireless=WirelessSpec(e0=1e6, t0=1e6, seed=0),
+    scheme=SchemeSpec(name="proposed", rounds=6, eta=0.1, batch=8,
+                      ao={"outer_iters": 1}, local_scheme="fedprox",
+                      local_steps=3, local_kwargs={"mu": 0.05}),
+    run=RunSpec(seed=0, eval_every=3, shards=1, rounds_per_dispatch=2))
+
 
 def main() -> None:
-    res = Experiment(GOLDEN_SPEC).run()
-    os.makedirs(os.path.dirname(OUT), exist_ok=True)
-    res.to_jsonl(OUT)
-    print(f"wrote {os.path.normpath(OUT)} "
-          f"({res.summary['rounds_run']} rounds, final acc "
-          f"{res.summary['final_accuracy']:.3f})")
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    for spec, out in ((GOLDEN_SPEC, OUT),
+                      (GOLDEN_FEDPROX_SPEC, OUT_FEDPROX)):
+        res = Experiment(spec).run()
+        res.to_jsonl(out)
+        print(f"wrote {os.path.normpath(out)} "
+              f"({res.summary['rounds_run']} rounds, final acc "
+              f"{res.summary['final_accuracy']:.3f})")
 
 
 if __name__ == "__main__":

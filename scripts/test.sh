@@ -2,7 +2,9 @@
 # Test/CI entrypoint: install declared deps (best effort — offline containers
 # fall back to tests/_hypothesis_stub.py via tests/conftest.py), then run the
 # tier-1 suite + the experiment-API CLI smoke + the sweep-CLI smoke + the
-# sweep-resume chaos smoke (SIGTERM a --workers 2 sweep mid-matrix, then
+# feddyn chaos smoke (SIGTERM a checkpointing FedDyn run, resume, assert
+# the per-client correction state came back bitwise) + the sweep-resume
+# chaos smoke (SIGTERM a --workers 2 sweep mid-matrix, then
 # --resume it) + the fleet smoke (1000-client streamed cohort store vs the
 # replicated oracle, bitwise), then the sharded smoke leg (round/block-engine
 # + API + sweep/service/axes/fleet tests and the same CLI smokes on a forced
@@ -134,6 +136,69 @@ EOF
         || { echo "chaos smoke: no aggregation block in run.jsonl"; ok=1; }
     grep '"n_trimmed"' "$work/resumed.jsonl" >/dev/null \
         || { echo "chaos smoke: no aggregation counters in resumed.jsonl"; ok=1; }
+    rm -rf "$work"
+    return "$ok"
+}
+
+# FedDyn chaos smoke: a checkpointing FedDyn run (stateful per-client
+# correction buffer h rides every checkpoint) is SIGTERMed as soon as a
+# checkpoint lands, then resumed. Asserts (a) the killed run's latest
+# checkpoint npz really carries the h leaf, and (b) the resumed export's
+# round records are BYTE IDENTICAL to an uninterrupted oracle's — the
+# post-resume rounds replay through the restored h, so byte equality here
+# IS the h-restored-bitwise assertion. Same error discipline as
+# cli_smoke.
+feddyn_chaos_smoke() {
+    local work ok=0 pid i
+    work="$(mktemp -d)"
+    cat > "$work/spec.json" <<'EOF'
+{
+  "data": {"dataset": "synthetic-mnist", "n_clients": 6, "sigma": 5.0,
+           "n_train": 240, "n_test": 60, "seed": 0},
+  "model": {"name": "mlp-edge"},
+  "wireless": {"e0": 1000000.0, "t0": 1000000.0, "seed": 0},
+  "scheme": {"name": "proposed", "rounds": 6, "eta": 0.1, "batch": 8,
+             "ao": {"outer_iters": 1},
+             "local_scheme": "feddyn", "local_steps": 2,
+             "local_kwargs": {"alpha": 0.1}},
+  "run": {"seed": 0, "eval_every": 3, "checkpoint_every": 1}
+}
+EOF
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m repro.api.cli run "$work/spec.json" \
+        --out "$work/oracle.jsonl" || ok=1
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m repro.api.cli run "$work/spec.json" \
+        --checkpoint-dir "$work/ckpt" --out "$work/run.jsonl" \
+        >/dev/null 2>&1 &
+    pid=$!
+    for i in $(seq 1 600); do
+        ls "$work"/ckpt/*.npz >/dev/null 2>&1 && break
+        kill -0 "$pid" 2>/dev/null || break
+        sleep 0.1
+    done
+    kill -TERM "$pid" 2>/dev/null || true
+    wait "$pid" 2>/dev/null || true
+    python - "$work/ckpt" <<'EOF' \
+        || { echo "feddyn chaos smoke: no per-client h leaf in checkpoint"; ok=1; }
+import glob
+import sys
+
+import numpy as np
+
+paths = sorted(glob.glob(sys.argv[1] + "/*.npz"))
+if not paths:
+    sys.exit(1)
+with np.load(paths[-1]) as d:
+    sys.exit(0 if "['h']" in d.files else 1)
+EOF
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m repro.api.cli resume "$work/ckpt" \
+        --out "$work/resumed.jsonl" || ok=1
+    grep '"kind": "round"' "$work/oracle.jsonl" > "$work/o.rounds" || ok=1
+    grep '"kind": "round"' "$work/resumed.jsonl" > "$work/r.rounds" || ok=1
+    cmp -s "$work/o.rounds" "$work/r.rounds" \
+        || { echo "feddyn chaos smoke: resumed trajectory diverged from the uninterrupted oracle (h not restored bitwise?)"; ok=1; }
     rm -rf "$work"
     return "$ok"
 }
@@ -280,6 +345,9 @@ sweep_smoke || status=$?
 echo "== chaos smoke leg: byzantine attack + robust aggregator (1 device) =="
 chaos_smoke || status=$?
 
+echo "== feddyn chaos leg: SIGTERM mid-run + resume with per-client state (1 device) =="
+feddyn_chaos_smoke || status=$?
+
 echo "== sweep-resume chaos leg: SIGTERM mid-matrix + --resume (1 device) =="
 sweep_resume_smoke || status=$?
 
@@ -301,7 +369,7 @@ XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=4" \
         tests/test_api.py tests/test_sweep.py tests/test_sweep_service.py \
         tests/test_scenario_axes.py \
         tests/test_faults.py tests/test_aggregators.py \
-        tests/test_fleet.py \
+        tests/test_fleet.py tests/test_local_schemes.py \
     || status=$?
 
 echo "== CLI smoke leg: spec run + checkpoint resume (4 forced devices) =="
@@ -323,6 +391,13 @@ echo "== chaos smoke leg: byzantine attack + robust aggregator (4 forced devices
     export XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=4"
     export REPRO_ROUND_SHARDS=
     chaos_smoke
+) || status=$?
+
+echo "== feddyn chaos leg: SIGTERM mid-run + resume with per-client state (4 forced devices) =="
+(
+    export XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=4"
+    export REPRO_ROUND_SHARDS=
+    feddyn_chaos_smoke
 ) || status=$?
 
 echo "== sweep-resume chaos leg: SIGTERM mid-matrix + --resume (4 forced devices) =="

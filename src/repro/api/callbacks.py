@@ -106,6 +106,10 @@ def save_trainer_state(
     trainer's params, global gradient, and batch RNG have to reflect
     exactly the state after round m.round."""
     tree = {"params": trainer.params, "v": trainer.global_grad}
+    if getattr(trainer, "_h", None) is not None:
+        # per-client optimizer state (FedDyn correction buffer): an fp32
+        # array leaf like the rest, so resume restores it bit-for-bit
+        tree["h"] = trainer._h
     extra = {
         "round": int(m.round),
         "rng_state": trainer.rng.bit_generator.state,
@@ -130,9 +134,14 @@ def restore_trainer_state(
     history). The restored fp32 leaves are exact, so continuing from
     extra["round"] + 1 replays the uninterrupted trajectory bit-for-bit."""
     like = {"params": trainer.params, "v": trainer.global_grad}
+    ls = getattr(trainer, "local_scheme", None)
+    if ls is not None and ls.stateful:
+        like["h"] = trainer._ensure_h()
     tree, meta = manager.restore(like, step=step)
     trainer.params = tree["params"]
     trainer.global_grad = tree["v"]
+    if "h" in like:
+        trainer._h = tree["h"]
     extra = meta.get("extra", {})
     if "rng_state" in extra:
         trainer.rng.bit_generator.state = extra["rng_state"]

@@ -27,14 +27,15 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import os
 import sys
 
 from repro.api.experiment import (
     Experiment, RunResult, resume_from_checkpoint,
 )
-from repro.api.registry import DATASETS, MODELS, SCHEMES
+from repro.api.registry import DATASETS, LOCAL_SCHEMES, MODELS, SCHEMES
 from repro.api.spec import ExperimentSpec
-from repro.api.sweep import JsonlDirSink, SweepSpec, run_sweep
+from repro.api.sweep import MANIFEST_NAME, JsonlDirSink, SweepSpec, run_sweep
 from repro.core.aggregators import make_aggregator
 
 
@@ -89,6 +90,8 @@ def _cmd_validate(args) -> int:
         SCHEMES.get(spec.scheme.name)
         make_aggregator(spec.scheme.aggregator,
                         **spec.scheme.aggregator_kwargs)
+        # resolving the factory also validates local_steps/local_kwargs
+        LOCAL_SCHEMES.get(spec.scheme.local_scheme)(spec.scheme)
         print(spec.to_json())
     if args.checkpoints is not None:
         rc = max(rc, _validate_checkpoints(args.checkpoints))
@@ -101,13 +104,22 @@ def _cmd_validate(args) -> int:
 def _validate_checkpoints(directory: str) -> int:
     """Run verify_checkpoint over every step in a checkpoint directory;
     print one line per step and return 1 when any step is corrupt (so CI
-    and pre-resume probes can gate on the exit code)."""
+    and pre-resume probes can gate on the exit code). A nonexistent
+    directory fails BEFORE CheckpointManager touches it — the manager
+    mkdirs its directory on construction, and a validate probe must never
+    leave an empty decoy dir at a mistyped path."""
     from repro.checkpoint import CheckpointManager
     from repro.checkpoint.io import CheckpointCorruptError, verify_checkpoint
+    if not os.path.isdir(directory):
+        print(f"validate: checkpoint directory {directory!r} does not "
+              f"exist — check the path", file=sys.stderr)
+        return 1
     manager = CheckpointManager(directory)
     steps = manager._steps()
     if not steps:
-        print(f"{directory}: no checkpoints found", file=sys.stderr)
+        print(f"validate: no checkpoints under {directory!r} — empty "
+              f"directory (wrong path, or the run never checkpointed)",
+              file=sys.stderr)
         return 1
     n_bad = 0
     for s in steps:
@@ -161,6 +173,16 @@ def _cmd_sweep(args) -> int:
     if args.resume and not args.out_dir:
         raise SystemExit("sweep --resume requires --out-dir (the sink "
                          "directory holds the manifest and prior results)")
+    if args.resume:
+        # fail BEFORE run_sweep: a manifest-less dir (pre-manifest sweep,
+        # or a typo'd path) would otherwise verify nothing and silently
+        # re-run — and append to — whatever is there
+        manifest = os.path.join(args.out_dir, MANIFEST_NAME)
+        if not os.path.exists(manifest):
+            raise SystemExit(
+                f"sweep --resume: no sweep manifest at {manifest!r} — "
+                "not a resumable sweep directory; drop --resume to start "
+                "fresh or point --out-dir at the original sweep dir")
     sink = JsonlDirSink(args.out_dir) if args.out_dir else None
     try:
         res = run_sweep(sweep, sink=sink, log=print,

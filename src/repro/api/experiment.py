@@ -32,7 +32,8 @@ from repro.api.callbacks import (
     restore_trainer_state,
 )
 from repro.api.registry import (
-    CHANNEL_NOISE, DATA_SELECTION, DATASETS, FAULT_MODELS, MODELS, SCHEMES,
+    CHANNEL_NOISE, DATA_SELECTION, DATASETS, FAULT_MODELS, LOCAL_SCHEMES,
+    MODELS, SCHEMES,
 )
 from repro.api.spec import ExperimentSpec
 from repro.checkpoint import CheckpointManager
@@ -41,6 +42,7 @@ from repro.core import (
     solve_p1,
 )
 from repro.core.aggregators import make_aggregator
+from repro.core.local import local_spec_key
 from repro.core.optimizer_ao import Schedule
 from repro.data import partition_by_dirichlet
 from repro.models import make_eval_fn, make_loss_fn
@@ -394,6 +396,7 @@ class Experiment:
         # other string axes; None ("mean") keeps the builtin path
         aggregator = make_aggregator(sc.aggregator, **sc.aggregator_kwargs)
         agg_key = (aggregator.spec_key if aggregator is not None else "mean")
+        local = LOCAL_SCHEMES.get(sc.local_scheme)(sc)
         params = env.init_fn(jax.random.key(spec.run.seed))
         if trainer is not None:
             bad = [name for name, a, b in (
@@ -403,6 +406,9 @@ class Experiment:
                 # the aggregator is traced into every round graph — a
                 # different reducer means a different engine, not a reset
                 ("scheme.aggregator", trainer.aggregator_key, agg_key),
+                # so is the local-update scheme (step count, coefficients,
+                # statefulness all shape the round graph)
+                ("scheme.local", trainer.local_key, local_spec_key(local)),
                 # the store mode decides replicated-vs-streamed wiring at
                 # run(); pooling across modes would silently flip it
                 ("run.client_store", trainer.client_store,
@@ -428,7 +434,7 @@ class Experiment:
                 backend=spec.run.backend, shards=spec.run.shards,
                 rounds_per_dispatch=spec.run.rounds_per_dispatch,
                 channel_noise=noise, fault_model=fault,
-                aggregator=aggregator,
+                aggregator=aggregator, local_scheme=local,
                 client_store=spec.run.client_store,
                 device_mem_budget=spec.run.device_mem_budget)
             # spec-time OOM guard: fail at build (with the actionable

@@ -1,6 +1,6 @@
 """String-keyed component registries backing the declarative specs.
 
-Six registries resolve the spec's string fields into build-time factories:
+Seven registries resolve the spec's string fields into build-time factories:
 
   MODELS          name -> factory(spec: ModelSpec, dataset) -> (init, apply)
   DATASETS        name -> factory(spec: DataSpec) -> SyntheticImageDataset-like
@@ -15,10 +15,15 @@ Six registries resolve the spec's string fields into build-time factories:
                   None ("none"): client fault-injection axis — per-round
                   dropout / straggler / corrupt-upload draws consumed by
                   the trainer with graceful degradation (core/faults.py)
+  LOCAL_SCHEMES   name -> factory(spec: SchemeSpec) -> LocalScheme or
+                  None (single-step fedavg): the client-local update rule
+                  between uploads (core/local.py) — "fedavg" / "fedprox"
+                  / "feddyn", with SchemeSpec.local_steps/local_kwargs
+                  reaching the factory
 
 Register new components with the `register_model` / `register_dataset` /
 `register_scheme` / `register_data_selection` / `register_channel_noise` /
-`register_fault_model` decorators (or call them with the factory
+`register_fault_model` / `register_local_scheme` decorators (or call them with the factory
 directly); an unknown key raises a KeyError that names the registry and
 lists what IS registered, so a typo in a spec file fails with an
 actionable message.
@@ -84,6 +89,7 @@ SCHEMES = Registry("scheme")
 DATA_SELECTION = Registry("data-selection policy")
 CHANNEL_NOISE = Registry("channel-noise model")
 FAULT_MODELS = Registry("fault model")
+LOCAL_SCHEMES = Registry("local-update scheme")
 
 register_model = MODELS.register
 register_dataset = DATASETS.register
@@ -91,6 +97,7 @@ register_scheme = SCHEMES.register
 register_data_selection = DATA_SELECTION.register
 register_channel_noise = CHANNEL_NOISE.register
 register_fault_model = FAULT_MODELS.register
+register_local_scheme = LOCAL_SCHEMES.register
 
 
 # ---------------------------------------------------------------------------
@@ -299,3 +306,23 @@ register_fault_model("mixed", _fault_factory("MixedFaults"))
 register_fault_model("sign_flip", _fault_factory("SignFlip"))
 register_fault_model("scaled_malicious", _fault_factory("ScaledMalicious"))
 register_fault_model("gaussian_poison", _fault_factory("GaussianPoison"))
+
+
+# ---------------------------------------------------------------------------
+# Local-update schemes (SchemeSpec.local_scheme): what each client runs
+# between uploads. A factory receives the SchemeSpec and returns a
+# core/local.LocalScheme (or None — single-step fedavg IS FedSGD and the
+# None route keeps it on the byte-identical seed code path). Unknown
+# local_kwargs keys raise at build time, so sweep-grid typos fail loudly.
+# ---------------------------------------------------------------------------
+
+def _local_scheme_factory(name: str):
+    def factory(spec: SchemeSpec):
+        from repro.core.local import make_local_scheme
+        return make_local_scheme(name, steps=spec.local_steps,
+                                 **spec.local_kwargs)
+    return factory
+
+
+for _name in ("fedavg", "fedprox", "feddyn"):
+    register_local_scheme(_name, _local_scheme_factory(_name))

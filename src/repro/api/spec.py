@@ -133,7 +133,18 @@ class SchemeSpec(_SpecBase):
     reducers) with `aggregator_kwargs` reaching its factory (e.g.
     {"beta": 0.2}). Sweepable like every other axis — attacker fraction x
     aggregator is a two-axis `cli sweep` (benchmarks/robust_aggregation.py
-    runs exactly that grid)."""
+    runs exactly that grid).
+
+    `local_scheme` picks the client-local update rule between uploads
+    (repro.api.registry LOCAL_SCHEMES; "fedavg" = plain local SGD — with
+    `local_steps=1` it IS the paper's FedSGD and rides the identical code
+    path bit for bit — "fedprox" / "feddyn" = the proximal / dynamic-
+    regularizer multi-epoch baselines, core/local.py + DESIGN.md §14);
+    `local_steps` is E, the local gradient steps per round, and
+    `local_kwargs` reach the scheme factory (e.g. {"mu": 0.01} for
+    fedprox, {"alpha": 0.1} for feddyn). Sweepable like every other axis:
+    generalization-gap-vs-E is a one-line `cli sweep` over
+    `scheme.local_steps`, mu/alpha via `scheme.local_kwargs.mu`."""
 
     name: str = "proposed"             # registry key
     rounds: int = 60                   # S+1 (schedule length)
@@ -145,6 +156,9 @@ class SchemeSpec(_SpecBase):
     data_selection_kwargs: dict = dataclasses.field(default_factory=dict)
     aggregator: str = "mean"           # registry key (core AGGREGATORS)
     aggregator_kwargs: dict = dataclasses.field(default_factory=dict)
+    local_scheme: str = "fedavg"       # registry key (LOCAL_SCHEMES)
+    local_steps: int = 1               # E local gradient steps per round
+    local_kwargs: dict = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass

@@ -542,7 +542,8 @@ def _trainer_key(spec: ExperimentSpec) -> str:
     return json.dumps([sc.eta, sc.batch, r.backend, r.shards,
                        r.rounds_per_dispatch, sc.data_selection,
                        sc.data_selection_kwargs, sc.aggregator,
-                       sc.aggregator_kwargs, r.client_store,
+                       sc.aggregator_kwargs, sc.local_scheme, sc.local_steps,
+                       sc.local_kwargs, r.client_store,
                        r.device_mem_budget], sort_keys=True)
 
 

@@ -66,6 +66,7 @@ from repro.core import pruning
 from repro.core.client_store import (ClientStore, StoreBudgetError,
                                      estimated_store_nbytes)
 from repro.core.cohort_store import CohortStore, fleet_counters_zero
+from repro.core.local import local_spec_key
 from repro.core.optimizer_ao import Schedule
 from repro.core.packing import LANES, ParamPack
 from repro.core.round_engine import RoundEngine, bucket_capacity
@@ -161,6 +162,7 @@ class FederatedTrainer:
         aggregator=None,
         client_store: str = "auto",
         device_mem_budget: int | None = None,
+        local_scheme=None,
     ):
         if backend not in ("packed", "reference"):
             raise ValueError(f"unknown backend {backend!r}")
@@ -242,6 +244,21 @@ class FederatedTrainer:
                                if aggregator is not None else "mean")
         self.agg_counters = ({aggregator.stat_field: 0}
                              if aggregator is not None else {})
+        # Local-update scheme (core/local.py, DESIGN.md §14): None is the
+        # single-step FedSGD body (today's paths, byte-identical). Like the
+        # aggregator it is an engine construction constant — swapping
+        # schemes means a new trainer, and `local_key` is the fragment the
+        # sweep pool / Experiment.build reuse keys fold in so pooled
+        # trainers can never mix per-client state across schemes.
+        self.local_scheme = local_scheme
+        self.local_key = local_spec_key(local_scheme)
+        # FedDyn per-client correction state: one packed [R, 128] row per
+        # client in the population, lazily allocated at first use (zeros)
+        # on BOTH backends — the reference updates it with the same eager
+        # jnp ops the engine fuses, so the state trajectories are bitwise
+        # comparable. Rides checkpoints (repro.api.callbacks) for
+        # bit-for-bit resume.
+        self._h = None
         # lifecycle hooks for the current run() (repro.api.Callback
         # protocol); held on the instance so _exec_block can fire
         # on_block_end without threading them through every call
@@ -256,7 +273,8 @@ class FederatedTrainer:
                                       weighted_loss_fn=self._weighted_loss,
                                       shards=shards,
                                       max_clients=len(self.clients),
-                                      aggregator=aggregator)
+                                      aggregator=aggregator,
+                                      local_scheme=local_scheme)
             self._w, self._v = self.engine.init_buffers(params)
             # pytree views of the packed buffers, memoized on buffer
             # identity so repeated property reads (eval_fn, the ragged
@@ -331,6 +349,15 @@ class FederatedTrainer:
         self.fleet_counters.update(fleet_counters_zero())
         self.streaming = False
         self._cohorts = None
+        # per-client optimizer state MUST NOT survive pooling: a reused
+        # trainer carrying the previous cell's FedDyn correction buffer
+        # would silently bias the next run (the regression test in
+        # tests/test_local_schemes.py pins pooled == cold byte-identical).
+        # Dropping the buffer (rather than zeroing in place) also frees
+        # the device memory until the next stateful run touches it.
+        self._h = None
+        if self.engine is not None:
+            self.engine.last_h = None
         if self.backend == "packed":
             self._w, self._v = self.engine.init_buffers(params)
             self._w_view = self._v_view = None
@@ -379,6 +406,21 @@ class FederatedTrainer:
         if self._noise_valid is None:
             self._noise_valid = pack.valid_mask()
         return fault.poison((pack.rows, LANES), self._noise_valid)
+
+    # -- per-client optimizer state (FedDyn) --------------------------------
+
+    def _ensure_h(self) -> jnp.ndarray:
+        """The FedDyn correction state [C_all, R, 128], zeros at first use.
+        Device-resident for both backends (the reference updates it with
+        eager jnp scatters). NOTE: the buffer covers the full population —
+        fleet-scale rosters should not run stateful schemes yet (the
+        streamed path moves data cohorts, not optimizer state slabs beyond
+        the per-block gather below)."""
+        if self._h is None:
+            pack = self._noise_layout()
+            self._h = jnp.zeros((len(self.clients), pack.rows, LANES),
+                                jnp.float32)
+        return self._h
 
     # -- round primitives ---------------------------------------------------
 
@@ -451,6 +493,65 @@ class FederatedTrainer:
         grads = pruning.apply_masks(grads, masks)  # pruned coords not uploaded
         return grads, masks, float(loss)
 
+    def _client_update_local(self, n: int, lam: float, batches: list,
+                             h_row=None):
+        """Eager reference body for the local-update scheme zoo (DESIGN.md
+        §14), mirroring the packed step scan op for op: E local steps from
+        the pruned start u0 = w*mask, each taking a masked gradient at the
+        CURRENT iterate, folding in the scheme's regularizer, accumulating
+        the direction into the upload (from a zeros accumulator, so the
+        first add normalizes -0.0 exactly like the engine's), and stepping
+        `u <- u - eta*d`. Every jnp op here is its own eager dispatch, so
+        each product rounds to fp32 exactly where the engine fences it.
+
+        `batches`: the client's E drawn batches in step order. `h_row`:
+        the client's packed FedDyn state row (or None); its pytree view is
+        an exact gather through the layout pack. Returns (upload tree,
+        loss at step 0, packed FedDyn state delta or None)."""
+        ls = self.local_scheme
+        if lam > 0.0:
+            imp = pruning.taylor_importance(self.params, self.global_grad)
+            masks = pruning.build_masks(imp, lam, self.prune_spec)
+        else:
+            masks = jax.tree.map(
+                lambda w: jnp.ones_like(w, dtype=jnp.float32), self.params)
+        u0 = pruning.apply_masks(self.params, masks)
+        u = u0
+        acc = jax.tree.map(jnp.zeros_like, u0)
+        hm = None
+        if h_row is not None:
+            hm = pruning.apply_masks(
+                self._noise_layout().unpack(jnp.asarray(h_row)), masks)
+        coeff = jnp.float32(ls.coeff)
+        loss0 = None
+        for t, batch in enumerate(batches):
+            x, y, sw = batch if len(batch) == 3 else (*batch, None)
+            if sw is None or sw.all():
+                loss, g = self._grad_fn(u, x, y)
+            else:
+                loss, g = self._wgrad_fn(u, x, y, jnp.asarray(sw))
+            if t == 0:
+                loss0 = float(loss)
+            g = pruning.apply_masks(g, masks)
+            if ls.name == "fedavg":
+                d = g
+            else:
+                # coeff*(u - u0): two eager dispatches (sub, then the
+                # product) — the rounding sequence the engine's FMA fence
+                # reproduces inside its fused graph
+                prox = jax.tree.map(lambda a, b: coeff * (a - b), u, u0)
+                d = jax.tree.map(lambda gt, p: gt + p, g, prox)
+                if ls.stateful:
+                    d = jax.tree.map(lambda dt, m: dt - m, d, hm)
+            acc = jax.tree.map(lambda a, dt: a + dt, acc, d)
+            u = jax.tree.map(lambda ut, dt: ut - self.eta * dt, u, d)
+        hd = None
+        if ls.stateful:
+            alpha = jnp.float32(ls.alpha)
+            hd = self._noise_layout().pack(
+                jax.tree.map(lambda a, b: alpha * (a - b), u, u0))
+        return acc, loss0, hd
+
     def server_step(self, grads: list[PyTree], noise: PyTree | None = None) -> None:
         """Eqs. (6)-(7): average selected gradients, FedSGD update.
         `noise` (a pytree, `_noise_tree`) models the noisy aggregation
@@ -499,8 +600,19 @@ class FederatedTrainer:
               else np.ones(len(selected), bool))
         cf = fault.corrupt if fault is not None else None
         po = self._poison_stack(fault)
+        ls = self.local_scheme
+        dyn = ls is not None and ls.stateful
+        hbuf = self._ensure_h() if dyn else None
+        surv_ids, surv_hds = [], []
         for j, (n, batch) in enumerate(zip(selected, batches)):
-            g, _, loss = self.client_update(n, float(lam_s[n]), batch=batch)
+            if ls is None:
+                g, _, loss = self.client_update(n, float(lam_s[n]),
+                                                batch=batch)
+                hd = None
+            else:
+                g, loss, hd = self._client_update_local(
+                    n, float(lam_s[n]), batch,
+                    h_row=hbuf[n] if dyn else None)
             losses.append(loss)
             if not ok[j]:
                 continue                     # the upload never arrived
@@ -516,9 +628,20 @@ class FederatedTrainer:
             if all(bool(jnp.all(jnp.isfinite(leaf)))
                    for leaf in jax.tree_util.tree_leaves(g)):
                 grads.append(g)
+                if dyn:
+                    # the state only moves for arrived-AND-finite uploads
+                    # (post-fault — exactly the engine's cw_eff gate)
+                    surv_ids.append(n)
+                    surv_hds.append(hd)
         self.server_step(
             grads,
             noise=self._noise_tree(s) if self.channel_noise else None)
+        if surv_ids:
+            # one scatter-add contribution per surviving row — bitwise the
+            # engine's h.at[cid].add (padding rows there contribute exact
+            # +0.0, a no-op)
+            self._h = hbuf.at[jnp.asarray(np.asarray(surv_ids, np.int32))
+                              ].add(-jnp.stack(surv_hds))
         return losses, len(grads), None
 
     def _reference_robust_round(self, selected: list[int], lam_s: np.ndarray,
@@ -545,10 +668,21 @@ class FederatedTrainer:
               else np.ones(len(selected), bool))
         cf = fault.corrupt if fault is not None else None
         po = self._poison_stack(fault)
-        losses, gps, cws = [], [], []
+        ls = self.local_scheme
+        dyn = ls is not None and ls.stateful
+        hbuf = self._ensure_h() if dyn else None
+        losses, gps, cws, hds = [], [], [], []
         for j, (n, batch) in enumerate(zip(selected, batches)):
-            g, _, loss = self.client_update(n, float(lam_s[n]), batch=batch)
+            if ls is None:
+                g, _, loss = self.client_update(n, float(lam_s[n]),
+                                                batch=batch)
+                hd = None
+            else:
+                g, loss, hd = self._client_update_local(
+                    n, float(lam_s[n]), batch,
+                    h_row=hbuf[n] if dyn else None)
             losses.append(loss)
+            hds.append(hd)
             gp = pack.pack(g)
             if cf is not None:
                 gp = gp * jnp.float32(cf[j])
@@ -566,6 +700,13 @@ class FederatedTrainer:
         cw = jnp.asarray(np.asarray(cws, np.float32))
         ghat, ast = self.aggregator.reduce(stack, cw)
         n_ok = int(np.asarray(cws).sum())
+        if dyn:
+            ids = [n for n, c in zip(selected, cws) if c > 0]
+            if ids:
+                self._h = hbuf.at[jnp.asarray(np.asarray(ids, np.int32))
+                                  ].add(-jnp.stack(
+                                      [h for h, c in zip(hds, cws)
+                                       if c > 0]))
         if n_ok > 0:
             g = pack.unpack(ghat)
             if self.channel_noise:
@@ -595,17 +736,39 @@ class FederatedTrainer:
         `last_n_ok`), an int on the reference path — materialized with the
         losses to drive the fault counters; ast is the robust aggregator's
         per-round diagnostic count (None on the mean path)."""
-        batches = [self._sample_batch(self.clients[n]) for n in selected]
-        stackable = len({b[0].shape for b in batches}) <= 1
+        ls = self.local_scheme
+        if ls is None:
+            batches = [self._sample_batch(self.clients[n]) for n in selected]
+            stackable = len({b[0].shape for b in batches}) <= 1
+        else:
+            # E draws per (round, client), client-major — THE step-batch
+            # RNG order, identical on the packed, block, and reference
+            # paths (the bit-for-bit contract's multi-step extension)
+            batches = [[self._sample_batch(self.clients[n])
+                        for _ in range(ls.steps)] for n in selected]
+            stackable = len({b[0].shape
+                             for bs in batches for b in bs}) <= 1
         if self.backend != "packed" or not stackable:
             if self.backend == "packed":
                 self.n_fallback_rounds += 1
             return self._reference_round(selected, lam_s, batches, s=s,
                                          fault=fault)
         lam_sel = np.asarray([lam_s[n] for n in selected], np.float64)
-        xs = jnp.stack([b[0] for b in batches])
-        ys = jnp.stack([b[1] for b in batches])
-        sws = np.stack([b[2] for b in batches])
+        if ls is None:
+            xs = jnp.stack([b[0] for b in batches])
+            ys = jnp.stack([b[1] for b in batches])
+            sws = np.stack([b[2] for b in batches])
+        else:
+            xs = jnp.stack([jnp.stack([b[0] for b in bs])
+                            for bs in batches])
+            ys = jnp.stack([jnp.stack([b[1] for b in bs])
+                            for bs in batches])
+            sws = np.stack([np.stack([b[2] for b in bs])
+                            for bs in batches])
+        extra = {}
+        if ls is not None and ls.stateful:
+            extra = dict(h=self._ensure_h(),
+                         client_ids=np.asarray(selected, np.int32))
         self.n_batch_uploads += 1
         self._w, self._v, losses, _, _ = self.engine.round_step(
             self._w, self._v, xs, ys, lam_sel,
@@ -616,7 +779,9 @@ class FederatedTrainer:
             upload_weights=(fault.upload_ok.astype(np.float32)
                             if fault is not None else None),
             corrupt=fault.corrupt if fault is not None else None,
-            poison=self._poison_stack(fault))
+            poison=self._poison_stack(fault), **extra)
+        if extra:
+            self._h = self.engine.last_h
         ast = (self.engine.last_agg_stat if self.aggregator is not None
                else None)
         return losses, self.engine.last_n_ok, ast
@@ -747,8 +912,16 @@ class FederatedTrainer:
         cids, counts = self._block_cids(start, n_rounds, infos)
         c_max = int(counts.max())
         blen = self._block_key(sels[0], infos[start][1])[2]
-        idxs = np.empty((n_rounds, c_max, blen), np.int32)
-        sw = np.ones((n_rounds, c_max, blen), np.float32)
+        # multi-step schemes draw an E-deep index stack per (round, client)
+        # — same RNG calls, same round -> client -> step order as the
+        # per-round path, so the batch stream stays bit-for-bit shared
+        ls = self.local_scheme
+        if ls is None:
+            idxs = np.empty((n_rounds, c_max, blen), np.int32)
+            sw = np.ones((n_rounds, c_max, blen), np.float32)
+        else:
+            idxs = np.empty((n_rounds, c_max, ls.steps, blen), np.int32)
+            sw = np.ones((n_rounds, c_max, ls.steps, blen), np.float32)
         lams = np.empty((n_rounds, c_max), np.float64)
         # host-drawn fault masks join the stacked [K, C] schedule operands
         # (ones = clean defaults, exact no-ops on device) whenever a fault
@@ -780,20 +953,26 @@ class FederatedTrainer:
                     if pos is not None and fault.poison is not None:
                         pos[k, :len(sel)] = self._poison_stack(fault)
             for j, n in enumerate(sel):
-                draw = self._draw_indices(self._client_len(n))
-                m = len(draw)
                 lams[k, j] = lam_s[n]
-                if m < blen:             # ragged: repeat last drawn sample
-                    idxs[k, j, :m] = draw           # with weight 0, exactly
-                    idxs[k, j, m:] = draw[-1]       # like _sample_batch
-                    sw[k, j, m:] = 0.0
-                    any_ragged = True
-                else:
-                    idxs[k, j] = draw
+                for t in range(1 if ls is None else ls.steps):
+                    row = idxs[k, j] if ls is None else idxs[k, j, t]
+                    swr = sw[k, j] if ls is None else sw[k, j, t]
+                    draw = self._draw_indices(self._client_len(n))
+                    m = len(draw)
+                    if m < blen:         # ragged: repeat last drawn sample
+                        row[:m] = draw              # with weight 0, exactly
+                        row[m:] = draw[-1]          # like _sample_batch
+                        swr[m:] = 0.0
+                        any_ragged = True
+                    else:
+                        row[:] = draw
             c_k = len(sel)               # pad rows to c_max by replicating
             idxs[k, c_k:] = idxs[k, c_k - 1]     # the round's last client
             sw[k, c_k:] = sw[k, c_k - 1]         # (cids padded identically
             lams[k, c_k:] = lam_s[sel[-1]]       # by _block_cids)
+        dyn = ls is not None and ls.stateful
+        slab_ids = None
+        h_arg = None
         if self._cohorts is not None:
             # streamed path: this block's prefetched cohort stands in for
             # the full store; global ids remap to cohort-local rows (the
@@ -801,8 +980,23 @@ class FederatedTrainer:
             # — and the bitwise contract — is untouched)
             store = self._cohorts.acquire(start)
             cids = store.remap(cids)
+            if dyn:
+                # FedDyn state slab, cohort-swap protocol: slice the rows
+                # of this cohort's clients in cohort-row order (remapped
+                # cids index the slab exactly like the data buffers);
+                # padded slab rows replicate the last client — remapped
+                # ids never reference them, and only the unique prefix is
+                # scattered back, so the slab round-trip is an exact copy
+                ids = np.asarray(store.ids_by_shard[0], np.int64)
+                rows = len(store.counts)
+                gidx = np.concatenate(
+                    [ids, np.full(rows - len(ids), ids[-1], np.int64)])
+                slab_ids = ids
+                h_arg = self._ensure_h()[jnp.asarray(gidx)]
         else:
             store = self._ensure_store()
+            if dyn:
+                h_arg = self._ensure_h()
         noises = (np.stack([self._noise_packed(start + k)
                             for k in range(n_rounds)])
                   if self.channel_noise else None)
@@ -810,7 +1004,13 @@ class FederatedTrainer:
             self._w, self._v, store, cids, idxs, lams, counts,
             sample_weights=sw if any_ragged else None, noises=noises,
             upload_weights=fw if fault_on else None,
-            corrupt=cfa if fault_on else None, poisons=pos)
+            corrupt=cfa if fault_on else None, poisons=pos, h=h_arg)
+        if dyn:
+            if slab_ids is None:
+                self._h = self.engine.last_h
+            else:
+                self._h = self._h.at[jnp.asarray(slab_ids)].set(
+                    self.engine.last_h[:len(slab_ids)])
         n_oks = self.engine.last_n_ok        # [K] lazy survivor counts
         asts = (self.engine.last_agg_stat    # [K] lazy reducer diagnostics
                 if self.aggregator is not None else None)

@@ -251,7 +251,8 @@ class RoundEngine:
                  client_axis: str = "auto", kernel_impl: str = "auto",
                  donate: bool = False, weighted_loss_fn: Callable | None = None,
                  shards: int | None = None, bucket: bool = True,
-                 max_clients: int | None = None, aggregator=None):
+                 max_clients: int | None = None, aggregator=None,
+                 local_scheme=None):
         if client_axis not in ("auto", "unroll", "scan", "vmap"):
             raise ValueError(f"unknown client_axis {client_axis!r}")
         self.pack = pack
@@ -261,6 +262,20 @@ class RoundEngine:
         self.bucket = bool(bucket)
         self.max_clients = int(max_clients) if max_clients else None
         self.aggregator = aggregator
+        # local-update scheme (core/local.py): None = the single-gradient
+        # FedSGD body (today's paths, byte-identical traces). A LocalScheme
+        # swaps the client body for an inner lax.scan over E local steps —
+        # a construction-time constant like eta/aggregator, so the step
+        # axis pads to the STATIC pow2 bucket `steps_bucket` with a static
+        # 0/1 step-validity vector (padded steps are exact no-ops and
+        # consume no RNG), keeping the trace-family ladder bounded.
+        self.local_scheme = local_scheme
+        if local_scheme is not None:
+            eb = local_scheme.steps_bucket
+            self._sv = jnp.asarray(
+                (np.arange(eb) < local_scheme.steps).astype(np.float32))
+        else:
+            self._sv = None
         self.shards = resolve_shards(shards)
         self.prunable = jnp.asarray(pack.prunable_mask())
         # compile accounting: one increment per (re)trace of a step impl —
@@ -320,6 +335,10 @@ class RoundEngine:
         # ([] scalar / [K] int32; constant 0 on the mean path) — clients
         # trimmed / clipped / excluded, same lazy materialization contract
         self.last_agg_stat = None
+        # FedDyn only: the updated per-client correction state [C, R, L]
+        # of the most recent dispatch — stays on device; the trainer (the
+        # buffer's owner) adopts it after each step
+        self.last_h = None
         if self.mesh is None:
             round_shared, round_multi = self._round_shared, self._round_multi
             self._step_shared = jax.jit(self._shared_impl,
@@ -420,6 +439,132 @@ class RoundEngine:
         _, (losses, grads) = jax.lax.scan(body, 0.0, (masks, xs, ys, sw))
         return losses, grads
 
+    # -- local-update scheme bodies (DESIGN.md §14) -------------------------
+    #
+    # With a LocalScheme the per-client body becomes an inner lax.scan over
+    # the pow2-bucketed step axis: each step takes a masked gradient at the
+    # CURRENT iterate, folds in the scheme's regularizer (FMA-fenced, so
+    # the eager reference's per-op rounding is reproduced bit for bit),
+    # accumulates the update direction into the upload, and steps the local
+    # iterate. Padded steps (t >= E) are gated off by the static 0/1
+    # validity vector — exact no-ops on (u, acc) via `where`, and they
+    # replicate the last real step's batch so they consume no RNG.
+
+    def _local_client(self, u0, mask, xs, ys, sw, hm=None):
+        """One client's local trajectory. xs: [E_b, B, ...]; u0 the pruned
+        start w*mask; hm the client's masked FedDyn correction state (or
+        None). Returns (loss at step 0, upload = sum of step directions,
+        FedDyn state delta or None).
+
+        The upload accumulator starts at zeros, so every scheme's upload is
+        `0 + d_0 + ...` — the add normalizes -0.0 direction coordinates to
+        +0.0, and the eager reference accumulates from zeros the same way.
+        """
+        scheme = self.local_scheme
+        coeff = scheme.coeff
+
+        def body(carry, inp):
+            u, acc = carry
+            x, y, s, valid = inp
+            loss, g = self._value_and_grad(u, x, y, s)
+            g = g * mask
+            if scheme.name == "fedavg":
+                d = g
+            else:
+                d = ops.packed_local_delta(g, u, u0, coeff, hm=hm)
+            acc = jnp.where(valid > 0, acc + d, acc)
+            u = jnp.where(valid > 0,
+                          u - ops.rounded_step(self.eta, d), u)
+            return (u, acc), loss
+
+        (u_e, upload), losses = jax.lax.scan(
+            body, (u0, jnp.zeros_like(u0)), (xs, ys, sw, self._sv))
+        if scheme.stateful:
+            # FedDyn server-side state delta: h_i <- h_i - alpha*(u_E - u0),
+            # the product fenced exactly like the per-step regularizer
+            hd = ops.rounded_step(jnp.float32(scheme.alpha), u_e - u0)
+            return losses[0], upload, hd
+        return losses[0], upload, None
+
+    def _locals_shared(self, pruned, mask, xs, ys, sw, hcs=None):
+        """Shared-lambda local-step client axis (xs: [C, E_b, B, ...]).
+        Returns (losses [C], uploads [C, R, L], hds [C, R, L] | None).
+        hcs: per-selected-client FedDyn state [C, R, L] (or None); the
+        mask multiply below is exact (mask is 0/1)."""
+        hms = None if hcs is None else hcs * mask
+        n_clients = xs.shape[0]
+        ax = self._axis
+        if ax == "unroll":
+            out = [self._local_client(pruned, mask, xs[c], ys[c], sw[c],
+                                      None if hms is None else hms[c])
+                   for c in range(n_clients)]
+            return tuple(None if out[0][i] is None
+                         else jnp.stack([o[i] for o in out])
+                         for i in range(3))
+        if ax == "vmap":
+            if hms is None:
+                return jax.vmap(
+                    lambda x, y, s: self._local_client(
+                        pruned, mask, x, y, s))(xs, ys, sw)
+            return jax.vmap(
+                lambda x, y, s, hm: self._local_client(
+                    pruned, mask, x, y, s, hm))(xs, ys, sw, hms)
+
+        def body(carry, inp):
+            x, y, s, hm = inp
+            return carry, self._local_client(pruned, mask, x, y, s, hm)
+
+        _, out = jax.lax.scan(body, 0.0, (xs, ys, sw, hms))
+        return out
+
+    def _locals_multi(self, w, masks, xs, ys, sw, hcs=None):
+        """Per-client-lambda local-step client axis: each client's pruned
+        start w*masks[c] is formed inside its own step (the [C, R, L] stack
+        of pruned models is never materialized)."""
+        hms = None if hcs is None else hcs * masks
+        n_clients = xs.shape[0]
+        ax = self._axis
+        if ax == "unroll":
+            out = [self._local_client(w * masks[c], masks[c], xs[c], ys[c],
+                                      sw[c],
+                                      None if hms is None else hms[c])
+                   for c in range(n_clients)]
+            return tuple(None if out[0][i] is None
+                         else jnp.stack([o[i] for o in out])
+                         for i in range(3))
+        if ax == "vmap":
+            if hms is None:
+                return jax.vmap(
+                    lambda m, x, y, s: self._local_client(
+                        w * m, m, x, y, s))(masks, xs, ys, sw)
+            return jax.vmap(
+                lambda m, x, y, s, hm: self._local_client(
+                    w * m, m, x, y, s, hm))(masks, xs, ys, sw, hms)
+
+        def body(carry, inp):
+            m, x, y, s, hm = inp
+            return carry, self._local_client(w * m, m, x, y, s, hm)
+
+        _, out = jax.lax.scan(body, 0.0, (masks, xs, ys, sw, hms))
+        return out
+
+    def _client_grads_shared(self, pruned, mask, xs, ys, sw):
+        """Client body dispatch for the STATELESS schemes: the plain
+        single-gradient body when no LocalScheme is set (today's traces,
+        byte-identical), otherwise the local-step body with the FedDyn
+        state path unused. FedDyn routes through the dyn round bodies
+        instead (extra h/cid operands)."""
+        if self.local_scheme is None:
+            return self._grads_shared(pruned, mask, xs, ys, sw)
+        losses, uploads, _ = self._locals_shared(pruned, mask, xs, ys, sw)
+        return losses, uploads
+
+    def _client_grads_multi(self, w, masks, xs, ys, sw):
+        if self.local_scheme is None:
+            return self._grads_multi(w, masks, xs, ys, sw)
+        losses, uploads, _ = self._locals_multi(w, masks, xs, ys, sw)
+        return losses, uploads
+
     def _aggregate_update(self, w, v, grads, cw, inv, noise, cf=None,
                           poison=None):
         """Weighted aggregate + FedSGD tail, with graceful degradation and
@@ -479,7 +624,10 @@ class RoundEngine:
         # (the reference server_step's empty-grads early return)
         w2 = jnp.where(alive, w2, w)
         g = jnp.where(alive, g, v)
-        return w2, g, step, n_ok, ast
+        # cw_eff rides along for the stateful schemes: FedDyn only updates
+        # the correction state of clients whose (post-fault) upload arrived
+        # finite — exactly the quarantine's surviving weights
+        return w2, g, step, n_ok, ast, cw_eff
 
     def _round_shared(self, w, v, xs, ys, sw, cw, inv, k, noise=None,
                       cf=None, poison=None):
@@ -491,9 +639,9 @@ class RoundEngine:
         _, mask = ops.packed_importance_mask(w, v, self.prunable, thr,
                                              impl=self.kernel_impl)
         pruned = w * mask
-        losses, grads = self._grads_shared(pruned, mask, xs, ys, sw)
+        losses, grads = self._client_grads_shared(pruned, mask, xs, ys, sw)
         # step stays an output of the jitted graph: see the weighted update
-        w2, g, step, n_ok, ast = self._aggregate_update(
+        w2, g, step, n_ok, ast, _ = self._aggregate_update(
             w, v, grads, cw, inv, noise, cf, poison)
         return w2, g, losses, thr, step, n_ok, ast
 
@@ -504,8 +652,8 @@ class RoundEngine:
         thr = kth_smallest_threshold(q, self.prunable, ks)      # [C]
         _, masks = ops.packed_importance_masks(w, v, self.prunable, thr,
                                                impl=self.kernel_impl)
-        losses, grads = self._grads_multi(w, masks, xs, ys, sw)
-        w2, g, step, n_ok, ast = self._aggregate_update(
+        losses, grads = self._client_grads_multi(w, masks, xs, ys, sw)
+        w2, g, step, n_ok, ast, _ = self._aggregate_update(
             w, v, grads, cw, inv, noise, cf, poison)
         return w2, g, losses, thr, step, n_ok, ast
 
@@ -517,11 +665,125 @@ class RoundEngine:
         self.n_traces += 1
         return self._round_multi(w, v, xs, ys, sw, cw, inv, ks)
 
+    # -- FedDyn round bodies: per-client correction state -------------------
+    #
+    # FedDyn threads two extra traced operands through the round: the full
+    # per-client state h [C_all, R, L] (or a cohort slab on the streamed
+    # path) and the selected ids cid [C_b] indexing its rows. The state of
+    # the selected clients is gathered (exact copy), its masked value joins
+    # each local step's direction, and after the aggregate the server
+    # scatter-updates h_i <- h_i - alpha*(u_E - u0) for every client whose
+    # upload arrived finite (the quarantine's cw_eff). Padding clients
+    # replicate the last real id with a scatter contribution of exact +0.0
+    # — a bitwise no-op, because h rows can never hold -0.0 (they start at
+    # +0.0 and x + (-hd) only yields -0.0 from a -0.0 operand).
+
+    def _h_scatter(self, h, cid, hds, cw_eff):
+        upd = jnp.where(cw_eff[:, None, None] > 0, -hds, jnp.float32(0.0))
+        return h.at[cid].add(upd)
+
+    def _round_shared_dyn(self, w, v, xs, ys, sw, cw, inv, k, h, cid,
+                          noise=None, cf=None, poison=None):
+        q = (w * v) ** 2
+        thr = kth_smallest_threshold(q, self.prunable, k)
+        _, mask = ops.packed_importance_mask(w, v, self.prunable, thr,
+                                             impl=self.kernel_impl)
+        pruned = w * mask
+        losses, uploads, hds = self._locals_shared(pruned, mask, xs, ys, sw,
+                                                   h[cid])
+        w2, g, step, n_ok, ast, cw_eff = self._aggregate_update(
+            w, v, uploads, cw, inv, noise, cf, poison)
+        h2 = self._h_scatter(h, cid, hds, cw_eff)
+        return w2, g, losses, thr, step, n_ok, ast, h2
+
+    def _round_multi_dyn(self, w, v, xs, ys, sw, cw, inv, ks, h, cid,
+                         noise=None, cf=None, poison=None):
+        q = (w * v) ** 2
+        thr = kth_smallest_threshold(q, self.prunable, ks)      # [C]
+        _, masks = ops.packed_importance_masks(w, v, self.prunable, thr,
+                                               impl=self.kernel_impl)
+        losses, uploads, hds = self._locals_multi(w, masks, xs, ys, sw,
+                                                  h[cid])
+        w2, g, step, n_ok, ast, cw_eff = self._aggregate_update(
+            w, v, uploads, cw, inv, noise, cf, poison)
+        h2 = self._h_scatter(h, cid, hds, cw_eff)
+        return w2, g, losses, thr, step, n_ok, ast, h2
+
+    # Mesh variants: state rows are gathered OUTSIDE the shard_map region
+    # (h is replicated; the gather is exact and cheap) and enter sharded
+    # along the client axis; inside, each shard runs its local clients'
+    # step scans and the round's single collective becomes ONE tupled
+    # all_gather of the raw (uploads, state deltas) stacks. The whole
+    # aggregate tail — faults, quarantine, mean/robust reduce, update, h
+    # scatter — then runs replicated on the gathered full-client stacks,
+    # which makes the sharded FedDyn round BITWISE identical to the
+    # unsharded one (same inputs, same ops — stronger than the mean path's
+    # psum reassociation, same construction as the robust path).
+
+    def _dyn_sharded_tail(self, w, v, ups, hds, cw, inv, h, cid, noise, cf,
+                          poison):
+        w2, g, step, n_ok, ast, cw_eff = self._aggregate_update(
+            w, v, ups, cw, inv, noise, cf, poison)
+        h2 = self._h_scatter(h, cid, hds, cw_eff)
+        return w2, g, step, n_ok, ast, h2
+
+    def _round_shared_dyn_sharded(self, w, v, xs, ys, sw, cw, inv, k, h,
+                                  cid, noise=None, cf=None, poison=None):
+        q = (w * v) ** 2
+        thr = kth_smallest_threshold(q, self.prunable, k)
+        _, mask = ops.packed_importance_mask(w, v, self.prunable, thr,
+                                             impl=self.kernel_impl)
+        pruned = w * mask
+        hc = h[cid]
+
+        def body(pruned_, mask_, xs_, ys_, sw_, hc_):
+            losses, ups, hds = self._locals_shared(pruned_, mask_, xs_, ys_,
+                                                   sw_, hc_)
+            ga, hda = jax.lax.all_gather((ups, hds), "data", axis=0,
+                                         tiled=True)
+            return losses, ga, hda
+
+        # gather-then-reduce is replicated by construction but invisible to
+        # the static replication checker (see _robust_partial)
+        losses, ups, hds = shard_map(
+            body, mesh=self.mesh,
+            in_specs=(P(), P(), P("data"), P("data"), P("data"), P("data")),
+            out_specs=(P("data"), P(), P()), check_rep=False)(
+                pruned, mask, xs, ys, sw, hc)
+        w2, g, step, n_ok, ast, h2 = self._dyn_sharded_tail(
+            w, v, ups, hds, cw, inv, h, cid, noise, cf, poison)
+        return w2, g, losses, thr, step, n_ok, ast, h2
+
+    def _round_multi_dyn_sharded(self, w, v, xs, ys, sw, cw, inv, ks, h,
+                                 cid, noise=None, cf=None, poison=None):
+        q = (w * v) ** 2
+        thr = kth_smallest_threshold(q, self.prunable, ks)      # [C]
+        hc = h[cid]
+
+        def body(w_, v_, pr, thr_, xs_, ys_, sw_, hc_):
+            _, masks = ops.packed_importance_masks(w_, v_, pr, thr_,
+                                                   impl=self.kernel_impl)
+            losses, ups, hds = self._locals_multi(w_, masks, xs_, ys_, sw_,
+                                                  hc_)
+            ga, hda = jax.lax.all_gather((ups, hds), "data", axis=0,
+                                         tiled=True)
+            return losses, ga, hda
+
+        losses, ups, hds = shard_map(
+            body, mesh=self.mesh,
+            in_specs=(P(), P(), P(), P("data"), P("data"), P("data"),
+                      P("data"), P("data")),
+            out_specs=(P("data"), P(), P()), check_rep=False)(
+                w, v, self.prunable, thr, xs, ys, sw, hc)
+        w2, g, step, n_ok, ast, h2 = self._dyn_sharded_tail(
+            w, v, ups, hds, cw, inv, h, cid, noise, cf, poison)
+        return w2, g, losses, thr, step, n_ok, ast, h2
+
     # -- block scaffold: lax.scan over the round axis -----------------------
 
     def _make_block_impl(self, round_fn, noisy: bool = False,
                          faulted: bool = False, poisoned: bool = False,
-                         sharded_store: bool = False):
+                         sharded_store: bool = False, dyn: bool = False):
         """K rounds per dispatch around any of the four per-round bodies:
         the scan carries (w, v) and consumes [K]-leading stacked schedule
         arrays; batches are gathered ON DEVICE from the ClientStore
@@ -547,10 +809,17 @@ class RoundEngine:
         gather runs inside its own collective-free shard_map
         (`_gather_sharded`) — each device reads only its own clients' rows
         and the sharded round bodies consume the already-data-sharded
-        batches unchanged."""
+        batches unchanged. With ``dyn`` (FedDyn) the per-client correction
+        state h joins the scan CARRY right after (w, v) — each round's
+        scatter-update feeds the next round's gather, all inside the one
+        dispatch — and the updated state is returned alongside (w', v')."""
 
-        def impl(w, v, dx, dy, cids, idxs, sw, counts, inv, ks, *rest):
+        def impl(w, v, *op):
             self.n_traces += 1
+            if dyn:
+                h, op = op[0], op[1:]
+            dx, dy, cids, idxs, sw, counts, inv, ks = op[:8]
+            rest = op[8:]
             # 0/1 client-validity weights straight from the per-round real
             # counts — built on device (exact 0.0/1.0, so the weighted
             # aggregate is unchanged bit for bit), because host-building
@@ -569,7 +838,10 @@ class RoundEngine:
                 po = None
 
             def body(carry, inp):
-                w, v = carry
+                if dyn:
+                    w, v, h = carry
+                else:
+                    w, v = carry
                 cid, ix, sw_k, cw_k, inv_k, k = inp[:6]
                 nxt = 6
                 cf_k = None
@@ -579,8 +851,17 @@ class RoundEngine:
                 if sharded_store:
                     xs, ys = self._gather_sharded(dx, dy, cid, ix)
                 else:
-                    xs = dx[cid[:, None], ix]
-                    ys = dy[cid[:, None], ix]
+                    # local-step blocks gather [C, E_b, B] index arrays —
+                    # broadcast the id column across the extra axes
+                    cidx = cid.reshape(cid.shape + (1,) * (ix.ndim - 1))
+                    xs = dx[cidx, ix]
+                    ys = dy[cidx, ix]
+                if dyn:
+                    w2, g, losses, thr, _, n_ok, ast, h2 = round_fn(
+                        w, v, xs, ys, sw_k, cw_k, inv_k, k, h, cid,
+                        noise=inp[-1] if noisy else None,
+                        cf=cf_k, poison=po_k)
+                    return (w2, g, h2), (losses, thr, n_ok, ast)
                 w2, g, losses, thr, _, n_ok, ast = round_fn(
                     w, v, xs, ys, sw_k, cw_k, inv_k, k,
                     noise=inp[-1] if noisy else None,
@@ -590,6 +871,10 @@ class RoundEngine:
             xss = ((cids, idxs, sw, cw, inv, ks)
                    + ((cf,) if faulted else ())
                    + ((po,) if poisoned else ()) + rest)
+            if dyn:
+                (w2, v2, h2), (losses, thrs, n_oks, asts) = jax.lax.scan(
+                    body, (w, v, h), xss)
+                return w2, v2, h2, losses, thrs, n_oks, asts
             (w2, v2), (losses, thrs, n_oks, asts) = jax.lax.scan(
                 body, (w, v), xss)
             return w2, v2, losses, thrs, n_oks, asts
@@ -648,7 +933,8 @@ class RoundEngine:
         sharded P("data") along the client axis, exactly the layout the
         sharded round bodies' in_specs expect."""
         def gather(d, e, c, i):
-            return d[c[:, None], i], e[c[:, None], i]
+            cx = c.reshape(c.shape + (1,) * (i.ndim - 1))
+            return d[cx, i], e[cx, i]
         return shard_map(gather, mesh=self.mesh,
                          in_specs=(P("data"), P("data"), P("data"),
                                    P("data")),
@@ -672,6 +958,48 @@ class RoundEngine:
                                          sharded_store=True)
             fn = jax.jit(impl, donate_argnums=self._donate_args)
             self._fault_steps[key] = fn
+        return fn
+
+    def _dyn_entry(self, kind: str, noisy: bool, faulted: bool = False,
+                   poisoned: bool = False) -> Callable:
+        """Lazily built jit entries for the FedDyn (stateful) rounds: the
+        same operand order as the plain/fault entries with the state pair
+        ``(h, cid)`` appended after k, then the optional cf/poison/noise
+        operands. Cached beside the fault entries per (kind, noisy,
+        faulted, poisoned) so FedDyn runs stay on the one-extra-family-
+        per-mode trace ladder. The state buffer is NOT donated: the
+        trainer keeps ownership so a failed dispatch can't strand it."""
+        key = ("dyn", kind, noisy, faulted, poisoned)
+        fn = self._fault_steps.get(key)
+        if fn is not None:
+            return fn
+        shared = kind.endswith("shared")
+        if self.mesh is None:
+            round_fn = (self._round_shared_dyn if shared
+                        else self._round_multi_dyn)
+        else:
+            round_fn = (self._round_shared_dyn_sharded if shared
+                        else self._round_multi_dyn_sharded)
+        if kind.startswith("blk"):
+            impl = self._make_block_impl(round_fn, noisy=noisy,
+                                         faulted=faulted, poisoned=poisoned,
+                                         dyn=True)
+        else:
+            def impl(w, v, xs, ys, sw, cw, inv, k, h, cid, *rest,
+                     _fn=round_fn):
+                self.n_traces += 1
+                i = 0
+                cf = po = noise = None
+                if faulted:
+                    cf, i = rest[i], i + 1
+                if poisoned:
+                    po, i = rest[i], i + 1
+                if noisy:
+                    noise = rest[i]
+                return _fn(w, v, xs, ys, sw, cw, inv, k, h, cid,
+                           noise=noise, cf=cf, poison=po)
+        fn = jax.jit(impl, donate_argnums=self._donate_args)
+        self._fault_steps[key] = fn
         return fn
 
     # -- sharded bodies: client axis over the mesh data axis ----------------
@@ -780,7 +1108,8 @@ class RoundEngine:
         partial = self._robust_partial if robust else self._guarded_partial
 
         def body(pruned, mask, xs, ys, sw, cw, *extra):
-            losses, grads = self._grads_shared(pruned, mask, xs, ys, sw)
+            losses, grads = self._client_grads_shared(pruned, mask, xs, ys,
+                                                      sw)
             return partial(losses, grads, cw,
                            extra[0] if cf is not None else None,
                            extra[-1] if poison is not None else None)
@@ -819,7 +1148,8 @@ class RoundEngine:
             # kernel reads the replicated (w, v) once, local masks only
             _, masks = ops.packed_importance_masks(w_, v_, pr, thr_,
                                                    impl=self.kernel_impl)
-            losses, grads = self._grads_multi(w_, masks, xs_, ys_, sw_)
+            losses, grads = self._client_grads_multi(w_, masks, xs_, ys_,
+                                                     sw_)
             return partial(losses, grads, cw_,
                            extra[0] if cf is not None else None,
                            extra[-1] if poison is not None else None)
@@ -869,7 +1199,7 @@ class RoundEngine:
 
     def round_step(self, w, v, xs, ys, lams, sample_weights=None,
                    noise=None, upload_weights=None, corrupt=None,
-                   poison=None):
+                   poison=None, h=None, client_ids=None):
         """One full round. xs: [C, B, ...], ys: [C, B], lams: [C] host-side
         pruning ratios for the selected clients; sample_weights: optional
         [C, B] 0/1 per-sample weights (ragged clients padded to B);
@@ -887,6 +1217,13 @@ class RoundEngine:
         client) — the GaussianPoison byzantine axis; it rides the same
         fault entries (a poisoned round always carries a `cf` operand
         too, ones-filled when no multiplicative fault fired).
+        With a multi-step LocalScheme, xs/ys/sample_weights carry a step
+        axis after the client axis — xs: [C, E, B, ...] with E =
+        local_scheme.steps — padded here to the static pow2 step bucket
+        (padded steps replicate the last real batch and are exact no-ops).
+        FedDyn additionally requires `h` (the [C_all, R, L] correction
+        state) and `client_ids` ([C] ids indexing its rows); the updated
+        state lands in `last_h` (device array, never synced).
         Returns (w', v', losses [C], threshold, step) — all device arrays;
         nothing is synced to host (`last_n_ok` additionally holds the
         round's lazy survivor count). `step` is the applied update eta*v'
@@ -902,13 +1239,34 @@ class RoundEngine:
                 f"{lams.shape[0]} lambdas for {n_clients} client batches")
         ks = np.floor(lams * self.pack.n_prunable).astype(np.int32)
 
+        # pad the step axis to its static pow2 bucket first: padded steps
+        # replicate the last real step's batch (no RNG consumed) and are
+        # gated off by the validity vector inside the step scan
+        ls = self.local_scheme
+        if ls is not None:
+            if int(xs.shape[1]) != ls.steps:
+                raise ValueError(
+                    f"expected {ls.steps} local-step batches per client, "
+                    f"got {xs.shape[1]}")
+            epad = ls.steps_bucket - ls.steps
+            if epad:
+                def pad_steps(a):
+                    a = jnp.asarray(a)
+                    reps = jnp.broadcast_to(
+                        a[:, -1:], (a.shape[0], epad) + a.shape[2:])
+                    return jnp.concatenate([a, reps], axis=1)
+                xs, ys = pad_steps(xs), pad_steps(ys)
+                if sample_weights is not None:
+                    sample_weights = pad_steps(
+                        jnp.asarray(sample_weights, jnp.float32))
+
         # pad the client axis to the bucket; padding clients replicate the
         # last real batch and carry weight 0, so they never touch the update
         c_b = self.bucket_size(n_clients)
         self.buckets_used.add(c_b)
         pad = c_b - n_clients
         if sample_weights is None:
-            key = (c_b, int(xs.shape[1]))
+            key = (c_b,) + tuple(int(s) for s in ys.shape[1:])
             sw = self._sw_cache.get(key)
             if sw is None:
                 sw = self._sw_cache[key] = jnp.ones(key, jnp.float32)
@@ -962,10 +1320,30 @@ class RoundEngine:
         fargs = () if cf is None else (
             (cf,) + (() if po is None else (po,)))
 
+        dyn = ls is not None and ls.stateful
+        if dyn:
+            if h is None or client_ids is None:
+                raise ValueError(
+                    "feddyn round_step requires the correction state h and "
+                    "the selected client_ids")
+            cid = np.asarray(client_ids, np.int32)
+            if cid.shape != (n_clients,):
+                raise ValueError(
+                    f"client_ids shape {cid.shape} != ({n_clients},)")
+            if pad:
+                # padding clients replicate the last real id; their state
+                # scatter contribution is exact +0.0 (weight 0), a no-op
+                cid = np.concatenate([cid, np.full(pad, cid[-1], np.int32)])
+            dargs = (h, jnp.asarray(cid))
+
         nz = () if noise is None else (jnp.asarray(noise),)
         if np.all(ks == ks[0]):
             k_dev = jnp.asarray(ks[0], jnp.int32)
-            if cf is not None:
+            if dyn:
+                out = self._dyn_entry("shared", noise is not None,
+                                      cf is not None, po is not None)(
+                    w, v, xs, ys, sw, cw, inv, k_dev, *dargs, *fargs, *nz)
+            elif cf is not None:
                 out = self._fault_entry("shared", noise is not None,
                                         po is not None)(
                     w, v, xs, ys, sw, cw, inv, k_dev, *fargs, *nz)
@@ -978,7 +1356,11 @@ class RoundEngine:
             ks_b = np.concatenate(
                 [ks, np.full(pad, ks[-1], np.int32)]) if pad else ks
             ks_dev = jnp.asarray(ks_b)
-            if cf is not None:
+            if dyn:
+                out = self._dyn_entry("multi", noise is not None,
+                                      cf is not None, po is not None)(
+                    w, v, xs, ys, sw, cw, inv, ks_dev, *dargs, *fargs, *nz)
+            elif cf is not None:
                 out = self._fault_entry("multi", noise is not None,
                                         po is not None)(
                     w, v, xs, ys, sw, cw, inv, ks_dev, *fargs, *nz)
@@ -987,7 +1369,11 @@ class RoundEngine:
                        if noise is None else
                        self._step_multi_nz(w, v, xs, ys, sw, cw, inv, ks_dev,
                                            *nz))
-        w2, g, losses, thr, step, n_ok, ast = out
+        if dyn:
+            w2, g, losses, thr, step, n_ok, ast, h2 = out
+            self.last_h = h2
+        else:
+            w2, g, losses, thr, step, n_ok, ast = out
         self.last_n_ok = n_ok
         self.last_agg_stat = ast
         if pad:
@@ -998,7 +1384,7 @@ class RoundEngine:
 
     def block_step(self, w, v, store, cids, idxs, lams, counts,
                    sample_weights=None, noises=None, upload_weights=None,
-                   corrupt=None, poisons=None):
+                   corrupt=None, poisons=None, h=None):
         """K rounds in ONE jitted dispatch (`lax.scan` over the round axis).
 
         store : ClientStore — device-resident [C_all, N_max, ...] data.
@@ -1048,7 +1434,33 @@ class RoundEngine:
         lams = np.asarray(lams, np.float64)
         if np.any((lams < 0.0) | (lams >= 1.0)):
             raise ValueError(f"lambda must be in [0,1), got {lams}")
-        n_rounds, c_max, batch = idxs.shape
+        # multi-step blocks draw [K, C, E, B] index arrays; the step axis
+        # pads to the static pow2 bucket exactly like round_step's batches
+        # (replicate the last real step — no RNG consumed, gated no-ops)
+        ls = self.local_scheme
+        idxs = np.asarray(idxs, np.int32)
+        if ls is not None:
+            if idxs.ndim != 4 or int(idxs.shape[2]) != ls.steps:
+                raise ValueError(
+                    f"expected [K, C, {ls.steps}, B] local-step indices, "
+                    f"got shape {idxs.shape}")
+            epad = ls.steps_bucket - ls.steps
+            if epad:
+                idxs = np.concatenate(
+                    [idxs, np.repeat(idxs[:, :, -1:], epad, axis=2)],
+                    axis=2)
+                if sample_weights is not None:
+                    sws = np.asarray(sample_weights, np.float32)
+                    sample_weights = np.concatenate(
+                        [sws, np.repeat(sws[:, :, -1:], epad, axis=2)],
+                        axis=2)
+            n_rounds, c_max = idxs.shape[:2]
+            batch = int(idxs.shape[3])
+        else:
+            if idxs.ndim != 3:
+                raise ValueError(
+                    f"expected [K, C, B] indices, got shape {idxs.shape}")
+            n_rounds, c_max, batch = idxs.shape
         counts = np.asarray(counts, np.int64)
         if counts.shape != (n_rounds,) or cids.shape != (n_rounds, c_max) \
                 or lams.shape != (n_rounds, c_max):
@@ -1072,10 +1484,11 @@ class RoundEngine:
                 [a, np.repeat(a[:, -1:], pad, axis=1)], axis=1) if pad else a
 
         cids = pad_cols(np.asarray(cids, np.int32))
-        idxs = pad_cols(np.asarray(idxs, np.int32))
+        idxs = pad_cols(idxs)
         ks = pad_cols(ks)
         if sample_weights is None:
-            key = ("blk", n_rounds, c_b, batch)
+            key = (("blk", n_rounds, c_b, batch) if ls is None else
+                   ("blk", n_rounds, c_b, ls.steps_bucket, batch))
             sw = self._sw_cache.get(key)
             if sw is None:
                 sw = self._sw_cache[key] = jnp.ones(key[1:], jnp.float32)
@@ -1136,6 +1549,29 @@ class RoundEngine:
         # and operand layout are otherwise identical
         streamed = self.mesh is not None and bool(
             getattr(store, "sharded", False))
+        dyn = ls is not None and ls.stateful
+        if dyn:
+            if h is None:
+                raise ValueError(
+                    "feddyn block_step requires the correction state h")
+            if streamed:
+                raise ValueError(
+                    "feddyn over a data-sharded cohort store is not "
+                    "supported: run with shards=1 (streamed cohorts stay "
+                    "available) or client_store='replicated'")
+            fn = self._dyn_entry("blk_shared" if shared else "blk_multi",
+                                 noises is not None, faulted,
+                                 po is not None)
+            out = fn(w, v, h, store.x, store.y, jnp.asarray(cids),
+                     jnp.asarray(idxs), sw, counts_dev, inv, ks_dev,
+                     *((jnp.asarray(pad_ones(uw)),
+                        jnp.asarray(pad_ones(cfa))) if faulted else ()),
+                     *(() if po is None else (jnp.asarray(po),)), *nz)
+            w2, v2, h2, losses, thrs, n_oks, asts = out
+            self.last_h = h2
+            self.last_n_ok = n_oks
+            self.last_agg_stat = asts
+            return w2, v2, losses, thrs
         if faulted:
             fn = (self._stream_entry(shared, noises is not None, True,
                                      po is not None) if streamed

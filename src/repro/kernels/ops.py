@@ -178,6 +178,26 @@ def _rounded_product(eta, g):
 rounded_step = _rounded_product
 
 
+def packed_local_delta(g, u, u0, coeff, hm=None):
+    """Per-local-step update direction for the scheme zoo (DESIGN.md §14).
+
+    d = g + coeff*(u - u0) [- hm], with the regularizer product FMA-fenced:
+    the eager reference computes ``coeff * (u - u0)`` as its own dispatch
+    (rounded to fp32) before adding g, so the fused graph must materialize
+    the rounded product too or the `g + coeff*(u-u0)` add contracts into an
+    FMA and drifts by an ulp.  The subtraction ``u - u0`` and the optional
+    ``- hm`` (FedDyn's masked correction state) are single ops on both
+    backends — exact, no fence needed.
+
+    coeff == 0.0 would fence a zero product; callers skip the call for the
+    plain-FedAvg direction instead of passing 0.
+    """
+    d = g + _rounded_product(jnp.float32(coeff), u - u0)
+    if hm is not None:
+        d = d - hm
+    return d
+
+
 def packed_apply_mean_update(w, gsum, inv, eta, noise=None):
     """g = gsum * inv (+ noise), then the FMA-fenced FedSGD step:
     (w', g, step).

@@ -24,16 +24,22 @@ def make_schedule(a, lam):
                     delay=0.0, feasible=True)
 
 
-def run_pair(clients, params, loss_fn, sched, *, batch_size=16, **packed_kw):
+def run_pair(clients, params, loss_fn, sched, *, batch_size=16, both_kw=None,
+             **packed_kw):
     """Run the same schedule on both backends from the same init; returns
     {backend: (trainer, history)}. packed_kw reaches only the packed
-    trainer (e.g. shards=1 to pin the bit-for-bit single-device path)."""
+    trainer (e.g. shards=1 to pin the bit-for-bit single-device path);
+    both_kw reaches both (e.g. local_scheme, which each backend must
+    honor for the comparison to make sense)."""
     out = {}
     n = len(clients)
     for backend in ("reference", "packed"):
+        kw = dict(both_kw or {})
+        if backend == "packed":
+            kw.update(packed_kw)
         tr = FederatedTrainer(loss_fn, params, clients, eta=0.1,
                               batch_size=batch_size, seed=0, backend=backend,
-                              **(packed_kw if backend == "packed" else {}))
+                              **kw)
         sp = SystemParams.table1(n)
         ch = ChannelModel(n)
         out[backend] = (tr, tr.run(sched, sp, ch.uplink, ch.downlink))

@@ -24,6 +24,8 @@ from repro.api import Experiment, ExperimentSpec, RunResult
 
 GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
                       "run_mlp_edge.jsonl")
+GOLDEN_FEDPROX = os.path.join(os.path.dirname(__file__), "golden",
+                              "run_mlp_edge_fedprox.jsonl")
 
 # The TRAINING trajectory (losses, selection, ledger) is bitwise on any
 # host: the fixture pins shards=1, so the engine math is single-device
@@ -43,17 +45,12 @@ def golden():
     return RunResult.from_jsonl(GOLDEN)
 
 
-def test_golden_fixture_shape(golden):
-    assert golden.spec, "golden fixture must embed its spec"
-    assert golden.summary["rounds_run"] == len(golden.history) > 0
-    # the fixture pins the single-device engine + block dispatch
-    assert golden.spec["run"]["shards"] == 1
-    assert golden.spec["run"]["rounds_per_dispatch"] == 2
+@pytest.fixture(scope="module")
+def golden_fedprox():
+    return RunResult.from_jsonl(GOLDEN_FEDPROX)
 
 
-def test_golden_trajectory_bitwise(golden):
-    spec = ExperimentSpec.from_dict(golden.spec)
-    res = Experiment(spec).run()
+def _assert_trajectory_matches(golden, res):
     assert len(res.history) == len(golden.history)
     for got, want in zip(res.history, golden.history):
         r = want.round
@@ -81,7 +78,20 @@ def test_golden_trajectory_bitwise(golden):
         assert res.summary["theta"] == golden.summary["theta"]
 
 
-def test_golden_rerun_through_reference_backend(golden):
+def test_golden_fixture_shape(golden):
+    assert golden.spec, "golden fixture must embed its spec"
+    assert golden.summary["rounds_run"] == len(golden.history) > 0
+    # the fixture pins the single-device engine + block dispatch
+    assert golden.spec["run"]["shards"] == 1
+    assert golden.spec["run"]["rounds_per_dispatch"] == 2
+
+
+def test_golden_trajectory_bitwise(golden):
+    spec = ExperimentSpec.from_dict(golden.spec)
+    _assert_trajectory_matches(golden, Experiment(spec).run())
+
+
+def _rerun_reference(golden):
     """The golden trajectory is also the REFERENCE backend's trajectory
     (the fixture pins shards=1, where packed == reference bit-for-bit):
     one more angle on the same fixture that catches a drift in either
@@ -97,3 +107,30 @@ def test_golden_rerun_through_reference_backend(golden):
     if SINGLE_DEVICE:
         assert [m.test_accuracy for m in res.history] == \
             [m.test_accuracy for m in golden.history]
+
+
+def test_golden_rerun_through_reference_backend(golden):
+    _rerun_reference(golden)
+
+
+def test_fedprox_golden_fixture_shape(golden_fedprox):
+    assert golden_fedprox.spec, "golden fixture must embed its spec"
+    assert golden_fedprox.summary["rounds_run"] == \
+        len(golden_fedprox.history) > 0
+    sc = golden_fedprox.spec["scheme"]
+    # the local-epoch fixture pins FedProx with E=3 (a non-pow2 step count,
+    # so the padded-step no-op gating is inside the pinned trajectory)
+    assert sc["local_scheme"] == "fedprox"
+    assert sc["local_steps"] == 3
+    assert sc["local_kwargs"] == {"mu": 0.05}
+    assert golden_fedprox.spec["run"]["shards"] == 1
+    assert golden_fedprox.spec["run"]["rounds_per_dispatch"] == 2
+
+
+def test_fedprox_golden_trajectory_bitwise(golden_fedprox):
+    spec = ExperimentSpec.from_dict(golden_fedprox.spec)
+    _assert_trajectory_matches(golden_fedprox, Experiment(spec).run())
+
+
+def test_fedprox_golden_rerun_through_reference_backend(golden_fedprox):
+    _rerun_reference(golden_fedprox)

@@ -1,0 +1,424 @@
+"""Local-update scheme zoo (FedAvg / FedProx / FedDyn, DESIGN.md §14).
+
+Covers: scheme construction + validation (including the FedSGD trivial
+path where ``make_local_scheme("fedavg", steps=1)`` returns None), bitwise
+packed-vs-reference parity for all three schemes on the per-round AND the
+rounds_per_dispatch>1 block path, FedDyn's per-client correction state
+(equality across backends, checkpoint kill/resume restoring it bit-for-
+bit, streamed-cohort slab parity vs the replicated store, and the loud
+error on the unsupported streamed+sharded combination), the sweep-pool
+reset regression (a pooled trainer must not leak FedDyn state between
+cells), spec/registry plumbing, the report's tolerance for mixed-vintage
+summaries, and the CLI's actionable errors for bad --resume / --checkpoints
+paths.
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (
+    Callback, DataSpec, Experiment, ExperimentSpec, JsonlDirSink, ModelSpec,
+    RunSpec, SchemeSpec, SweepSpec, WirelessSpec, run_sweep,
+)
+from repro.api import cli
+from repro.core import FederatedTrainer
+from repro.core.local import LocalScheme, local_spec_key, make_local_scheme
+from repro.wireless import ChannelModel, SystemParams
+
+from _trainer_pair import assert_trainers_bitwise, make_schedule, run_pair
+
+SINGLE_DEVICE = len(jax.devices()) == 1
+
+
+# ---------------------------------------------------------------------------
+# Scheme construction and validation
+# ---------------------------------------------------------------------------
+
+def test_fedavg_single_step_is_the_trivial_fedsgd_path():
+    # FedSGD identity BY CONSTRUCTION: the factory returns None, which
+    # routes every caller through the untouched single-gradient code, so
+    # the committed golden cannot drift no matter what the scan does
+    assert make_local_scheme("fedavg", steps=1) is None
+    assert make_local_scheme() is None
+    assert local_spec_key(None) == ("fedsgd",)
+
+
+def test_scheme_properties_and_buckets():
+    ls = make_local_scheme("fedavg", steps=3)
+    assert isinstance(ls, LocalScheme)
+    assert ls.steps == 3 and ls.steps_bucket == 4
+    assert not ls.stateful and ls.coeff == 0.0
+    prox = make_local_scheme("fedprox", steps=5, mu=0.05)
+    assert prox.steps_bucket == 8 and prox.coeff == 0.05
+    dyn = make_local_scheme("feddyn", steps=1, alpha=0.1)
+    assert dyn is not None, "feddyn E=1 is NOT trivial (carries h state)"
+    assert dyn.stateful and dyn.coeff == pytest.approx(0.1)
+    assert dyn.steps_bucket == 1
+    # pow2 steps land exactly on their own bucket (no padded steps)
+    assert make_local_scheme("fedavg", steps=4).steps_bucket == 4
+
+
+def test_scheme_validation_errors():
+    with pytest.raises(ValueError, match="unknown local scheme"):
+        make_local_scheme("scaffold", steps=2)
+    with pytest.raises(ValueError, match="local_steps"):
+        make_local_scheme("fedavg", steps=0)
+    with pytest.raises(ValueError, match="unknown local scheme kwargs"):
+        make_local_scheme("fedprox", steps=2, mue=0.1)
+    with pytest.raises(ValueError, match="mu must be >= 0"):
+        make_local_scheme("fedprox", steps=2, mu=-1.0)
+    with pytest.raises(ValueError, match="alpha must be >= 0"):
+        make_local_scheme("feddyn", steps=2, alpha=-0.5)
+
+
+def test_scheme_spec_roundtrip_carries_local_fields():
+    spec = ExperimentSpec(scheme=SchemeSpec(
+        local_scheme="fedprox", local_steps=3, local_kwargs={"mu": 0.05}))
+    d = spec.to_dict()
+    assert d["scheme"]["local_scheme"] == "fedprox"
+    spec2 = ExperimentSpec.from_dict(d)
+    assert spec2 == spec and spec2.to_dict() == d
+
+
+# ---------------------------------------------------------------------------
+# Bitwise packed-vs-reference parity, per-round and block paths
+# ---------------------------------------------------------------------------
+
+_rng = np.random.default_rng(0)
+D = 5
+
+
+class _Toy:
+    def __init__(self, n):
+        self.x = _rng.normal(size=(n, D)).astype(np.float32)
+        self.y = _rng.integers(0, 2, size=n).astype(np.int32)
+
+    def __len__(self):
+        return len(self.y)
+
+
+def _toy_problem(n_clients=4):
+    clients = [_Toy(12 + 3 * i) for i in range(n_clients)]
+    params = {"w": jnp.asarray(_rng.normal(size=(D,)).astype(np.float32)),
+              "b": jnp.zeros((), jnp.float32)}
+
+    def loss_fn(p, x, y):
+        logits = x @ p["w"] + p["b"]
+        return jnp.mean(jnp.log1p(jnp.exp(-(2.0 * y - 1.0) * logits)))
+
+    return clients, params, loss_fn
+
+
+@pytest.mark.parametrize("name,kw", [
+    ("fedavg", dict(steps=3)),           # E=3 pads to bucket 4
+    ("fedprox", dict(steps=3, mu=0.05)),
+    ("feddyn", dict(steps=2, alpha=0.1)),
+])
+def test_packed_matches_reference_bitwise(name, kw):
+    clients, params, loss_fn = _toy_problem()
+    sched = make_schedule(np.ones((5, 4)), 0.3)
+    ls = make_local_scheme(name, **kw)
+    out = run_pair(clients, params, loss_fn, sched, batch_size=8,
+                   both_kw=dict(local_scheme=ls), shards=1)
+    tr_r, hist_r = out["reference"]
+    tr_p, hist_p = out["packed"]
+    assert_trainers_bitwise(tr_r, tr_p)
+    losses = [m.train_loss for m in hist_r]
+    assert [m.train_loss for m in hist_p] == losses
+    if name == "feddyn":
+        assert tr_r._h is not None and tr_p._h is not None
+        assert bool(jnp.all(tr_r._h == tr_p._h))
+        assert float(jnp.abs(tr_p._h).sum()) > 0, "h never updated"
+    else:
+        assert tr_p._h is None
+
+    # the rpd=4 block path replays the SAME trajectory bit-for-bit
+    out4 = run_pair(clients, params, loss_fn, sched, batch_size=8,
+                    both_kw=dict(local_scheme=ls), shards=1,
+                    rounds_per_dispatch=4)
+    tr_p4, hist_p4 = out4["packed"]
+    assert_trainers_bitwise(tr_r, tr_p4)
+    assert [m.train_loss for m in hist_p4] == losses
+    if name == "feddyn":
+        assert bool(jnp.all(tr_r._h == tr_p4._h))
+
+
+def test_fedprox_zero_mu_matches_fedavg_bitwise():
+    """mu=0 FedProx is algebraically FedAvg; the packed engine realizes
+    it that way bit-for-bit (the proximal FMA contributes an exact +0)."""
+    clients, params, loss_fn = _toy_problem()
+    sched = make_schedule(np.ones((3, 4)), 0.3)
+    runs = {}
+    for name, kw in (("fedavg", {}), ("fedprox", dict(mu=0.0))):
+        ls = make_local_scheme(name, steps=2, **kw)
+        tr = FederatedTrainer(loss_fn, params, clients, eta=0.1,
+                              batch_size=8, seed=0, backend="packed",
+                              shards=1, local_scheme=ls)
+        sp = SystemParams.table1(4)
+        ch = ChannelModel(4)
+        hist = tr.run(sched, sp, ch.uplink, ch.downlink)
+        runs[name] = (tr, [m.train_loss for m in hist])
+    assert runs["fedavg"][1] == runs["fedprox"][1]
+    assert_trainers_bitwise(runs["fedavg"][0], runs["fedprox"][0])
+
+
+# ---------------------------------------------------------------------------
+# Spec-level: trivial path == FedSGD, FedDyn checkpoint resume
+# ---------------------------------------------------------------------------
+
+N, ROUNDS = 5, 8
+
+
+def small_spec(**kw) -> ExperimentSpec:
+    scheme_kw = {k: kw.pop(k) for k in
+                 ("local_scheme", "local_steps", "local_kwargs")
+                 if k in kw}
+    return ExperimentSpec(
+        data=DataSpec(dataset="synthetic-mnist", n_clients=N, sigma=5.0,
+                      n_train=200, n_test=60, seed=0),
+        model=ModelSpec(name="mlp-edge"),
+        wireless=WirelessSpec(e0=1e6, t0=1e6, seed=0),
+        scheme=SchemeSpec(name="proposed", rounds=ROUNDS, eta=0.1, batch=8,
+                          ao={"outer_iters": 1}, **scheme_kw),
+        run=RunSpec(seed=0, eval_every=4, shards=1, **kw))
+
+
+def test_explicit_fedavg_e1_spec_reproduces_fedsgd_bitwise():
+    """`local_scheme="fedavg", local_steps=1` spelled out in a spec is
+    byte-identical to the default spec (the factory collapses it to the
+    trivial path — the committed FedSGD golden stays pinned)."""
+    res_a = Experiment(small_spec()).run()
+    res_b = Experiment(small_spec(local_scheme="fedavg", local_steps=1,
+                                  local_kwargs={})).run()
+    assert [m.train_loss for m in res_b.history] == \
+        [m.train_loss for m in res_a.history]
+    assert res_b.summary == res_a.summary
+
+
+class _KillAt(Callback):
+    def __init__(self, round_, every):
+        self.round_ = round_
+        self.checkpoint_every = every
+
+    def on_checkpoint(self, m, trainer):
+        if m.round == self.round_:
+            raise RuntimeError("simulated mid-run kill")
+
+
+@pytest.mark.parametrize("rpd", [1, 4])
+def test_feddyn_kill_resume_restores_h_bitwise(tmp_path, rpd):
+    """Kill a FedDyn run after a checkpoint; the resumed run must replay
+    the uninterrupted trajectory bit-for-bit INCLUDING the per-client
+    correction state h (the new checkpoint leaf)."""
+    base = small_spec(local_scheme="feddyn", local_steps=2,
+                      local_kwargs={"alpha": 0.1}, rounds_per_dispatch=rpd)
+    run_a = Experiment(base).build()
+    res_a = run_a.run()
+    assert run_a.trainer._h is not None
+    assert float(jnp.abs(run_a.trainer._h).sum()) > 0
+
+    ckpt = str(tmp_path / f"ckpt_rpd{rpd}")
+    spec = dataclasses.replace(
+        base, run=dataclasses.replace(base.run, checkpoint_dir=ckpt,
+                                      checkpoint_every=4))
+    with pytest.raises(RuntimeError, match="simulated"):
+        Experiment(spec).build().run(callbacks=[_KillAt(4, 4)])
+
+    run_b = Experiment(spec).build()
+    res_b = run_b.resume(ckpt)
+    assert res_b.summary["resumed_from"] == 4
+    for fld in ("train_loss", "test_loss", "test_accuracy",
+                "cumulative_energy", "selected"):
+        assert [getattr(m, fld) for m in res_b.history] == \
+            [getattr(m, fld) for m in res_a.history], fld
+    for a, b in zip(jax.tree_util.tree_leaves(run_a.trainer.params),
+                    jax.tree_util.tree_leaves(run_b.trainer.params)):
+        assert bool(jnp.all(a == b))
+    assert bool(jnp.all(run_a.trainer._h == run_b.trainer._h)), \
+        "per-client correction state drifted across kill/resume"
+
+
+# ---------------------------------------------------------------------------
+# FedDyn x streamed cohorts
+# ---------------------------------------------------------------------------
+
+def test_feddyn_streamed_cohorts_match_replicated_bitwise():
+    """The h-slab swap protocol: a FedDyn run over streamed cohorts
+    (rotating partial selection, so cohorts differ per block) equals the
+    replicated-store run bit-for-bit, including the full h buffer."""
+    clients, params, loss_fn = _toy_problem(n_clients=6)
+    a = np.zeros((6, 6))
+    for s in range(6):
+        a[s, [(s + j) % 6 for j in range(4)]] = 1.0
+    sched = make_schedule(a, 0.3)
+    ls = make_local_scheme("feddyn", steps=2, alpha=0.1)
+    out = {}
+    for store in ("replicated", "streamed"):
+        tr = FederatedTrainer(loss_fn, params, clients, eta=0.1,
+                              batch_size=8, seed=0, backend="packed",
+                              shards=1, rounds_per_dispatch=2,
+                              local_scheme=ls, client_store=store)
+        sp = SystemParams.table1(6)
+        ch = ChannelModel(6)
+        hist = tr.run(sched, sp, ch.uplink, ch.downlink)
+        out[store] = (tr, [m.train_loss for m in hist])
+    tr_r, losses_r = out["replicated"]
+    tr_s, losses_s = out["streamed"]
+    assert losses_r == losses_s
+    assert_trainers_bitwise(tr_r, tr_s)
+    assert bool(jnp.all(tr_r._h == tr_s._h)), "h slab scatter-back drifted"
+    assert float(jnp.abs(tr_s._h).sum()) > 0
+
+
+@pytest.mark.skipif(SINGLE_DEVICE,
+                    reason="data-sharded cohort store needs >1 device")
+def test_feddyn_streamed_sharded_raises():
+    clients, params, loss_fn = _toy_problem(n_clients=6)
+    sched = make_schedule(np.ones((2, 6)), 0.3)
+    ls = make_local_scheme("feddyn", steps=2, alpha=0.1)
+    tr = FederatedTrainer(loss_fn, params, clients, eta=0.1, batch_size=8,
+                          seed=0, backend="packed", shards=2,
+                          rounds_per_dispatch=2, local_scheme=ls,
+                          client_store="streamed")
+    sp = SystemParams.table1(6)
+    ch = ChannelModel(6)
+    with pytest.raises(ValueError, match="data-sharded cohort store"):
+        tr.run(sched, sp, ch.uplink, ch.downlink)
+
+
+# ---------------------------------------------------------------------------
+# Sweep-pool reset regression (satellite: pooled state leak)
+# ---------------------------------------------------------------------------
+
+def test_reset_clears_per_client_optimizer_state():
+    clients, params, loss_fn = _toy_problem()
+    ls = make_local_scheme("feddyn", steps=2, alpha=0.1)
+    tr = FederatedTrainer(loss_fn, params, clients, eta=0.1, batch_size=8,
+                          seed=0, backend="packed", shards=1,
+                          local_scheme=ls)
+    sp = SystemParams.table1(4)
+    ch = ChannelModel(4)
+    tr.run(make_schedule(np.ones((2, 4)), 0.3), sp, ch.uplink, ch.downlink)
+    assert tr._h is not None and float(jnp.abs(tr._h).sum()) > 0
+    tr.reset(params, seed=0)
+    assert tr._h is None, "reset must drop the FedDyn correction buffer"
+
+
+def test_pooled_sweep_cells_match_cold_built_trainers():
+    """REGRESSION: the sweep service reuses one pooled trainer across
+    cells; before the reset fix, cell 2 started from cell 1's leftover
+    FedDyn h buffer. Every pooled cell must equal the same spec run cold
+    in a fresh Experiment."""
+    base = small_spec(local_scheme="feddyn", local_steps=2,
+                      local_kwargs={"alpha": 0.1})
+    sw = SweepSpec(base=base, seeds=[0, 1])
+    res = run_sweep(sw)
+    assert len(res.results) == 2
+    assert res.n_trainer_builds == 1, "cells must share ONE pooled trainer"
+    for cell, swept in zip(res.cells, res.results):
+        cold = Experiment(cell.spec).run()
+        assert [m.train_loss for m in swept.history] == \
+            [m.train_loss for m in cold.history], cell.name
+        assert swept.summary == cold.summary, cell.name
+
+
+# ---------------------------------------------------------------------------
+# Report: mixed-vintage summaries (satellite: runs_table robustness)
+# ---------------------------------------------------------------------------
+
+def test_report_tolerates_mixed_summaries(tmp_path):
+    report = pytest.importorskip("benchmarks.report")
+    # a real export (no faults/aggregation/fleet sections at all)
+    res = Experiment(small_spec()).run()
+    paths = [res.to_jsonl(str(tmp_path / "plain.jsonl"))]
+
+    # a mixed-vintage export: sections null / reshaped / missing, metrics
+    # null (strict-JSON nan) — the shapes older writers actually produced
+    header = {"kind": "experiment",
+              "spec": {"data": {"dataset": "synthetic-mnist"},
+                       "model": {"name": "mlp-edge"},
+                       "scheme": {"name": "proposed"}},
+              "summary": {"rounds_run": 3, "final_accuracy": None,
+                          "faults": None, "aggregation": "trimmed",
+                          "fleet": {}, "theta": None}}
+    vintage = str(tmp_path / "vintage.jsonl")
+    with open(vintage, "w") as f:
+        f.write(json.dumps(header) + "\n")
+    paths.append(vintage)
+
+    # one with every optional section present
+    rich = str(tmp_path / "rich.jsonl")
+    header2 = {"kind": "experiment", "spec": {},
+               "summary": {"rounds_run": 2, "final_accuracy": 0.5,
+                           "final_accuracy_round": 1,
+                           "cumulative_energy": 1.5, "cumulative_delay": 2.0,
+                           "theta": 0.25, "feasible": True,
+                           "faults": {"n_dropped": 3, "n_quarantined": 1,
+                                      "n_skipped_rounds": 0},
+                           "aggregation": {"aggregator": "trimmed_mean",
+                                           "n_adjusted": 4},
+                           "fleet": {"n_cohort_swaps": 2,
+                                     "h2d_bytes": 2 ** 20,
+                                     "prefetch_stall_s": 0.5}}}
+    with open(rich, "w") as f:
+        f.write(json.dumps(header2) + "\n")
+    paths.append(rich)
+
+    # and a sweep index contributing a failed-cell row
+    idx = str(tmp_path / "sweep.jsonl")
+    with open(idx, "w") as f:
+        f.write(json.dumps({"kind": "sweep_error", "name": "cell_x",
+                            "error_kind": "timeout", "error": "boom"}) + "\n")
+    paths.append(idx)
+
+    table = report.runs_table(paths)
+    lines = table.splitlines()
+    assert len(lines) == 2 + 4  # header+rule, 3 runs + 1 error row
+    assert "nan" not in table
+    assert "3/1/0" in table          # rich faults counters
+    assert "trimmed_mean" in table
+    assert "TIMEOUT" in table
+    vintage_row = next(ln for ln in lines if "vintage" in ln)
+    # absent/null/reshaped sections and null metrics all render em-dashes
+    assert vintage_row.count("—") >= 5
+
+
+# ---------------------------------------------------------------------------
+# CLI: actionable errors for bad paths (satellite)
+# ---------------------------------------------------------------------------
+
+def test_cli_sweep_resume_without_manifest_fails_loudly(tmp_path):
+    spec_path = small_spec().save(str(tmp_path / "spec.json"))
+    out_dir = str(tmp_path / "not_a_sweep")
+    os.makedirs(out_dir)
+    with pytest.raises(SystemExit) as exc:
+        cli.main(["sweep", spec_path, "--seeds", "0", "--out-dir", out_dir,
+                  "--resume"])
+    msg = str(exc.value)
+    assert "no sweep manifest" in msg and out_dir in msg
+    # and nothing was written to the directory it refused to resume into
+    assert os.listdir(out_dir) == []
+
+
+def test_cli_validate_nonexistent_checkpoint_dir(tmp_path, capsys):
+    missing = str(tmp_path / "nope" / "ckpts")
+    rc = cli.main(["validate", "--checkpoints", missing])
+    assert rc == 1
+    err = capsys.readouterr().err
+    assert missing in err and "does not exist" in err
+    # the probe must NOT leave an empty decoy directory behind
+    assert not os.path.exists(missing)
+
+
+def test_cli_validate_empty_checkpoint_dir(tmp_path, capsys):
+    empty = str(tmp_path / "empty_ckpts")
+    os.makedirs(empty)
+    rc = cli.main(["validate", "--checkpoints", empty])
+    assert rc == 1
+    err = capsys.readouterr().err
+    assert empty in err and "no checkpoints" in err
